@@ -1,0 +1,67 @@
+//! Seismic-imaging scenario (§1's reverse-time-migration motivation):
+//! high-order 3D stencils time-stepped over a velocity volume — the
+//! workload class where the paper shows Casper's limits (3D stencils pull
+//! significant data from remote LLC slices, §8.1).
+//!
+//! Runs 7-point and 33-point 3D kernels, reports the locality breakdown
+//! that explains the Fig 10 3D results, and sweeps the Fig 14 ablation
+//! for the 33-point kernel.
+//!
+//! ```sh
+//! cargo run --release --example seismic_3d
+//! ```
+
+use anyhow::Result;
+
+use casper::config::{MappingPolicy, SimConfig, SizeClass, SpuPlacement};
+use casper::coordinator::run_casper;
+use casper::cpu::run_cpu;
+use casper::stencil::{Domain, StencilKind};
+
+fn main() -> Result<()> {
+    let cfg = SimConfig::default();
+    println!("=== 3D wave-propagation kernels (LLC-class volumes) ===\n");
+
+    for kind in [StencilKind::Heat3D, StencilKind::Points33_3D] {
+        let domain = Domain::for_level(kind, SizeClass::Llc);
+        let c = run_casper(&cfg, kind, &domain, 1);
+        let p = run_cpu(&cfg, kind, &domain, 1);
+        println!("{kind} @ {domain}:");
+        println!(
+            "  speedup {:.2}x | local loads {:.1}% | remote {:.1}% | NoC messages {}",
+            p.cycles as f64 / c.cycles as f64,
+            100.0 * c.local_fraction(),
+            100.0 * (1.0 - c.local_fraction()),
+            c.noc_messages
+        );
+        println!(
+            "  (paper §8.1: 3D stencils load much of their input from remote slices,\n   limiting or erasing the speedup — the 33-point case can be a slowdown)\n"
+        );
+    }
+
+    println!("=== Fig 14-style ablation on the 33-point kernel ===\n");
+    let kind = StencilKind::Points33_3D;
+    let domain = Domain::for_level(kind, SizeClass::Llc);
+    let mut rows = Vec::new();
+    for (label, placement, mapping) in [
+        ("SPUs near L1, baseline hash", SpuPlacement::NearL1, MappingPolicy::Baseline),
+        ("SPUs near L1, stencil hash", SpuPlacement::NearL1, MappingPolicy::StencilSegment),
+        ("near LLC, baseline hash", SpuPlacement::NearLlc, MappingPolicy::Baseline),
+        ("near LLC, stencil hash (Casper)", SpuPlacement::NearLlc, MappingPolicy::StencilSegment),
+    ] {
+        let mut c = cfg.clone();
+        c.placement = placement;
+        c.mapping = mapping;
+        let stats = run_casper(&c, kind, &domain, 1);
+        rows.push((label, stats.cycles, stats.local_fraction()));
+    }
+    let base = rows[0].1 as f64;
+    for (label, cycles, local) in &rows {
+        println!(
+            "  {label:<34} {cycles:>10} cycles  ({:.2}x vs ablation baseline, {:.0}% local)",
+            base / *cycles as f64,
+            100.0 * local
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Weather-model horizontal diffusion scenario (the paper's motivating
+//! COSMO workload, §1): repeated 2D smoothing over a large atmospheric
+//! field, time-stepped, comparing Casper against the CPU baseline and
+//! tracking energy.
+//!
+//! Uses Blur 2D (a 5×5 Gaussian — the horizontal diffusion operator shape)
+//! over LLC-tiled and full DRAM-resident fields, plus Jacobi 2D as the
+//! lighter smoothing pass.
+//!
+//! ```sh
+//! cargo run --release --example weather_diffusion
+//! ```
+
+use anyhow::Result;
+
+use casper::config::{SimConfig, SizeClass};
+use casper::coordinator::run_casper;
+use casper::cpu::run_cpu;
+use casper::energy::{casper_energy, cpu_energy};
+use casper::stencil::{golden, Domain, StencilKind};
+use casper::util::human_time_cycles;
+
+fn main() -> Result<()> {
+    let cfg = SimConfig::default();
+    let steps = 4;
+
+    println!("=== horizontal diffusion pipeline ({steps} time steps/stage) ===\n");
+    let mut total_casper = 0u64;
+    let mut total_cpu = 0u64;
+    let mut energy_casper = 0.0;
+    let mut energy_cpu = 0.0;
+
+    for (kind, level, label) in [
+        (StencilKind::Jacobi2D, SizeClass::Llc, "smoothing pass (LLC-tiled)"),
+        (StencilKind::Blur2D, SizeClass::Llc, "diffusion operator (LLC-tiled)"),
+        (StencilKind::Blur2D, SizeClass::Dram, "full-field diffusion (DRAM)"),
+    ] {
+        let domain = Domain::for_level(kind, level);
+        let c = run_casper(&cfg, kind, &domain, steps);
+        let p = run_cpu(&cfg, kind, &domain, steps);
+
+        // Functional check per stage.
+        let want = golden::run_kind(
+            kind,
+            &domain,
+            steps,
+            casper::coordinator::CasperOptions::default().seed,
+        );
+        let diff = c.output.max_abs_diff(&want);
+        anyhow::ensure!(diff < 1e-11, "{label}: diverged {diff}");
+
+        let ce = casper_energy(&cfg, &c);
+        let pe = cpu_energy(&cfg, &p);
+        total_casper += c.cycles;
+        total_cpu += p.cycles;
+        energy_casper += ce.total_j();
+        energy_cpu += pe.total_j();
+
+        println!("{label}: {kind} @ {domain}");
+        println!(
+            "  casper {:>24}   cpu {:>24}   speedup {:.2}x",
+            human_time_cycles(c.cycles, cfg.cpu.freq_ghz),
+            human_time_cycles(p.cycles, cfg.cpu.freq_ghz),
+            p.cycles as f64 / c.cycles as f64
+        );
+        println!(
+            "  energy: casper {:.3e} J vs cpu {:.3e} J ({:.0}% of baseline)\n",
+            ce.total_j(),
+            pe.total_j(),
+            100.0 * ce.total_j() / pe.total_j()
+        );
+    }
+
+    println!("=== pipeline total ===");
+    println!(
+        "casper {} vs cpu {} — {:.2}x end-to-end, {:.0}% of baseline energy",
+        human_time_cycles(total_casper, cfg.cpu.freq_ghz),
+        human_time_cycles(total_cpu, cfg.cpu.freq_ghz),
+        total_cpu as f64 / total_casper as f64,
+        100.0 * energy_casper / energy_cpu
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT compile path: lower the L2 stencil model to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` or serialized protos) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the Rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits ``<kernel>_<class>.hlo.txt`` per entry plus ``manifest.txt`` with
+lines ``name kernel nx ny nz steps file`` that the Rust runtime parses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import KERNELS, SPECS
+from .model import make_step_fn
+
+jax.config.update("jax_enable_x64", True)
+
+# Artifact matrix: every kernel at a small validation shape (fast to
+# compile and execute from the Rust tests), plus L2-class shapes for the
+# end-to-end example. Natural shapes are (nx,), (ny,nx), (nz,ny,nx).
+TINY_SHAPES = {
+    "jacobi1d": (256,),
+    "pts7_1d": (256,),
+    "jacobi2d": (32, 16),
+    "blur2d": (32, 16),
+    "heat3d": (16, 12, 8),
+    "pts33_3d": (16, 12, 8),
+}
+L2_SHAPES = {
+    "jacobi1d": (131072,),
+    "jacobi2d": (256, 512),
+}
+
+
+def entries():
+    """The artifact build matrix."""
+    out = []
+    for k in KERNELS:
+        out.append((f"{k}_tiny", k, TINY_SHAPES[k], 1))
+        # A 3-step variant of the tiny shape exercises multi-step HLO.
+        out.append((f"{k}_tiny_s3", k, TINY_SHAPES[k], 3))
+    for k, shape in L2_SHAPES.items():
+        out.append((f"{k}_l2", k, shape, 1))
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(kernel: str, shape, steps: int) -> str:
+    fn, spec = make_step_fn(kernel, shape, steps)
+    lowered = jax.jit(fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def natural_to_nzyx(kernel: str, shape):
+    dims = SPECS[kernel].dims
+    if dims == 1:
+        return shape[0], 1, 1
+    if dims == 2:
+        return shape[1], shape[0], 1
+    return shape[2], shape[1], shape[0]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated artifact-name filter"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = []
+    for name, kernel, shape, steps in entries():
+        if only and name not in only:
+            continue
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        text = lower_entry(kernel, shape, steps)
+        with open(path, "w") as f:
+            f.write(text)
+        nx, ny, nz = natural_to_nzyx(kernel, shape)
+        manifest.append(f"{name} {kernel} {nx} {ny} {nz} {steps} {fname}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""Pure-jnp correctness oracle for the stencil kernels.
+
+This is the numerical ground truth on the Python side: every Pallas kernel
+(and the lowered AOT artifact executed from Rust) is checked against it.
+The stencil specifications — tap offsets, coefficients, and the
+copy-through boundary convention — mirror ``rust/src/stencil/`` exactly
+(same literals, same normalizations), so the Rust golden reference, the
+SPU functional simulation, this oracle, and the Pallas kernels all agree.
+
+Grids are handled in a uniform flattened-2D layout: ``(rows, nx)`` where
+``rows = nz * ny``; a tap ``(dx, dy, dz)`` becomes a row offset
+``dy + dz * ny`` plus an in-row shift ``dx``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The six kernels of the paper's §7.2, in paper order.
+KERNELS = ("jacobi1d", "pts7_1d", "jacobi2d", "blur2d", "heat3d", "pts33_3d")
+
+
+@dataclass(frozen=True)
+class StencilSpec:
+    """Tap pattern of one stencil kernel."""
+
+    name: str
+    dims: int
+    # Tuples of (dx, dy, dz, coef).
+    taps: tuple
+
+    @property
+    def radius(self):
+        rx = max(abs(t[0]) for t in self.taps)
+        ry = max(abs(t[1]) for t in self.taps)
+        rz = max(abs(t[2]) for t in self.taps)
+        return rx, ry, rz
+
+    @property
+    def num_points(self):
+        return len(self.taps)
+
+    def coef_sum(self):
+        return sum(t[3] for t in self.taps)
+
+
+def _jacobi1d():
+    c = 1.0 / 3.0
+    return tuple((dx, 0, 0, c) for dx in (-1, 0, 1))
+
+
+def _pts7_1d():
+    c = 1.0 / 7.0
+    return tuple((dx, 0, 0, c) for dx in range(-3, 4))
+
+
+def _jacobi2d():
+    c = 0.2
+    return ((0, -1, 0, c), (-1, 0, 0, c), (0, 0, 0, c), (1, 0, 0, c), (0, 1, 0, c))
+
+
+def _blur2d():
+    w = np.array(
+        [
+            [1, 4, 7, 4, 1],
+            [4, 16, 26, 16, 4],
+            [7, 26, 41, 26, 7],
+            [4, 16, 26, 16, 4],
+            [1, 4, 7, 4, 1],
+        ],
+        dtype=np.float64,
+    )
+    taps = []
+    for j in range(5):
+        for i in range(5):
+            taps.append((i - 2, j - 2, 0, float(w[j, i] / 273.0)))
+    return tuple(taps)
+
+
+def _heat3d():
+    taps = [(0, 0, 0, 0.4)]
+    for d in ((-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1)):
+        taps.append((*d, 0.1))
+    return tuple(taps)
+
+
+def _pts33_3d():
+    # 27-point box + 6 distance-2 axis points; total class weight 54
+    # (see rust/src/stencil/mod.rs).
+    taps = []
+    for dz in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                dist = abs(dx) + abs(dy) + abs(dz)
+                w = {0: 8.0, 1: 3.0, 2: 1.5, 3: 0.5}[dist] / 54.0
+                taps.append((dx, dy, dz, w))
+    for d in ((-2, 0, 0), (2, 0, 0), (0, -2, 0), (0, 2, 0), (0, 0, -2), (0, 0, 2)):
+        taps.append((*d, 1.0 / 54.0))
+    return tuple(taps)
+
+
+SPECS = {
+    "jacobi1d": StencilSpec("jacobi1d", 1, _jacobi1d()),
+    "pts7_1d": StencilSpec("pts7_1d", 1, _pts7_1d()),
+    "jacobi2d": StencilSpec("jacobi2d", 2, _jacobi2d()),
+    "blur2d": StencilSpec("blur2d", 2, _blur2d()),
+    "heat3d": StencilSpec("heat3d", 3, _heat3d()),
+    "pts33_3d": StencilSpec("pts33_3d", 3, _pts33_3d()),
+}
+
+
+def grid_shape_3d(name: str, shape):
+    """Normalize a natural-shape grid spec to (nz, ny, nx)."""
+    spec = SPECS[name]
+    if spec.dims == 1:
+        (nx,) = shape
+        return 1, 1, nx
+    if spec.dims == 2:
+        ny, nx = shape
+        return 1, ny, nx
+    nz, ny, nx = shape
+    return nz, ny, nx
+
+
+def interior_mask(name: str, shape) -> np.ndarray:
+    """Boolean mask of interior points, flattened to (rows, nx).
+
+    Interior = every tap in bounds, the shared boundary convention.
+    """
+    nz, ny, nx = grid_shape_3d(name, shape)
+    rx, ry, rz = SPECS[name].radius
+    x = np.arange(nx)
+    y = np.arange(ny)
+    z = np.arange(nz)
+    mx = (x >= rx) & (x < nx - rx)
+    my = (y >= ry) & (y < ny - ry)
+    mz = (z >= rz) & (z < nz - rz)
+    m = mz[:, None, None] & my[None, :, None] & mx[None, None, :]
+    return m.reshape(nz * ny, nx)
+
+
+def interior_mask_jax(name: str, shape) -> jnp.ndarray:
+    """Interior mask computed with iota comparisons (no boolean constant).
+
+    Functionally identical to :func:`interior_mask`, but built from
+    integer iotas and runtime comparisons: the AOT path must not embed
+    bit-packed ``pred`` constants, which xla_extension 0.5.1's MLIR→HLO
+    converter mis-reads byte-wise (see DESIGN.md §3 and the probe in
+    EXPERIMENTS.md).
+    """
+    nz, ny, nx = grid_shape_3d(name, shape)
+    rx, ry, rz = SPECS[name].radius
+    rows = nz * ny
+    ix = jax.lax.broadcasted_iota(jnp.int32, (rows, nx), 1)
+    irow = jax.lax.broadcasted_iota(jnp.int32, (rows, nx), 0)
+    iy = irow % ny
+    iz = irow // ny
+    mx = (ix >= rx) & (ix < nx - rx)
+    my = (iy >= ry) & (iy < ny - ry)
+    mz = (iz >= rz) & (iz < nz - rz)
+    return mx & my & mz
+
+
+def ref_step(name: str, grid: jnp.ndarray) -> jnp.ndarray:
+    """One Jacobi step of kernel ``name`` over a natural-shape grid."""
+    spec = SPECS[name]
+    nz, ny, nx = grid_shape_3d(name, grid.shape)
+    flat = grid.reshape(nz * ny, nx)
+    acc = jnp.zeros_like(flat)
+    for dx, dy, dz, c in spec.taps:
+        drow = dy + dz * ny
+        # roll moves data opposite to the tap offset; wrap artifacts land
+        # only on boundary points, which the mask restores below.
+        acc = acc + c * jnp.roll(flat, shift=(-drow, -dx), axis=(0, 1))
+    mask = jnp.asarray(interior_mask(name, grid.shape))
+    out = jnp.where(mask, acc, flat)
+    return out.reshape(grid.shape)
+
+
+def ref_run(name: str, grid: jnp.ndarray, steps: int) -> jnp.ndarray:
+    """``steps`` Jacobi iterations (ping-pong is implicit: ref_step is
+    functional)."""
+    for _ in range(steps):
+        grid = ref_step(name, grid)
+    return grid

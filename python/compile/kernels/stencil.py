@@ -1,0 +1,165 @@
+"""Layer-1 Pallas stencil kernels.
+
+One generic Pallas kernel is specialized per stencil (taps are compile-time
+constants, so each ``pallas_call`` lowers to a fixed MAC chain — the
+software analogue of Casper's per-kernel microcode).
+
+Execution model (the TPU adaptation of Casper's §3.2 streaming model, see
+DESIGN.md §Hardware-Adaptation):
+
+- 2D/3D grids are flattened to ``(rows, nx)``; the Pallas grid iterates
+  over *row blocks* — the analogue of Casper's 128 kB stencil blocks
+  walking through LLC slices. Each program produces one output block in
+  VMEM, gathering the rows its taps need with clamped dynamic slices and
+  applying the MAC chain with static in-row shifts (``jnp.roll``) —
+  mirroring the SPU's shifted (unaligned) stream loads.
+- 1D grids block along x instead: each program loads its segment plus the
+  halo (``pl.dslice``, clamped at the edges) and combines *static* slices
+  of it — the direct analogue of the §4.1 unaligned loads pulling from two
+  adjacent cache lines.
+- Clamp/wrap artifacts land only on boundary points, which
+  :func:`..model.stencil_step` masks to copy-through — identical boundary
+  policy to the Rust golden reference.
+
+Kernels MUST run with ``interpret=True`` on CPU: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import SPECS, grid_shape_3d
+
+# Rows per Pallas program for 2D/3D (output block height).
+DEFAULT_BLOCK_ROWS = 8
+# Elements per Pallas program for 1D.
+DEFAULT_BLOCK_X = 1024
+
+
+def _row_taps(name: str, ny: int):
+    """Collapse taps to (drow, dx, coef) in flattened-row space."""
+    return tuple((t[1] + t[2] * ny, t[0], t[3]) for t in SPECS[name].taps)
+
+
+def _kernel_rows(in_ref, out_ref, *, taps, block_rows):
+    """2D/3D kernel body: one block of output rows per program."""
+    pid = pl.program_id(0)
+    base = pid * block_rows
+    for r in range(block_rows):  # static unroll: the per-point microcode
+        row = base + r
+        acc = None
+        for drow, dx, coef in taps:
+            # Clamped dynamic row load (the stream for this tap's row).
+            src = in_ref[pl.dslice(row + drow, 1), :]
+            # Static in-row shift — the SPU's unaligned-load offset.
+            shifted = jnp.roll(src, -dx, axis=1) if dx != 0 else src
+            term = coef * shifted
+            acc = term if acc is None else acc + term
+        out_ref[pl.dslice(r, 1), :] = acc
+
+
+def _kernel_1d(in_ref, out_ref, *, taps, block_x, radius):
+    """1D kernel body: one x-segment (plus halo) per program. The input
+    reference is physically halo-padded by ``radius`` on both sides, so
+    segment loads never leave bounds."""
+    pid = pl.program_id(0)
+    x0 = pid * block_x
+    seg = in_ref[0, pl.dslice(x0, block_x + 2 * radius)]
+    acc = None
+    for _drow, dx, coef in taps:
+        lo = radius + dx
+        term = coef * seg[lo : lo + block_x]  # static slice: unaligned load
+        acc = term if acc is None else acc + term
+    out_ref[0, :] = acc
+
+
+@functools.lru_cache(maxsize=None)
+def _build_rows(name: str, rows: int, nx: int, ny: int, block_rows: int, dtype: str):
+    taps = _row_taps(name, ny)
+    n_blocks = -(-rows // block_rows)  # ceil
+    kernel = functools.partial(_kernel_rows, taps=taps, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((rows, nx), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_rows, nx), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block_rows, nx), jnp.dtype(dtype)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _build_1d(name: str, nx: int, block_x: int, dtype: str):
+    """`nx` is the padded-to-block logical width; the input carries an
+    extra `2*radius` halo columns."""
+    spec = SPECS[name]
+    radius = spec.radius[0]
+    taps = _row_taps(name, 1)
+    n_blocks = nx // block_x
+    kernel = functools.partial(_kernel_1d, taps=taps, block_x=block_x, radius=radius)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, nx + 2 * radius), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_x), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, nx), jnp.dtype(dtype)),
+        interpret=True,
+    )
+
+
+def stencil_pallas_raw(
+    name: str,
+    grid: jnp.ndarray,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_x: int = DEFAULT_BLOCK_X,
+):
+    """Run the Pallas kernel over a natural-shape grid.
+
+    Returns the *unmasked* result flattened to ``(rows, nx)`` — boundary
+    values are wrap/clamp artifacts by design; callers apply the interior
+    mask (see :func:`..model.stencil_step`).
+    """
+    nz, ny, nx = grid_shape_3d(name, grid.shape)
+    rows = nz * ny
+    flat = grid.reshape(rows, nx)
+    dtype = str(flat.dtype)
+
+    if SPECS[name].dims == 1:
+        radius = SPECS[name].radius[0]
+        bx = min(block_x, nx)
+        tail = (bx - nx % bx) % bx
+        # Physical halo padding left and right (values are masked later).
+        flat = jnp.pad(flat, ((0, 0), (radius, radius + tail)), mode="edge")
+        call = _build_1d(name, nx + tail, bx, dtype)
+        return call(flat)[:, :nx].reshape(rows, nx)
+
+    if rows % block_rows != 0:
+        pad = block_rows - rows % block_rows
+        flat = jnp.concatenate([flat, jnp.zeros((pad, nx), flat.dtype)], axis=0)
+    call = _build_rows(name, flat.shape[0], nx, ny, block_rows, dtype)
+    out = call(flat)
+    return out[:rows]
+
+
+def vmem_block_bytes(
+    name: str,
+    shape,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_x: int = DEFAULT_BLOCK_X,
+) -> int:
+    """Estimated VMEM footprint of one program's working set (§Perf):
+    the output block plus the tap rows (2D/3D) or halo'd segment (1D)."""
+    nz, ny, nx = grid_shape_3d(name, shape)
+    del nz
+    spec = SPECS[name]
+    if spec.dims == 1:
+        radius = spec.radius[0]
+        bx = min(block_x, nx)
+        return 8 * (bx + (bx + 2 * radius))
+    tap_rows = len({t[1] + t[2] * ny for t in spec.taps})
+    return 8 * nx * (block_rows + tap_rows)

@@ -1,0 +1,57 @@
+"""Layer-2 JAX model: the stencil compute graph around the Pallas kernels.
+
+``stencil_step`` composes the L1 Pallas kernel with the shared boundary
+policy (interior mask, copy-through halo); ``stencil_run`` adds Jacobi
+time stepping. These are the functions ``aot.py`` lowers to HLO text for
+the Rust runtime — Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import SPECS, grid_shape_3d, interior_mask_jax
+from .kernels.stencil import stencil_pallas_raw
+
+jax.config.update("jax_enable_x64", True)
+
+
+def stencil_step(name: str, grid: jnp.ndarray) -> jnp.ndarray:
+    """One Jacobi step: Pallas MAC chain on the interior, copy-through on
+    the boundary — bit-compatible with the Rust golden reference's
+    convention."""
+    if name not in SPECS:
+        raise ValueError(f"unknown stencil kernel '{name}'")
+    nz, ny, nx = grid_shape_3d(name, grid.shape)
+    rows = nz * ny
+    flat = grid.reshape(rows, nx)
+    raw = stencil_pallas_raw(name, grid)
+    # Mask built from iota comparisons, NOT a boolean constant — the AOT
+    # converter mis-reads bit-packed pred constants (DESIGN.md §3).
+    mask = interior_mask_jax(name, grid.shape)
+    out = jnp.where(mask, raw, flat)
+    return out.reshape(grid.shape)
+
+
+def stencil_run(name: str, grid: jnp.ndarray, steps: int) -> jnp.ndarray:
+    """``steps`` Jacobi iterations. The step count is a static Python int
+    (unrolled at trace time) so the lowered HLO is self-contained."""
+    for _ in range(steps):
+        grid = stencil_step(name, grid)
+    return grid
+
+
+def make_step_fn(name: str, shape, steps: int = 1):
+    """A shape-specialized function ready for `jax.jit(...).lower()`.
+
+    Returns ``(fn, example_spec)`` where ``fn(grid) -> (out,)`` — a 1-tuple
+    because the AOT pipeline lowers with ``return_tuple=True`` and the Rust
+    side unwraps with ``to_tuple1()``.
+    """
+
+    def fn(grid):
+        return (stencil_run(name, grid, steps),)
+
+    spec = jax.ShapeDtypeStruct(shape, jnp.float64)
+    return fn, spec

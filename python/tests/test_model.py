@@ -1,0 +1,68 @@
+"""L2 model-level tests: masks, time stepping, shape plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.model import make_step_fn, stencil_run, stencil_step
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).random(shape, dtype=np.float64))
+
+
+def test_unknown_kernel_rejected():
+    with pytest.raises(ValueError):
+        stencil_step("bogus", rand((16,)))
+
+
+def test_interior_mask_counts():
+    # jacobi2d on (ny=12, nx=16): interior = 10 × 14.
+    m = ref.interior_mask("jacobi2d", (12, 16))
+    assert m.sum() == 10 * 14
+    # blur2d radius 2: 8 × 12.
+    m = ref.interior_mask("blur2d", (12, 16))
+    assert m.sum() == 8 * 12
+    # heat3d on (6, 8, 10): 4 × 6 × 8.
+    m = ref.interior_mask("heat3d", (6, 8, 10))
+    assert m.sum() == 4 * 6 * 8
+
+
+def test_zero_steps_identity():
+    g = rand((12, 16), 1)
+    out = stencil_run("jacobi2d", g, 0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(g))
+
+
+def test_steps_compose():
+    g = rand((12, 16), 2)
+    a = stencil_run("jacobi2d", g, 3)
+    b = stencil_step("jacobi2d", stencil_step("jacobi2d", stencil_step("jacobi2d", g)))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_smoothing_contracts_range():
+    g = rand((12, 16), 3)
+    out = stencil_run("blur2d", g, 2)
+    assert float(jnp.max(out)) <= float(jnp.max(g)) + 1e-12
+    assert float(jnp.min(out)) >= float(jnp.min(g)) - 1e-12
+
+
+def test_make_step_fn_returns_tuple():
+    fn, spec = make_step_fn("jacobi1d", (64,), steps=1)
+    assert spec.shape == (64,)
+    out = fn(rand((64,), 4))
+    assert isinstance(out, tuple) and len(out) == 1
+    want = ref.ref_step("jacobi1d", rand((64,), 4))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want), rtol=1e-12, atol=1e-14)
+
+
+def test_jit_matches_eager():
+    g = rand((12, 16), 5)
+    eager = stencil_step("jacobi2d", g)
+    jitted = jax.jit(lambda x: stencil_step("jacobi2d", x))(g)
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted), rtol=1e-15, atol=1e-15)

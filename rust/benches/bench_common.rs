@@ -1,0 +1,39 @@
+//! Shared mini bench harness (no criterion in the offline registry —
+//! DESIGN.md §3): warmup + N samples, median ± MAD wall-time reporting,
+//! plus the regenerated paper table for the experiment being benched.
+
+use std::time::Instant;
+
+use casper::config::SimConfig;
+use casper::harness::{run_experiments, Experiment, SweepOptions};
+use casper::util::{median, median_abs_dev};
+
+/// Time `f` with one warmup and `samples` measured runs.
+pub fn measure<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> T {
+    let mut out = f(); // warmup (also warms allocator/caches)
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        out = f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "bench {name:<28} median {:>9.2} ms  mad {:>7.2} ms  (n={samples})",
+        median(&times),
+        median_abs_dev(&times)
+    );
+    out
+}
+
+/// Standard driver for a one-experiment bench binary: run the experiment
+/// sweep (timed), then print the regenerated table. `quick` honours
+/// `CASPER_BENCH_QUICK=1` so CI can keep bench time bounded.
+pub fn bench_experiment(e: Experiment, samples: usize) {
+    let cfg = SimConfig::default();
+    let quick = std::env::var_os("CASPER_BENCH_QUICK").is_some();
+    let opts = SweepOptions { quick, steps: 1 };
+    let report = measure(e.id(), samples, || {
+        run_experiments(&cfg, &[e], opts).expect("experiment failed")
+    });
+    print!("{}", report.to_markdown());
+}

@@ -1,0 +1,9 @@
+//! Regenerates the paper's Fig10 (see DESIGN.md §4) and reports the
+//! wall-time of the underlying simulation sweep.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+fn main() {
+    bench_common::bench_experiment(casper::harness::Experiment::Fig10, 2);
+}

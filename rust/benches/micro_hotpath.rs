@@ -1,0 +1,77 @@
+//! Microbenchmarks of the simulator's hot paths (the §Perf targets):
+//! cache tag access, slice-mapper hashing, SPU group execution, golden
+//! stencil step, and CPU trace iteration. These are what the performance
+//! pass profiles and optimizes — see EXPERIMENTS.md §Perf.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::measure;
+use casper::config::{MappingPolicy, SimConfig, SizeClass};
+use casper::coordinator::run_casper;
+use casper::cpu::run_cpu;
+use casper::isa::ProgramBuilder;
+use casper::mapping::{SliceMapper, StencilSegment};
+use casper::mem::cache::Cache;
+use casper::spu::{SharedMem, Spu};
+use casper::stencil::{golden, Domain, StencilKind};
+
+fn main() {
+    let cfg = SimConfig::default();
+
+    // --- cache tag path: 1M accesses over a 2 MB slice. ---
+    let hits = measure("cache_access_1M", 5, || {
+        let mut c = Cache::new(2 * 1024 * 1024, 16, 64);
+        let mut h = 0u64;
+        for i in 0..1_000_000u64 {
+            // Streaming + 25% reuse mix.
+            let addr = (i % 4 != 0) as u64 * (i * 64) + (i % 4 == 0) as u64 * ((i / 8) * 64);
+            h += c.access(addr % (8 << 20), false).hit as u64;
+        }
+        h
+    });
+    assert!(hits > 0);
+
+    // --- slice mapper: 4M hashes. ---
+    let mut mapper = SliceMapper::new(&cfg.llc, MappingPolicy::StencilSegment);
+    mapper.set_segment(StencilSegment::new(0x1000_0000, 64 << 20));
+    let acc = measure("slice_hash_4M", 5, || {
+        let mut acc = 0usize;
+        for i in 0..4_000_000u64 {
+            acc += mapper.slice_of(std::hint::black_box(0x1000_0000 + i * 64));
+        }
+        std::hint::black_box(acc)
+    });
+    assert!(acc > 0);
+
+    // --- SPU inner loop: 64k points of Jacobi-1D on one SPU. ---
+    let program = ProgramBuilder::new()
+        .build(&StencilKind::Jacobi1D.descriptor())
+        .unwrap();
+    measure("spu_64k_points", 5, || {
+        let mut mem = SharedMem::new(&cfg, MappingPolicy::StencilSegment);
+        let seg = mem.store.alloc_segment(2 << 20);
+        mem.mapper.set_segment(StencilSegment::new(seg, 2 << 20));
+        let mut spu = Spu::new(0, 0, &cfg, program.clone());
+        spu.init_streams(&[seg + (1 << 20), seg + 8]);
+        spu.set_n_elements(65_536);
+        while spu.run_group(&mut mem) {}
+        spu.finish_time()
+    });
+
+    // --- golden stencil step: Blur2D over 1024². ---
+    let d = Domain::for_level(StencilKind::Blur2D, SizeClass::Llc);
+    let g = d.alloc_random(1);
+    measure("golden_blur2d_llc", 3, || {
+        golden::run(&StencilKind::Blur2D.descriptor(), &g, 1)
+    });
+
+    // --- full engines, L2-class Jacobi2D (end-to-end micro). ---
+    let d2 = Domain::for_level(StencilKind::Jacobi2D, SizeClass::L2);
+    measure("engine_casper_jacobi2d_l2", 3, || {
+        run_casper(&cfg, StencilKind::Jacobi2D, &d2, 1).cycles
+    });
+    measure("engine_cpu_jacobi2d_l2", 3, || {
+        run_cpu(&cfg, StencilKind::Jacobi2D, &d2, 1).cycles
+    });
+}

@@ -1,0 +1,90 @@
+//! Area model (§8.6): SPU area from the Aladdin-derived model [169]
+//! scaled to 22 nm, unaligned-load hardware per slice, and the mapping
+//! logic — plus the comparator areas used in Fig 12.
+
+use crate::config::SimConfig;
+
+/// Area of the unaligned-load hardware per LLC slice (§8.6), mm².
+pub const UNALIGNED_PER_SLICE_MM2: f64 = 0.14;
+/// Stencil-segment mapping hardware at all NoC injection points, mm²
+/// (two registers + adder + comparator per point; §8.6 calls it minimal).
+pub const MAPPING_TOTAL_MM2: f64 = 0.074;
+/// Marvell ThunderX2 die area, mm² (16 nm, 32 MB LLC [127]) — the §8.6
+/// host-CPU reference for the "<1% overhead" claim.
+pub const THUNDERX2_MM2: f64 = 605.0;
+
+/// Casper's added die area (§8.6: "4.65 mm² for a system using 16 SPUs").
+#[derive(Debug, Clone, Copy)]
+pub struct CasperArea {
+    pub spus_mm2: f64,
+    pub unaligned_mm2: f64,
+    pub mapping_mm2: f64,
+}
+
+impl CasperArea {
+    pub fn of(cfg: &SimConfig) -> CasperArea {
+        CasperArea {
+            spus_mm2: cfg.spu.count as f64 * cfg.spu.area_mm2,
+            unaligned_mm2: cfg.llc.slices as f64 * UNALIGNED_PER_SLICE_MM2,
+            mapping_mm2: MAPPING_TOTAL_MM2,
+        }
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.spus_mm2 + self.unaligned_mm2 + self.mapping_mm2
+    }
+
+    /// Fractional area increase over the ThunderX2 host (§8.6: < 1%).
+    pub fn host_overhead(&self) -> f64 {
+        self.total_mm2() / THUNDERX2_MM2
+    }
+}
+
+/// Performance-per-area improvement of Casper over a comparator:
+/// `(perf_c / area_c) / (perf_x / area_x)` with perf = 1/cycles. The
+/// paper's Fig 12 uses the SPU area alone against the full GPU die
+/// ("typical GPU-accelerated systems also need a host CPU", §7.1).
+pub fn perf_per_area_improvement(
+    casper_cycles: u64,
+    casper_area_mm2: f64,
+    other_cycles: u64,
+    other_area_mm2: f64,
+) -> f64 {
+    let perf_c = 1.0 / casper_cycles as f64 / casper_area_mm2;
+    let perf_o = 1.0 / other_cycles as f64 / other_area_mm2;
+    perf_c / perf_o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_section_8_6() {
+        let cfg = SimConfig::default();
+        let a = CasperArea::of(&cfg);
+        // 16 × 0.146 = 2.336 mm² of SPUs; +16 × 0.14 unaligned; total
+        // ≈ 4.65 mm² and < 1% of the ThunderX2.
+        assert!((a.spus_mm2 - 2.336).abs() < 1e-9);
+        assert!((a.total_mm2() - 4.65).abs() < 0.01, "{}", a.total_mm2());
+        assert!(a.host_overhead() < 0.01);
+        assert!(a.host_overhead() > 0.005);
+    }
+
+    #[test]
+    fn spu_vs_titanv_area_ratio() {
+        // §8.3: "16 SPUs occupy 349× less area than the Titan V".
+        let cfg = SimConfig::default();
+        let a = CasperArea::of(&cfg);
+        let ratio = 815.0 / a.spus_mm2;
+        assert!((ratio - 349.0).abs() < 1.0, "{ratio}");
+    }
+
+    #[test]
+    fn perf_per_area_math() {
+        // Same speed, 10× smaller → 10× better perf/area.
+        assert!((perf_per_area_improvement(100, 10.0, 100, 100.0) - 10.0).abs() < 1e-12);
+        // 2× slower, 349× smaller → 174.5×.
+        assert!((perf_per_area_improvement(200, 1.0, 100, 349.0) - 174.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,257 @@
+//! Hand-rolled CLI (the offline registry has no `clap`; see DESIGN.md §3).
+//!
+//! ```text
+//! casper experiments [--only fig10,table5] [--quick] [--steps N]
+//!                    [--out-dir DIR] [--config FILE]
+//! casper run --kernel jacobi2d --level llc [--steps N] [--config FILE]
+//! casper validate [--artifacts DIR]
+//! casper roofline
+//! casper info
+//! casper help
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{SimConfig, SizeClass};
+use crate::harness::Experiment;
+use crate::stencil::StencilKind;
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    Experiments {
+        only: Vec<Experiment>,
+        quick: bool,
+        steps: usize,
+        out_dir: Option<PathBuf>,
+        config: Option<PathBuf>,
+    },
+    Run {
+        kernel: StencilKind,
+        level: SizeClass,
+        steps: usize,
+        config: Option<PathBuf>,
+    },
+    Validate {
+        artifacts: Option<PathBuf>,
+    },
+    Roofline,
+    Info,
+    Help,
+}
+
+pub const USAGE: &str = "\
+casper — near-cache stencil acceleration (full-system reproduction)
+
+USAGE:
+  casper experiments [--only IDs] [--quick] [--steps N] [--out-dir DIR] [--config FILE]
+      Regenerate the paper's tables/figures. IDs: fig1 fig10 fig11 fig12
+      fig13 fig14 table4 table5 table6 (comma-separated; default all).
+  casper run --kernel NAME --level {l2|llc|dram} [--steps N] [--config FILE]
+      Run one stencil on Casper + all baselines and print the comparison.
+  casper validate [--artifacts DIR]
+      Execute the AOT JAX/Pallas artifacts via PJRT and cross-check the
+      simulator numerics (requires `make artifacts`).
+  casper roofline
+      Print the Fig 1 roofline data.
+  casper info
+      Print the Table 2 machine configuration.
+  casper help
+      This message.
+
+KERNELS: jacobi1d pts7_1d jacobi2d blur2d heat3d pts33_3d
+";
+
+/// A tiny flag parser: `--key value` pairs plus boolean flags.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let boolean = matches!(name, "quick" | "help");
+                if boolean {
+                    flags.push((name.to_string(), None));
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .with_context(|| format!("--{name} requires a value"))?;
+                    flags.push((name.to_string(), Some(v.clone())));
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
+        for (n, _) in &self.flags {
+            if !allowed.contains(&n.as_str()) {
+                bail!("unknown flag --{n} (see `casper help`)");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a full argv (without the binary name).
+pub fn parse(argv: &[String]) -> Result<Command> {
+    if argv.is_empty() {
+        return Ok(Command::Help);
+    }
+    let cmd = argv[0].as_str();
+    let rest = Args::parse(&argv[1..])?;
+    if rest.has("help") {
+        return Ok(Command::Help);
+    }
+    match cmd {
+        "experiments" => {
+            rest.reject_unknown(&["only", "quick", "steps", "out-dir", "config"])?;
+            let only = match rest.get("only") {
+                None => Experiment::ALL.to_vec(),
+                Some(s) => s
+                    .split(',')
+                    .map(|id| {
+                        Experiment::parse(id)
+                            .with_context(|| format!("unknown experiment '{id}'"))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            Ok(Command::Experiments {
+                only,
+                quick: rest.has("quick"),
+                steps: parse_steps(&rest)?,
+                out_dir: rest.get("out-dir").map(PathBuf::from),
+                config: rest.get("config").map(PathBuf::from),
+            })
+        }
+        "run" => {
+            rest.reject_unknown(&["kernel", "level", "steps", "config"])?;
+            let kernel = rest
+                .get("kernel")
+                .context("run requires --kernel")
+                .and_then(|s| StencilKind::parse(s).with_context(|| format!("unknown kernel '{s}'")))?;
+            let level = rest
+                .get("level")
+                .context("run requires --level")
+                .and_then(|s| SizeClass::parse(s).with_context(|| format!("unknown level '{s}'")))?;
+            Ok(Command::Run { kernel, level, steps: parse_steps(&rest)?, config: rest.get("config").map(PathBuf::from) })
+        }
+        "validate" => {
+            rest.reject_unknown(&["artifacts"])?;
+            Ok(Command::Validate { artifacts: rest.get("artifacts").map(PathBuf::from) })
+        }
+        "roofline" => {
+            rest.reject_unknown(&[])?;
+            Ok(Command::Roofline)
+        }
+        "info" => {
+            rest.reject_unknown(&[])?;
+            Ok(Command::Info)
+        }
+        "help" | "--help" | "-h" => Ok(Command::Help),
+        other => bail!("unknown command '{other}' (see `casper help`)"),
+    }
+}
+
+fn parse_steps(args: &Args) -> Result<usize> {
+    match args.get("steps") {
+        None => Ok(1),
+        Some(s) => {
+            let n: usize = s.parse().with_context(|| format!("bad --steps '{s}'"))?;
+            anyhow::ensure!(n >= 1, "--steps must be >= 1");
+            Ok(n)
+        }
+    }
+}
+
+/// Load the config, with file override.
+pub fn load_config(path: Option<&PathBuf>) -> Result<SimConfig> {
+    match path {
+        None => Ok(SimConfig::default()),
+        Some(p) => SimConfig::from_file(p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_experiments() {
+        let c = parse(&argv("experiments --only fig10,table5 --quick --out-dir out")).unwrap();
+        match c {
+            Command::Experiments { only, quick, steps, out_dir, .. } => {
+                assert_eq!(only, vec![Experiment::Fig10, Experiment::Table5]);
+                assert!(quick);
+                assert_eq!(steps, 1);
+                assert_eq!(out_dir.unwrap().to_str().unwrap(), "out");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_run() {
+        let c = parse(&argv("run --kernel jacobi2d --level llc --steps 3")).unwrap();
+        assert_eq!(
+            c,
+            Command::Run {
+                kernel: StencilKind::Jacobi2D,
+                level: SizeClass::Llc,
+                steps: 3,
+                config: None
+            }
+        );
+    }
+
+    #[test]
+    fn run_requires_kernel_and_level() {
+        assert!(parse(&argv("run --level llc")).is_err());
+        assert!(parse(&argv("run --kernel jacobi2d")).is_err());
+        assert!(parse(&argv("run --kernel bogus --level llc")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_flags_and_commands() {
+        assert!(parse(&argv("experiments --bogus x")).is_err());
+        assert!(parse(&argv("frobnicate")).is_err());
+        assert!(parse(&argv("experiments --only fig99")).is_err());
+        assert!(parse(&argv("experiments --steps 0")).is_err());
+    }
+
+    #[test]
+    fn empty_and_help() {
+        assert_eq!(parse(&[]).unwrap(), Command::Help);
+        assert_eq!(parse(&argv("help")).unwrap(), Command::Help);
+        assert_eq!(parse(&argv("run --help")).unwrap(), Command::Help);
+    }
+}

@@ -1,0 +1,504 @@
+//! Simulation configuration: the paper's Table 2 parameters, size classes,
+//! and a file-based config loader (TOML subset — the offline registry ships
+//! no `serde`/`toml`, see DESIGN.md §3).
+
+pub mod toml_mini;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use toml_mini::TomlDoc;
+
+/// The three data-set size classes of Table 3: fits in the private L2s,
+/// fits in the shared LLC, or exceeds the LLC (DRAM-resident).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SizeClass {
+    L2,
+    Llc,
+    Dram,
+}
+
+impl SizeClass {
+    pub const ALL: [SizeClass; 3] = [SizeClass::L2, SizeClass::Llc, SizeClass::Dram];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SizeClass::L2 => "L2",
+            SizeClass::Llc => "LLC",
+            SizeClass::Dram => "DRAM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SizeClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "l2" => Some(SizeClass::L2),
+            "llc" | "l3" => Some(SizeClass::Llc),
+            "dram" => Some(SizeClass::Dram),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SizeClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Parameters of one cache level (Table 2 rows L1I/D, L2, L3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheConfig {
+    /// Total capacity in bytes (per instance: per core for L1/L2, per slice
+    /// aggregate for L3 — see `LlcConfig`).
+    pub size_bytes: usize,
+    /// Associativity (ways).
+    pub ways: usize,
+    /// Cache line size in bytes.
+    pub line_bytes: usize,
+    /// Miss status holding registers (outstanding misses) per instance.
+    pub mshrs: usize,
+    /// Round-trip load-to-use latency in cycles.
+    pub latency: u64,
+    /// Energy per hit / per miss, in picojoules (Table 2, from [167]).
+    pub hit_pj: f64,
+    pub miss_pj: f64,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.ways * self.line_bytes)
+    }
+}
+
+/// Shared sliced last-level cache parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LlcConfig {
+    /// Per-slice capacity in bytes (2 MB in Table 2, 16 slices = 32 MB).
+    pub slice_bytes: usize,
+    pub slices: usize,
+    pub ways: usize,
+    pub line_bytes: usize,
+    /// MSHRs per slice.
+    pub mshrs_per_slice: usize,
+    /// Round-trip latency from a core (36 cycles in Table 2). The paper
+    /// states SPU-to-local-slice load-to-use is 8 cycles (§8.1).
+    pub core_latency: u64,
+    pub spu_local_latency: u64,
+    pub hit_pj: f64,
+    pub miss_pj: f64,
+    /// Block size used by the stencil-segment hash (128 kB, §4.2 fn.2).
+    pub stencil_block_bytes: usize,
+    /// Ways reserved for concurrent CPU processes while SPUs run (§4.4).
+    pub reserved_ways: usize,
+}
+
+impl LlcConfig {
+    pub fn total_bytes(&self) -> usize {
+        self.slice_bytes * self.slices
+    }
+    pub fn sets_per_slice(&self) -> usize {
+        self.slice_bytes / (self.ways * self.line_bytes)
+    }
+}
+
+/// DRAM parameters (Table 2: 16 GB DDR4, 4 channels, 160 nJ per access).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DramConfig {
+    pub channels: usize,
+    /// Closed-page access latency seen past the LLC, in CPU cycles.
+    pub latency: u64,
+    /// Peak per-channel bandwidth in bytes per CPU cycle. DDR4-2400 ≈
+    /// 19.2 GB/s per channel ≈ 9.6 B per 2 GHz CPU cycle.
+    pub bytes_per_cycle_per_channel: f64,
+    pub access_nj: f64,
+}
+
+/// Baseline CPU core parameters (Table 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CpuConfig {
+    pub cores: usize,
+    pub freq_ghz: f64,
+    pub issue_width: usize,
+    pub rob: usize,
+    pub load_queue: usize,
+    pub store_queue: usize,
+    /// SIMD width in bits (one 512-bit unit per core).
+    pub simd_bits: usize,
+    pub energy_per_instr_nj: f64,
+}
+
+impl CpuConfig {
+    /// f64 lanes per SIMD op.
+    pub fn simd_lanes(&self) -> usize {
+        self.simd_bits / 64
+    }
+    /// Peak double-precision FLOPS of the chip (MAC = 2 flops/lane/cycle).
+    pub fn peak_flops(&self) -> f64 {
+        self.cores as f64 * self.freq_ghz * 1e9 * self.simd_lanes() as f64 * 2.0
+    }
+}
+
+/// Casper SPU parameters (Table 2 + §3.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpuConfig {
+    /// One SPU per LLC slice.
+    pub count: usize,
+    pub simd_bits: usize,
+    pub load_queue: usize,
+    pub instr_buffer: usize,
+    pub stream_buffer: usize,
+    pub constant_buffer: usize,
+    pub energy_per_instr_nj: f64,
+    /// Area of one SPU at 22 nm (§8.6).
+    pub area_mm2: f64,
+}
+
+impl SpuConfig {
+    pub fn simd_lanes(&self) -> usize {
+        self.simd_bits / 64
+    }
+}
+
+/// Mesh NoC parameters (Table 2: mesh, XY routing, 64 B/cycle/direction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NocConfig {
+    /// Mesh dimensions; `x * y` must equal the LLC slice count.
+    pub mesh_x: usize,
+    pub mesh_y: usize,
+    /// Per-hop latency in cycles (router + link).
+    pub hop_latency: u64,
+    /// Link bandwidth in bytes per cycle per direction.
+    pub link_bytes_per_cycle: usize,
+}
+
+/// Stride prefetcher parameters ("stride prefetchers at all levels").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefetchConfig {
+    pub enabled: bool,
+    /// Distinct streams tracked per prefetcher.
+    pub streams: usize,
+    /// Prefetch degree (lines fetched ahead per trigger).
+    pub degree: usize,
+}
+
+/// Where the SPUs sit — near the LLC slices (Casper) or near the private
+/// L1s (the Fig 14 ablation baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpuPlacement {
+    NearLlc,
+    NearL1,
+}
+
+/// Which address→slice hash the stencil segment uses (Fig 14 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MappingPolicy {
+    /// Conventional line-interleaved hash for everything.
+    Baseline,
+    /// 128 kB-block linear hash inside the stencil segment (§4.2).
+    StencilSegment,
+}
+
+/// Complete system configuration. `SimConfig::default()` reproduces the
+/// paper's Table 2 machine exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    pub cpu: CpuConfig,
+    pub l1: CacheConfig,
+    pub l2: CacheConfig,
+    pub llc: LlcConfig,
+    pub dram: DramConfig,
+    pub spu: SpuConfig,
+    pub noc: NocConfig,
+    pub prefetch: PrefetchConfig,
+    pub placement: SpuPlacement,
+    pub mapping: MappingPolicy,
+    /// Chip static (leakage + uncore) power in watts, charged over the
+    /// runtime of *both* systems — the host CPU is present and powered
+    /// whether the kernel runs on its cores or on the SPUs. This is what
+    /// separates the paper's Fig 11 (total system energy, Casper wins by
+    /// 35%) from its appendix Table 6 (dynamic-only, Casper loses) — see
+    /// EXPERIMENTS.md.
+    pub chip_static_watts: f64,
+    /// RNG seed for grid initialization.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            cpu: CpuConfig {
+                cores: 16,
+                freq_ghz: 2.0,
+                issue_width: 8,
+                rob: 224,
+                load_queue: 72,
+                store_queue: 64,
+                simd_bits: 512,
+                energy_per_instr_nj: 0.08,
+            },
+            l1: CacheConfig {
+                size_bytes: 32 * 1024,
+                ways: 8,
+                line_bytes: 64,
+                mshrs: 16,
+                latency: 4,
+                hit_pj: 15.0,
+                miss_pj: 33.0,
+            },
+            l2: CacheConfig {
+                size_bytes: 256 * 1024,
+                ways: 8,
+                line_bytes: 64,
+                mshrs: 16,
+                latency: 12,
+                hit_pj: 46.0,
+                miss_pj: 93.0,
+            },
+            llc: LlcConfig {
+                slice_bytes: 2 * 1024 * 1024,
+                slices: 16,
+                ways: 16,
+                line_bytes: 64,
+                mshrs_per_slice: 32,
+                core_latency: 36,
+                spu_local_latency: 8,
+                hit_pj: 945.0,
+                miss_pj: 1904.0,
+                stencil_block_bytes: 128 * 1024,
+                reserved_ways: 1,
+            },
+            dram: DramConfig {
+                channels: 4,
+                latency: 200,
+                bytes_per_cycle_per_channel: 9.6,
+                access_nj: 160.0,
+            },
+            spu: SpuConfig {
+                count: 16,
+                simd_bits: 512,
+                load_queue: 10,
+                instr_buffer: 64,
+                stream_buffer: 16,
+                constant_buffer: 16,
+                energy_per_instr_nj: 0.016,
+                area_mm2: 0.146,
+            },
+            noc: NocConfig {
+                mesh_x: 4,
+                mesh_y: 4,
+                hop_latency: 2,
+                link_bytes_per_cycle: 64,
+            },
+            prefetch: PrefetchConfig {
+                enabled: true,
+                streams: 16,
+                degree: 4,
+            },
+            placement: SpuPlacement::NearLlc,
+            mapping: MappingPolicy::StencilSegment,
+            chip_static_watts: 60.0,
+            seed: 0xCA5_9E12,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Validate cross-field invariants. Called by the CLI and loaders.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.noc.mesh_x * self.noc.mesh_y == self.llc.slices,
+            "mesh {}x{} must cover {} LLC slices",
+            self.noc.mesh_x,
+            self.noc.mesh_y,
+            self.llc.slices
+        );
+        anyhow::ensure!(
+            self.spu.count == self.llc.slices,
+            "one SPU per LLC slice required ({} SPUs vs {} slices)",
+            self.spu.count,
+            self.llc.slices
+        );
+        anyhow::ensure!(self.llc.line_bytes == self.l1.line_bytes, "uniform line size");
+        anyhow::ensure!(self.llc.line_bytes == self.l2.line_bytes, "uniform line size");
+        anyhow::ensure!(
+            self.llc.stencil_block_bytes % self.llc.line_bytes == 0,
+            "stencil block must be line-aligned"
+        );
+        anyhow::ensure!(self.llc.reserved_ways < self.llc.ways, "reserved ways < ways");
+        anyhow::ensure!(self.l1.sets() > 0 && self.l2.sets() > 0, "cache geometry");
+        Ok(())
+    }
+
+    /// Load a config from a TOML-subset file, starting from defaults and
+    /// overriding any provided keys (flat `section.key = value` form).
+    pub fn from_file(path: &Path) -> Result<SimConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from a string (see [`from_file`](Self::from_file)).
+    pub fn from_toml_str(text: &str) -> Result<SimConfig> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = SimConfig::default();
+        // Integers
+        macro_rules! geti {
+            ($key:expr, $slot:expr) => {
+                if let Some(v) = doc.get_int($key)? {
+                    $slot = v as _;
+                }
+            };
+        }
+        macro_rules! getf {
+            ($key:expr, $slot:expr) => {
+                if let Some(v) = doc.get_float($key)? {
+                    $slot = v;
+                }
+            };
+        }
+        geti!("cpu.cores", cfg.cpu.cores);
+        getf!("cpu.freq_ghz", cfg.cpu.freq_ghz);
+        geti!("cpu.issue_width", cfg.cpu.issue_width);
+        geti!("cpu.rob", cfg.cpu.rob);
+        geti!("cpu.load_queue", cfg.cpu.load_queue);
+        geti!("cpu.store_queue", cfg.cpu.store_queue);
+        geti!("cpu.simd_bits", cfg.cpu.simd_bits);
+        getf!("cpu.energy_per_instr_nj", cfg.cpu.energy_per_instr_nj);
+
+        geti!("l1.size_bytes", cfg.l1.size_bytes);
+        geti!("l1.ways", cfg.l1.ways);
+        geti!("l1.mshrs", cfg.l1.mshrs);
+        geti!("l1.latency", cfg.l1.latency);
+        geti!("l2.size_bytes", cfg.l2.size_bytes);
+        geti!("l2.ways", cfg.l2.ways);
+        geti!("l2.mshrs", cfg.l2.mshrs);
+        geti!("l2.latency", cfg.l2.latency);
+
+        geti!("llc.slice_bytes", cfg.llc.slice_bytes);
+        geti!("llc.slices", cfg.llc.slices);
+        geti!("llc.ways", cfg.llc.ways);
+        geti!("llc.mshrs_per_slice", cfg.llc.mshrs_per_slice);
+        geti!("llc.core_latency", cfg.llc.core_latency);
+        geti!("llc.spu_local_latency", cfg.llc.spu_local_latency);
+        geti!("llc.stencil_block_bytes", cfg.llc.stencil_block_bytes);
+        geti!("llc.reserved_ways", cfg.llc.reserved_ways);
+
+        geti!("dram.channels", cfg.dram.channels);
+        geti!("dram.latency", cfg.dram.latency);
+        getf!("dram.bytes_per_cycle_per_channel", cfg.dram.bytes_per_cycle_per_channel);
+        getf!("dram.access_nj", cfg.dram.access_nj);
+
+        geti!("spu.count", cfg.spu.count);
+        geti!("spu.simd_bits", cfg.spu.simd_bits);
+        geti!("spu.load_queue", cfg.spu.load_queue);
+        geti!("spu.instr_buffer", cfg.spu.instr_buffer);
+        getf!("spu.energy_per_instr_nj", cfg.spu.energy_per_instr_nj);
+        getf!("spu.area_mm2", cfg.spu.area_mm2);
+
+        geti!("noc.mesh_x", cfg.noc.mesh_x);
+        geti!("noc.mesh_y", cfg.noc.mesh_y);
+        geti!("noc.hop_latency", cfg.noc.hop_latency);
+        geti!("noc.link_bytes_per_cycle", cfg.noc.link_bytes_per_cycle);
+
+        if let Some(b) = doc.get_bool("prefetch.enabled")? {
+            cfg.prefetch.enabled = b;
+        }
+        geti!("prefetch.streams", cfg.prefetch.streams);
+        geti!("prefetch.degree", cfg.prefetch.degree);
+
+        if let Some(s) = doc.get_str("casper.placement")? {
+            cfg.placement = match s.as_str() {
+                "near_llc" => SpuPlacement::NearLlc,
+                "near_l1" => SpuPlacement::NearL1,
+                other => anyhow::bail!("unknown casper.placement '{other}'"),
+            };
+        }
+        if let Some(s) = doc.get_str("casper.mapping")? {
+            cfg.mapping = match s.as_str() {
+                "baseline" => MappingPolicy::Baseline,
+                "stencil_segment" => MappingPolicy::StencilSegment,
+                other => anyhow::bail!("unknown casper.mapping '{other}'"),
+            };
+        }
+        getf!("sim.chip_static_watts", cfg.chip_static_watts);
+        geti!("sim.seed", cfg.seed);
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table2() {
+        let c = SimConfig::default();
+        assert_eq!(c.cpu.cores, 16);
+        assert_eq!(c.llc.total_bytes(), 32 * 1024 * 1024);
+        assert_eq!(c.llc.sets_per_slice(), 2048);
+        assert_eq!(c.l1.sets(), 64);
+        assert_eq!(c.spu.simd_lanes(), 8);
+        assert!(c.validate().is_ok());
+        // Peak fp64 FLOPS of the Table-2 chip: 16 cores * 2 GHz * 8 lanes *
+        // 2 flops = 512 GFLOPS (the paper's Fig 1 quotes 537.6 for the Xeon).
+        assert!((c.cpu.peak_flops() - 512e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn validate_rejects_bad_mesh() {
+        let mut c = SimConfig::default();
+        c.noc.mesh_x = 3;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_spu_slice_mismatch() {
+        let mut c = SimConfig::default();
+        c.spu.count = 8;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let text = r#"
+# comment
+[cpu]
+cores = 8
+
+[llc]
+slices = 8
+
+[spu]
+count = 8
+
+[noc]
+mesh_x = 4
+mesh_y = 2
+
+[casper]
+placement = "near_l1"
+mapping = "baseline"
+"#;
+        let c = SimConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.cpu.cores, 8);
+        assert_eq!(c.llc.slices, 8);
+        assert_eq!(c.placement, SpuPlacement::NearL1);
+        assert_eq!(c.mapping, MappingPolicy::Baseline);
+    }
+
+    #[test]
+    fn toml_bad_value_is_error() {
+        assert!(SimConfig::from_toml_str("[casper]\nplacement = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn size_class_parse() {
+        assert_eq!(SizeClass::parse("llc"), Some(SizeClass::Llc));
+        assert_eq!(SizeClass::parse("L2"), Some(SizeClass::L2));
+        assert_eq!(SizeClass::parse("dram"), Some(SizeClass::Dram));
+        assert_eq!(SizeClass::parse("x"), None);
+    }
+}

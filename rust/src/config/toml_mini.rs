@@ -1,0 +1,225 @@
+//! A TOML-subset parser sufficient for simulator config files.
+//!
+//! Supported: `[section]` headers, `key = value` pairs with integer
+//! (decimal, underscores, `0x`), float, boolean, and quoted-string values,
+//! `#` comments, and blank lines. Keys are exposed flattened as
+//! `section.key`. Duplicate keys are an error (catches config typos).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// One parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+/// A parsed document: flat `section.key -> value` map.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document; errors carry the 1-based line number.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() || !name.chars().all(is_key_char) {
+                    bail!("line {}: bad section name '{name}'", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() || !key.chars().all(is_key_char) {
+                bail!("line {}: bad key '{key}'", lineno + 1);
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value for '{full}'", lineno + 1))?;
+            if doc.map.insert(full.clone(), value).is_some() {
+                bail!("line {}: duplicate key '{full}'", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.map.get(key)
+    }
+
+    /// Integer accessor; `Ok(None)` if absent, error on type mismatch.
+    pub fn get_int(&self, key: &str) -> Result<Option<i64>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Int(v)) => Ok(Some(*v)),
+            Some(other) => bail!("'{key}': expected integer, found {other:?}"),
+        }
+    }
+
+    /// Float accessor; integers widen to float.
+    pub fn get_float(&self, key: &str) -> Result<Option<f64>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Float(v)) => Ok(Some(*v)),
+            Some(TomlValue::Int(v)) => Ok(Some(*v as f64)),
+            Some(other) => bail!("'{key}': expected float, found {other:?}"),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Bool(v)) => Ok(Some(*v)),
+            Some(other) => bail!("'{key}': expected bool, found {other:?}"),
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<Option<String>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Str(v)) => Ok(Some(v.clone())),
+            Some(other) => bail!("'{key}': expected string, found {other:?}"),
+        }
+    }
+}
+
+fn is_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q.strip_suffix('"').context("unterminated string")?;
+        if inner.contains('"') {
+            bail!("embedded quote in string");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Some(hex) = cleaned.strip_prefix("0x").or_else(|| cleaned.strip_prefix("0X")) {
+        let v = i64::from_str_radix(hex, 16).context("bad hex integer")?;
+        return Ok(TomlValue::Int(v));
+    }
+    if !cleaned.contains('.') && !cleaned.contains('e') && !cleaned.contains('E') {
+        if let Ok(v) = cleaned.parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+top = 1
+[a]
+x = 10
+y = 2.5
+z = true
+name = "hello"  # trailing comment
+big = 1_000_000
+hexy = 0x1F
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("top").unwrap(), Some(1));
+        assert_eq!(doc.get_int("a.x").unwrap(), Some(10));
+        assert_eq!(doc.get_float("a.y").unwrap(), Some(2.5));
+        assert_eq!(doc.get_bool("a.z").unwrap(), Some(true));
+        assert_eq!(doc.get_str("a.name").unwrap(), Some("hello".into()));
+        assert_eq!(doc.get_int("a.big").unwrap(), Some(1_000_000));
+        assert_eq!(doc.get_int("a.hexy").unwrap(), Some(31));
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let doc = TomlDoc::parse("x = 3\n").unwrap();
+        assert_eq!(doc.get_float("x").unwrap(), Some(3.0));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(TomlDoc::parse("x = 1\nx = 2\n").is_err());
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let doc = TomlDoc::parse("x = \"s\"\n").unwrap();
+        assert!(doc.get_int("x").is_err());
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.get_int("nope").unwrap(), None);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = TomlDoc::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("s").unwrap(), Some("a#b".into()));
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let err = TomlDoc::parse("\n\nbogus line\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"));
+    }
+}

@@ -1,0 +1,211 @@
+//! The Table 1 programmer API, faithfully shaped: this is what Fig 8's
+//! `computeStencil` calls would bind to. The high-level experiment driver
+//! ([`super::engine::run_casper`]) builds on the same object.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::{SimConfig, SpuPlacement};
+use crate::isa::CasperProgram;
+use crate::mapping::StencilSegment;
+use crate::mem::cache::Cache;
+use crate::spu::{SharedMem, Spu};
+
+/// The Casper runtime: owns the SPUs and the shared memory-system models.
+pub struct CasperRuntime {
+    pub(crate) cfg: SimConfig,
+    pub mem: SharedMem,
+    pub(crate) spus: Vec<Spu>,
+    pub(crate) program: Option<CasperProgram>,
+}
+
+impl CasperRuntime {
+    pub fn new(cfg: &SimConfig) -> CasperRuntime {
+        let mut mem = SharedMem::new(cfg, cfg.mapping);
+        // §4.4: one LLC way stays reserved for concurrent CPU processes.
+        mem.llc.set_reserved_ways(cfg.llc.reserved_ways);
+        if cfg.placement == SpuPlacement::NearL1 {
+            // Near-L1 SPUs pay the core→LLC latency instead of the
+            // SPU-local 8 cycles, but gain a private L1 in front.
+            mem.spu_local_latency = cfg.llc.core_latency;
+            mem.spu_l1 = Some(
+                (0..cfg.spu.count)
+                    .map(|_| Cache::from_config(&cfg.l1))
+                    .collect(),
+            );
+        }
+        CasperRuntime { cfg: cfg.clone(), mem, spus: Vec::new(), program: None }
+    }
+
+    /// `initStencilSegment(size)`: allocate the physically contiguous
+    /// stencil region and register it at every NoC injection point.
+    pub fn init_stencil_segment(&mut self, bytes: u64) -> Result<u64> {
+        ensure!(bytes > 0 && bytes % 8 == 0, "segment must be a positive multiple of 8 B");
+        let base = self.mem.store.alloc_segment(bytes);
+        self.mem.mapper.set_segment(StencilSegment::new(base, bytes));
+        Ok(base)
+    }
+
+    /// `initStencilcode(addr, length)`: broadcast the microcode to every
+    /// SPU. We pass the structured program; its 15-bit encoding is what
+    /// would sit at `addr`.
+    pub fn init_stencil_code(&mut self, program: CasperProgram) -> Result<()> {
+        program.validate()?;
+        self.spus = (0..self.cfg.spu.count)
+            .map(|id| Spu::new(id, id, &self.cfg, program.clone()))
+            .collect();
+        self.program = Some(program);
+        Ok(())
+    }
+
+    /// `initConstant(const, index)`: set a constant-buffer entry on every
+    /// SPU. The [`ProgramBuilder`](crate::isa::ProgramBuilder) already
+    /// interns constants; this call overrides one slot (e.g. to retune a
+    /// coefficient without regenerating code).
+    pub fn init_constant(&mut self, value: f64, index: usize) -> Result<()> {
+        let Some(prog) = &mut self.program else { bail!("initStencilcode first") };
+        ensure!(index < crate::isa::program::MAX_CONSTANTS, "constant index out of range");
+        if prog.constants.len() <= index {
+            prog.constants.resize(index + 1, 0.0);
+        }
+        prog.constants[index] = value;
+        // Re-broadcast to SPUs.
+        let prog = prog.clone();
+        for spu in &mut self.spus {
+            *spu = Spu::new(spu.id, spu.slice, &self.cfg, prog.clone());
+        }
+        Ok(())
+    }
+
+    /// `initStream(addr, streamID, accID)`: bind one stream base address
+    /// on one SPU.
+    pub fn init_stream(&mut self, addr: u64, stream_id: usize, spu_id: usize) -> Result<()> {
+        ensure!(spu_id < self.spus.len(), "SPU {spu_id} out of range");
+        let spu = &mut self.spus[spu_id];
+        spu.set_stream(stream_id, addr)?;
+        Ok(())
+    }
+
+    /// `setNElements(n, accID)`.
+    pub fn set_n_elements(&mut self, n: u64, spu_id: usize) -> Result<()> {
+        ensure!(spu_id < self.spus.len(), "SPU {spu_id} out of range");
+        self.spus[spu_id].set_n_elements(n);
+        Ok(())
+    }
+
+    /// `startAccelerator()`: run every SPU's bound work to completion.
+    /// SPU 0 acts as the leader (§5.2): each SPU reports completion over
+    /// the NoC and the leader signals the CPU once all are done. Returns
+    /// the leader-observed completion cycle.
+    pub fn start_accelerator(&mut self) -> Result<u64> {
+        ensure!(self.program.is_some(), "initStencilcode first");
+        ensure!(!self.spus.is_empty(), "no SPUs configured");
+        // Round-robin lockstep: one vector group per SPU per round keeps
+        // the shared-resource (slice port, NoC, DRAM) interleaving honest.
+        loop {
+            let mut progress = false;
+            for spu in &mut self.spus {
+                progress |= spu.run_group(&mut self.mem);
+            }
+            if !progress {
+                break;
+            }
+        }
+        // Leader aggregation: completion messages hop to SPU 0's node.
+        let leader = 0usize;
+        let mut done = 0u64;
+        let finishes: Vec<(usize, u64)> =
+            self.spus.iter().map(|s| (s.slice, s.finish_time())).collect();
+        for (slice, t) in finishes {
+            let arrive = self.mem.noc.send(slice, leader, 8, t);
+            done = done.max(arrive);
+        }
+        Ok(done)
+    }
+
+    pub fn spus(&self) -> &[Spu] {
+        &self.spus
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::ProgramBuilder;
+    use crate::stencil::StencilKind;
+
+    fn runtime() -> CasperRuntime {
+        CasperRuntime::new(&SimConfig::default())
+    }
+
+    #[test]
+    fn api_order_is_enforced() {
+        let mut rt = runtime();
+        assert!(rt.start_accelerator().is_err(), "no code yet");
+        assert!(rt.init_constant(0.5, 0).is_err(), "no code yet");
+        let prog = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi1D.descriptor())
+            .unwrap();
+        rt.init_stencil_code(prog).unwrap();
+        assert!(rt.init_stream(0x1000_0000, 0, 99).is_err(), "bad SPU id");
+    }
+
+    #[test]
+    fn segment_validation() {
+        let mut rt = runtime();
+        assert!(rt.init_stencil_segment(0).is_err());
+        assert!(rt.init_stencil_segment(12).is_err());
+        let base = rt.init_stencil_segment(4096).unwrap();
+        assert!(rt.mem.mapper.in_segment(base));
+        assert!(!rt.mem.mapper.in_segment(base + 4096));
+    }
+
+    #[test]
+    fn fig8_style_manual_program() {
+        // Program a tiny Jacobi-1D by hand through the Table 1 calls on a
+        // 4-SPU... 16-SPU system, using only SPU 0 (others get 0 work).
+        let mut rt = runtime();
+        let seg = rt.init_stencil_segment(1 << 20).unwrap();
+        let prog = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi1D.descriptor())
+            .unwrap();
+        rt.init_stencil_code(prog).unwrap();
+        // 32 input points, ramp data.
+        for i in 0..32u64 {
+            rt.mem.store.write_f64(seg + i * 8, i as f64);
+        }
+        let out = seg + (1 << 19);
+        rt.init_stream(out + 8, 0, 0).unwrap(); // output B[1]
+        rt.init_stream(seg + 8, 1, 0).unwrap(); // input row at A[1]
+        rt.set_n_elements(30, 0).unwrap();
+        let cycles = rt.start_accelerator().unwrap();
+        assert!(cycles > 0);
+        // Linear data: interior mean equals the center → B[i] = i.
+        for i in 1..31u64 {
+            let got = rt.mem.store.read_f64(out + i * 8);
+            assert!((got - i as f64).abs() < 1e-12, "i={i} got={got}");
+        }
+        // Leader observed every SPU (even the idle ones).
+        assert_eq!(rt.spus()[0].stats.stores, 4); // 30 elems → 4 groups
+    }
+
+    #[test]
+    fn way_reservation_applied() {
+        let rt = runtime();
+        assert_eq!(rt.mem.llc.way_limit(), 15);
+    }
+
+    #[test]
+    fn constant_override() {
+        let mut rt = runtime();
+        let prog = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi1D.descriptor())
+            .unwrap();
+        rt.init_stencil_code(prog).unwrap();
+        rt.init_constant(0.25, 0).unwrap();
+        assert_eq!(rt.program.as_ref().unwrap().constants[0], 0.25);
+    }
+}

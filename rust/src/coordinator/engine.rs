@@ -1,0 +1,421 @@
+//! The experiment-level Casper driver: array layout, work partitioning by
+//! output-block ownership (§4.2), chunked SPU execution, boundary policy,
+//! and time stepping.
+
+use anyhow::Result;
+
+use crate::config::SimConfig;
+use crate::isa::ProgramBuilder;
+use crate::stencil::{Domain, StencilDesc, StencilKind};
+
+use super::api::CasperRuntime;
+use super::layout::SegmentLayout;
+use super::metrics::RunStats;
+
+/// Options for ablation runs (Fig 14 and the unaligned-hardware study).
+#[derive(Debug, Clone, Copy)]
+pub struct CasperOptions {
+    /// Model the §4.1 unaligned-load hardware (default true).
+    pub unaligned_hw: bool,
+    /// Warm the LLC with the working set before timing (default true —
+    /// the paper's L2/LLC-sized experiments assume the tiled working set
+    /// already resides on chip; DRAM-sized sets exceed capacity, so
+    /// warming leaves only the tail resident, which is equally realistic).
+    pub warm_llc: bool,
+    /// Seed for the input grid.
+    pub seed: u64,
+}
+
+impl Default for CasperOptions {
+    fn default() -> Self {
+        CasperOptions { unaligned_hw: true, warm_llc: true, seed: 0xCA5_9E12 }
+    }
+}
+
+/// One contiguous piece of work for one SPU: `n` output elements starting
+/// at linear element index `start`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub start: u64,
+    pub n: u64,
+}
+
+/// Linear interior runs of a domain (see DESIGN.md §5): one run per
+/// interior z-slab, starting at the first fully-interior element and
+/// covering the slab's interior rows contiguously. X-edge elements inside
+/// a run are computed (streamed over) and patched afterwards — the
+/// streaming execution model of §3.2.
+pub fn interior_runs(desc: &StencilDesc, domain: &Domain) -> Vec<Chunk> {
+    let [rx, ry, rz] = desc.radius();
+    let (nx, ny, nz) = (domain.nx as u64, domain.ny as u64, domain.nz as u64);
+    let (rx, ry, rz) = (rx as u64, ry as u64, rz as u64);
+    let mut runs = Vec::new();
+    for z in rz..nz - rz {
+        let start = (z * ny + ry) * nx + rx;
+        let n = (ny - 2 * ry) * nx - 2 * rx;
+        runs.push(Chunk { start, n });
+    }
+    runs
+}
+
+/// Split runs into per-SPU chunks by *output-block ownership*: each SPU
+/// owns the output elements whose B-address falls in a 128 kB block homed
+/// on its slice (§4.2). Returns `chunks[spu] = Vec<Chunk>`.
+pub fn partition(
+    runs: &[Chunk],
+    layout: &SegmentLayout,
+    mapper: &crate::mapping::SliceMapper,
+    n_spus: usize,
+) -> Vec<Vec<Chunk>> {
+    let mut per_spu: Vec<Vec<Chunk>> = vec![Vec::new(); n_spus];
+    let block_elems = mapper.block_bytes() / 8;
+    for run in runs {
+        let mut e = run.start;
+        let end = run.start + run.n;
+        while e < end {
+            let slice = mapper.slice_of(layout.b_addr(e));
+            // Elements to the next block boundary of the OUTPUT array.
+            let off_in_block = (layout.b_addr(e) - layout.seg_base) / 8 % block_elems;
+            let to_boundary = block_elems - off_in_block;
+            let n = to_boundary.min(end - e);
+            // Coalesce with the previous chunk when contiguous.
+            match per_spu[slice].last_mut() {
+                Some(prev) if prev.start + prev.n == e => prev.n += n,
+                _ => per_spu[slice].push(Chunk { start: e, n }),
+            }
+            e += n;
+        }
+    }
+    per_spu
+}
+
+/// Run one stencil on Casper for `steps` Jacobi iterations and return the
+/// cycle count, event counters, and the functional output grid.
+pub fn run_casper(cfg: &SimConfig, kind: StencilKind, domain: &Domain, steps: usize) -> RunStats {
+    run_casper_with(cfg, kind, domain, steps, CasperOptions::default())
+        .expect("casper run failed")
+}
+
+/// Full-control variant.
+pub fn run_casper_with(
+    cfg: &SimConfig,
+    kind: StencilKind,
+    domain: &Domain,
+    steps: usize,
+    opts: CasperOptions,
+) -> Result<RunStats> {
+    let desc = kind.descriptor();
+    let program = ProgramBuilder::new().build(&desc)?;
+    let mut rt = CasperRuntime::new(cfg);
+    rt.mem.unaligned_hw = opts.unaligned_hw;
+
+    // --- Segment allocation & data initialization (Fig 8 lines 4-10) ---
+    let layout = SegmentLayout::for_domain(domain, &cfg.llc);
+    let seg_base = rt.init_stencil_segment(layout.seg_bytes)?;
+    let mut layout = layout.bind(seg_base);
+    let input = domain.alloc_random(opts.seed);
+    rt.mem.store.write_slice(layout.a_addr(0), &input.data);
+    // Jacobi-style ping-pong: B starts as a copy so that boundary elements
+    // (never written by SPUs) carry through — same policy as the golden
+    // reference.
+    rt.mem.store.write_slice(layout.b_addr(0), &input.data);
+
+    rt.init_stencil_code(program)?;
+
+    // Warm-up: stream both arrays through the LLC tags (in address order,
+    // as the initialization in Fig 8 lines 10 would), then clear counters.
+    if opts.warm_llc {
+        let line = cfg.llc.line_bytes as u64;
+        for array in [layout.a_base(), layout.b_base()] {
+            let mut addr = array;
+            while addr < array + layout.array_bytes {
+                let slice = rt.mem.mapper.slice_of(addr);
+                rt.mem.llc.access(slice, addr, false);
+                addr += line;
+            }
+        }
+        rt.mem.llc.reset_stats();
+        rt.mem.dram.reset();
+        rt.mem.noc.reset();
+    }
+
+    let nx = domain.nx as i64;
+    let nxy = (domain.nx * domain.ny) as i64;
+    let runs = interior_runs(&desc, domain);
+
+    let mut cycles_done = 0u64;
+    for _step in 0..steps {
+        let chunks = partition(&runs, &layout, &rt.mem.mapper, cfg.spu.count);
+
+        // Per-SPU chunk queues, driven in lockstep rounds. Chunk
+        // transitions rebind the streams (`initStream`) and element count
+        // (`setNElements`) exactly as Fig 8 does per SPU.
+        let mut queues: Vec<std::collections::VecDeque<Chunk>> =
+            chunks.into_iter().map(|v| v.into()).collect();
+        loop {
+            let mut progress = false;
+            for spu_id in 0..rt.spus.len() {
+                if rt.spus[spu_id].is_done() {
+                    if let Some(chunk) = queues[spu_id].pop_front() {
+                        bind_chunk(&mut rt, spu_id, &layout, chunk, nx, nxy)?;
+                    }
+                }
+                progress |= {
+                    let spu = &mut rt.spus[spu_id];
+                    spu.run_group(&mut rt.mem)
+                };
+            }
+            if !progress {
+                break;
+            }
+        }
+
+        // Leader aggregation (§5.2): completion messages to SPU 0.
+        let mut done = cycles_done;
+        let finishes: Vec<(usize, u64)> =
+            rt.spus.iter().map(|s| (s.slice, s.finish_time())).collect();
+        for (slice, t) in finishes {
+            done = done.max(rt.mem.noc.send(slice, 0, 8, t));
+        }
+        cycles_done = done;
+
+        // Host boundary policy: copy non-interior elements through and
+        // repair streamed-over x-edge elements (surface work, not on the
+        // accelerator's critical path — see DESIGN.md §5).
+        patch_boundary(&mut rt, &desc, domain, &layout);
+
+        layout = layout.swapped();
+    }
+
+    // After the loop, the *latest output* is in the (pre-swap) B array,
+    // i.e. current layout's A array.
+    let out_data = rt.mem.store.read_vec(layout.a_addr(0), domain.points());
+    let mut output = domain.alloc();
+    output.data.copy_from_slice(&out_data);
+
+    // Aggregate stats.
+    let mut spu_stats = crate::spu::SpuStats::default();
+    let mut per_spu_max = 0u64;
+    for s in rt.spus() {
+        spu_stats.add(&s.stats);
+        per_spu_max = per_spu_max.max(s.stats.instrs);
+    }
+    Ok(RunStats {
+        cycles: cycles_done,
+        total_instrs: spu_stats.instrs,
+        per_spu_instrs: per_spu_max,
+        spu: spu_stats,
+        llc: rt.mem.llc.stats(),
+        dram_accesses: rt.mem.dram.accesses,
+        noc_messages: rt.mem.noc.messages,
+        noc_hops: rt.mem.noc.total_hops,
+        noc_contention_cycles: rt.mem.noc.contention_cycles,
+        output,
+    })
+}
+
+/// Bind one chunk's streams on one SPU.
+fn bind_chunk(
+    rt: &mut CasperRuntime,
+    spu_id: usize,
+    layout: &SegmentLayout,
+    chunk: Chunk,
+    nx: i64,
+    nxy: i64,
+) -> Result<()> {
+    let specs: Vec<crate::isa::StreamSpec> =
+        rt.spus[spu_id].program().streams.clone();
+    for (sid, spec) in specs.iter().enumerate() {
+        let addr = if spec.is_output {
+            layout.b_addr(chunk.start)
+        } else {
+            let off = spec.dy * nx + spec.dz * nxy;
+            layout.a_addr(chunk.start.wrapping_add_signed(off))
+        };
+        rt.init_stream(addr, sid, spu_id)?;
+    }
+    rt.set_n_elements(chunk.n, spu_id)?;
+    Ok(())
+}
+
+/// Copy every non-interior element of the output array from the input
+/// array (the shared boundary convention), fixing both untouched halo
+/// elements and streamed-over x-edges.
+fn patch_boundary(
+    rt: &mut CasperRuntime,
+    desc: &StencilDesc,
+    domain: &Domain,
+    layout: &SegmentLayout,
+) {
+    let [rx, ry, rz] = desc.radius();
+    let (nx, ny, nz) = (domain.nx, domain.ny, domain.nz);
+    let mut patch = |i: u64| {
+        let v = rt.mem.store.read_f64(layout.a_addr(i));
+        rt.mem.store.write_f64(layout.b_addr(i), v);
+    };
+    for z in 0..nz {
+        for y in 0..ny {
+            let interior_row = z >= rz && z < nz - rz && y >= ry && y < ny - ry;
+            let row = ((z * ny + y) * nx) as u64;
+            if !interior_row {
+                for x in 0..nx as u64 {
+                    patch(row + x);
+                }
+            } else {
+                for x in 0..rx as u64 {
+                    patch(row + x);
+                }
+                for x in (nx - rx) as u64..nx as u64 {
+                    patch(row + x);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MappingPolicy, SizeClass};
+    use crate::mapping::{SliceMapper, StencilSegment};
+    use crate::stencil::golden;
+
+    #[test]
+    fn interior_runs_cover_interior() {
+        for kind in StencilKind::ALL {
+            let d = Domain::tiny(kind);
+            let desc = kind.descriptor();
+            let runs = interior_runs(&desc, &d);
+            let [_, ry, rz] = desc.radius();
+            assert_eq!(runs.len(), d.nz - 2 * rz, "{kind}");
+            let total: u64 = runs.iter().map(|r| r.n).sum();
+            let expect = ((d.ny - 2 * ry) * d.nx - 2 * desc.radius()[0]) as u64
+                * (d.nz - 2 * rz) as u64;
+            assert_eq!(total, expect, "{kind}");
+        }
+    }
+
+    #[test]
+    fn partition_covers_all_elements_disjointly() {
+        let cfg = SimConfig::default();
+        let kind = StencilKind::Jacobi2D;
+        let d = Domain::for_level(kind, SizeClass::L2);
+        let layout = SegmentLayout::for_domain(&d, &cfg.llc).bind(0x1000_0000);
+        let mut mapper = SliceMapper::new(&cfg.llc, MappingPolicy::StencilSegment);
+        mapper.set_segment(StencilSegment::new(layout.seg_base, layout.seg_bytes));
+        let runs = interior_runs(&kind.descriptor(), &d);
+        let parts = partition(&runs, &layout, &mapper, 16);
+
+        let mut covered = std::collections::BTreeMap::new();
+        for (spu, chunks) in parts.iter().enumerate() {
+            for c in chunks {
+                for e in c.start..c.start + c.n {
+                    assert!(covered.insert(e, spu).is_none(), "element {e} double-assigned");
+                }
+            }
+        }
+        let want: u64 = runs.iter().map(|r| r.n).sum();
+        assert_eq!(covered.len() as u64, want);
+        // Ownership really follows the output-block hash.
+        for (&e, &spu) in covered.iter().step_by(1009) {
+            assert_eq!(mapper.slice_of(layout.b_addr(e)), spu);
+        }
+    }
+
+    #[test]
+    fn casper_matches_golden_all_kernels_tiny() {
+        let cfg = SimConfig::default();
+        for kind in StencilKind::ALL {
+            let d = Domain::tiny(kind);
+            let stats = run_casper(&cfg, kind, &d, 1);
+            let want = golden::run_kind(kind, &d, 1, CasperOptions::default().seed);
+            let diff = stats.output.max_abs_diff(&want);
+            assert!(diff < 1e-12, "{kind}: max diff {diff}");
+            assert!(stats.cycles > 0);
+            assert!(stats.total_instrs > 0);
+        }
+    }
+
+    #[test]
+    fn casper_matches_golden_multistep() {
+        let cfg = SimConfig::default();
+        for kind in [StencilKind::Jacobi2D, StencilKind::Heat3D] {
+            let d = Domain::tiny(kind);
+            let stats = run_casper(&cfg, kind, &d, 3);
+            let want = golden::run_kind(kind, &d, 3, CasperOptions::default().seed);
+            let diff = stats.output.max_abs_diff(&want);
+            assert!(diff < 1e-12, "{kind}: max diff {diff}");
+        }
+    }
+
+    #[test]
+    fn mapping_policy_changes_locality() {
+        let mut cfg = SimConfig::default();
+        let kind = StencilKind::Jacobi1D;
+        let d = Domain::for_level(kind, SizeClass::L2);
+        cfg.mapping = MappingPolicy::StencilSegment;
+        let seg = run_casper(&cfg, kind, &d, 1);
+        cfg.mapping = MappingPolicy::Baseline;
+        let base = run_casper(&cfg, kind, &d, 1);
+        assert!(
+            seg.local_fraction() > 0.95,
+            "stencil mapping should be almost all local: {}",
+            seg.local_fraction()
+        );
+        assert!(
+            base.local_fraction() < 0.2,
+            "baseline mapping scatters lines: {}",
+            base.local_fraction()
+        );
+        // And both still compute the right answer.
+        let want = golden::run_kind(kind, &d, 1, CasperOptions::default().seed);
+        assert!(base.output.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn per_spu_instr_balance() {
+        let cfg = SimConfig::default();
+        // LLC-sized 1D: 8 MB of output blocks → all 16 slices get work.
+        let d = Domain::for_level(StencilKind::Jacobi1D, SizeClass::Llc);
+        let stats = run_casper(&cfg, StencilKind::Jacobi1D, &d, 1);
+        let fair = stats.total_instrs / 16;
+        assert!(stats.per_spu_instrs < fair * 2, "{} vs fair {}", stats.per_spu_instrs, fair);
+    }
+
+    /// Diagnostic dump for calibration: `cargo test --release -- --ignored
+    /// dump_fig10 --nocapture`.
+    #[test]
+    #[ignore]
+    fn dump_fig10_numbers() {
+        let cfg = SimConfig::default();
+        for kind in StencilKind::ALL {
+            for level in [SizeClass::L2, SizeClass::Llc, SizeClass::Dram] {
+                let d = Domain::for_level(kind, level);
+                let c = run_casper(&cfg, kind, &d, 1);
+                let p = crate::cpu::run_cpu(&cfg, kind, &d, 1);
+                let ce = crate::energy::casper_energy(&cfg, &c);
+                let pe = crate::energy::cpu_energy(&cfg, &p);
+                println!(
+                    "{:<12} {:<5} speedup={:>6.2}x  casper={:>10} cpu={:>10}  e_ratio={:.2} (dyn {:.2})  local={:.2} llc_hit={:.2} dram={} lqstall={} noc_msgs={} llc_acc={}",
+                    kind.id(), level.name(),
+                    p.cycles as f64 / c.cycles as f64,
+                    c.cycles, p.cycles,
+                    ce.total_j() / pe.total_j(),
+                    ce.dynamic_j() / pe.dynamic_j(),
+                    c.local_fraction(), c.llc_hit_rate(), c.dram_accesses,
+                    c.spu.lq_stall_cycles, c.noc_messages, c.llc.accesses(),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_dataset_uses_subset_of_spus() {
+        // L2-sized 1D output is 1 MB = 8 blocks → exactly 8 SPUs work
+        // (§4.2 block ownership), the rest stay idle.
+        let cfg = SimConfig::default();
+        let d = Domain::for_level(StencilKind::Jacobi1D, SizeClass::L2);
+        let stats = run_casper(&cfg, StencilKind::Jacobi1D, &d, 1);
+        assert!(stats.per_spu_instrs >= stats.total_instrs / 8);
+    }
+}

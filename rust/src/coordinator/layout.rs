@@ -1,0 +1,117 @@
+//! Stencil-segment layout (Fig 8): two arrays (input A, output B) placed
+//! so that the same grid point of both arrays maps to the same LLC slice.
+
+use crate::config::LlcConfig;
+use crate::stencil::Domain;
+
+/// Where A and B live inside the stencil segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentLayout {
+    /// Segment base physical address.
+    pub seg_base: u64,
+    /// Total segment bytes.
+    pub seg_bytes: u64,
+    /// Byte offset of array A (always 0).
+    pub a_off: u64,
+    /// Byte offset of array B: the array stride.
+    pub b_off: u64,
+    /// Bytes actually used by one array.
+    pub array_bytes: u64,
+}
+
+impl SegmentLayout {
+    /// Compute the layout for a domain. The array stride is rounded up to
+    /// `block_bytes × slices` so that A and B block-decompose identically
+    /// (grid point i of A and of B share a slice — the Fig 8 property).
+    pub fn for_domain(domain: &Domain, llc: &LlcConfig) -> SegmentLayout {
+        let array_bytes = domain.array_bytes() as u64;
+        let round = (llc.stencil_block_bytes * llc.slices) as u64;
+        let stride = array_bytes.div_ceil(round) * round;
+        SegmentLayout {
+            seg_base: 0, // bound at alloc time
+            seg_bytes: 2 * stride,
+            a_off: 0,
+            b_off: stride,
+            array_bytes,
+        }
+    }
+
+    /// Bind to the allocated segment base.
+    pub fn bind(mut self, seg_base: u64) -> SegmentLayout {
+        self.seg_base = seg_base;
+        self
+    }
+
+    pub fn a_base(&self) -> u64 {
+        self.seg_base + self.a_off
+    }
+
+    pub fn b_base(&self) -> u64 {
+        self.seg_base + self.b_off
+    }
+
+    /// Byte address of element `i` in array A / B.
+    pub fn a_addr(&self, i: u64) -> u64 {
+        self.a_base() + i * 8
+    }
+
+    pub fn b_addr(&self, i: u64) -> u64 {
+        self.b_base() + i * 8
+    }
+
+    /// Swap the roles of A and B (time-step ping-pong).
+    pub fn swapped(&self) -> SegmentLayout {
+        SegmentLayout { a_off: self.b_off, b_off: self.a_off, ..*self }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MappingPolicy, SimConfig};
+    use crate::mapping::{SliceMapper, StencilSegment};
+    use crate::stencil::StencilKind;
+    use crate::config::SizeClass;
+
+    #[test]
+    fn fig8_property_same_point_same_slice() {
+        // For every size class and kernel: A[i] and B[i] map to the same
+        // LLC slice under the stencil hash.
+        let cfg = SimConfig::default();
+        for kind in StencilKind::ALL {
+            for level in SizeClass::ALL {
+                let d = Domain::for_level(kind, level);
+                let layout = SegmentLayout::for_domain(&d, &cfg.llc).bind(0x1000_0000);
+                let mut m = SliceMapper::new(&cfg.llc, MappingPolicy::StencilSegment);
+                m.set_segment(StencilSegment::new(layout.seg_base, layout.seg_bytes));
+                for i in (0..d.points() as u64).step_by(4097) {
+                    assert_eq!(
+                        m.slice_of(layout.a_addr(i)),
+                        m.slice_of(layout.b_addr(i)),
+                        "{kind} {level} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stride_is_block_multiple() {
+        let cfg = SimConfig::default();
+        let d = Domain::new(512, 256, 1); // 1 MB array
+        let l = SegmentLayout::for_domain(&d, &cfg.llc);
+        assert_eq!(l.b_off % (128 * 1024 * 16) as u64, 0);
+        assert!(l.b_off >= d.array_bytes() as u64);
+    }
+
+    #[test]
+    fn swap_exchanges_arrays() {
+        let cfg = SimConfig::default();
+        let d = Domain::new(1024, 1024, 1);
+        let l = SegmentLayout::for_domain(&d, &cfg.llc).bind(0x1000_0000);
+        let s = l.swapped();
+        assert_eq!(s.a_base(), l.b_base());
+        assert_eq!(s.b_base(), l.a_base());
+        assert_eq!(s.swapped(), l);
+    }
+}

@@ -1,0 +1,42 @@
+//! Run statistics shared by the Casper and baseline models.
+
+use crate::mem::cache::CacheStats;
+use crate::spu::SpuStats;
+use crate::stencil::Grid;
+
+/// Result of a full Casper run (all time steps).
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// End-to-end cycles (leader-observed completion).
+    pub cycles: u64,
+    /// Total dynamic Casper instructions across all SPUs.
+    pub total_instrs: u64,
+    /// Dynamic instructions of the busiest SPU (the paper's Table 4
+    /// Casper column reports per-SPU counts).
+    pub per_spu_instrs: u64,
+    pub spu: SpuStats,
+    pub llc: CacheStats,
+    pub dram_accesses: u64,
+    pub noc_messages: u64,
+    pub noc_hops: u64,
+    pub noc_contention_cycles: u64,
+    /// Functional result grid.
+    pub output: Grid,
+}
+
+impl RunStats {
+    /// Fraction of SPU loads served by the local slice.
+    pub fn local_fraction(&self) -> f64 {
+        let total = self.spu.local_loads + self.spu.remote_loads;
+        if total == 0 {
+            0.0
+        } else {
+            self.spu.local_loads as f64 / total as f64
+        }
+    }
+
+    /// LLC hit rate seen by the SPUs.
+    pub fn llc_hit_rate(&self) -> f64 {
+        self.llc.hit_rate()
+    }
+}

@@ -1,0 +1,22 @@
+//! The Casper coordinator: the paper's programming model (Table 1) and
+//! the execution engine that drives the SPUs.
+//!
+//! [`CasperRuntime`] exposes the six API calls of Table 1
+//! (`initStencilSegment`, `initStencilcode`, `initConstant`, `initStream`,
+//! `setNElements`, `startAccelerator`). [`run_casper`] is the high-level
+//! driver used by the experiments: it lays out the arrays in the stencil
+//! segment (Fig 8), compiles the stencil with the
+//! [`ProgramBuilder`](crate::isa::ProgramBuilder), partitions work by
+//! output-block ownership (§4.2), runs the SPUs, patches the halo
+//! (host-side boundary policy, as in the golden reference), and returns
+//! cycles + event counts + the functional result.
+
+pub mod api;
+pub mod engine;
+pub mod layout;
+pub mod metrics;
+
+pub use api::CasperRuntime;
+pub use engine::{run_casper, run_casper_with, CasperOptions};
+pub use layout::SegmentLayout;
+pub use metrics::RunStats;

@@ -1,0 +1,189 @@
+//! System energy model (Table 2 constants, from CACTI 7.0 [166] and
+//! [167, 168]): per-event energies for every cache level, DRAM accesses,
+//! and per-instruction core/SPU energy.
+
+use crate::config::SimConfig;
+use crate::coordinator::RunStats;
+use crate::cpu::CpuRunStats;
+use crate::mem::cache::CacheStats;
+use crate::mem::hierarchy::MemEvents;
+
+/// Energy breakdown in nanojoules.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct EnergyBreakdown {
+    pub core_nj: f64,
+    pub l1_nj: f64,
+    pub l2_nj: f64,
+    pub llc_nj: f64,
+    pub dram_nj: f64,
+    /// Chip static energy over the runtime (see
+    /// [`SimConfig::chip_static_watts`](crate::config::SimConfig)).
+    pub static_nj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Dynamic energy only — comparable to the paper's appendix Table 6.
+    pub fn dynamic_nj(&self) -> f64 {
+        self.core_nj + self.l1_nj + self.l2_nj + self.llc_nj + self.dram_nj
+    }
+
+    pub fn dynamic_j(&self) -> f64 {
+        self.dynamic_nj() * 1e-9
+    }
+
+    /// Total system energy (dynamic + static) — Fig 11's metric.
+    pub fn total_nj(&self) -> f64 {
+        self.dynamic_nj() + self.static_nj
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.total_nj() * 1e-9
+    }
+}
+
+impl std::fmt::Display for EnergyBreakdown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "total {:.3e} J (dynamic {:.3e} J; core {:.1}%, L1 {:.1}%, L2 {:.1}%, LLC {:.1}%, DRAM {:.1}%, static {:.1}%)",
+            self.total_j(),
+            self.dynamic_j(),
+            100.0 * self.core_nj / self.total_nj(),
+            100.0 * self.l1_nj / self.total_nj(),
+            100.0 * self.l2_nj / self.total_nj(),
+            100.0 * self.llc_nj / self.total_nj(),
+            100.0 * self.dram_nj / self.total_nj(),
+            100.0 * self.static_nj / self.total_nj(),
+        )
+    }
+}
+
+fn cache_energy_nj(stats: &CacheStats, hit_pj: f64, miss_pj: f64) -> f64 {
+    // Prefetch fills cost a miss-path access each; demand hits/misses per
+    // Table 2. Writebacks ride the miss energy of the receiving level.
+    (stats.hits() as f64 * hit_pj
+        + stats.misses() as f64 * miss_pj
+        + stats.prefetch_fills as f64 * miss_pj)
+        / 1000.0
+}
+
+/// Static energy for a run of `cycles` at the configured clock.
+fn static_nj(cfg: &SimConfig, cycles: u64) -> f64 {
+    let seconds = cycles as f64 / (cfg.cpu.freq_ghz * 1e9);
+    cfg.chip_static_watts * seconds * 1e9
+}
+
+/// Energy of a baseline-CPU run.
+pub fn cpu_energy(cfg: &SimConfig, stats: &CpuRunStats) -> EnergyBreakdown {
+    from_events(
+        cfg,
+        stats.instrs,
+        cfg.cpu.energy_per_instr_nj,
+        &stats.mem,
+        stats.cycles,
+    )
+}
+
+/// Energy of a Casper run: SPU instructions + LLC + DRAM (no private-cache
+/// traffic — that's the whole point of computing near the LLC). The host
+/// chip's static power still burns for the duration (§8.2's idle-CPU
+/// observation).
+pub fn casper_energy(cfg: &SimConfig, stats: &RunStats) -> EnergyBreakdown {
+    let mut ev = MemEvents {
+        llc: stats.llc,
+        dram_accesses: stats.dram_accesses,
+        ..Default::default()
+    };
+    ev.noc_hops = stats.noc_hops;
+    from_events(cfg, stats.total_instrs, cfg.spu.energy_per_instr_nj, &ev, stats.cycles)
+}
+
+fn from_events(
+    cfg: &SimConfig,
+    instrs: u64,
+    instr_nj: f64,
+    ev: &MemEvents,
+    cycles: u64,
+) -> EnergyBreakdown {
+    EnergyBreakdown {
+        core_nj: instrs as f64 * instr_nj,
+        l1_nj: cache_energy_nj(&ev.l1, cfg.l1.hit_pj, cfg.l1.miss_pj),
+        l2_nj: cache_energy_nj(&ev.l2, cfg.l2.hit_pj, cfg.l2.miss_pj),
+        llc_nj: cache_energy_nj(&ev.llc, cfg.llc.hit_pj, cfg.llc.miss_pj),
+        dram_nj: ev.dram_accesses as f64 * cfg.dram.access_nj,
+        static_nj: static_nj(cfg, cycles),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SizeClass;
+    use crate::coordinator::run_casper;
+    use crate::cpu::run_cpu;
+    use crate::stencil::{Domain, StencilKind};
+
+    #[test]
+    fn cache_energy_uses_table2_constants() {
+        let stats = CacheStats {
+            read_hits: 10,
+            read_misses: 2,
+            write_hits: 5,
+            write_misses: 1,
+            ..Default::default()
+        };
+        // 15 hits × 945 pJ + 3 misses × 1904 pJ = 19.887 nJ.
+        let nj = cache_energy_nj(&stats, 945.0, 1904.0);
+        assert!((nj - (15.0 * 945.0 + 3.0 * 1904.0) / 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn casper_beats_cpu_on_llc_sized_2d() {
+        // The headline energy claim (Fig 11): LLC-resident stencils use
+        // substantially less energy on Casper.
+        let cfg = SimConfig::default();
+        let kind = StencilKind::Jacobi2D;
+        let d = Domain::for_level(kind, SizeClass::Llc);
+        let c = casper_energy(&cfg, &run_casper(&cfg, kind, &d, 1));
+        let p = cpu_energy(&cfg, &run_cpu(&cfg, kind, &d, 1));
+        assert!(
+            c.total_j() < p.total_j(),
+            "casper {} vs cpu {}",
+            c.total_j(),
+            p.total_j()
+        );
+    }
+
+    #[test]
+    fn casper_energy_has_no_private_cache_terms() {
+        let cfg = SimConfig::default();
+        let kind = StencilKind::Jacobi1D;
+        let d = Domain::tiny(kind);
+        let e = casper_energy(&cfg, &run_casper(&cfg, kind, &d, 1));
+        assert_eq!(e.l1_nj, 0.0);
+        assert_eq!(e.l2_nj, 0.0);
+        assert!(e.llc_nj > 0.0);
+    }
+
+    #[test]
+    fn breakdown_total_is_sum() {
+        let b = EnergyBreakdown {
+            core_nj: 1.0,
+            l1_nj: 2.0,
+            l2_nj: 3.0,
+            llc_nj: 4.0,
+            dram_nj: 5.0,
+            static_nj: 6.0,
+        };
+        assert_eq!(b.dynamic_nj(), 15.0);
+        assert_eq!(b.total_nj(), 21.0);
+        assert!((b.total_j() - 21e-9).abs() < 1e-20);
+    }
+
+    #[test]
+    fn static_energy_scales_with_cycles() {
+        let cfg = SimConfig::default();
+        // 2 GHz, 60 W → 30 nJ per cycle.
+        assert!((super::static_nj(&cfg, 1000) - 30_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,122 @@
+//! Analytical NVIDIA Titan V model (§7.1 / §8.3).
+//!
+//! The paper reports only end-to-end GPU cycle counts (Table 5) and the
+//! 815 mm² die area; we have no CUDA testbed, so the comparator is a
+//! calibrated roofline: `time = launch + max(flops/peak, bytes/eff_bw)`.
+//! Calibration against the paper's own Table 5 GPU column lands within
+//! ~10% for the 1D/2D kernels (see EXPERIMENTS.md): the paper's numbers
+//! are consistent with ≈8 B of HBM traffic per point at ~80% of peak
+//! bandwidth plus ≈1.5 µs of launch overhead.
+
+use crate::config::SimConfig;
+use crate::stencil::{Domain, StencilKind};
+
+/// Titan V parameters (public spec [165, 171]).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    /// Peak fp64 throughput, FLOP/s.
+    pub fp64_flops: f64,
+    /// Peak HBM2 bandwidth, B/s.
+    pub mem_bw: f64,
+    /// Achievable fraction of peak bandwidth for streaming stencils.
+    pub bw_efficiency: f64,
+    /// Achievable fraction of peak fp64 for stencil MACs.
+    pub flop_efficiency: f64,
+    /// Kernel launch + driver overhead per time step, seconds.
+    pub launch_overhead_s: f64,
+    /// Effective HBM traffic per grid point, bytes (calibrated; §8.3).
+    pub bytes_per_point: f64,
+    /// Full die area (§7.1 uses the complete 815 mm² die).
+    pub area_mm2: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            fp64_flops: 6.9e12,
+            mem_bw: 652.8e9,
+            bw_efficiency: 0.80,
+            flop_efficiency: 0.5,
+            launch_overhead_s: 1.5e-6,
+            bytes_per_point: 8.0,
+            area_mm2: 815.0,
+        }
+    }
+}
+
+impl GpuModel {
+    /// Execution time for `steps` stencil steps, in seconds.
+    pub fn time_s(&self, kind: StencilKind, domain: &Domain, steps: usize) -> f64 {
+        let desc = kind.descriptor();
+        let points = domain.points() as f64;
+        let flops = points * desc.flops_per_point() as f64;
+        let bytes = points * self.bytes_per_point;
+        let compute = flops / (self.fp64_flops * self.flop_efficiency);
+        let traffic = bytes / (self.mem_bw * self.bw_efficiency);
+        steps as f64 * (self.launch_overhead_s + compute.max(traffic))
+    }
+
+    /// Execution time expressed in baseline-CPU clock cycles (how Table 5
+    /// reports it).
+    pub fn cycles(&self, cfg: &SimConfig, kind: StencilKind, domain: &Domain, steps: usize) -> u64 {
+        (self.time_s(kind, domain, steps) * cfg.cpu.freq_ghz * 1e9).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SizeClass;
+
+    #[test]
+    fn calibration_tracks_table5_gpu_column() {
+        // Paper Table 5, GPU cycles: Jacobi 1D = 4030 (L2), 36134 (LLC),
+        // 135360 (DRAM). Our analytical model should land within 2×.
+        let cfg = SimConfig::default();
+        let m = GpuModel::default();
+        for (level, paper) in [
+            (SizeClass::L2, 4030.0),
+            (SizeClass::Llc, 36134.0),
+            (SizeClass::Dram, 135360.0),
+        ] {
+            let d = Domain::for_level(StencilKind::Jacobi1D, level);
+            let ours = m.cycles(&cfg, StencilKind::Jacobi1D, &d, 1) as f64;
+            let ratio = ours / paper;
+            assert!(ratio > 0.5 && ratio < 2.0, "{level}: ours {ours} vs paper {paper}");
+        }
+    }
+
+    #[test]
+    fn bigger_domains_take_longer() {
+        let cfg = SimConfig::default();
+        let m = GpuModel::default();
+        let mut prev = 0u64;
+        for level in SizeClass::ALL {
+            let d = Domain::for_level(StencilKind::Blur2D, level);
+            let c = m.cycles(&cfg, StencilKind::Blur2D, &d, 1);
+            assert!(c > prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn compute_heavy_kernels_can_be_flop_bound() {
+        // The 33-point kernel has 8.25 FLOP per 8 traffic bytes — above
+        // the model's compute/bandwidth crossover, so it must cost more
+        // than a bandwidth-only estimate.
+        let m = GpuModel::default();
+        let d = Domain::for_level(StencilKind::Points33_3D, SizeClass::Dram);
+        let t = m.time_s(StencilKind::Points33_3D, &d, 1);
+        let bw_only = d.points() as f64 * 8.0 / (m.mem_bw * m.bw_efficiency);
+        assert!(t > bw_only);
+    }
+
+    #[test]
+    fn steps_scale_linearly() {
+        let m = GpuModel::default();
+        let d = Domain::for_level(StencilKind::Jacobi2D, SizeClass::Llc);
+        let t1 = m.time_s(StencilKind::Jacobi2D, &d, 1);
+        let t4 = m.time_s(StencilKind::Jacobi2D, &d, 4);
+        assert!((t4 / t1 - 4.0).abs() < 1e-9);
+    }
+}

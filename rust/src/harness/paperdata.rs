@@ -1,0 +1,143 @@
+//! The paper's published numbers (appendix Tables 4, 5, 6), used as the
+//! reference column in every regenerated table/figure.
+//!
+//! Indexing: `[kernel][class]` with kernels in paper order
+//! (`StencilKind::ALL`) and classes in `[L2, LLC, DRAM]` order.
+
+use crate::config::SizeClass;
+use crate::stencil::StencilKind;
+
+/// Table 4 — dynamic instruction count, baseline CPU (16 cores).
+pub const CPU_INSTRS: [[u64; 3]; 6] = [
+    [165_840, 1_312_867, 5_245_651],
+    [297_277, 2_361_924, 9_440_116],
+    [537_100, 4_311_784, 17_255_191],
+    [1_804_260, 16_552_680, 66_329_169],
+    [736_767, 6_083_864, 24_330_380],
+    [2_452_622, 20_958_248, 83_845_023],
+];
+
+/// Table 4 — dynamic instruction count, Casper (16 SPUs; per-SPU scale).
+pub const CASPER_INSTRS: [[u64; 3]; 6] = [
+    [3_106, 23_038, 3_034_882],
+    [26_470, 211_402, 3_422_962],
+    [5_482, 186_718, 12_640_918],
+    [38_350, 337_858, 4_135_498],
+    [20_002, 198_730, 21_826_798],
+    [261_562, 1_050_790, 9_321_778],
+];
+
+/// Table 5 — execution cycles, baseline CPU (16 cores).
+pub const CPU_CYCLES: [[u64; 3]; 6] = [
+    [13_358, 95_251, 3_838_447],
+    [14_702, 125_138, 5_715_526],
+    [26_457, 178_032, 8_720_011],
+    [95_428, 742_734, 22_729_495],
+    [39_029, 296_436, 7_986_968],
+    [115_884, 1_009_021, 9_060_219],
+];
+
+/// Table 5 — execution cycles, GPU (NVIDIA Titan V).
+pub const GPU_CYCLES: [[u64; 3]; 6] = [
+    [4_030, 36_134, 135_360],
+    [4_108, 36_594, 139_320],
+    [4_646, 37_248, 140_160],
+    [6_950, 41_318, 153_480],
+    [5_184, 36_633, 140_856],
+    [6_758, 52_491, 278_784],
+];
+
+/// Table 5 — execution cycles, Casper (16 SPUs).
+pub const CASPER_CYCLES: [[u64; 3]; 6] = [
+    [4_569, 33_220, 4_370_993],
+    [8_449, 66_393, 4_514_872],
+    [7_658, 58_734, 3_931_701],
+    [55_764, 446_300, 5_454_431],
+    [29_572, 286_675, 6_784_185],
+    [100_243, 1_385_955, 13_420_984],
+];
+
+/// Table 6 — energy (J), baseline CPU (16 cores). Dynamic energy; see
+/// EXPERIMENTS.md for the Fig 11 (total-system) reconciliation.
+pub const CPU_ENERGY_J: [[f64; 3]; 6] = [
+    [0.00012, 0.00113, 0.2631221],
+    [0.000144, 0.00145, 0.28253],
+    [0.000256, 0.002, 0.3483945],
+    [0.0009, 0.0075, 0.64639877],
+    [0.000386, 0.003364, 0.469465],
+    [0.0011542, 0.010266, 0.4424779],
+];
+
+/// Table 6 — energy (J), Casper (16 SPUs).
+pub const CASPER_ENERGY_J: [[f64; 3]; 6] = [
+    [0.000468, 0.00341, 0.3114322],
+    [0.000629, 0.00469, 0.59888],
+    [0.00073, 0.0055, 0.8809648],
+    [0.0015, 0.0118, 1.19655244],
+    [0.001737, 0.014002, 1.4752518],
+    [0.0028739, 0.027749, 1.8090142],
+];
+
+/// Index of a kernel in paper order.
+pub fn kernel_index(kind: StencilKind) -> usize {
+    StencilKind::ALL.iter().position(|&k| k == kind).unwrap()
+}
+
+/// Index of a size class in `[L2, LLC, DRAM]` order.
+pub fn class_index(level: SizeClass) -> usize {
+    match level {
+        SizeClass::L2 => 0,
+        SizeClass::Llc => 1,
+        SizeClass::Dram => 2,
+    }
+}
+
+/// Paper speedup of Casper over the CPU (derived from Table 5).
+pub fn paper_speedup(kind: StencilKind, level: SizeClass) -> f64 {
+    let (k, c) = (kernel_index(kind), class_index(level));
+    CPU_CYCLES[k][c] as f64 / CASPER_CYCLES[k][c] as f64
+}
+
+/// Paper Casper-vs-GPU slowdown (derived from Table 5).
+pub fn paper_gpu_ratio(kind: StencilKind, level: SizeClass) -> f64 {
+    let (k, c) = (kernel_index(kind), class_index(level));
+    CASPER_CYCLES[k][c] as f64 / GPU_CYCLES[k][c] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::geomean;
+
+    #[test]
+    fn indices_roundtrip() {
+        for (i, k) in StencilKind::ALL.iter().enumerate() {
+            assert_eq!(kernel_index(*k), i);
+        }
+        assert_eq!(class_index(SizeClass::Llc), 1);
+    }
+
+    #[test]
+    fn headline_claims_derive_from_tables() {
+        // §8.1: "for datasets that fit within the LLC ... average speedup
+        // of 1.65×"; max 4.16× (Blur 2D, DRAM).
+        let llc: Vec<f64> = StencilKind::ALL
+            .iter()
+            .map(|&k| paper_speedup(k, SizeClass::Llc))
+            .collect();
+        let avg = geomean(&llc);
+        assert!((1.4..1.9).contains(&avg), "LLC geomean {avg}");
+        let blur_dram = paper_speedup(StencilKind::Blur2D, SizeClass::Dram);
+        assert!((4.0..4.3).contains(&blur_dram), "{blur_dram}");
+    }
+
+    #[test]
+    fn gpu_outperforms_casper_per_paper() {
+        // §8.3: GPU wins on raw performance for every class.
+        for k in StencilKind::ALL {
+            for c in crate::config::SizeClass::ALL {
+                assert!(paper_gpu_ratio(k, c) > 0.9, "{k} {c}");
+            }
+        }
+    }
+}

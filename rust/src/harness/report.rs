@@ -1,0 +1,150 @@
+//! Report tables: markdown + CSV emission for the experiment harness.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One regenerated table/figure.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Experiment id (`fig10`, `table5`, ...).
+    pub id: String,
+    /// Human title (as in the paper).
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes appended under the table.
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, header: &[&str]) -> Table {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch in {}", self.id);
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {} — {}\n", self.id, self.title);
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(out, "|{}|", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "\n> {n}");
+        }
+        out.push('\n');
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", csv_line(&self.header));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", csv_line(r));
+        }
+        out
+    }
+}
+
+fn csv_line(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// The full experiment report.
+#[derive(Debug, Default, Clone)]
+pub struct Report {
+    pub tables: Vec<Table>,
+}
+
+impl Report {
+    pub fn to_markdown(&self) -> String {
+        self.tables.iter().map(|t| t.to_markdown()).collect()
+    }
+
+    /// Write `<id>.csv` per table plus `report.md` into `dir`.
+    pub fn write_to(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        for t in &self.tables {
+            std::fs::write(dir.join(format!("{}.csv", t.id)), t.to_csv())?;
+        }
+        std::fs::write(dir.join("report.md"), self.to_markdown())?;
+        Ok(())
+    }
+
+    pub fn get(&self, id: &str) -> Option<&Table> {
+        self.tables.iter().find(|t| t.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("fig0", "Sample", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        t.note("a note");
+        t
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        assert!(md.contains("### fig0 — Sample"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | x,y |"));
+        assert!(md.contains("> a note"));
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let csv = sample().to_csv();
+        assert!(csv.contains("1,\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", "t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn report_write(/* uses temp dir */) {
+        let dir = std::env::temp_dir().join("casper_report_test");
+        let mut r = Report::default();
+        r.tables.push(sample());
+        r.write_to(&dir).unwrap();
+        assert!(dir.join("fig0.csv").exists());
+        assert!(dir.join("report.md").exists());
+        assert!(r.get("fig0").is_some());
+        assert!(r.get("nope").is_none());
+    }
+}

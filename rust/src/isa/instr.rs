@@ -1,0 +1,178 @@
+//! 15-bit Casper instruction: encoding, decoding, and field semantics.
+
+use anyhow::{bail, Result};
+
+/// Shift direction for unaligned stream accesses (Fig 7 / Fig 9).
+///
+/// `Right` accesses *lower* addresses (`A[i - amount]`), `Left` accesses
+/// *higher* addresses (`A[i + amount]`) — matching the paper's Fig 9
+/// comments (`shift right by 1` loads `A[j][i-1]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShiftDir {
+    Left = 0,
+    Right = 1,
+}
+
+/// One decoded Casper instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CasperInstr {
+    /// Constant-buffer index (4 bits).
+    pub const_idx: u8,
+    /// Stream-buffer index (4 bits).
+    pub stream_idx: u8,
+    /// Shift direction (1 bit); meaningful when `shift_amount > 0`.
+    pub shift_dir: ShiftDir,
+    /// Shift amount in elements (3 bits, 0–7).
+    pub shift_amount: u8,
+    /// Control: reset the accumulator before this MAC.
+    pub clear_acc: bool,
+    /// Control: store the accumulator to the output stream after this MAC.
+    pub enable_output: bool,
+    /// Control: advance this instruction's stream pointer afterwards.
+    pub advance_stream: bool,
+}
+
+impl CasperInstr {
+    pub const BITS: u32 = 15;
+
+    /// Element offset within the stream's row: `+amount` for left shifts,
+    /// `-amount` for right shifts.
+    pub fn dx(&self) -> i64 {
+        match self.shift_dir {
+            ShiftDir::Left => self.shift_amount as i64,
+            ShiftDir::Right => -(self.shift_amount as i64),
+        }
+    }
+
+    /// Build an instruction from a row-relative element offset.
+    pub fn with_dx(const_idx: u8, stream_idx: u8, dx: i64) -> Result<CasperInstr> {
+        if dx.unsigned_abs() > 7 {
+            bail!("shift amount {dx} exceeds the 3-bit field (|dx| <= 7)");
+        }
+        Ok(CasperInstr {
+            const_idx,
+            stream_idx,
+            shift_dir: if dx < 0 { ShiftDir::Right } else { ShiftDir::Left },
+            shift_amount: dx.unsigned_abs() as u8,
+            clear_acc: false,
+            enable_output: false,
+            advance_stream: false,
+        })
+    }
+
+    /// Encode to the 15-bit wire format (packed into a `u16`, MSB unused).
+    ///
+    /// Layout (bit 14 down to bit 0):
+    /// `[const:4][stream:4][dir:1][amount:3][clear:1][output:1][advance:1]`
+    pub fn encode(&self) -> u16 {
+        debug_assert!(self.const_idx < 16 && self.stream_idx < 16 && self.shift_amount < 8);
+        ((self.const_idx as u16) << 11)
+            | ((self.stream_idx as u16) << 7)
+            | ((self.shift_dir as u16) << 6)
+            | ((self.shift_amount as u16) << 3)
+            | ((self.clear_acc as u16) << 2)
+            | ((self.enable_output as u16) << 1)
+            | (self.advance_stream as u16)
+    }
+
+    /// Decode from the wire format. Errors if the unused MSB is set.
+    pub fn decode(word: u16) -> Result<CasperInstr> {
+        if word & 0x8000 != 0 {
+            bail!("bit 15 set in Casper instruction word {word:#06x}");
+        }
+        Ok(CasperInstr {
+            const_idx: ((word >> 11) & 0xF) as u8,
+            stream_idx: ((word >> 7) & 0xF) as u8,
+            shift_dir: if (word >> 6) & 1 == 1 { ShiftDir::Right } else { ShiftDir::Left },
+            shift_amount: ((word >> 3) & 0x7) as u8,
+            clear_acc: (word >> 2) & 1 == 1,
+            enable_output: (word >> 1) & 1 == 1,
+            advance_stream: word & 1 == 1,
+        })
+    }
+
+    /// Fig 9-style disassembly: `c0, s2, 1, 1, 0, 0, 0`.
+    pub fn disasm(&self) -> String {
+        format!(
+            "c{}, s{}, {}, {}, {}, {}, {}",
+            self.const_idx,
+            self.stream_idx,
+            self.shift_dir as u8,
+            self.shift_amount,
+            self.clear_acc as u8,
+            self.enable_output as u8,
+            self.advance_stream as u8
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+    use crate::util::SplitMix64;
+
+    fn arbitrary(r: &mut SplitMix64) -> CasperInstr {
+        CasperInstr {
+            const_idx: (r.next_u64() & 0xF) as u8,
+            stream_idx: (r.next_u64() & 0xF) as u8,
+            shift_dir: if r.chance(0.5) { ShiftDir::Right } else { ShiftDir::Left },
+            shift_amount: (r.next_u64() % 8) as u8,
+            clear_acc: r.chance(0.5),
+            enable_output: r.chance(0.5),
+            advance_stream: r.chance(0.5),
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_property() {
+        testutil::check("instr roundtrip", 2048, arbitrary, |i| {
+            CasperInstr::decode(i.encode()).map(|d| d == *i).unwrap_or(false)
+        });
+    }
+
+    #[test]
+    fn encoding_fits_15_bits() {
+        testutil::check("15-bit", 2048, arbitrary, |i| i.encode() < (1 << 15));
+    }
+
+    #[test]
+    fn fig9_first_instruction() {
+        // Fig 9 line 2: `c0, s1, 0, 0, 1, 0, 1` — no shift, clear acc,
+        // advance stream.
+        let i = CasperInstr {
+            const_idx: 0,
+            stream_idx: 1,
+            shift_dir: ShiftDir::Left,
+            shift_amount: 0,
+            clear_acc: true,
+            enable_output: false,
+            advance_stream: true,
+        };
+        assert_eq!(i.disasm(), "c0, s1, 0, 0, 1, 0, 1");
+        assert_eq!(i.dx(), 0);
+    }
+
+    #[test]
+    fn shift_right_is_negative_dx() {
+        // Fig 9 line 4: `c0, s2, 1, 1, ...` loads A[j][i-1].
+        let i = CasperInstr::decode(0b0000_0001_0100_1000).unwrap();
+        assert_eq!(i.stream_idx, 2);
+        assert_eq!(i.shift_dir, ShiftDir::Right);
+        assert_eq!(i.shift_amount, 1);
+        assert_eq!(i.dx(), -1);
+    }
+
+    #[test]
+    fn with_dx_bounds() {
+        assert!(CasperInstr::with_dx(0, 0, 7).is_ok());
+        assert!(CasperInstr::with_dx(0, 0, -7).is_ok());
+        assert!(CasperInstr::with_dx(0, 0, 8).is_err());
+        assert_eq!(CasperInstr::with_dx(1, 2, -3).unwrap().dx(), -3);
+    }
+
+    #[test]
+    fn decode_rejects_msb() {
+        assert!(CasperInstr::decode(0x8000).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! The Casper instruction set (§5.1) and programming library (§5.2).
+//!
+//! Every Casper instruction is 15 bits: 4 b constant-buffer index, 4 b
+//! stream-buffer index, 1 b shift direction, 3 b shift amount, and 3
+//! control bits (`clear accumulator`, `enable output`, `advance stream`).
+//! The same instruction sequence is replayed for every (vector of) grid
+//! point(s), which is why stencil code fits in a 64-entry buffer.
+//!
+//! [`ProgramBuilder`] is the paper's "programming library": it statically
+//! analyzes a [`StencilDesc`](crate::stencil::StencilDesc) and emits the
+//! instruction sequence, constant table, and stream specifications — the
+//! Fig 9 code, generated.
+
+pub mod instr;
+pub mod program;
+
+pub use instr::{CasperInstr, ShiftDir};
+pub use program::{CasperProgram, ProgramBuilder, StreamSpec};

@@ -1,0 +1,306 @@
+//! Casper programs and the static program builder (§5.2, Fig 8/9).
+//!
+//! A program is the per-grid-point instruction sequence plus the constant
+//! table and the stream *shapes* (row offsets relative to the walked grid
+//! point). Per-SPU stream base addresses are bound later by the
+//! coordinator via `init_stream` — the same split as the paper's API.
+
+use anyhow::{bail, Result};
+
+use super::instr::CasperInstr;
+use crate::stencil::StencilDesc;
+
+/// Hardware limits of the SPU front-end (Table 2 / §3.3 / §5.1).
+pub const MAX_INSTRUCTIONS: usize = 64;
+pub const MAX_STREAMS: usize = 16;
+pub const MAX_CONSTANTS: usize = 16;
+/// Max |dx| encodable in the 3-bit shift-amount field.
+pub const MAX_SHIFT: i64 = 7;
+
+/// Shape of one stream: the row offset it walks, relative to the current
+/// output point. The output stream has `is_output = true`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamSpec {
+    pub dy: i64,
+    pub dz: i64,
+    pub is_output: bool,
+}
+
+/// A complete Casper program: what `initStencilcode` + `initConstant`
+/// broadcast to the SPUs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CasperProgram {
+    /// Per-grid-point instruction sequence (replayed for every vector of
+    /// grid points).
+    pub instrs: Vec<CasperInstr>,
+    /// Constant table (`initConstant` values).
+    pub constants: Vec<f64>,
+    /// Stream table; index = stream id. Stream 0 is always the output.
+    pub streams: Vec<StreamSpec>,
+}
+
+impl CasperProgram {
+    /// Index of the output stream (fixed to 0, as in Fig 8).
+    pub const OUT_STREAM: u8 = 0;
+
+    /// Validate against the hardware limits and structural rules.
+    pub fn validate(&self) -> Result<()> {
+        if self.instrs.is_empty() {
+            bail!("empty program");
+        }
+        if self.instrs.len() > MAX_INSTRUCTIONS {
+            bail!("{} instructions exceed the {MAX_INSTRUCTIONS}-entry buffer", self.instrs.len());
+        }
+        if self.streams.len() > MAX_STREAMS {
+            bail!("{} streams exceed the {MAX_STREAMS}-entry stream buffer", self.streams.len());
+        }
+        if self.constants.len() > MAX_CONSTANTS {
+            bail!("{} constants exceed the {MAX_CONSTANTS}-entry constant buffer", self.constants.len());
+        }
+        if self.streams.is_empty() || !self.streams[0].is_output {
+            bail!("stream 0 must be the output stream");
+        }
+        if self.streams.iter().skip(1).any(|s| s.is_output) {
+            bail!("exactly one output stream allowed");
+        }
+        // First instruction must clear the accumulator; exactly the last
+        // must emit output (one store per grid point, §6).
+        if !self.instrs[0].clear_acc {
+            bail!("first instruction must set clear_acc");
+        }
+        let outs = self.instrs.iter().filter(|i| i.enable_output).count();
+        if outs != 1 || !self.instrs.last().unwrap().enable_output {
+            bail!("exactly the final instruction must set enable_output");
+        }
+        for (n, i) in self.instrs.iter().enumerate() {
+            if i.const_idx as usize >= self.constants.len() {
+                bail!("instr {n}: constant c{} out of range", i.const_idx);
+            }
+            let sid = i.stream_idx as usize;
+            if sid >= self.streams.len() {
+                bail!("instr {n}: stream s{} out of range", i.stream_idx);
+            }
+            if self.streams[sid].is_output {
+                bail!("instr {n}: loads from the output stream");
+            }
+        }
+        // Every input stream must be advanced exactly once per grid point,
+        // by its last-consuming instruction (§6: "has to be set in the last
+        // instruction consuming data from each stream").
+        for sid in 1..self.streams.len() {
+            let consumers: Vec<usize> = self
+                .instrs
+                .iter()
+                .enumerate()
+                .filter(|(_, i)| i.stream_idx as usize == sid)
+                .map(|(n, _)| n)
+                .collect();
+            if consumers.is_empty() {
+                bail!("stream s{sid} is never consumed");
+            }
+            let advances: Vec<usize> = consumers
+                .iter()
+                .copied()
+                .filter(|&n| self.instrs[n].advance_stream)
+                .collect();
+            if advances.len() != 1 || advances[0] != *consumers.last().unwrap() {
+                bail!("stream s{sid} must be advanced exactly once, by its last consumer");
+            }
+        }
+        Ok(())
+    }
+
+    /// Encode to the compressed wire form (one 15-bit word per
+    /// instruction, packed little-endian into `u16`s).
+    pub fn encode(&self) -> Vec<u16> {
+        self.instrs.iter().map(|i| i.encode()).collect()
+    }
+
+    /// Fig 9-style listing.
+    pub fn disasm(&self) -> String {
+        let mut out = String::new();
+        for i in &self.instrs {
+            out.push_str(&i.disasm());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Dynamic Casper instructions needed for `points` grid points at a
+    /// given SIMD width (Table 4 accounting: the sequence replays once per
+    /// vector of grid points).
+    pub fn dynamic_instrs(&self, points: usize, simd_lanes: usize) -> u64 {
+        let groups = points.div_ceil(simd_lanes) as u64;
+        groups * self.instrs.len() as u64
+    }
+}
+
+/// The paper's "programming library": compile a stencil descriptor into a
+/// Casper program.
+#[derive(Debug, Default)]
+pub struct ProgramBuilder {
+    constants: Vec<f64>,
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a constant, returning its buffer index.
+    fn constant(&mut self, v: f64) -> Result<u8> {
+        if let Some(i) = self.constants.iter().position(|&c| c.to_bits() == v.to_bits()) {
+            return Ok(i as u8);
+        }
+        if self.constants.len() >= MAX_CONSTANTS {
+            bail!("constant buffer overflow (> {MAX_CONSTANTS} distinct coefficients)");
+        }
+        self.constants.push(v);
+        Ok((self.constants.len() - 1) as u8)
+    }
+
+    /// Compile a stencil: one stream per distinct `(dy, dz)` row (plus the
+    /// output stream), one MAC instruction per tap, in-row taps expressed
+    /// as shifted (unaligned) accesses of the shared stream — exactly the
+    /// Fig 8/9 scheme.
+    pub fn build(mut self, desc: &StencilDesc) -> Result<CasperProgram> {
+        let groups = desc.row_groups();
+        if groups.len() + 1 > MAX_STREAMS {
+            bail!(
+                "{} row groups need {} streams (> {MAX_STREAMS})",
+                groups.len(),
+                groups.len() + 1
+            );
+        }
+
+        let mut streams = vec![StreamSpec { dy: 0, dz: 0, is_output: true }];
+        let mut instrs: Vec<CasperInstr> = Vec::new();
+
+        for (gi, group) in groups.iter().enumerate() {
+            let stream_idx = (gi + 1) as u8;
+            streams.push(StreamSpec { dy: group.dy, dz: group.dz, is_output: false });
+            let last_tap = group.taps.len() - 1;
+            for (ti, &(dx, coef)) in group.taps.iter().enumerate() {
+                if dx.unsigned_abs() as i64 > MAX_SHIFT {
+                    bail!("tap dx {dx} not encodable in the 3-bit shift field");
+                }
+                let mut instr = CasperInstr::with_dx(self.constant(coef)?, stream_idx, dx)?;
+                instr.advance_stream = ti == last_tap;
+                instrs.push(instr);
+            }
+        }
+
+        if instrs.len() > MAX_INSTRUCTIONS {
+            bail!("{} instructions exceed the instruction buffer", instrs.len());
+        }
+        instrs.first_mut().unwrap().clear_acc = true;
+        instrs.last_mut().unwrap().enable_output = true;
+
+        let prog = CasperProgram { instrs, constants: self.constants, streams };
+        prog.validate()?;
+        Ok(prog)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::StencilKind;
+
+    #[test]
+    fn jacobi2d_matches_fig9() {
+        // Fig 9: five instructions, three input streams, one constant.
+        let prog = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi2D.descriptor())
+            .unwrap();
+        assert_eq!(prog.instrs.len(), 5);
+        assert_eq!(prog.streams.len(), 4); // output + 3 inputs
+        assert_eq!(prog.constants, vec![0.2]);
+        // First: clear_acc + advance (single-tap row dy=-1).
+        assert!(prog.instrs[0].clear_acc);
+        assert!(prog.instrs[0].advance_stream);
+        // Middle row: shifts right(-1), none(0), left(+1); advance on last.
+        assert_eq!(prog.instrs[1].dx(), -1);
+        assert_eq!(prog.instrs[2].dx(), 0);
+        assert_eq!(prog.instrs[3].dx(), 1);
+        assert!(!prog.instrs[1].advance_stream);
+        assert!(prog.instrs[3].advance_stream);
+        // Last: enable_output + advance.
+        assert!(prog.instrs[4].enable_output);
+        assert!(prog.instrs[4].advance_stream);
+    }
+
+    #[test]
+    fn all_kernels_compile_and_validate() {
+        for k in StencilKind::ALL {
+            let prog = ProgramBuilder::new().build(&k.descriptor()).unwrap();
+            prog.validate().unwrap();
+            assert_eq!(prog.instrs.len(), k.descriptor().num_points(), "{k}");
+            assert!(prog.instrs.len() <= MAX_INSTRUCTIONS, "{k}");
+            assert!(prog.streams.len() <= MAX_STREAMS, "{k}");
+            assert!(prog.constants.len() <= MAX_CONSTANTS, "{k}");
+        }
+    }
+
+    #[test]
+    fn constants_are_interned() {
+        let prog = ProgramBuilder::new()
+            .build(&StencilKind::Blur2D.descriptor())
+            .unwrap();
+        // 5×5 Gaussian has 6 distinct weights {1,4,7,16,26,41}/273.
+        assert_eq!(prog.constants.len(), 6);
+    }
+
+    #[test]
+    fn encode_roundtrip_through_wire() {
+        for k in StencilKind::ALL {
+            let prog = ProgramBuilder::new().build(&k.descriptor()).unwrap();
+            let wire = prog.encode();
+            let decoded: Vec<CasperInstr> = wire
+                .iter()
+                .map(|&w| CasperInstr::decode(w).unwrap())
+                .collect();
+            assert_eq!(decoded, prog.instrs, "{k}");
+        }
+    }
+
+    #[test]
+    fn dynamic_instr_count() {
+        let prog = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi2D.descriptor())
+            .unwrap();
+        // 16 points at 8 lanes = 2 vector groups × 5 instrs.
+        assert_eq!(prog.dynamic_instrs(16, 8), 10);
+        // Non-multiple rounds up.
+        assert_eq!(prog.dynamic_instrs(17, 8), 15);
+    }
+
+    #[test]
+    fn validate_rejects_broken_programs() {
+        let mut prog = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi1D.descriptor())
+            .unwrap();
+        prog.instrs[0].clear_acc = false;
+        assert!(prog.validate().is_err());
+
+        let mut prog2 = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi1D.descriptor())
+            .unwrap();
+        prog2.instrs[1].enable_output = true; // two outputs
+        assert!(prog2.validate().is_err());
+
+        let mut prog3 = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi1D.descriptor())
+            .unwrap();
+        prog3.instrs[0].stream_idx = 9; // dangling stream
+        assert!(prog3.validate().is_err());
+    }
+
+    #[test]
+    fn disasm_has_one_line_per_instr() {
+        let prog = ProgramBuilder::new()
+            .build(&StencilKind::Heat3D.descriptor())
+            .unwrap();
+        assert_eq!(prog.disasm().lines().count(), 7);
+    }
+}

@@ -1,0 +1,67 @@
+//! # Casper — near-cache stencil acceleration, reproduced as a full system
+//!
+//! This crate reproduces *"Casper: Accelerating Stencil Computations using
+//! Near-Cache Processing"* (Denzler et al., 2021) end to end:
+//!
+//! - a cycle-level simulator of the proposed hardware — stencil processing
+//!   units ([`spu`]) attached to the slices of a sliced last-level cache
+//!   ([`mem`]), with the paper's unaligned-load row-decoder support
+//!   ([`mem::unaligned`]) and stencil-segment slice hash ([`mapping`]),
+//!   connected by a mesh NoC ([`noc`]);
+//! - the Casper programming model: the 15-bit instruction set ([`isa`]) and
+//!   the Table-1 runtime API ([`coordinator`]);
+//! - every comparator the paper evaluates against: a 16-core out-of-order
+//!   CPU baseline ([`cpu`]), an NVIDIA Titan V analytical model ([`gpu`]),
+//!   and the PIMS HMC near-memory design ([`pims`]);
+//! - the paper's measurement machinery: energy ([`energy`]), area
+//!   ([`area`]), roofline ([`roofline`]), and an experiment harness
+//!   ([`harness`]) that regenerates every figure and table;
+//! - a build-time AOT path: JAX/Pallas stencil kernels lowered to HLO text
+//!   and executed from Rust via PJRT ([`runtime`]) to cross-validate the
+//!   simulator's numerics.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use casper::prelude::*;
+//!
+//! let cfg = SimConfig::default();
+//! let stencil = StencilKind::Jacobi2D;
+//! let domain = Domain::for_level(stencil, SizeClass::Llc);
+//! let casper = casper::coordinator::run_casper(&cfg, stencil, &domain, 1);
+//! let cpu = casper::cpu::run_cpu(&cfg, stencil, &domain, 1);
+//! println!("speedup = {:.2}x", cpu.cycles as f64 / casper.cycles as f64);
+//! ```
+
+pub mod area;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cpu;
+pub mod energy;
+pub mod gpu;
+pub mod harness;
+pub mod isa;
+pub mod mapping;
+pub mod mem;
+pub mod noc;
+pub mod pims;
+pub mod roofline;
+pub mod runtime;
+pub mod spu;
+pub mod stencil;
+pub mod testutil;
+pub mod util;
+
+/// Most-used types, re-exported for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{SimConfig, SizeClass};
+    pub use crate::coordinator::{run_casper, CasperRuntime, RunStats};
+    pub use crate::cpu::run_cpu;
+    pub use crate::harness::{Experiment, ExperimentSet};
+    pub use crate::isa::{CasperInstr, CasperProgram, ProgramBuilder};
+    pub use crate::stencil::{Domain, Grid, StencilKind};
+}

@@ -1,0 +1,177 @@
+//! `casper` — the leader binary: CLI entrypoint over the library.
+
+use anyhow::Result;
+
+use casper::area::CasperArea;
+use casper::cli::{self, Command, USAGE};
+use casper::config::SimConfig;
+use casper::coordinator::run_casper;
+use casper::cpu::run_cpu;
+use casper::energy::{casper_energy, cpu_energy};
+use casper::gpu::GpuModel;
+use casper::harness::{run_experiments, SweepOptions};
+use casper::pims::PimsModel;
+use casper::roofline;
+use casper::runtime::{default_artifacts_dir, StencilRuntime};
+use casper::stencil::{golden, Domain, StencilKind};
+use casper::util::human_time_cycles;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match cli::parse(&argv).and_then(dispatch) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(cmd: Command) -> Result<()> {
+    match cmd {
+        Command::Help => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Command::Info => {
+            let cfg = SimConfig::default();
+            println!("{cfg:#?}");
+            let area = CasperArea::of(&cfg);
+            println!(
+                "\ncasper area: {:.3} mm² ({:.2}% of a ThunderX2)",
+                area.total_mm2(),
+                100.0 * area.host_overhead()
+            );
+            Ok(())
+        }
+        Command::Roofline => {
+            let cfg = SimConfig::default();
+            let m = roofline::Machine::of(&cfg);
+            println!(
+                "peak {:.1} GFLOPS | DRAM {:.1} GB/s (knee @ {:.2} FLOP/B) | LLC {:.1} GB/s (knee @ {:.2} FLOP/B)\n",
+                m.peak_flops / 1e9,
+                m.dram_bw / 1e9,
+                m.dram_knee(),
+                m.llc_bw / 1e9,
+                m.llc_knee()
+            );
+            println!("{:<14} {:>10} {:>16} {:>16}", "kernel", "AI", "DRAM roof GF/s", "L3 roof GF/s");
+            for p in roofline::roofline(&cfg, None) {
+                println!(
+                    "{:<14} {:>10.3} {:>16.1} {:>16.1}",
+                    p.kind.name(),
+                    p.ai,
+                    p.dram_bound / 1e9,
+                    p.llc_bound / 1e9
+                );
+            }
+            Ok(())
+        }
+        Command::Run { kernel, level, steps, config } => {
+            let cfg = cli::load_config(config.as_ref())?;
+            run_one(&cfg, kernel, level, steps)
+        }
+        Command::Experiments { only, quick, steps, out_dir, config } => {
+            let cfg = cli::load_config(config.as_ref())?;
+            let opts = SweepOptions { quick, steps };
+            eprintln!(
+                "running {} experiment(s), classes: {:?} ...",
+                only.len(),
+                opts.classes()
+            );
+            let report = run_experiments(&cfg, &only, opts)?;
+            print!("{}", report.to_markdown());
+            if let Some(dir) = out_dir {
+                report.write_to(&dir)?;
+                eprintln!("wrote {} tables to {}", report.tables.len(), dir.display());
+            }
+            Ok(())
+        }
+        Command::Validate { artifacts } => {
+            let dir = artifacts.unwrap_or_else(default_artifacts_dir);
+            let mut rt = StencilRuntime::new(&dir)?;
+            println!("PJRT platform: {}", rt.platform());
+            let entries: Vec<_> = rt.entries().cloned().collect();
+            let mut checked = 0;
+            for entry in entries {
+                let input = casper::stencil::Grid::random(entry.nx, entry.ny, entry.nz, 0xC0DE);
+                let out = rt.execute(&entry.name, &input)?;
+                let want = golden::run(&entry.kernel.descriptor(), &input, entry.steps);
+                let diff = out.max_abs_diff(&want);
+                anyhow::ensure!(
+                    diff < 1e-11,
+                    "artifact '{}' diverges from golden: max |err| = {diff}",
+                    entry.name
+                );
+                println!(
+                    "  {:<18} {:>9} pts  steps={}  max|err|={:.2e}  OK",
+                    entry.name,
+                    entry.points(),
+                    entry.steps,
+                    diff
+                );
+                checked += 1;
+            }
+            println!("{checked} artifacts validated against the golden reference.");
+            Ok(())
+        }
+    }
+}
+
+/// `casper run`: one kernel on every engine, with the comparison table.
+fn run_one(
+    cfg: &SimConfig,
+    kernel: StencilKind,
+    level: casper::config::SizeClass,
+    steps: usize,
+) -> Result<()> {
+    let domain = Domain::for_level(kernel, level);
+    println!(
+        "{} @ {} ({} points, {} steps)\n",
+        kernel.name(),
+        domain,
+        domain.points(),
+        steps
+    );
+
+    let casper_stats = run_casper(cfg, kernel, &domain, steps);
+    let cpu_stats = run_cpu(cfg, kernel, &domain, steps);
+    let gpu = GpuModel::default().cycles(cfg, kernel, &domain, steps);
+    let pims = PimsModel::default().cycles(cfg, kernel, &domain, steps);
+
+    println!("{:<10} {:>28}", "engine", "time");
+    println!("{:<10} {:>28}", "casper", human_time_cycles(casper_stats.cycles, cfg.cpu.freq_ghz));
+    println!("{:<10} {:>28}", "cpu", human_time_cycles(cpu_stats.cycles, cfg.cpu.freq_ghz));
+    println!("{:<10} {:>28}", "gpu", human_time_cycles(gpu, cfg.cpu.freq_ghz));
+    println!("{:<10} {:>28}", "pims", human_time_cycles(pims, cfg.cpu.freq_ghz));
+
+    println!(
+        "\nspeedup vs cpu: {:.2}x | vs pims: {:.2}x | gpu is {:.2}x faster",
+        cpu_stats.cycles as f64 / casper_stats.cycles as f64,
+        pims as f64 / casper_stats.cycles as f64,
+        casper_stats.cycles as f64 / gpu as f64,
+    );
+    let ce = casper_energy(cfg, &casper_stats);
+    let pe = cpu_energy(cfg, &cpu_stats);
+    println!("energy casper: {ce}");
+    println!("energy cpu:    {pe}");
+    println!(
+        "\nSPU locality: {:.1}% local loads | LLC hit rate {:.1}% | {} unaligned loads merged",
+        100.0 * casper_stats.local_fraction(),
+        100.0 * casper_stats.llc_hit_rate(),
+        casper_stats.spu.merged_unaligned,
+    );
+
+    // Functional check against the golden reference.
+    let want = golden::run_kind(
+        kernel,
+        &domain,
+        steps,
+        casper::coordinator::CasperOptions::default().seed,
+    );
+    let diff = casper_stats.output.max_abs_diff(&want);
+    anyhow::ensure!(diff < 1e-11, "functional mismatch vs golden: {diff}");
+    println!("functional check vs golden reference: OK (max |err| = {diff:.2e})");
+    Ok(())
+}

@@ -1,0 +1,249 @@
+//! Physical-address → LLC-slice mapping (§4.2).
+//!
+//! Two hash functions coexist, selected per request at the NoC injection
+//! point by a stencil-segment range check:
+//!
+//! - **Baseline hash**: an XOR-fold of the cache-line index bits — the
+//!   behaviour prior work reverse-engineered from Intel LLCs [158]:
+//!   consecutive cache lines land on *different* slices (load balancing).
+//! - **Stencil-segment hash**: a linear hash mapping contiguous 128 kB
+//!   blocks of the segment to slices round-robin, so neighbouring grid
+//!   points share a slice and SPU loads stay local.
+
+use crate::config::{LlcConfig, MappingPolicy};
+
+/// The stencil segment: one physically contiguous region (from [159]-style
+/// allocation) registered with the hardware via two registers (§8.6:
+/// start + length; one adder + one comparator per NoC injection point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StencilSegment {
+    pub base: u64,
+    pub len: u64,
+}
+
+impl StencilSegment {
+    pub fn new(base: u64, len: u64) -> StencilSegment {
+        StencilSegment { base, len }
+    }
+
+    #[inline]
+    pub fn contains(&self, addr: u64) -> bool {
+        addr.wrapping_sub(self.base) < self.len
+    }
+
+    pub fn end(&self) -> u64 {
+        self.base + self.len
+    }
+}
+
+/// Address-to-slice mapper: the hardware at every NoC injection point.
+#[derive(Debug, Clone)]
+pub struct SliceMapper {
+    slices: u64,
+    line_bytes: u64,
+    block_bytes: u64,
+    policy: MappingPolicy,
+    segment: Option<StencilSegment>,
+}
+
+impl SliceMapper {
+    pub fn new(llc: &LlcConfig, policy: MappingPolicy) -> SliceMapper {
+        assert!(llc.slices.is_power_of_two(), "slice count must be a power of two");
+        assert!(llc.line_bytes.is_power_of_two() && llc.stencil_block_bytes.is_power_of_two());
+        SliceMapper {
+            slices: llc.slices as u64,
+            line_bytes: llc.line_bytes as u64,
+            block_bytes: llc.stencil_block_bytes as u64,
+            policy,
+            segment: None,
+        }
+    }
+
+    /// Register the stencil segment (the `initStencilSegment` effect).
+    pub fn set_segment(&mut self, seg: StencilSegment) {
+        self.segment = Some(seg);
+    }
+
+    pub fn clear_segment(&mut self) {
+        self.segment = None;
+    }
+
+    pub fn segment(&self) -> Option<StencilSegment> {
+        self.segment
+    }
+
+    /// Is this address inside the registered stencil segment?
+    #[inline]
+    pub fn in_segment(&self, addr: u64) -> bool {
+        matches!(self.segment, Some(s) if s.contains(addr))
+    }
+
+    /// Map a physical address to its home LLC slice. Deterministic: each
+    /// address maps to exactly one slice regardless of requester (§4.2).
+    #[inline]
+    pub fn slice_of(&self, addr: u64) -> usize {
+        if self.policy == MappingPolicy::StencilSegment && self.in_segment(addr) {
+            self.stencil_hash(addr)
+        } else {
+            self.baseline_hash(addr)
+        }
+    }
+
+    /// Baseline hash: XOR-fold the line-index bits down to `log2(slices)`
+    /// bits. Consecutive lines get consecutive (different) slices; higher
+    /// line bits are folded in so large strides still spread out, the
+    /// property [158] documents for Intel's undisclosed function.
+    #[inline]
+    pub fn baseline_hash(&self, addr: u64) -> usize {
+        let line = addr / self.line_bytes;
+        let bits = self.slices.trailing_zeros();
+        let mask = self.slices - 1;
+        let mut h = 0u64;
+        let mut v = line;
+        while v != 0 {
+            h ^= v & mask;
+            v >>= bits;
+        }
+        h as usize
+    }
+
+    /// Stencil-segment hash: *segment-relative* 128 kB blocks round-robin
+    /// across slices (a bit-select, §8.6), so the first block of the
+    /// segment always starts at slice 0.
+    #[inline]
+    pub fn stencil_hash(&self, addr: u64) -> usize {
+        let rel = addr - self.segment.map(|s| s.base).unwrap_or(0);
+        ((rel / self.block_bytes) % self.slices) as usize
+    }
+
+    /// Do `a` and `b` live in the same slice?
+    #[inline]
+    pub fn same_slice(&self, a: u64, b: u64) -> bool {
+        self.slice_of(a) == self.slice_of(b)
+    }
+
+    pub fn slices(&self) -> usize {
+        self.slices as usize
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::testutil;
+    use crate::util::SplitMix64;
+
+    fn mapper(policy: MappingPolicy) -> SliceMapper {
+        SliceMapper::new(&SimConfig::default().llc, policy)
+    }
+
+    #[test]
+    fn baseline_spreads_consecutive_lines() {
+        let m = mapper(MappingPolicy::Baseline);
+        // 16 consecutive lines hit 16 distinct slices.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..16u64 {
+            seen.insert(m.slice_of(i * 64));
+        }
+        assert_eq!(seen.len(), 16);
+    }
+
+    #[test]
+    fn baseline_is_load_balanced() {
+        let m = mapper(MappingPolicy::Baseline);
+        let mut counts = vec![0usize; 16];
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..64_000 {
+            let addr = rng.next_u64() % (1 << 34);
+            counts[m.slice_of(addr)] += 1;
+        }
+        for &c in &counts {
+            assert!((3000..5000).contains(&c), "imbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn stencil_hash_keeps_blocks_together() {
+        let mut m = mapper(MappingPolicy::StencilSegment);
+        m.set_segment(StencilSegment::new(0x10000000, 8 << 20));
+        let base = 0x10000000u64;
+        // All addresses within one 128 kB block share a slice.
+        let s0 = m.slice_of(base);
+        for off in (0..128 * 1024).step_by(64) {
+            assert_eq!(m.slice_of(base + off as u64), s0);
+        }
+        // Next block: next slice.
+        assert_eq!(m.slice_of(base + 128 * 1024), (s0 + 1) % 16);
+        // Blocks wrap round-robin: block 16 back to slice s0.
+        assert_eq!(m.slice_of(base + 16 * 128 * 1024), s0);
+    }
+
+    #[test]
+    fn segment_relative_blocks_start_at_slice0() {
+        let mut m = mapper(MappingPolicy::StencilSegment);
+        // Segment base NOT 2 MB-aligned: hash is segment-relative so the
+        // first block still maps to slice 0 (matches the Fig 8 programming
+        // model where array offsets, not absolute addresses, pick slices).
+        m.set_segment(StencilSegment::new(0x1234_0000, 4 << 20));
+        assert_eq!(m.slice_of(0x1234_0000), 0);
+        assert_eq!(m.slice_of(0x1234_0000 + 3 * 128 * 1024), 3);
+    }
+
+    #[test]
+    fn outside_segment_uses_baseline() {
+        let mut m = mapper(MappingPolicy::StencilSegment);
+        m.set_segment(StencilSegment::new(0x10000000, 1 << 20));
+        let b = mapper(MappingPolicy::Baseline);
+        for addr in [0u64, 0x1000, 0xFFFFFFF, 0x10000000 + (1 << 20)] {
+            assert_eq!(m.slice_of(addr), b.slice_of(addr), "addr {addr:#x}");
+        }
+    }
+
+    #[test]
+    fn baseline_policy_ignores_segment() {
+        let mut m = mapper(MappingPolicy::Baseline);
+        m.set_segment(StencilSegment::new(0, 1 << 30));
+        let plain = mapper(MappingPolicy::Baseline);
+        for i in 0..1000u64 {
+            assert_eq!(m.slice_of(i * 64), plain.slice_of(i * 64));
+        }
+    }
+
+    #[test]
+    fn every_address_maps_to_exactly_one_slice() {
+        // §4.2: "each address is mapped to exactly one cache slice" —
+        // the map must be a function (same input → same output) and stay
+        // in range. Property test over random addresses and segments.
+        testutil::check(
+            "mapper determinism",
+            512,
+            |r: &mut SplitMix64| {
+                let base = (r.next_u64() % (1 << 40)) & !63;
+                let len = (1 + r.next_u64() % 1024) * 128 * 1024;
+                let addr = r.next_u64() % (1 << 41);
+                (base, len, addr)
+            },
+            |&(base, len, addr)| {
+                let mut m = mapper(MappingPolicy::StencilSegment);
+                m.set_segment(StencilSegment::new(base, len));
+                let s1 = m.slice_of(addr);
+                let s2 = m.slice_of(addr);
+                s1 == s2 && s1 < 16
+            },
+        );
+    }
+
+    #[test]
+    fn segment_contains_half_open() {
+        let s = StencilSegment::new(100, 50);
+        assert!(s.contains(100));
+        assert!(s.contains(149));
+        assert!(!s.contains(150));
+        assert!(!s.contains(99));
+    }
+}

@@ -1,0 +1,20 @@
+//! The memory subsystem: set-associative caches, the sliced LLC, DRAM,
+//! stride prefetchers, and Casper's unaligned-load support (§4.1).
+//!
+//! The simulator is *decoupled*: functional data lives in the grids
+//! ([`crate::stencil::Grid`]); these models track tags, occupancy, timing,
+//! and event counts. That is the standard trace-driven style and keeps the
+//! hot path fast while the event counts feed the energy model unchanged.
+
+pub mod cache;
+pub mod dram;
+pub mod hierarchy;
+pub mod prefetch;
+pub mod ratelimit;
+pub mod unaligned;
+
+pub use cache::{AccessOutcome, Cache, CacheStats};
+pub use dram::DramModel;
+pub use hierarchy::{CpuHierarchy, MemEvents};
+pub use prefetch::StridePrefetcher;
+pub use unaligned::UnalignedReq;

@@ -1,0 +1,164 @@
+//! Unaligned-load support (§4.1): 64 B loads aligned to any 8 B boundary.
+//!
+//! The hardware mechanism — a second tag-array read port, one 3:1 mux per
+//! SRAM row, and an output rotate network — lets one request pull a 64 B
+//! operand that spans two *consecutive* cache lines, provided both lines
+//! live in the same LLC slice. Consecutive lines always map to different
+//! sets, so the dual tag match never conflicts (§4.1). Across a slice
+//! boundary the mechanism cannot help and the access splits into two
+//! ordinary requests (§4.2 block-boundary cost).
+
+use crate::config::LlcConfig;
+use crate::mapping::SliceMapper;
+
+/// The decomposition of one (possibly unaligned) 64 B SPU load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnalignedReq {
+    /// Line-aligned byte addresses of the lines touched.
+    pub lines: [u64; 2],
+    /// 1 if the request is line-aligned, else 2.
+    pub n_lines: usize,
+    /// Home slice of each touched line.
+    pub slices: [usize; 2],
+    /// True when both lines are homed in the same slice, so the §4.1
+    /// shifted-row mechanism serves the request in ONE cache access.
+    pub single_access: bool,
+    /// Rotate amount in elements (the barrel-shifter setting).
+    pub rotate_elems: u8,
+}
+
+impl UnalignedReq {
+    /// Number of LLC requests the load costs (1 with the Casper hardware
+    /// when same-slice, otherwise one per line).
+    pub fn llc_requests(&self, unaligned_hw: bool) -> usize {
+        if self.n_lines == 1 {
+            1
+        } else if unaligned_hw && self.single_access {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+/// Decompose a 64 B vector load at 8 B-aligned byte address `addr`.
+pub fn decompose(addr: u64, llc: &LlcConfig, mapper: &SliceMapper) -> UnalignedReq {
+    let line = llc.line_bytes as u64;
+    debug_assert_eq!(addr % 8, 0, "SPU loads are 8 B aligned");
+    let first = addr & !(line - 1);
+    let end = addr + line - 1; // last byte of the 64 B operand
+    let last = end & !(line - 1);
+    let s0 = mapper.slice_of(first);
+    if first == last {
+        return UnalignedReq {
+            lines: [first, first],
+            n_lines: 1,
+            slices: [s0, s0],
+            single_access: true,
+            rotate_elems: 0,
+        };
+    }
+    let s1 = mapper.slice_of(last);
+    UnalignedReq {
+        lines: [first, last],
+        n_lines: 2,
+        slices: [s0, s1],
+        single_access: s0 == s1,
+        rotate_elems: ((addr - first) / 8) as u8,
+    }
+}
+
+/// Area overhead of the unaligned-load hardware per LLC slice, mm² (§8.6):
+/// dominated by the second tag-array read port.
+pub const AREA_PER_SLICE_MM2: f64 = 0.14;
+/// ... of which the second tag port alone:
+pub const TAG_PORT_AREA_MM2: f64 = 0.12;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MappingPolicy, SimConfig};
+    use crate::mapping::{SliceMapper, StencilSegment};
+    use crate::testutil;
+    use crate::util::SplitMix64;
+
+    fn setup() -> (LlcConfig, SliceMapper) {
+        let cfg = SimConfig::default();
+        let mut m = SliceMapper::new(&cfg.llc, MappingPolicy::StencilSegment);
+        m.set_segment(StencilSegment::new(0, 64 << 20));
+        (cfg.llc, m)
+    }
+
+    #[test]
+    fn aligned_load_is_single_line() {
+        let (llc, m) = setup();
+        let r = decompose(128, &llc, &m);
+        assert_eq!(r.n_lines, 1);
+        assert_eq!(r.rotate_elems, 0);
+        assert_eq!(r.llc_requests(true), 1);
+        assert_eq!(r.llc_requests(false), 1);
+    }
+
+    #[test]
+    fn unaligned_same_slice_is_one_access_with_hw() {
+        let (llc, m) = setup();
+        // addr 24: spans lines 0 and 64; both in block 0 → same slice.
+        let r = decompose(24, &llc, &m);
+        assert_eq!(r.n_lines, 2);
+        assert_eq!(r.lines, [0, 64]);
+        assert!(r.single_access);
+        assert_eq!(r.rotate_elems, 3);
+        assert_eq!(r.llc_requests(true), 1);
+        assert_eq!(r.llc_requests(false), 2, "without the hw it costs two");
+    }
+
+    #[test]
+    fn block_boundary_splits_across_slices() {
+        let (llc, m) = setup();
+        // Straddle the 128 kB block boundary: last 8 B of block 0 +
+        // first 56 B of block 1.
+        let addr = 128 * 1024 - 8;
+        let r = decompose(addr, &llc, &m);
+        assert_eq!(r.n_lines, 2);
+        assert_ne!(r.slices[0], r.slices[1]);
+        assert!(!r.single_access);
+        assert_eq!(r.llc_requests(true), 2, "hardware cannot merge across slices");
+    }
+
+    #[test]
+    fn consecutive_lines_differ_in_set() {
+        // §4.1's no-conflict guarantee: consecutive lines map to different
+        // cache sets (set index = low line bits).
+        let sets = 2048u64;
+        testutil::check("adjacent lines, adjacent sets", 512, |r: &mut SplitMix64| r.next_u64() & !63, |&a| {
+            let l0 = a / 64;
+            let l1 = l0 + 1;
+            (l0 % sets) != (l1 % sets)
+        });
+    }
+
+    #[test]
+    fn rotate_matches_offset_property() {
+        let (llc, m) = setup();
+        testutil::check(
+            "rotate = (addr % 64)/8",
+            512,
+            |r: &mut SplitMix64| (r.next_u64() % (1 << 25)) & !7,
+            |&addr| {
+                let r = decompose(addr, &llc, &m);
+                r.rotate_elems as u64 == (addr % 64) / 8
+                    && (r.n_lines == 1) == (addr % 64 == 0)
+            },
+        );
+    }
+
+    #[test]
+    fn baseline_mapping_rarely_merges() {
+        // Under the baseline line-interleaved hash, adjacent lines are in
+        // different slices, so unaligned loads are never single-access.
+        let cfg = SimConfig::default();
+        let m = SliceMapper::new(&cfg.llc, MappingPolicy::Baseline);
+        let r = decompose(24, &cfg.llc, &m);
+        assert!(!r.single_access);
+    }
+}

@@ -1,0 +1,210 @@
+//! Mesh network-on-chip model (Table 2: mesh, XY routing, 64 B/cycle per
+//! direction per link).
+//!
+//! Slices (and their SPUs) sit at mesh nodes. Remote-slice loads pay
+//! `2 × hops × hop_latency` (request + response) plus link serialization;
+//! links track occupancy so heavy cross-slice traffic (3D stencils, §8.1)
+//! congests realistically.
+
+use crate::config::NocConfig;
+
+/// XY mesh coordinates of a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeCoord {
+    pub x: usize,
+    pub y: usize,
+}
+
+/// The mesh NoC.
+#[derive(Debug, Clone)]
+pub struct MeshNoc {
+    cfg: NocConfig,
+    /// Next-free cycle of each directed link, indexed by
+    /// `(node * 4 + dir)`; dir: 0=+x, 1=-x, 2=+y, 3=-y.
+    link_free: Vec<u64>,
+    /// Counters.
+    pub messages: u64,
+    pub total_hops: u64,
+    pub contention_cycles: u64,
+}
+
+impl MeshNoc {
+    pub fn new(cfg: &NocConfig) -> MeshNoc {
+        MeshNoc {
+            cfg: *cfg,
+            link_free: vec![0; cfg.mesh_x * cfg.mesh_y * 4],
+            messages: 0,
+            total_hops: 0,
+            contention_cycles: 0,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.cfg.mesh_x * self.cfg.mesh_y
+    }
+
+    /// Node id → coordinates (row-major placement).
+    pub fn coord(&self, node: usize) -> NodeCoord {
+        NodeCoord { x: node % self.cfg.mesh_x, y: node / self.cfg.mesh_x }
+    }
+
+    /// Manhattan hop count between two nodes.
+    pub fn hops(&self, from: usize, to: usize) -> u64 {
+        let a = self.coord(from);
+        let b = self.coord(to);
+        (a.x.abs_diff(b.x) + a.y.abs_diff(b.y)) as u64
+    }
+
+    /// Contention-free traversal latency of one message: per-hop router +
+    /// link latency plus serialization of the extra flits. Used on the SPU
+    /// hot path, where the slice *port* (1 access/cycle), not the 64 B/cyc
+    /// links, is the contended resource; [`send`](Self::send) models link
+    /// occupancy for flows that can actually saturate links.
+    pub fn latency(&self, from: usize, to: usize, bytes: usize) -> u64 {
+        if from == to {
+            return 0;
+        }
+        let flits = (bytes as u64).div_ceil(self.cfg.link_bytes_per_cycle as u64).max(1);
+        self.hops(from, to) * self.cfg.hop_latency + (flits - 1)
+    }
+
+    /// Account a message without occupying links (pairs with
+    /// [`latency`](Self::latency)).
+    pub fn record(&mut self, from: usize, to: usize) {
+        self.messages += 1;
+        self.total_hops += self.hops(from, to);
+    }
+
+    /// Route one message of `bytes` from `from` to `to`, starting at
+    /// `now`. Returns the arrival cycle. XY routing: all X hops first.
+    pub fn send(&mut self, from: usize, to: usize, bytes: usize, now: u64) -> u64 {
+        self.messages += 1;
+        if from == to {
+            return now; // local — no NoC traversal
+        }
+        let flits = (bytes as u64).div_ceil(self.cfg.link_bytes_per_cycle as u64).max(1);
+        let mut t = now;
+        let mut cur = self.coord(from);
+        let dst = self.coord(to);
+        // X dimension first, then Y (deadlock-free XY routing).
+        while cur.x != dst.x {
+            let dir = if dst.x > cur.x { 0 } else { 1 };
+            t = self.traverse(cur, dir, flits, t);
+            cur.x = if dst.x > cur.x { cur.x + 1 } else { cur.x - 1 };
+            self.total_hops += 1;
+        }
+        while cur.y != dst.y {
+            let dir = if dst.y > cur.y { 2 } else { 3 };
+            t = self.traverse(cur, dir, flits, t);
+            cur.y = if dst.y > cur.y { cur.y + 1 } else { cur.y - 1 };
+            self.total_hops += 1;
+        }
+        t
+    }
+
+    /// Round-trip latency of a remote load: request (small) + response
+    /// (`bytes`). Returns response-arrival cycle.
+    pub fn round_trip(&mut self, from: usize, to: usize, bytes: usize, now: u64) -> u64 {
+        let req_arrives = self.send(from, to, 8, now);
+        self.send(to, from, bytes, req_arrives)
+    }
+
+    fn traverse(&mut self, at: NodeCoord, dir: usize, flits: u64, now: u64) -> u64 {
+        let node = at.y * self.cfg.mesh_x + at.x;
+        let link = node * 4 + dir;
+        let start = now.max(self.link_free[link]);
+        self.contention_cycles += start - now;
+        self.link_free[link] = start + flits;
+        start + self.cfg.hop_latency + (flits - 1)
+    }
+
+    pub fn reset(&mut self) {
+        self.link_free.fill(0);
+        self.messages = 0;
+        self.total_hops = 0;
+        self.contention_cycles = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn noc() -> MeshNoc {
+        MeshNoc::new(&SimConfig::default().noc)
+    }
+
+    #[test]
+    fn coords_row_major() {
+        let n = noc();
+        assert_eq!(n.coord(0), NodeCoord { x: 0, y: 0 });
+        assert_eq!(n.coord(3), NodeCoord { x: 3, y: 0 });
+        assert_eq!(n.coord(4), NodeCoord { x: 0, y: 1 });
+        assert_eq!(n.coord(15), NodeCoord { x: 3, y: 3 });
+    }
+
+    #[test]
+    fn hop_counts() {
+        let n = noc();
+        assert_eq!(n.hops(0, 0), 0);
+        assert_eq!(n.hops(0, 1), 1);
+        assert_eq!(n.hops(0, 15), 6); // corner to corner on 4×4
+        assert_eq!(n.hops(5, 10), 2);
+    }
+
+    #[test]
+    fn local_send_is_free() {
+        let mut n = noc();
+        assert_eq!(n.send(7, 7, 64, 123), 123);
+        assert_eq!(n.total_hops, 0);
+    }
+
+    #[test]
+    fn latency_scales_with_distance() {
+        let mut n = noc();
+        let near = n.send(0, 1, 64, 0);
+        n.reset();
+        let far = n.send(0, 15, 64, 0);
+        assert!(far > near);
+        // 6 hops × 2 cycles = 12 for a single-flit... 64 B = 1 flit.
+        assert_eq!(far, 12);
+        assert_eq!(near, 2);
+    }
+
+    #[test]
+    fn contention_on_shared_link() {
+        let mut n = noc();
+        // Two big messages over the same first link at the same time.
+        let a = n.send(0, 3, 256, 0); // 4 flits per link
+        let b = n.send(0, 3, 256, 0);
+        assert!(b > a);
+        assert!(n.contention_cycles > 0);
+    }
+
+    #[test]
+    fn disjoint_paths_do_not_contend() {
+        let mut n = noc();
+        n.send(0, 1, 64, 0);
+        let before = n.contention_cycles;
+        n.send(4, 5, 64, 0); // different row
+        assert_eq!(n.contention_cycles, before);
+    }
+
+    #[test]
+    fn round_trip_is_two_traversals() {
+        let mut n = noc();
+        let t = n.round_trip(0, 2, 64, 0);
+        // 2 hops there (+2cyc each) + 2 hops back = 8 cycles.
+        assert_eq!(t, 8);
+    }
+
+    #[test]
+    fn xy_routing_is_deterministic() {
+        let mut a = noc();
+        let mut b = noc();
+        for (f, t) in [(0, 15), (3, 12), (5, 6), (9, 2)] {
+            assert_eq!(a.send(f, t, 128, 100), b.send(f, t, 128, 100));
+        }
+    }
+}

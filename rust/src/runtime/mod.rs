@@ -1,0 +1,214 @@
+//! PJRT runtime: load AOT-compiled stencil artifacts (HLO text produced by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client.
+//!
+//! This is the numeric cross-validation path: the JAX/Pallas-lowered
+//! computation runs *from Rust* (Python never on the request path) and its
+//! output is compared against the simulator's functional result and the
+//! golden reference. A production deployment would use exactly this
+//! loader with TPU-compiled artifacts.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::stencil::{Grid, StencilKind};
+
+/// One entry of `artifacts/manifest.txt`:
+/// `name kernel nx ny nz steps file`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kernel: StencilKind,
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub steps: usize,
+    pub file: PathBuf,
+}
+
+impl ArtifactEntry {
+    pub fn points(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+}
+
+/// Parse `manifest.txt`. Paths are resolved relative to the manifest dir.
+pub fn parse_manifest(path: &Path) -> Result<Vec<ArtifactEntry>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    let dir = path.parent().unwrap_or(Path::new("."));
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 7 {
+            bail!("manifest line {}: expected 7 fields, got {}", lineno + 1, f.len());
+        }
+        let kernel = StencilKind::parse(f[1])
+            .with_context(|| format!("manifest line {}: unknown kernel '{}'", lineno + 1, f[1]))?;
+        out.push(ArtifactEntry {
+            name: f[0].to_string(),
+            kernel,
+            nx: f[2].parse().context("nx")?,
+            ny: f[3].parse().context("ny")?,
+            nz: f[4].parse().context("nz")?,
+            steps: f[5].parse().context("steps")?,
+            file: dir.join(f[6]),
+        });
+    }
+    Ok(out)
+}
+
+/// The PJRT-backed stencil runtime: a CPU client plus a cache of compiled
+/// executables keyed by artifact name.
+pub struct StencilRuntime {
+    client: xla::PjRtClient,
+    entries: HashMap<String, ArtifactEntry>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl StencilRuntime {
+    /// Load the manifest in `artifacts_dir` and create the PJRT client.
+    pub fn new(artifacts_dir: &Path) -> Result<StencilRuntime> {
+        let manifest = artifacts_dir.join("manifest.txt");
+        let entries = parse_manifest(&manifest)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(StencilRuntime {
+            client,
+            entries: entries.into_iter().map(|e| (e.name.clone(), e)).collect(),
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.values()
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    /// Find the artifact for a kernel with the given step count and the
+    /// smallest point count (the validation-sized one).
+    pub fn smallest_for(&self, kernel: StencilKind, steps: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .values()
+            .filter(|e| e.kernel == kernel && e.steps == steps)
+            .min_by_key(|e| e.points())
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .entries
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let path_str = entry
+            .file
+            .to_str()
+            .context("artifact path not UTF-8")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path_str)
+            .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on a grid. The grid's shape must match the
+    /// artifact's; returns the stepped grid.
+    pub fn execute(&mut self, name: &str, input: &Grid) -> Result<Grid> {
+        self.compile(name)?;
+        let entry = &self.entries[name];
+        if (input.nx, input.ny, input.nz) != (entry.nx, entry.ny, entry.nz) {
+            bail!(
+                "grid {}x{}x{} does not match artifact '{name}' ({}x{}x{})",
+                input.nx, input.ny, input.nz, entry.nx, entry.ny, entry.nz
+            );
+        }
+        // Natural-shape literal: (nx,), (ny,nx) or (nz,ny,nx) — row-major
+        // with x fastest matches the Grid layout exactly.
+        let dims: Vec<i64> = if entry.nz > 1 {
+            vec![entry.nz as i64, entry.ny as i64, entry.nx as i64]
+        } else if entry.ny > 1 {
+            vec![entry.ny as i64, entry.nx as i64]
+        } else {
+            vec![entry.nx as i64]
+        };
+        let lit = xla::Literal::vec1(&input.data).reshape(&dims)?;
+        let exe = &self.compiled[name];
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f64>()?;
+        if values.len() != input.len() {
+            bail!("artifact '{name}' returned {} values, expected {}", values.len(), input.len());
+        }
+        let mut grid = Grid::zeros(input.nx, input.ny, input.nz);
+        grid.data.copy_from_slice(&values);
+        Ok(grid)
+    }
+}
+
+/// Default artifacts directory: `$CASPER_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("CASPER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True when the artifacts have been built (used by tests to skip
+/// gracefully before `make artifacts`).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("casper_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.txt");
+        std::fs::write(
+            &p,
+            "jacobi1d_tiny jacobi1d 256 1 1 1 jacobi1d_tiny.hlo.txt\n\
+             heat3d_tiny heat3d 16 12 8 1 heat3d_tiny.hlo.txt\n",
+        )
+        .unwrap();
+        let entries = parse_manifest(&p).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].kernel, StencilKind::Jacobi1D);
+        assert_eq!(entries[1].nz, 8);
+        assert_eq!(entries[1].points(), 16 * 12 * 8);
+        assert!(entries[0].file.ends_with("jacobi1d_tiny.hlo.txt"));
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("casper_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.txt");
+        std::fs::write(&p, "too few fields\n").unwrap();
+        assert!(parse_manifest(&p).is_err());
+        std::fs::write(&p, "x unknownkernel 1 1 1 1 f\n").unwrap();
+        assert!(parse_manifest(&p).is_err());
+    }
+}

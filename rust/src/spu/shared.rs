@@ -1,0 +1,161 @@
+//! Shared memory-system context for the Casper engine: the sliced LLC,
+//! the NoC, DRAM, the slice mapper, and the functional backing store.
+
+use crate::config::{LlcConfig, MappingPolicy, SimConfig};
+use crate::mapping::SliceMapper;
+use crate::mem::cache::Cache;
+use crate::mem::dram::DramModel;
+use crate::mem::hierarchy::SlicedLlc;
+use crate::noc::MeshNoc;
+
+/// Functional backing store for the (single, physically contiguous)
+/// stencil segment. Addresses are simulated physical addresses.
+#[derive(Debug, Clone)]
+pub struct SimStore {
+    base: u64,
+    data: Vec<f64>,
+}
+
+impl SimStore {
+    /// An empty store; call [`alloc_segment`](Self::alloc_segment) first.
+    pub fn new() -> SimStore {
+        SimStore { base: 0, data: Vec::new() }
+    }
+
+    /// Allocate the stencil segment (`initStencilSegment`): a contiguous
+    /// region of `bytes` zeroed f64s at a fixed, 2 MB-aligned simulated
+    /// physical base.
+    pub fn alloc_segment(&mut self, bytes: u64) -> u64 {
+        assert_eq!(bytes % 8, 0);
+        // A recognizable, 2 MB-aligned physical base.
+        self.base = 0x1000_0000;
+        self.data = vec![0.0; (bytes / 8) as usize];
+        self.base
+    }
+
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    pub fn len_bytes(&self) -> u64 {
+        self.data.len() as u64 * 8
+    }
+
+    #[inline]
+    fn index(&self, addr: u64) -> usize {
+        debug_assert!(addr >= self.base, "address below segment");
+        debug_assert_eq!(addr % 8, 0, "unaligned f64 access");
+        let i = ((addr - self.base) / 8) as usize;
+        debug_assert!(i < self.data.len(), "address past segment end");
+        i
+    }
+
+    #[inline]
+    pub fn read_f64(&self, addr: u64) -> f64 {
+        self.data[self.index(addr)]
+    }
+
+    #[inline]
+    pub fn write_f64(&mut self, addr: u64, v: f64) {
+        let i = self.index(addr);
+        self.data[i] = v;
+    }
+
+    /// Bulk copy a slice of f64s into the segment at `addr`.
+    pub fn write_slice(&mut self, addr: u64, src: &[f64]) {
+        let i = self.index(addr);
+        self.data[i..i + src.len()].copy_from_slice(src);
+    }
+
+    /// Bulk read `n` f64s from `addr`.
+    pub fn read_vec(&self, addr: u64, n: usize) -> Vec<f64> {
+        let i = self.index(addr);
+        self.data[i..i + n].to_vec()
+    }
+
+    /// Borrow `n` f64s starting at `addr` (hot-path vector load).
+    #[inline]
+    pub fn read_slice(&self, addr: u64, n: usize) -> &[f64] {
+        let i = self.index(addr);
+        &self.data[i..i + n]
+    }
+}
+
+impl Default for SimStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Everything the SPUs share: timing models + functional store.
+pub struct SharedMem {
+    pub llc: SlicedLlc,
+    pub noc: MeshNoc,
+    pub dram: DramModel,
+    pub mapper: SliceMapper,
+    pub store: SimStore,
+    pub llc_cfg: LlcConfig,
+    pub spu_local_latency: u64,
+    /// §4.1 hardware present? (ablation knob)
+    pub unaligned_hw: bool,
+    /// Fig-14 `NearL1` placement: per-SPU private L1 tag models checked
+    /// before the LLC, plus their hit latency.
+    pub spu_l1: Option<Vec<Cache>>,
+    pub spu_l1_latency: u64,
+}
+
+impl SharedMem {
+    pub fn new(cfg: &SimConfig, policy: MappingPolicy) -> SharedMem {
+        SharedMem {
+            llc: SlicedLlc::new(cfg),
+            noc: MeshNoc::new(&cfg.noc),
+            dram: DramModel::new(&cfg.dram, cfg.llc.line_bytes),
+            mapper: SliceMapper::new(&cfg.llc, policy),
+            store: SimStore::new(),
+            llc_cfg: cfg.llc,
+            spu_local_latency: cfg.llc.spu_local_latency,
+            unaligned_hw: true,
+            spu_l1: None,
+            spu_l1_latency: cfg.l1.latency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_roundtrip() {
+        let mut s = SimStore::new();
+        let base = s.alloc_segment(1024);
+        s.write_f64(base, 1.5);
+        s.write_f64(base + 8, -2.0);
+        assert_eq!(s.read_f64(base), 1.5);
+        assert_eq!(s.read_f64(base + 8), -2.0);
+        assert_eq!(s.read_f64(base + 16), 0.0);
+    }
+
+    #[test]
+    fn base_is_2mb_aligned() {
+        let mut s = SimStore::new();
+        let base = s.alloc_segment(8);
+        assert_eq!(base % (2 << 20), 0);
+    }
+
+    #[test]
+    fn bulk_ops() {
+        let mut s = SimStore::new();
+        let base = s.alloc_segment(256);
+        s.write_slice(base + 16, &[1.0, 2.0, 3.0]);
+        assert_eq!(s.read_vec(base + 16, 3), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_segment_panics_in_debug() {
+        let mut s = SimStore::new();
+        let base = s.alloc_segment(64);
+        let _ = s.read_f64(base + 64);
+    }
+}

@@ -1,0 +1,155 @@
+//! Domain sizes: the paper's Table 3 plus arbitrary custom domains.
+
+use super::{Grid, StencilKind};
+use crate::config::SizeClass;
+
+/// A problem domain: grid extents (elements) per axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Domain {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+}
+
+impl Domain {
+    pub const fn new(nx: usize, ny: usize, nz: usize) -> Domain {
+        Domain { nx, ny, nz }
+    }
+
+    /// Table 3: domain size for a stencil's dimensionality and size class.
+    ///
+    /// | Level | 1D        | 2D        | 3D          |
+    /// |-------|-----------|-----------|-------------|
+    /// | L2    | 131,072   | 512×256   | 64×64×32    |
+    /// | L3    | 1,048,576 | 1024×1024 | 128×128×64  |
+    /// | DRAM  | 4,194,304 | 2048×2048 | 256×256×64  |
+    pub fn for_level(kind: StencilKind, level: SizeClass) -> Domain {
+        match (kind.dims(), level) {
+            (1, SizeClass::L2) => Domain::new(131_072, 1, 1),
+            (1, SizeClass::Llc) => Domain::new(1_048_576, 1, 1),
+            (1, SizeClass::Dram) => Domain::new(4_194_304, 1, 1),
+            (2, SizeClass::L2) => Domain::new(512, 256, 1),
+            (2, SizeClass::Llc) => Domain::new(1024, 1024, 1),
+            (2, SizeClass::Dram) => Domain::new(2048, 2048, 1),
+            (3, SizeClass::L2) => Domain::new(64, 64, 32),
+            (3, SizeClass::Llc) => Domain::new(128, 128, 64),
+            (3, SizeClass::Dram) => Domain::new(256, 256, 64),
+            _ => unreachable!("dims is always 1..=3"),
+        }
+    }
+
+    /// A small domain of the right dimensionality for unit tests — big
+    /// enough for every stencil's halo, small enough to simulate fast.
+    pub fn tiny(kind: StencilKind) -> Domain {
+        match kind.dims() {
+            1 => Domain::new(256, 1, 1),
+            2 => Domain::new(32, 16, 1),
+            _ => Domain::new(16, 12, 8),
+        }
+    }
+
+    pub fn points(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    /// Bytes of one f64 array over this domain.
+    pub fn array_bytes(&self) -> usize {
+        self.points() * 8
+    }
+
+    /// Bytes of the working set (input + output array).
+    pub fn working_set_bytes(&self) -> usize {
+        2 * self.array_bytes()
+    }
+
+    pub fn alloc(&self) -> Grid {
+        Grid::zeros(self.nx, self.ny, self.nz)
+    }
+
+    pub fn alloc_random(&self, seed: u64) -> Grid {
+        Grid::random(self.nx, self.ny, self.nz, seed)
+    }
+}
+
+impl std::fmt::Display for Domain {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.nz > 1 {
+            write!(f, "{}x{}x{}", self.nx, self.ny, self.nz)
+        } else if self.ny > 1 {
+            write!(f, "{}x{}", self.nx, self.ny)
+        } else {
+            write!(f, "{}", self.nx)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_sizes() {
+        // Spot-check every row of Table 3.
+        assert_eq!(
+            Domain::for_level(StencilKind::Jacobi1D, SizeClass::L2).points(),
+            131_072
+        );
+        assert_eq!(
+            Domain::for_level(StencilKind::Jacobi1D, SizeClass::Llc).points(),
+            1_048_576
+        );
+        assert_eq!(
+            Domain::for_level(StencilKind::Points7_1D, SizeClass::Dram).points(),
+            4_194_304
+        );
+        assert_eq!(
+            Domain::for_level(StencilKind::Jacobi2D, SizeClass::L2),
+            Domain::new(512, 256, 1)
+        );
+        assert_eq!(
+            Domain::for_level(StencilKind::Blur2D, SizeClass::Dram),
+            Domain::new(2048, 2048, 1)
+        );
+        assert_eq!(
+            Domain::for_level(StencilKind::Heat3D, SizeClass::Llc),
+            Domain::new(128, 128, 64)
+        );
+        assert_eq!(
+            Domain::for_level(StencilKind::Points33_3D, SizeClass::L2),
+            Domain::new(64, 64, 32)
+        );
+    }
+
+    #[test]
+    fn llc_class_fits_llc() {
+        // The LLC-class working sets (2 arrays) fit in the 32 MB LLC,
+        // and exceed the 4 MB of total private L2.
+        for k in StencilKind::ALL {
+            let d = Domain::for_level(k, SizeClass::Llc);
+            assert!(d.working_set_bytes() <= 32 * 1024 * 1024, "{k}");
+            assert!(d.working_set_bytes() > 16 * 256 * 1024, "{k}");
+        }
+        // DRAM-class exceeds the LLC for 1D/2D kernels (the paper's 3D
+        // DRAM domains are 256×256×64 = 32 MB working set, borderline).
+        for k in [StencilKind::Jacobi1D, StencilKind::Jacobi2D] {
+            let d = Domain::for_level(k, SizeClass::Dram);
+            assert!(d.working_set_bytes() > 32 * 1024 * 1024, "{k}");
+        }
+    }
+
+    #[test]
+    fn tiny_fits_halo() {
+        for k in StencilKind::ALL {
+            let d = Domain::tiny(k);
+            let r = k.descriptor().radius();
+            assert!(d.nx > 2 * r[0] && d.ny > 2 * r[1] && d.nz > 2 * r[2]);
+        }
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Domain::new(128, 1, 1).to_string(), "128");
+        assert_eq!(Domain::new(8, 4, 1).to_string(), "8x4");
+        assert_eq!(Domain::new(8, 4, 2).to_string(), "8x4x2");
+    }
+}

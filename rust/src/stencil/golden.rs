@@ -1,0 +1,179 @@
+//! Scalar golden reference for every stencil — the correctness oracle the
+//! SPU functional simulation and the PJRT-executed JAX artifacts are
+//! checked against.
+//!
+//! Boundary convention (shared by the Rust simulator, the JAX model, and
+//! the Pallas kernels): only interior points — those whose full tap set is
+//! in bounds — are updated; boundary points copy through unchanged. This is
+//! the PolyBench Jacobi convention generalized to each kernel's radius.
+
+use super::{Domain, Grid, StencilDesc, StencilKind};
+
+/// Apply one stencil step: read `src`, write `dst` (disjoint arrays,
+/// Jacobi-style). Grids must share the domain shape.
+pub fn step(desc: &StencilDesc, src: &Grid, dst: &mut Grid) {
+    assert_eq!((src.nx, src.ny, src.nz), (dst.nx, dst.ny, dst.nz), "shape mismatch");
+    let [rx, ry, rz] = desc.radius();
+    let (nx, ny, nz) = (src.nx, src.ny, src.nz);
+    assert!(nx > 2 * rx && ny > 2 * ry && nz > 2 * rz, "domain smaller than halo");
+
+    // Boundary copy-through.
+    dst.data.copy_from_slice(&src.data);
+
+    // Precompute linear offsets once (hot loop below is pure FMA).
+    let offs: Vec<(isize, f64)> = desc
+        .points
+        .iter()
+        .map(|p| (src.tap_offset(p.dx, p.dy, p.dz) as isize, p.coef))
+        .collect();
+
+    for z in rz..nz - rz {
+        for y in ry..ny - ry {
+            let row = src.index(0, y, z);
+            for x in rx..nx - rx {
+                let i = row + x;
+                let mut acc = 0.0f64;
+                for &(o, c) in &offs {
+                    // Safety not needed: bounds guaranteed by interior loop
+                    // ranges; use indexing to keep the oracle obviously safe.
+                    acc += c * src.data[(i as isize + o) as usize];
+                }
+                dst.data[i] = acc;
+            }
+        }
+    }
+}
+
+/// Run `steps` Jacobi iterations with array swapping. Returns the final
+/// grid (which is `a` after an even number of steps, `b` after odd).
+pub fn run(desc: &StencilDesc, initial: &Grid, steps: usize) -> Grid {
+    let mut a = initial.clone();
+    let mut b = initial.clone();
+    for _ in 0..steps {
+        step(desc, &a, &mut b);
+        std::mem::swap(&mut a, &mut b);
+    }
+    a
+}
+
+/// Convenience: run a kernel at a domain from a seeded random grid.
+pub fn run_kind(kind: StencilKind, domain: &Domain, steps: usize, seed: u64) -> Grid {
+    let desc = kind.descriptor();
+    let g = domain.alloc_random(seed);
+    run(&desc, &g, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_allclose;
+
+    #[test]
+    fn jacobi1d_hand_computed() {
+        let desc = StencilKind::Jacobi1D.descriptor();
+        let mut src = Grid::zeros(5, 1, 1);
+        src.data.copy_from_slice(&[3.0, 6.0, 9.0, 12.0, 15.0]);
+        let mut dst = Grid::zeros(5, 1, 1);
+        step(&desc, &src, &mut dst);
+        // interior: mean of 3 neighbours; boundary copied.
+        assert_allclose(&dst.data, &[3.0, 6.0, 9.0, 12.0, 15.0], 1e-12, 1e-12);
+        // non-linear data:
+        src.data.copy_from_slice(&[1.0, 2.0, 4.0, 8.0, 16.0]);
+        step(&desc, &src, &mut dst);
+        assert_allclose(
+            &dst.data,
+            &[1.0, 7.0 / 3.0, 14.0 / 3.0, 28.0 / 3.0, 16.0],
+            1e-12,
+            1e-12,
+        );
+    }
+
+    #[test]
+    fn jacobi2d_hand_computed() {
+        let desc = StencilKind::Jacobi2D.descriptor();
+        let mut src = Grid::zeros(3, 3, 1);
+        for (i, v) in (1..=9).enumerate() {
+            src.data[i] = v as f64;
+        }
+        let mut dst = Grid::zeros(3, 3, 1);
+        step(&desc, &src, &mut dst);
+        // Only the center (1,1)=5 updates: 0.2*(2+4+5+6+8)=5.
+        let mut want = src.data.clone();
+        want[4] = 5.0;
+        assert_allclose(&dst.data, &want, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn constant_field_is_fixed_point() {
+        // Coefficients sum to 1 → a constant grid is a fixed point for
+        // every kernel (interior equals boundary). Strong whole-pattern
+        // check.
+        for k in StencilKind::ALL {
+            let desc = k.descriptor();
+            let d = Domain::tiny(k);
+            let mut g = d.alloc();
+            g.data.iter_mut().for_each(|v| *v = 2.5);
+            let out = run(&desc, &g, 3);
+            assert!(out.max_abs_diff(&g) < 1e-12, "{k}");
+        }
+    }
+
+    #[test]
+    fn smoothing_contracts_range() {
+        // Averaging stencils shrink the value range on the interior.
+        for k in StencilKind::ALL {
+            let d = Domain::tiny(k);
+            let g = d.alloc_random(99);
+            let out = run(&k.descriptor(), &g, 2);
+            let max_in = g.data.iter().cloned().fold(f64::MIN, f64::max);
+            let max_out = out.data.iter().cloned().fold(f64::MIN, f64::max);
+            assert!(max_out <= max_in + 1e-12, "{k}");
+        }
+    }
+
+    #[test]
+    fn symmetry_preserved() {
+        // All kernels are symmetric in x: mirroring the input mirrors the
+        // output.
+        for k in StencilKind::ALL {
+            let d = Domain::tiny(k);
+            let g = d.alloc_random(7);
+            let mut gm = g.clone();
+            for z in 0..d.nz {
+                for y in 0..d.ny {
+                    for x in 0..d.nx {
+                        gm.set(x, y, z, g.get(d.nx - 1 - x, y, z));
+                    }
+                }
+            }
+            let out = run(&k.descriptor(), &g, 1);
+            let outm = run(&k.descriptor(), &gm, 1);
+            for z in 0..d.nz {
+                for y in 0..d.ny {
+                    for x in 0..d.nx {
+                        let a = out.get(d.nx - 1 - x, y, z);
+                        let b = outm.get(x, y, z);
+                        assert!((a - b).abs() < 1e-12, "{k} at ({x},{y},{z})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_zero_steps_is_identity() {
+        let d = Domain::tiny(StencilKind::Heat3D);
+        let g = d.alloc_random(1);
+        let out = run(&StencilKind::Heat3D.descriptor(), &g, 0);
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    #[should_panic(expected = "domain smaller than halo")]
+    fn rejects_too_small_domain() {
+        let desc = StencilKind::Points7_1D.descriptor();
+        let src = Grid::zeros(6, 1, 1);
+        let mut dst = Grid::zeros(6, 1, 1);
+        step(&desc, &src, &mut dst);
+    }
+}

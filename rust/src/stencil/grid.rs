@@ -1,0 +1,144 @@
+//! Row-major double-precision grids (x fastest, then y, then z).
+
+use crate::util::SplitMix64;
+
+/// A dense 3D grid of `f64` (1D/2D grids set the unused extents to 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grid {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub data: Vec<f64>,
+}
+
+impl Grid {
+    /// Zero-filled grid.
+    pub fn zeros(nx: usize, ny: usize, nz: usize) -> Grid {
+        assert!(nx > 0 && ny > 0 && nz > 0, "grid extents must be positive");
+        Grid {
+            nx,
+            ny,
+            nz,
+            data: vec![0.0; nx * ny * nz],
+        }
+    }
+
+    /// Grid initialized with deterministic pseudo-random values in
+    /// `[0, 1)` — the workload generator used throughout the experiments.
+    pub fn random(nx: usize, ny: usize, nz: usize, seed: u64) -> Grid {
+        let mut g = Grid::zeros(nx, ny, nz);
+        let mut rng = SplitMix64::new(seed);
+        rng.fill_f64(&mut g.data, 0.0, 1.0);
+        g
+    }
+
+    /// Smooth deterministic initialization (PolyBench-style ramp), useful
+    /// for numerics checks where random data would hide sign errors.
+    pub fn ramp(nx: usize, ny: usize, nz: usize) -> Grid {
+        let mut g = Grid::zeros(nx, ny, nz);
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let i = g.index(x, y, z);
+                    g.data[i] =
+                        (x as f64 + 1.0) * 0.5 + (y as f64) * 0.25 + (z as f64) * 0.125;
+                }
+            }
+        }
+        g
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size of one array in bytes.
+    pub fn bytes(&self) -> usize {
+        self.len() * 8
+    }
+
+    #[inline]
+    pub fn index(&self, x: usize, y: usize, z: usize) -> usize {
+        debug_assert!(x < self.nx && y < self.ny && z < self.nz);
+        (z * self.ny + y) * self.nx + x
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize, z: usize) -> f64 {
+        self.data[self.index(x, y, z)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, z: usize, v: f64) {
+        let i = self.index(x, y, z);
+        self.data[i] = v;
+    }
+
+    /// Element offset (may be negative conceptually; caller guarantees the
+    /// tap stays in bounds) for a stencil tap relative to linear index `i`.
+    #[inline]
+    pub fn tap_offset(&self, dx: i64, dy: i64, dz: i64) -> i64 {
+        dx + dy * self.nx as i64 + dz * (self.nx * self.ny) as i64
+    }
+
+    /// Maximum absolute difference against another grid of the same shape.
+    pub fn max_abs_diff(&self, other: &Grid) -> f64 {
+        assert_eq!(self.data.len(), other.data.len(), "shape mismatch");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let g = Grid::zeros(4, 3, 2);
+        assert_eq!(g.index(0, 0, 0), 0);
+        assert_eq!(g.index(1, 0, 0), 1);
+        assert_eq!(g.index(0, 1, 0), 4);
+        assert_eq!(g.index(0, 0, 1), 12);
+        assert_eq!(g.len(), 24);
+    }
+
+    #[test]
+    fn tap_offset_matches_indexing() {
+        let g = Grid::zeros(7, 5, 3);
+        let i = g.index(3, 2, 1) as i64;
+        assert_eq!(i + g.tap_offset(1, 0, 0), g.index(4, 2, 1) as i64);
+        assert_eq!(i + g.tap_offset(-1, 1, 0), g.index(2, 3, 1) as i64);
+        assert_eq!(i + g.tap_offset(0, 0, -1), g.index(3, 2, 0) as i64);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Grid::random(8, 8, 1, 3);
+        let b = Grid::random(8, 8, 1, 3);
+        assert_eq!(a, b);
+        let c = Grid::random(8, 8, 1, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_self() {
+        let g = Grid::random(16, 4, 1, 1);
+        assert_eq!(g.max_abs_diff(&g), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_extent_panics() {
+        let _ = Grid::zeros(0, 1, 1);
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal property-based testing driver.
+//!
+//! The offline registry has no `proptest`/`quickcheck`, so this module
+//! provides the subset we need: run a property over many random inputs
+//! drawn from a deterministic generator, and on failure report the seed and
+//! a greedily-shrunk counterexample. Used by the ISA, mapping, cache, and
+//! coordinator invariant tests.
+
+use crate::util::SplitMix64;
+
+/// Number of cases per property (kept modest so `cargo test` stays fast).
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` over `cases` inputs produced by `gen`. Panics with the seed
+/// and the failing input's `Debug` rendering on the first failure.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> bool,
+{
+    // Fixed master seed: failures are reproducible across runs. Each case
+    // gets its own sub-seed so a failing case can be re-run in isolation.
+    let mut master = SplitMix64::new(0xCA5_9E12);
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut rng = SplitMix64::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` with a reason, which is
+/// included in the panic message.
+pub fn check_result<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut master = SplitMix64::new(0xCA5_9E12);
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut rng = SplitMix64::new(seed);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  input = {input:?}\n  reason: {reason}"
+            );
+        }
+    }
+}
+
+/// Greedy shrinking for `Vec`-shaped inputs: repeatedly try removing halves
+/// then single elements while the property still fails, returning a minimal
+/// failing vector. Use from a test when a smaller reproducer is wanted.
+pub fn shrink_vec<T: Clone, P>(mut input: Vec<T>, mut fails: P) -> Vec<T>
+where
+    P: FnMut(&[T]) -> bool,
+{
+    debug_assert!(fails(&input));
+    loop {
+        let mut shrunk = false;
+        // Try removing chunks, largest first.
+        let mut chunk = input.len() / 2;
+        while chunk >= 1 {
+            let mut start = 0;
+            while start + chunk <= input.len() {
+                let mut candidate = input.clone();
+                candidate.drain(start..start + chunk);
+                if !candidate.is_empty() && fails(&candidate) {
+                    input = candidate;
+                    shrunk = true;
+                    // restart at this chunk size
+                } else {
+                    start += chunk;
+                }
+            }
+            chunk /= 2;
+        }
+        if !shrunk {
+            return input;
+        }
+    }
+}
+
+/// Assert two f64 slices match within `atol + rtol*|b|`, reporting the worst
+/// mismatching index. The same tolerance contract as numpy's `allclose`.
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    let mut worst = (0usize, 0.0f64);
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let err = (x - y).abs();
+        let tol = atol + rtol * y.abs();
+        if err > tol && err > worst.1 {
+            worst = (i, err);
+        }
+    }
+    if worst.1 > 0.0 {
+        let i = worst.0;
+        panic!(
+            "allclose failed: idx {} a={} b={} |err|={} (rtol={rtol}, atol={atol})",
+            i, a[i], b[i], worst.1
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_for_tautology() {
+        check("tautology", 64, |r| r.next_u64(), |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn check_reports_failure() {
+        check("falsum", 64, |r| r.next_u64(), |&x| x % 2 == 0 && x % 2 == 1);
+    }
+
+    #[test]
+    fn shrink_finds_small_case() {
+        // Property fails iff the vec contains a 7.
+        let input = vec![1, 2, 7, 3, 4, 7, 5];
+        let min = shrink_vec(input, |v| v.contains(&7));
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_differing() {
+        assert_allclose(&[1.0], &[1.1], 1e-9, 1e-9);
+    }
+}

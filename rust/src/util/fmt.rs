@@ -1,0 +1,69 @@
+//! Human-friendly formatting helpers for reports and CLI output.
+
+/// Format a byte count with binary suffixes (`4.0 MiB`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format a large count with thousands separators (`1_048_576`).
+pub fn human_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Format a cycle count as cycles plus wall-time at a given clock (GHz).
+pub fn human_time_cycles(cycles: u64, ghz: f64) -> String {
+    let secs = cycles as f64 / (ghz * 1e9);
+    if secs < 1e-6 {
+        format!("{} cyc ({:.1} ns)", human_count(cycles), secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{} cyc ({:.1} µs)", human_count(cycles), secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{} cyc ({:.2} ms)", human_count(cycles), secs * 1e3)
+    } else {
+        format!("{} cyc ({:.2} s)", human_count(cycles), secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(2 * 1024 * 1024), "2.0 MiB");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(1000), "1,000");
+        assert_eq!(human_count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn cycles() {
+        assert!(human_time_cycles(2_000_000_000, 2.0).contains("1.00 s"));
+        assert!(human_time_cycles(2000, 2.0).contains("µs") || human_time_cycles(2000, 2.0).contains("ns"));
+    }
+}

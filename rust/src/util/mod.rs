@@ -1,0 +1,13 @@
+//! Small shared utilities: deterministic RNG, statistics, and formatting.
+//!
+//! The offline build environment provides no `rand` crate; simulations and
+//! property tests need *deterministic, seedable* randomness anyway, so we
+//! ship a SplitMix64 generator (public-domain algorithm, Steele et al.).
+
+pub mod fmt;
+pub mod rng;
+pub mod stats;
+
+pub use fmt::{human_bytes, human_count, human_time_cycles};
+pub use rng::SplitMix64;
+pub use stats::{geomean, mean, median, median_abs_dev, Summary};

@@ -1,0 +1,159 @@
+//! Ablation studies as executable assertions: the §4.1 unaligned-load
+//! hardware, the §4.2 mapping, §4.4 way reservation, and config-file
+//! plumbing.
+
+use casper::config::{MappingPolicy, SimConfig, SizeClass};
+use casper::coordinator::{run_casper_with, CasperOptions};
+use casper::stencil::{Domain, StencilKind};
+
+#[test]
+fn unaligned_hardware_earns_its_area() {
+    // §4.1: without the dual-tag/row-shift support, every unaligned
+    // vector load costs two LLC accesses; with it, one. For the 7-point
+    // 1D kernel (6 of 7 taps unaligned) this must show up as (a) fewer
+    // LLC accesses and (b) a real speedup.
+    let cfg = SimConfig::default();
+    let kind = StencilKind::Points7_1D;
+    let d = Domain::for_level(kind, SizeClass::Llc);
+    let with_hw = run_casper_with(&cfg, kind, &d, 1, CasperOptions::default()).unwrap();
+    let without = run_casper_with(
+        &cfg,
+        kind,
+        &d,
+        1,
+        CasperOptions { unaligned_hw: false, ..Default::default() },
+    )
+    .unwrap();
+    assert!(with_hw.spu.merged_unaligned > 0);
+    assert_eq!(without.spu.merged_unaligned, 0);
+    assert!(
+        without.llc.accesses() > with_hw.llc.accesses(),
+        "splitting must cost extra LLC accesses: {} vs {}",
+        without.llc.accesses(),
+        with_hw.llc.accesses()
+    );
+    assert!(
+        without.cycles as f64 > with_hw.cycles as f64 * 1.2,
+        "expected >20% cost without the hardware: {} vs {}",
+        without.cycles,
+        with_hw.cycles
+    );
+    // Fig 4's accounting: 3 aligned-equivalent loads/group with hw, 5+
+    // without (6 load/store per 3 MAC).
+}
+
+#[test]
+fn stencil_mapping_beats_baseline_hash_on_1d() {
+    // §4.2 / Fig 14: for 1D kernels the stencil-segment hash keeps all
+    // loads local; the baseline hash scatters them across slices.
+    let kind = StencilKind::Jacobi1D;
+    let d = Domain::for_level(kind, SizeClass::Llc);
+    let mut seg_cfg = SimConfig::default();
+    seg_cfg.mapping = MappingPolicy::StencilSegment;
+    let mut base_cfg = SimConfig::default();
+    base_cfg.mapping = MappingPolicy::Baseline;
+    let seg = run_casper_with(&seg_cfg, kind, &d, 1, CasperOptions::default()).unwrap();
+    let base = run_casper_with(&base_cfg, kind, &d, 1, CasperOptions::default()).unwrap();
+    assert!(seg.local_fraction() > 0.95);
+    assert!(base.local_fraction() < 0.2);
+    assert!(
+        base.cycles > seg.cycles,
+        "baseline hash should cost cycles: {} vs {}",
+        base.cycles,
+        seg.cycles
+    );
+    assert!(base.noc_messages > seg.noc_messages * 5);
+}
+
+#[test]
+fn way_reservation_costs_little_for_llc_sets() {
+    // §4.4: reserving one way for concurrent CPU work leaves 15/16 of
+    // the LLC — cache-resident stencils should barely notice vs a
+    // hypothetical 0-reservation config.
+    let kind = StencilKind::Jacobi2D;
+    let d = Domain::for_level(kind, SizeClass::Llc);
+    let mut no_reserve = SimConfig::default();
+    no_reserve.llc.reserved_ways = 0;
+    let reserved = run_casper_with(&SimConfig::default(), kind, &d, 1, CasperOptions::default())
+        .unwrap();
+    let full = run_casper_with(&no_reserve, kind, &d, 1, CasperOptions::default()).unwrap();
+    let ratio = reserved.cycles as f64 / full.cycles as f64;
+    assert!((0.95..1.1).contains(&ratio), "reservation overhead too big: {ratio}");
+}
+
+#[test]
+fn cold_llc_costs_more_than_warm() {
+    // The warm-up option models the paper's LLC-resident working sets;
+    // a cold run must stream from DRAM and cost strictly more.
+    let kind = StencilKind::Jacobi2D;
+    let d = Domain::for_level(kind, SizeClass::Llc);
+    let cfg = SimConfig::default();
+    let warm = run_casper_with(&cfg, kind, &d, 1, CasperOptions::default()).unwrap();
+    let cold = run_casper_with(
+        &cfg,
+        kind,
+        &d,
+        1,
+        CasperOptions { warm_llc: false, ..Default::default() },
+    )
+    .unwrap();
+    assert!(cold.cycles > warm.cycles * 2, "{} vs {}", cold.cycles, warm.cycles);
+    assert!(cold.dram_accesses > warm.dram_accesses);
+    // Identical numerics either way.
+    assert_eq!(cold.output, warm.output);
+}
+
+#[test]
+fn config_file_roundtrip_drives_the_engine() {
+    // End-to-end config plumbing: a TOML file that shrinks the machine
+    // must parse, validate, and actually change simulation results.
+    let dir = std::env::temp_dir().join("casper_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("small.toml");
+    std::fs::write(
+        &path,
+        r#"
+# a 4-slice machine
+[cpu]
+cores = 4
+
+[llc]
+slices = 4
+
+[spu]
+count = 4
+
+[noc]
+mesh_x = 2
+mesh_y = 2
+
+[prefetch]
+degree = 2
+"#,
+    )
+    .unwrap();
+    let cfg = SimConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.llc.slices, 4);
+    let kind = StencilKind::Jacobi1D;
+    // L2-sized: 8 output blocks → 8 SPUs on the default machine, 4 on
+    // the shrunken one, so cycle counts must differ.
+    let d = Domain::for_level(kind, SizeClass::L2);
+    let small = run_casper_with(&cfg, kind, &d, 1, CasperOptions::default()).unwrap();
+    let big = run_casper_with(&SimConfig::default(), kind, &d, 1, CasperOptions::default())
+        .unwrap();
+    // Same numerics, different machine.
+    assert_eq!(small.output, big.output);
+    assert_ne!(small.cycles, big.cycles);
+}
+
+#[test]
+fn steps_scale_work_linearly() {
+    let cfg = SimConfig::default();
+    let kind = StencilKind::Heat3D;
+    let d = Domain::tiny(kind);
+    let one = run_casper_with(&cfg, kind, &d, 1, CasperOptions::default()).unwrap();
+    let four = run_casper_with(&cfg, kind, &d, 4, CasperOptions::default()).unwrap();
+    assert_eq!(four.total_instrs, one.total_instrs * 4);
+    let ratio = four.cycles as f64 / one.cycles as f64;
+    assert!((3.0..5.5).contains(&ratio), "cycles ratio {ratio}");
+}

@@ -1,0 +1,83 @@
+//! Smoke tests over the experiment harness and CLI plumbing: the quick
+//! (L2-class) sweep must regenerate every table with sane shapes, and the
+//! report writers must produce parseable output.
+
+use casper::config::SimConfig;
+use casper::harness::{run_experiments, Experiment, SweepOptions};
+
+fn quick_report() -> casper::harness::Report {
+    let cfg = SimConfig::default();
+    run_experiments(&cfg, &Experiment::ALL, SweepOptions { quick: true, steps: 1 }).unwrap()
+}
+
+#[test]
+fn every_experiment_regenerates() {
+    let report = quick_report();
+    assert_eq!(report.tables.len(), Experiment::ALL.len());
+    for e in Experiment::ALL {
+        let t = report.get(e.id()).unwrap();
+        assert!(!t.rows.is_empty(), "{}", e.id());
+        assert!(!t.header.is_empty());
+    }
+}
+
+#[test]
+fn fig1_kernels_sit_between_roofs() {
+    let report = quick_report();
+    let t = report.get("fig1").unwrap();
+    // columns: kernel, AI, DRAM roof, L3 roof, measured, %peak
+    for row in &t.rows {
+        let dram: f64 = row[2].parse().unwrap();
+        let llc: f64 = row[3].parse().unwrap();
+        let measured: f64 = row[4].parse().unwrap();
+        assert!(llc > dram, "{row:?}");
+        assert!(measured < llc * 1.5, "measured above the LLC roof: {row:?}");
+        assert!(measured > 0.0, "{row:?}");
+    }
+}
+
+#[test]
+fn fig10_contains_paper_reference_column() {
+    let report = quick_report();
+    let t = report.get("fig10").unwrap();
+    assert_eq!(t.rows.len(), 6); // 6 kernels × 1 class in quick mode
+    for row in &t.rows {
+        assert!(row[5].ends_with('x'), "paper column malformed: {row:?}");
+    }
+}
+
+#[test]
+fn fig14_percentages_sum_to_100() {
+    let report = quick_report();
+    let t = report.get("fig14").unwrap();
+    for row in &t.rows {
+        let m: f64 = row[5].trim_end_matches('%').parse().unwrap();
+        let n: f64 = row[6].trim_end_matches('%').parse().unwrap();
+        assert!((m + n - 100.0).abs() < 0.6 || (m == 0.0 && n == 0.0), "{row:?}");
+    }
+}
+
+#[test]
+fn report_roundtrips_through_files() {
+    let report = quick_report();
+    let dir = std::env::temp_dir().join("casper_experiments_smoke");
+    report.write_to(&dir).unwrap();
+    let md = std::fs::read_to_string(dir.join("report.md")).unwrap();
+    for e in Experiment::ALL {
+        assert!(md.contains(&format!("### {}", e.id())), "{} missing from md", e.id());
+        let csv = std::fs::read_to_string(dir.join(format!("{}.csv", e.id()))).unwrap();
+        assert!(csv.lines().count() >= 2, "{} csv empty", e.id());
+    }
+}
+
+#[test]
+fn table5_cycles_are_positive() {
+    let report = quick_report();
+    let t = report.get("table5").unwrap();
+    for row in &t.rows {
+        let cpu: u64 = row[2].parse().unwrap();
+        let gpu: u64 = row[4].parse().unwrap();
+        let casper: u64 = row[6].parse().unwrap();
+        assert!(cpu > 0 && gpu > 0 && casper > 0, "{row:?}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Cross-layer integration tests: the three layers must agree.
+//!
+//! - L3 simulator (SPU functional execution) vs the Rust golden reference.
+//! - AOT JAX/Pallas artifacts executed through PJRT (L1+L2) vs both.
+//! - The Casper programming model driving a real multi-kernel workload.
+//!
+//! PJRT tests skip gracefully when `make artifacts` hasn't run.
+
+use casper::config::{MappingPolicy, SimConfig, SizeClass, SpuPlacement};
+use casper::coordinator::{run_casper, run_casper_with, CasperOptions};
+use casper::runtime::{artifacts_available, default_artifacts_dir, StencilRuntime};
+use casper::stencil::{golden, Domain, Grid, StencilKind};
+use casper::testutil::assert_allclose;
+use casper::util::SplitMix64;
+
+fn random_grid(nx: usize, ny: usize, nz: usize, seed: u64) -> Grid {
+    Grid::random(nx, ny, nz, seed)
+}
+
+#[test]
+fn simulator_matches_golden_every_kernel_and_class_l2() {
+    // The big functional cross-check at a realistic size (L2 class).
+    let cfg = SimConfig::default();
+    for kind in StencilKind::ALL {
+        let d = Domain::for_level(kind, SizeClass::L2);
+        let stats = run_casper(&cfg, kind, &d, 1);
+        let want = golden::run_kind(kind, &d, 1, CasperOptions::default().seed);
+        let diff = stats.output.max_abs_diff(&want);
+        assert!(diff < 1e-12, "{kind}: {diff}");
+    }
+}
+
+#[test]
+fn simulator_matches_golden_under_every_configuration() {
+    // Timing knobs must never change the numerics.
+    let kind = StencilKind::Blur2D;
+    let d = Domain::tiny(kind);
+    let want = golden::run_kind(kind, &d, 2, CasperOptions::default().seed);
+    for mapping in [MappingPolicy::Baseline, MappingPolicy::StencilSegment] {
+        for placement in [SpuPlacement::NearLlc, SpuPlacement::NearL1] {
+            for unaligned_hw in [true, false] {
+                let mut cfg = SimConfig::default();
+                cfg.mapping = mapping;
+                cfg.placement = placement;
+                let opts = CasperOptions { unaligned_hw, ..Default::default() };
+                let stats = run_casper_with(&cfg, kind, &d, 2, opts).unwrap();
+                let diff = stats.output.max_abs_diff(&want);
+                assert!(
+                    diff < 1e-12,
+                    "mapping={mapping:?} placement={placement:?} hw={unaligned_hw}: {diff}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_artifacts_match_golden() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = StencilRuntime::new(&default_artifacts_dir()).unwrap();
+    for kind in StencilKind::ALL {
+        let entry = rt
+            .smallest_for(kind, 1)
+            .unwrap_or_else(|| panic!("no tiny artifact for {kind}"))
+            .clone();
+        let input = random_grid(entry.nx, entry.ny, entry.nz, 42);
+        let out = rt.execute(&entry.name, &input).unwrap();
+        let want = golden::run(&kind.descriptor(), &input, 1);
+        assert_allclose(&out.data, &want.data, 1e-12, 1e-13);
+    }
+}
+
+#[test]
+fn pjrt_multistep_artifacts_match_golden() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = StencilRuntime::new(&default_artifacts_dir()).unwrap();
+    for kind in [StencilKind::Jacobi2D, StencilKind::Heat3D] {
+        let entry = rt.smallest_for(kind, 3).expect("s3 artifact").clone();
+        let input = random_grid(entry.nx, entry.ny, entry.nz, 77);
+        let out = rt.execute(&entry.name, &input).unwrap();
+        let want = golden::run(&kind.descriptor(), &input, 3);
+        assert_allclose(&out.data, &want.data, 1e-12, 1e-13);
+    }
+}
+
+#[test]
+fn three_layers_agree_end_to_end() {
+    // Simulator output == PJRT(JAX/Pallas) output == golden, same input.
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = SimConfig::default();
+    let mut rt = StencilRuntime::new(&default_artifacts_dir()).unwrap();
+    for kind in StencilKind::ALL {
+        let entry = rt.smallest_for(kind, 1).unwrap().clone();
+        let d = Domain::new(entry.nx, entry.ny, entry.nz);
+        let seed = 0xE2E;
+        let sim = run_casper_with(&cfg, kind, &d, 1, CasperOptions { seed, ..Default::default() })
+            .unwrap();
+        let input = d.alloc_random(seed);
+        let pjrt = rt.execute(&entry.name, &input).unwrap();
+        assert_allclose(&sim.output.data, &pjrt.data, 1e-12, 1e-13);
+    }
+}
+
+#[test]
+fn pjrt_shape_mismatch_is_an_error() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = StencilRuntime::new(&default_artifacts_dir()).unwrap();
+    let entry = rt.smallest_for(StencilKind::Jacobi1D, 1).unwrap().clone();
+    let wrong = random_grid(entry.nx + 8, 1, 1, 1);
+    assert!(rt.execute(&entry.name, &wrong).is_err());
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let cfg = SimConfig::default();
+    let kind = StencilKind::Jacobi2D;
+    let d = Domain::tiny(kind);
+    let a = run_casper(&cfg, kind, &d, 1);
+    let b = run_casper(&cfg, kind, &d, 1);
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.output, b.output);
+    assert_eq!(a.total_instrs, b.total_instrs);
+}
+
+#[test]
+fn property_random_domains_match_golden() {
+    // Property: for random (valid) small domains, the simulator equals
+    // golden for every kernel.
+    let cfg = SimConfig::default();
+    let mut rng = SplitMix64::new(0xD0);
+    for case in 0..6 {
+        for kind in StencilKind::ALL {
+            let r = kind.descriptor().radius();
+            let d = match kind.dims() {
+                1 => Domain::new(64 + rng.range(0, 192), 1, 1),
+                2 => Domain::new(
+                    2 * r[0] + 4 + rng.range(0, 24),
+                    2 * r[1] + 3 + rng.range(0, 12),
+                    1,
+                ),
+                _ => Domain::new(
+                    2 * r[0] + 3 + rng.range(0, 8),
+                    2 * r[1] + 3 + rng.range(0, 6),
+                    2 * r[2] + 3 + rng.range(0, 4),
+                ),
+            };
+            let seed = rng.next_u64();
+            let opts = CasperOptions { seed, ..Default::default() };
+            let stats = run_casper_with(&cfg, kind, &d, 1, opts).unwrap();
+            let want = golden::run_kind(kind, &d, 1, seed);
+            let diff = stats.output.max_abs_diff(&want);
+            assert!(diff < 1e-12, "case {case} {kind} {d}: {diff}");
+        }
+    }
+}
