@@ -1,15 +1,32 @@
 //! Shared mini bench harness (no criterion in the offline registry —
 //! DESIGN.md §3): warmup + N samples, median ± MAD wall-time reporting,
 //! plus the regenerated paper table for the experiment being benched.
+//!
+//! Benchmarks can also persist their wall-time records as a small JSON
+//! file (`BENCH_micro.json` for the micro suite — see `rust/PERF.md` for
+//! the schema) so the perf trajectory is tracked across PRs.
 
+#![allow(dead_code)] // each bench binary uses a subset of this module
+
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use casper::config::SimConfig;
 use casper::harness::{run_experiments, Experiment, SweepOptions};
 use casper::util::{median, median_abs_dev};
 
-/// Time `f` with one warmup and `samples` measured runs.
-pub fn measure<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> T {
+/// One measured benchmark: the record that lands in the JSON log.
+#[derive(Debug, Clone)]
+pub struct BenchStat {
+    pub name: String,
+    pub median_ms: f64,
+    pub mad_ms: f64,
+    pub samples: usize,
+}
+
+/// Time `f` with one warmup and `samples` measured runs, returning the
+/// last result together with the wall-time record.
+pub fn measure_stat<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> (T, BenchStat) {
     let mut out = f(); // warmup (also warms allocator/caches)
     let mut times = Vec::with_capacity(samples);
     for _ in 0..samples {
@@ -17,21 +34,65 @@ pub fn measure<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> T {
         out = f();
         times.push(t0.elapsed().as_secs_f64() * 1e3);
     }
+    let stat = BenchStat {
+        name: name.to_string(),
+        median_ms: median(&times),
+        mad_ms: median_abs_dev(&times),
+        samples,
+    };
     println!(
         "bench {name:<28} median {:>9.2} ms  mad {:>7.2} ms  (n={samples})",
-        median(&times),
-        median_abs_dev(&times)
+        stat.median_ms, stat.mad_ms
     );
-    out
+    (out, stat)
+}
+
+/// Time `f` with one warmup and `samples` measured runs.
+pub fn measure<T>(name: &str, samples: usize, f: impl FnMut() -> T) -> T {
+    measure_stat(name, samples, f).0
+}
+
+/// Where a bench suite's JSON record goes: `$CASPER_BENCH_JSON` if set,
+/// else `file_name` in the working directory.
+pub fn bench_json_path(file_name: &str) -> PathBuf {
+    std::env::var_os("CASPER_BENCH_JSON")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(file_name))
+}
+
+/// Write the records as JSON (hand-rolled: no serde offline). Schema:
+/// `{"suite": <str>, "unit": "ms", "records": [{"name", "median_ms",
+/// "mad_ms", "samples"}, ...]}`.
+pub fn write_bench_json(path: &Path, suite: &str, stats: &[BenchStat]) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str(&format!("{{\n  \"suite\": \"{suite}\",\n  \"unit\": \"ms\",\n  \"records\": [\n"));
+    for (i, s) in stats.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"median_ms\": {:.4}, \"mad_ms\": {:.4}, \"samples\": {}}}{}\n",
+            s.name,
+            s.median_ms,
+            s.mad_ms,
+            s.samples,
+            if i + 1 == stats.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
 }
 
 /// Standard driver for a one-experiment bench binary: run the experiment
 /// sweep (timed), then print the regenerated table. `quick` honours
-/// `CASPER_BENCH_QUICK=1` so CI can keep bench time bounded.
+/// `CASPER_BENCH_QUICK=1` so CI can keep bench time bounded, and
+/// `CASPER_BENCH_JOBS=N` opts into the parallel sweep engine (default
+/// serial, so per-cell timings stay comparable across PRs).
 pub fn bench_experiment(e: Experiment, samples: usize) {
     let cfg = SimConfig::default();
     let quick = std::env::var_os("CASPER_BENCH_QUICK").is_some();
-    let opts = SweepOptions { quick, steps: 1 };
+    let jobs = std::env::var("CASPER_BENCH_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let opts = SweepOptions { quick, steps: 1, jobs };
     let report = measure(e.id(), samples, || {
         run_experiments(&cfg, &[e], opts).expect("experiment failed")
     });

@@ -1,12 +1,17 @@
 //! Microbenchmarks of the simulator's hot paths (the §Perf targets):
 //! cache tag access, slice-mapper hashing, SPU group execution, golden
 //! stencil step, and CPU trace iteration. These are what the performance
-//! pass profiles and optimizes — see EXPERIMENTS.md §Perf.
+//! pass profiles and optimizes — see EXPERIMENTS.md §Perf and
+//! `rust/PERF.md` for the optimization inventory.
+//!
+//! Wall-time records are persisted to `BENCH_micro.json` (override the
+//! path with `CASPER_BENCH_JSON`) so the perf trajectory is tracked
+//! across PRs.
 
 #[path = "bench_common.rs"]
 mod bench_common;
 
-use bench_common::measure;
+use bench_common::{bench_json_path, measure_stat, write_bench_json, BenchStat};
 use casper::config::{MappingPolicy, SimConfig, SizeClass};
 use casper::coordinator::run_casper;
 use casper::cpu::run_cpu;
@@ -18,9 +23,15 @@ use casper::stencil::{golden, Domain, StencilKind};
 
 fn main() {
     let cfg = SimConfig::default();
+    let mut records: Vec<BenchStat> = Vec::new();
+    // CASPER_BENCH_QUICK=1 bounds CI time: fewer samples per case (the
+    // workloads themselves stay identical so records remain comparable).
+    let quick = std::env::var_os("CASPER_BENCH_QUICK").is_some();
+    let n5 = if quick { 2 } else { 5 };
+    let n3 = if quick { 1 } else { 3 };
 
     // --- cache tag path: 1M accesses over a 2 MB slice. ---
-    let hits = measure("cache_access_1M", 5, || {
+    let (hits, st) = measure_stat("cache_access_1M", n5, || {
         let mut c = Cache::new(2 * 1024 * 1024, 16, 64);
         let mut h = 0u64;
         for i in 0..1_000_000u64 {
@@ -30,25 +41,27 @@ fn main() {
         }
         h
     });
+    records.push(st);
     assert!(hits > 0);
 
     // --- slice mapper: 4M hashes. ---
     let mut mapper = SliceMapper::new(&cfg.llc, MappingPolicy::StencilSegment);
     mapper.set_segment(StencilSegment::new(0x1000_0000, 64 << 20));
-    let acc = measure("slice_hash_4M", 5, || {
+    let (acc, st) = measure_stat("slice_hash_4M", n5, || {
         let mut acc = 0usize;
         for i in 0..4_000_000u64 {
             acc += mapper.slice_of(std::hint::black_box(0x1000_0000 + i * 64));
         }
         std::hint::black_box(acc)
     });
+    records.push(st);
     assert!(acc > 0);
 
     // --- SPU inner loop: 64k points of Jacobi-1D on one SPU. ---
     let program = ProgramBuilder::new()
         .build(&StencilKind::Jacobi1D.descriptor())
         .unwrap();
-    measure("spu_64k_points", 5, || {
+    let (_, st) = measure_stat("spu_64k_points", n5, || {
         let mut mem = SharedMem::new(&cfg, MappingPolicy::StencilSegment);
         let seg = mem.store.alloc_segment(2 << 20);
         mem.mapper.set_segment(StencilSegment::new(seg, 2 << 20));
@@ -58,20 +71,28 @@ fn main() {
         while spu.run_group(&mut mem) {}
         spu.finish_time()
     });
+    records.push(st);
 
     // --- golden stencil step: Blur2D over 1024². ---
     let d = Domain::for_level(StencilKind::Blur2D, SizeClass::Llc);
     let g = d.alloc_random(1);
-    measure("golden_blur2d_llc", 3, || {
+    let (_, st) = measure_stat("golden_blur2d_llc", n3, || {
         golden::run(&StencilKind::Blur2D.descriptor(), &g, 1)
     });
+    records.push(st);
 
     // --- full engines, L2-class Jacobi2D (end-to-end micro). ---
     let d2 = Domain::for_level(StencilKind::Jacobi2D, SizeClass::L2);
-    measure("engine_casper_jacobi2d_l2", 3, || {
+    let (_, st) = measure_stat("engine_casper_jacobi2d_l2", n3, || {
         run_casper(&cfg, StencilKind::Jacobi2D, &d2, 1).cycles
     });
-    measure("engine_cpu_jacobi2d_l2", 3, || {
+    records.push(st);
+    let (_, st) = measure_stat("engine_cpu_jacobi2d_l2", n3, || {
         run_cpu(&cfg, StencilKind::Jacobi2D, &d2, 1).cycles
     });
+    records.push(st);
+
+    let path = bench_json_path("BENCH_micro.json");
+    write_bench_json(&path, "micro_hotpath", &records).expect("writing bench json");
+    println!("wrote {} records to {}", records.len(), path.display());
 }

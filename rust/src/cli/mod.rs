@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! casper experiments [--only fig10,table5] [--quick] [--steps N]
-//!                    [--out-dir DIR] [--config FILE]
+//!                    [--jobs N] [--out-dir DIR] [--config FILE]
 //! casper run --kernel jacobi2d --level llc [--steps N] [--config FILE]
 //! casper validate [--artifacts DIR]
 //! casper roofline
@@ -25,6 +25,8 @@ pub enum Command {
         only: Vec<Experiment>,
         quick: bool,
         steps: usize,
+        /// Sweep worker threads (default: one per hardware thread).
+        jobs: usize,
         out_dir: Option<PathBuf>,
         config: Option<PathBuf>,
     },
@@ -46,9 +48,11 @@ pub const USAGE: &str = "\
 casper — near-cache stencil acceleration (full-system reproduction)
 
 USAGE:
-  casper experiments [--only IDs] [--quick] [--steps N] [--out-dir DIR] [--config FILE]
+  casper experiments [--only IDs] [--quick] [--steps N] [--jobs N] [--out-dir DIR] [--config FILE]
       Regenerate the paper's tables/figures. IDs: fig1 fig10 fig11 fig12
       fig13 fig14 table4 table5 table6 (comma-separated; default all).
+      --jobs N runs the sweep on N worker threads (default: all hardware
+      threads; 1 = serial). Reports are identical at any job count.
   casper run --kernel NAME --level {l2|llc|dram} [--steps N] [--config FILE]
       Run one stencil on Casper + all baselines and print the comparison.
   casper validate [--artifacts DIR]
@@ -130,7 +134,7 @@ pub fn parse(argv: &[String]) -> Result<Command> {
     }
     match cmd {
         "experiments" => {
-            rest.reject_unknown(&["only", "quick", "steps", "out-dir", "config"])?;
+            rest.reject_unknown(&["only", "quick", "steps", "jobs", "out-dir", "config"])?;
             let only = match rest.get("only") {
                 None => Experiment::ALL.to_vec(),
                 Some(s) => s
@@ -145,6 +149,7 @@ pub fn parse(argv: &[String]) -> Result<Command> {
                 only,
                 quick: rest.has("quick"),
                 steps: parse_steps(&rest)?,
+                jobs: parse_jobs(&rest)?,
                 out_dir: rest.get("out-dir").map(PathBuf::from),
                 config: rest.get("config").map(PathBuf::from),
             })
@@ -189,6 +194,17 @@ fn parse_steps(args: &Args) -> Result<usize> {
     }
 }
 
+fn parse_jobs(args: &Args) -> Result<usize> {
+    match args.get("jobs") {
+        None => Ok(crate::harness::sweep::auto_jobs()),
+        Some(s) => {
+            let n: usize = s.parse().with_context(|| format!("bad --jobs '{s}'"))?;
+            anyhow::ensure!(n >= 1, "--jobs must be >= 1");
+            Ok(n)
+        }
+    }
+}
+
 /// Load the config, with file override.
 pub fn load_config(path: Option<&PathBuf>) -> Result<SimConfig> {
     match path {
@@ -209,14 +225,25 @@ mod tests {
     fn parses_experiments() {
         let c = parse(&argv("experiments --only fig10,table5 --quick --out-dir out")).unwrap();
         match c {
-            Command::Experiments { only, quick, steps, out_dir, .. } => {
+            Command::Experiments { only, quick, steps, jobs, out_dir, .. } => {
                 assert_eq!(only, vec![Experiment::Fig10, Experiment::Table5]);
                 assert!(quick);
                 assert_eq!(steps, 1);
+                assert!(jobs >= 1, "default --jobs is auto (>= 1)");
                 assert_eq!(out_dir.unwrap().to_str().unwrap(), "out");
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_jobs_flag() {
+        match parse(&argv("experiments --jobs 4")).unwrap() {
+            Command::Experiments { jobs, .. } => assert_eq!(jobs, 4),
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("experiments --jobs 0")).is_err());
+        assert!(parse(&argv("experiments --jobs two")).is_err());
     }
 
     #[test]

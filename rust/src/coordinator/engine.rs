@@ -144,21 +144,28 @@ pub fn run_casper_with(
     let runs = interior_runs(&desc, domain);
 
     let mut cycles_done = 0u64;
-    for _step in 0..steps {
-        let chunks = partition(&runs, &layout, &rt.mem.mapper, cfg.spu.count);
+    // The work partition depends only on the A/B layout parity (the block
+    // decomposition of B repeats every two steps as the arrays ping-pong),
+    // so compute it at most twice and reuse across all time steps —
+    // recomputing it walked every output block per step (§Perf).
+    let mut parts_cache: [Option<Vec<Vec<Chunk>>>; 2] = [None, None];
+    for step in 0..steps {
+        let parts: &Vec<Vec<Chunk>> = parts_cache[step & 1]
+            .get_or_insert_with(|| partition(&runs, &layout, &rt.mem.mapper, cfg.spu.count));
 
-        // Per-SPU chunk queues, driven in lockstep rounds. Chunk
-        // transitions rebind the streams (`initStream`) and element count
-        // (`setNElements`) exactly as Fig 8 does per SPU.
-        let mut queues: Vec<std::collections::VecDeque<Chunk>> =
-            chunks.into_iter().map(|v| v.into()).collect();
+        // Per-SPU chunk cursors into the cached partition, driven in
+        // lockstep rounds. Chunk transitions rebind the streams
+        // (`initStream`) and element count (`setNElements`) exactly as
+        // Fig 8 does per SPU. Cursors (not queues) so the cached
+        // partition is never cloned or consumed.
+        let mut cursors = vec![0usize; parts.len()];
         loop {
             let mut progress = false;
             for spu_id in 0..rt.spus.len() {
-                if rt.spus[spu_id].is_done() {
-                    if let Some(chunk) = queues[spu_id].pop_front() {
-                        bind_chunk(&mut rt, spu_id, &layout, chunk, nx, nxy)?;
-                    }
+                if rt.spus[spu_id].is_done() && cursors[spu_id] < parts[spu_id].len() {
+                    let chunk = parts[spu_id][cursors[spu_id]];
+                    cursors[spu_id] += 1;
+                    bind_chunk(&mut rt, spu_id, &layout, chunk, nx, nxy)?;
                 }
                 progress |= {
                     let spu = &mut rt.spus[spu_id];
@@ -214,7 +221,9 @@ pub fn run_casper_with(
     })
 }
 
-/// Bind one chunk's streams on one SPU.
+/// Bind one chunk's streams on one SPU. Works directly on the SPU so the
+/// stream-spec table is read in place — the old path cloned the whole
+/// `Vec<StreamSpec>` per chunk transition (§Perf).
 fn bind_chunk(
     rt: &mut CasperRuntime,
     spu_id: usize,
@@ -223,24 +232,28 @@ fn bind_chunk(
     nx: i64,
     nxy: i64,
 ) -> Result<()> {
-    let specs: Vec<crate::isa::StreamSpec> =
-        rt.spus[spu_id].program().streams.clone();
-    for (sid, spec) in specs.iter().enumerate() {
+    anyhow::ensure!(spu_id < rt.spus.len(), "SPU {spu_id} out of range");
+    let spu = &mut rt.spus[spu_id];
+    let n_streams = spu.program().streams.len();
+    for sid in 0..n_streams {
+        let spec = spu.program().streams[sid];
         let addr = if spec.is_output {
             layout.b_addr(chunk.start)
         } else {
             let off = spec.dy * nx + spec.dz * nxy;
             layout.a_addr(chunk.start.wrapping_add_signed(off))
         };
-        rt.init_stream(addr, sid, spu_id)?;
+        spu.set_stream(sid, addr)?;
     }
-    rt.set_n_elements(chunk.n, spu_id)?;
+    spu.set_n_elements(chunk.n);
     Ok(())
 }
 
 /// Copy every non-interior element of the output array from the input
 /// array (the shared boundary convention), fixing both untouched halo
-/// elements and streamed-over x-edges.
+/// elements and streamed-over x-edges. Runs as bulk row copies through a
+/// reused scratch buffer — the old per-element `read_f64`/`write_f64`
+/// closure was a measurable slice of short multi-step runs (§Perf).
 fn patch_boundary(
     rt: &mut CasperRuntime,
     desc: &StencilDesc,
@@ -249,25 +262,24 @@ fn patch_boundary(
 ) {
     let [rx, ry, rz] = desc.radius();
     let (nx, ny, nz) = (domain.nx, domain.ny, domain.nz);
-    let mut patch = |i: u64| {
-        let v = rt.mem.store.read_f64(layout.a_addr(i));
-        rt.mem.store.write_f64(layout.b_addr(i), v);
+    let mut buf: Vec<f64> = Vec::with_capacity(nx);
+    let mut copy_run = |store: &mut crate::spu::shared::SimStore, start: u64, n: usize| {
+        if n == 0 {
+            return;
+        }
+        buf.clear();
+        buf.extend_from_slice(store.read_slice(layout.a_addr(start), n));
+        store.write_slice(layout.b_addr(start), &buf);
     };
     for z in 0..nz {
         for y in 0..ny {
             let interior_row = z >= rz && z < nz - rz && y >= ry && y < ny - ry;
             let row = ((z * ny + y) * nx) as u64;
             if !interior_row {
-                for x in 0..nx as u64 {
-                    patch(row + x);
-                }
+                copy_run(&mut rt.mem.store, row, nx);
             } else {
-                for x in 0..rx as u64 {
-                    patch(row + x);
-                }
-                for x in (nx - rx) as u64..nx as u64 {
-                    patch(row + x);
-                }
+                copy_run(&mut rt.mem.store, row, rx);
+                copy_run(&mut rt.mem.store, row + (nx - rx) as u64, rx);
             }
         }
     }
@@ -320,6 +332,32 @@ mod tests {
         for (&e, &spu) in covered.iter().step_by(1009) {
             assert_eq!(mapper.slice_of(layout.b_addr(e)), spu);
         }
+    }
+
+    #[test]
+    fn cached_partition_matches_fresh_recomputation_both_parities() {
+        // The engine computes `partition()` once per layout parity and
+        // reuses it across time steps; that is only sound if (a) the
+        // function is deterministic and (b) the partition really is a
+        // function of parity alone. Check both against fresh recomputes,
+        // for both parities, on a multi-block domain.
+        let cfg = SimConfig::default();
+        let kind = StencilKind::Jacobi2D;
+        let d = Domain::for_level(kind, SizeClass::L2);
+        let layout_even = SegmentLayout::for_domain(&d, &cfg.llc).bind(0x1000_0000);
+        let layout_odd = layout_even.swapped();
+        let mut mapper = SliceMapper::new(&cfg.llc, MappingPolicy::StencilSegment);
+        mapper.set_segment(StencilSegment::new(layout_even.seg_base, layout_even.seg_bytes));
+        let runs = interior_runs(&kind.descriptor(), &d);
+
+        for layout in [layout_even, layout_odd] {
+            let cached = partition(&runs, &layout, &mapper, cfg.spu.count);
+            let fresh = partition(&runs, &layout, &mapper, cfg.spu.count);
+            assert_eq!(cached, fresh, "partition must be deterministic");
+        }
+        // Parity two steps apart is the same layout again: the cache keyed
+        // on `step & 1` therefore covers every step of a long run.
+        assert_eq!(layout_even.swapped().swapped(), layout_even);
     }
 
     #[test]

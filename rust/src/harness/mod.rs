@@ -6,8 +6,9 @@
 
 pub mod paperdata;
 pub mod report;
+pub mod sweep;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use anyhow::{bail, Result};
 
@@ -23,6 +24,7 @@ use crate::stencil::{Domain, StencilKind};
 use crate::util::geomean;
 
 pub use report::{Report, Table};
+pub use sweep::{auto_jobs, parallel_map};
 
 /// The experiments — one per paper table/figure.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -89,11 +91,16 @@ impl Experiment {
 pub struct SweepOptions {
     pub quick: bool,
     pub steps: usize,
+    /// Worker threads for the cell sweep. `1` = serial (the builders fill
+    /// the cache lazily, exactly as before); `> 1` prefills every needed
+    /// cell through [`sweep::parallel_map`] first. Reports are identical
+    /// either way — cells are deterministic and consumed in fixed order.
+    pub jobs: usize,
 }
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        SweepOptions { quick: false, steps: 1 }
+        SweepOptions { quick: false, steps: 1, jobs: 1 }
     }
 }
 
@@ -114,6 +121,10 @@ pub struct SweepCache {
     casper: HashMap<(StencilKind, SizeClass), RunStats>,
     cpu: HashMap<(StencilKind, SizeClass), CpuRunStats>,
     ablation: HashMap<(StencilKind, SizeClass), AblationPoint>,
+    /// Cells simulated on the serial (lazy) path. After a `prefill` this
+    /// should stay 0 — a nonzero count means [`needed_cells`] drifted
+    /// from what the builders actually read (tested below).
+    lazy_fills: u64,
 }
 
 /// Fig 14 data point: cycles under the three configurations.
@@ -127,6 +138,22 @@ pub struct AblationPoint {
     pub full: u64,
 }
 
+/// One independent simulation cell of the sweep grid.
+#[derive(Debug, Clone, Copy)]
+enum Cell {
+    Casper(StencilKind, SizeClass),
+    Cpu(StencilKind, SizeClass),
+    /// Fig 14 near-L1 pair: (baseline mapping, +stencil mapping) cycles.
+    Ablation(StencilKind, SizeClass),
+}
+
+/// Result of one sweep cell (paired with its [`Cell`] by index).
+enum CellOut {
+    Casper(RunStats),
+    Cpu(CpuRunStats),
+    Ablation(u64, u64),
+}
+
 impl SweepCache {
     pub fn new(cfg: &SimConfig, opts: SweepOptions) -> SweepCache {
         SweepCache {
@@ -135,31 +162,107 @@ impl SweepCache {
             casper: HashMap::new(),
             cpu: HashMap::new(),
             ablation: HashMap::new(),
+            lazy_fills: 0,
+        }
+    }
+
+    /// Compute every cell the selected experiments will ask for, fanned
+    /// out over `opts.jobs` workers ([`sweep::parallel_map`]). After this,
+    /// the lazy accessors below are pure cache hits, so the fig/table
+    /// builders run unchanged — and in the same deterministic order.
+    pub fn prefill(&mut self, which: &[Experiment]) {
+        if self.opts.jobs <= 1 {
+            return; // serial path: lazy fill, identical to the old flow
+        }
+        let (want_casper, want_cpu, want_ablation) = needed_cells(which, self.opts);
+        // Enumerate cells in the fixed paper order (kind-major, then
+        // class) so the work list — and thus any tie-breaking — is stable.
+        let mut cells: Vec<Cell> = Vec::new();
+        for &kind in &StencilKind::ALL {
+            for &level in &SizeClass::ALL {
+                if want_casper.contains(&(kind, level)) && !self.casper.contains_key(&(kind, level)) {
+                    cells.push(Cell::Casper(kind, level));
+                }
+                if want_cpu.contains(&(kind, level)) && !self.cpu.contains_key(&(kind, level)) {
+                    cells.push(Cell::Cpu(kind, level));
+                }
+                if want_ablation.contains(&(kind, level)) && !self.ablation.contains_key(&(kind, level)) {
+                    cells.push(Cell::Ablation(kind, level));
+                }
+            }
+        }
+        let cfg = self.cfg.clone();
+        let steps = self.opts.steps;
+        let outs = sweep::parallel_map(cells.clone(), self.opts.jobs, |cell| match cell {
+            Cell::Casper(kind, level) => {
+                let d = Domain::for_level(kind, level);
+                CellOut::Casper(run_casper(&cfg, kind, &d, steps))
+            }
+            Cell::Cpu(kind, level) => {
+                let d = Domain::for_level(kind, level);
+                CellOut::Cpu(run_cpu(&cfg, kind, &d, steps))
+            }
+            Cell::Ablation(kind, level) => {
+                let d = Domain::for_level(kind, level);
+                let mut near_l1 = cfg.clone();
+                near_l1.placement = SpuPlacement::NearL1;
+                near_l1.mapping = MappingPolicy::Baseline;
+                let a = run_casper(&near_l1, kind, &d, steps).cycles;
+                let mut near_l1_mapped = near_l1.clone();
+                near_l1_mapped.mapping = MappingPolicy::StencilSegment;
+                let b = run_casper(&near_l1_mapped, kind, &d, steps).cycles;
+                CellOut::Ablation(a, b)
+            }
+        });
+        // Casper cells land first so ablation `full` backfill always finds
+        // them; ablation entries are assembled in a second pass below.
+        let mut pending_ablation: Vec<((StencilKind, SizeClass), (u64, u64))> = Vec::new();
+        for (cell, out) in cells.into_iter().zip(outs) {
+            match (cell, out) {
+                (Cell::Casper(k, l), CellOut::Casper(s)) => {
+                    self.casper.insert((k, l), s);
+                }
+                (Cell::Cpu(k, l), CellOut::Cpu(s)) => {
+                    self.cpu.insert((k, l), s);
+                }
+                (Cell::Ablation(k, l), CellOut::Ablation(a, b)) => {
+                    pending_ablation.push(((k, l), (a, b)));
+                }
+                _ => unreachable!("cell/result kind mismatch"),
+            }
+        }
+        for ((kind, level), (a, b)) in pending_ablation {
+            let full = self.casper(kind, level).cycles;
+            self.ablation
+                .insert((kind, level), AblationPoint { near_l1_base: a, near_l1_mapped: b, full });
         }
     }
 
     pub fn casper(&mut self, kind: StencilKind, level: SizeClass) -> &RunStats {
-        let cfg = self.cfg.clone();
-        let steps = self.opts.steps;
-        self.casper.entry((kind, level)).or_insert_with(|| {
+        if !self.casper.contains_key(&(kind, level)) {
+            self.lazy_fills += 1;
             let d = Domain::for_level(kind, level);
-            run_casper(&cfg, kind, &d, steps)
-        })
+            let stats = run_casper(&self.cfg, kind, &d, self.opts.steps);
+            self.casper.insert((kind, level), stats);
+        }
+        &self.casper[&(kind, level)]
     }
 
     pub fn cpu(&mut self, kind: StencilKind, level: SizeClass) -> &CpuRunStats {
-        let cfg = self.cfg.clone();
-        let steps = self.opts.steps;
-        self.cpu.entry((kind, level)).or_insert_with(|| {
+        if !self.cpu.contains_key(&(kind, level)) {
+            self.lazy_fills += 1;
             let d = Domain::for_level(kind, level);
-            run_cpu(&cfg, kind, &d, steps)
-        })
+            let stats = run_cpu(&self.cfg, kind, &d, self.opts.steps);
+            self.cpu.insert((kind, level), stats);
+        }
+        &self.cpu[&(kind, level)]
     }
 
     pub fn ablation(&mut self, kind: StencilKind, level: SizeClass) -> AblationPoint {
         if let Some(p) = self.ablation.get(&(kind, level)) {
             return *p;
         }
+        self.lazy_fills += 1;
         let d = Domain::for_level(kind, level);
         let steps = self.opts.steps;
         let mut near_l1 = self.cfg.clone();
@@ -174,6 +277,48 @@ impl SweepCache {
         self.ablation.insert((kind, level), p);
         p
     }
+}
+
+type CellSet = HashSet<(StencilKind, SizeClass)>;
+
+/// Exactly which (kernel, class) cells each selected experiment reads —
+/// mirrors the builders below, so prefill never simulates a cell a serial
+/// run would not have.
+fn needed_cells(which: &[Experiment], opts: SweepOptions) -> (CellSet, CellSet, CellSet) {
+    let mut casper: CellSet = HashSet::new();
+    let mut cpu: CellSet = HashSet::new();
+    let mut ablation: CellSet = HashSet::new();
+    let all = |set: &mut CellSet| {
+        for &kind in &StencilKind::ALL {
+            for &level in opts.classes() {
+                set.insert((kind, level));
+            }
+        }
+    };
+    for e in which {
+        match e {
+            Experiment::Fig1 => {
+                let level = if opts.quick { SizeClass::L2 } else { SizeClass::Llc };
+                for &kind in &StencilKind::ALL {
+                    cpu.insert((kind, level));
+                }
+            }
+            Experiment::Fig10 | Experiment::Fig11 | Experiment::Table4 | Experiment::Table6 => {
+                all(&mut casper);
+                all(&mut cpu);
+            }
+            Experiment::Fig12 | Experiment::Fig13 => all(&mut casper),
+            Experiment::Fig14 => {
+                all(&mut ablation);
+                all(&mut casper); // the `full` configuration
+            }
+            Experiment::Table5 => {
+                all(&mut casper);
+                all(&mut cpu);
+            }
+        }
+    }
+    (casper, cpu, ablation)
 }
 
 fn ratio(ours: f64, paper: f64) -> String {
@@ -194,6 +339,7 @@ pub fn run_experiments(
         bail!("no experiments selected");
     }
     let mut cache = SweepCache::new(cfg, opts);
+    cache.prefill(which);
     let mut report = Report::default();
     for e in which {
         let table = match e {
@@ -526,7 +672,7 @@ mod tests {
     #[test]
     fn quick_sweep_produces_all_tables() {
         let cfg = SimConfig::default();
-        let opts = SweepOptions { quick: true, steps: 1 };
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 1 };
         let report = ExperimentSet::run_all(&cfg, opts).unwrap();
         assert_eq!(report.tables.len(), 9);
         // Every experiment id present, every table non-empty.
@@ -542,5 +688,63 @@ mod tests {
     fn empty_selection_errors() {
         let cfg = SimConfig::default();
         assert!(run_experiments(&cfg, &[], SweepOptions::default()).is_err());
+    }
+
+    #[test]
+    fn parallel_sweep_report_is_byte_identical_to_serial() {
+        // The acceptance property of the sweep engine: same cells, same
+        // order, same bytes — only the wall clock changes.
+        let cfg = SimConfig::default();
+        let serial = run_experiments(
+            &cfg,
+            &Experiment::ALL,
+            SweepOptions { quick: true, steps: 1, jobs: 1 },
+        )
+        .unwrap();
+        let parallel = run_experiments(
+            &cfg,
+            &Experiment::ALL,
+            SweepOptions { quick: true, steps: 1, jobs: 4 },
+        )
+        .unwrap();
+        assert_eq!(serial.to_markdown(), parallel.to_markdown());
+        for (s, p) in serial.tables.iter().zip(&parallel.tables) {
+            assert_eq!(s.to_csv(), p.to_csv(), "{}", s.id);
+        }
+    }
+
+    #[test]
+    fn prefill_covers_every_builder_access() {
+        // Guard against `needed_cells` drifting from the builders: after a
+        // parallel prefill of ALL experiments, running every builder must
+        // be pure cache hits — zero serial (lazy) simulations.
+        let cfg = SimConfig::default();
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 2 };
+        let mut cache = SweepCache::new(&cfg, opts);
+        cache.prefill(&Experiment::ALL);
+        assert_eq!(cache.lazy_fills, 0, "prefill itself must not fall back to lazy fills");
+        let _ = fig1(&cfg, &mut cache, opts);
+        let _ = fig10(&mut cache, opts);
+        let _ = fig11(&cfg, &mut cache, opts);
+        let _ = fig12(&cfg, &mut cache, opts);
+        let _ = fig13(&cfg, &mut cache, opts);
+        let _ = fig14(&mut cache, opts);
+        let _ = table4(&mut cache, opts);
+        let _ = table5(&cfg, &mut cache, opts);
+        let _ = table6(&cfg, &mut cache, opts);
+        assert_eq!(
+            cache.lazy_fills, 0,
+            "a builder read a cell needed_cells() did not prefill — keep them in sync"
+        );
+    }
+
+    #[test]
+    fn needed_cells_are_minimal_for_fig1() {
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 4 };
+        let (casper, cpu, abl) = needed_cells(&[Experiment::Fig1], opts);
+        assert!(casper.is_empty());
+        assert!(abl.is_empty());
+        assert_eq!(cpu.len(), StencilKind::ALL.len());
+        assert!(cpu.iter().all(|&(_, l)| l == SizeClass::L2));
     }
 }

@@ -72,13 +72,14 @@ fn dispatch(cmd: Command) -> Result<()> {
             let cfg = cli::load_config(config.as_ref())?;
             run_one(&cfg, kernel, level, steps)
         }
-        Command::Experiments { only, quick, steps, out_dir, config } => {
+        Command::Experiments { only, quick, steps, jobs, out_dir, config } => {
             let cfg = cli::load_config(config.as_ref())?;
-            let opts = SweepOptions { quick, steps };
+            let opts = SweepOptions { quick, steps, jobs };
             eprintln!(
-                "running {} experiment(s), classes: {:?} ...",
+                "running {} experiment(s), classes: {:?}, jobs: {} ...",
                 only.len(),
-                opts.classes()
+                opts.classes(),
+                opts.jobs
             );
             let report = run_experiments(&cfg, &only, opts)?;
             print!("{}", report.to_markdown());

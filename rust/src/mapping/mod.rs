@@ -37,52 +37,85 @@ impl StencilSegment {
 }
 
 /// Address-to-slice mapper: the hardware at every NoC injection point.
+///
+/// Hot-path layout (§Perf, `slice_hash_4M` in `benches/micro_hotpath.rs`):
+/// every quantity `slice_of` needs is precomputed at construction —
+/// shift amounts and masks instead of the original `/ line_bytes`,
+/// `/ block_bytes`, `% slices` runtime divisions (all by non-constant
+/// values, i.e. real `div` instructions), the policy folded into one
+/// bool, and the segment held as two plain registers (`seg_len == 0` ⇒
+/// none) so the range check is a single subtract + compare, exactly the
+/// adder + comparator the paper's §8.6 hardware uses.
 #[derive(Debug, Clone)]
 pub struct SliceMapper {
     slices: u64,
-    line_bytes: u64,
+    /// `slices - 1`.
+    slice_mask: u64,
+    /// `log2(slices)`.
+    slice_bits: u32,
+    /// XOR-fold rounds that reduce a full 64-bit line index: fixed trip
+    /// count (no data-dependent loop exit) — extra rounds fold in zeros.
+    fold_rounds: u32,
+    /// `log2(line_bytes)`.
+    line_shift: u32,
+    /// `log2(block_bytes)`.
+    block_shift: u32,
     block_bytes: u64,
     policy: MappingPolicy,
-    segment: Option<StencilSegment>,
+    /// `policy == StencilSegment`, hoisted out of `slice_of`.
+    use_stencil: bool,
+    /// Segment registers; `seg_len == 0` means no segment registered.
+    seg_base: u64,
+    seg_len: u64,
 }
 
 impl SliceMapper {
     pub fn new(llc: &LlcConfig, policy: MappingPolicy) -> SliceMapper {
         assert!(llc.slices.is_power_of_two(), "slice count must be a power of two");
         assert!(llc.line_bytes.is_power_of_two() && llc.stencil_block_bytes.is_power_of_two());
+        let slices = llc.slices as u64;
+        let slice_bits = slices.trailing_zeros();
         SliceMapper {
-            slices: llc.slices as u64,
-            line_bytes: llc.line_bytes as u64,
+            slices,
+            slice_mask: slices - 1,
+            slice_bits,
+            fold_rounds: if slice_bits == 0 { 1 } else { 64u32.div_ceil(slice_bits) },
+            line_shift: (llc.line_bytes as u64).trailing_zeros(),
+            block_shift: (llc.stencil_block_bytes as u64).trailing_zeros(),
             block_bytes: llc.stencil_block_bytes as u64,
             policy,
-            segment: None,
+            use_stencil: policy == MappingPolicy::StencilSegment,
+            seg_base: 0,
+            seg_len: 0,
         }
     }
 
     /// Register the stencil segment (the `initStencilSegment` effect).
     pub fn set_segment(&mut self, seg: StencilSegment) {
-        self.segment = Some(seg);
+        self.seg_base = seg.base;
+        self.seg_len = seg.len;
     }
 
     pub fn clear_segment(&mut self) {
-        self.segment = None;
+        self.seg_base = 0;
+        self.seg_len = 0;
     }
 
     pub fn segment(&self) -> Option<StencilSegment> {
-        self.segment
+        (self.seg_len != 0).then(|| StencilSegment::new(self.seg_base, self.seg_len))
     }
 
     /// Is this address inside the registered stencil segment?
     #[inline]
     pub fn in_segment(&self, addr: u64) -> bool {
-        matches!(self.segment, Some(s) if s.contains(addr))
+        addr.wrapping_sub(self.seg_base) < self.seg_len
     }
 
     /// Map a physical address to its home LLC slice. Deterministic: each
     /// address maps to exactly one slice regardless of requester (§4.2).
     #[inline]
     pub fn slice_of(&self, addr: u64) -> usize {
-        if self.policy == MappingPolicy::StencilSegment && self.in_segment(addr) {
+        if self.use_stencil && self.in_segment(addr) {
             self.stencil_hash(addr)
         } else {
             self.baseline_hash(addr)
@@ -95,16 +128,15 @@ impl SliceMapper {
     /// property [158] documents for Intel's undisclosed function.
     #[inline]
     pub fn baseline_hash(&self, addr: u64) -> usize {
-        let line = addr / self.line_bytes;
-        let bits = self.slices.trailing_zeros();
-        let mask = self.slices - 1;
+        let mut v = addr >> self.line_shift;
         let mut h = 0u64;
-        let mut v = line;
-        while v != 0 {
-            h ^= v & mask;
-            v >>= bits;
+        // Fixed trip count covering the full 64-bit index: same result as
+        // folding until `v == 0`, without the data-dependent exit branch.
+        for _ in 0..self.fold_rounds {
+            h ^= v;
+            v >>= self.slice_bits;
         }
-        h as usize
+        (h & self.slice_mask) as usize
     }
 
     /// Stencil-segment hash: *segment-relative* 128 kB blocks round-robin
@@ -112,14 +144,18 @@ impl SliceMapper {
     /// segment always starts at slice 0.
     #[inline]
     pub fn stencil_hash(&self, addr: u64) -> usize {
-        let rel = addr - self.segment.map(|s| s.base).unwrap_or(0);
-        ((rel / self.block_bytes) % self.slices) as usize
+        let rel = addr.wrapping_sub(self.seg_base);
+        ((rel >> self.block_shift) & self.slice_mask) as usize
     }
 
     /// Do `a` and `b` live in the same slice?
     #[inline]
     pub fn same_slice(&self, a: u64, b: u64) -> bool {
         self.slice_of(a) == self.slice_of(b)
+    }
+
+    pub fn policy(&self) -> MappingPolicy {
+        self.policy
     }
 
     pub fn slices(&self) -> usize {
@@ -236,6 +272,36 @@ mod tests {
                 s1 == s2 && s1 < 16
             },
         );
+    }
+
+    #[test]
+    fn optimized_baseline_hash_matches_reference_fold() {
+        // Regression for the shift/mask rewrite: the branch-reduced hash
+        // must equal the original fold-until-zero definition bit for bit.
+        let m = mapper(MappingPolicy::Baseline);
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            let addr = rng.next_u64() % (1 << 45);
+            let mut v = addr / 64;
+            let mut h = 0u64;
+            while v != 0 {
+                h ^= v & 15;
+                v >>= 4;
+            }
+            assert_eq!(m.baseline_hash(addr), h as usize, "addr={addr:#x}");
+        }
+    }
+
+    #[test]
+    fn segment_roundtrips_through_registers() {
+        let mut m = mapper(MappingPolicy::StencilSegment);
+        assert_eq!(m.segment(), None);
+        let seg = StencilSegment::new(0x2000_0000, 1 << 20);
+        m.set_segment(seg);
+        assert_eq!(m.segment(), Some(seg));
+        m.clear_segment();
+        assert_eq!(m.segment(), None);
+        assert!(!m.in_segment(0x2000_0000));
     }
 
     #[test]

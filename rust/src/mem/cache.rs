@@ -57,24 +57,31 @@ pub struct AccessOutcome {
     pub prefetch_hit: bool,
 }
 
-#[derive(Debug, Clone, Copy, Default)]
-struct Way {
-    tag: u64,
-    valid: bool,
-    dirty: bool,
-    /// LRU stamp (monotonic counter value at last touch).
-    stamp: u64,
-    /// Filled by prefetch and not yet demanded.
-    prefetched: bool,
-}
+/// Per-way metadata flag bits (see [`Cache::flags`]).
+const FLAG_DIRTY: u8 = 1 << 0;
+/// Filled by prefetch and not yet demanded.
+const FLAG_PREFETCHED: u8 = 1 << 1;
 
 /// A tag-only set-associative cache with LRU replacement.
+///
+/// Storage is struct-of-arrays: the hit scan — the hottest loop in the
+/// whole simulator (`cache_access_1M` in `benches/micro_hotpath.rs`) —
+/// touches only the dense `tags` array (8 B/way instead of a padded
+/// 24 B/way record), so a 16-way set fits in two cache lines and the
+/// compare loop vectorizes. Stamps and flag bytes are read only on the
+/// way that hits or is evicted.
 #[derive(Debug, Clone)]
 pub struct Cache {
     sets: usize,
     ways: usize,
     line_shift: u32,
-    data: Vec<Way>,
+    /// `line + 1` per way; `0` = invalid. (Line addresses are physical
+    /// addresses >> line_shift, far below `u64::MAX`, so +1 never wraps.)
+    tags: Vec<u64>,
+    /// LRU stamp per way (monotonic counter value at last touch).
+    stamps: Vec<u64>,
+    /// `FLAG_DIRTY` / `FLAG_PREFETCHED` bits per way.
+    flags: Vec<u8>,
     clock: u64,
     pub stats: CacheStats,
 }
@@ -91,7 +98,9 @@ impl Cache {
             sets,
             ways,
             line_shift: line_bytes.trailing_zeros(),
-            data: vec![Way::default(); sets * ways],
+            tags: vec![0; sets * ways],
+            stamps: vec![0; sets * ways],
+            flags: vec![0; sets * ways],
             clock: 0,
             stats: CacheStats::default(),
         }
@@ -128,39 +137,54 @@ impl Cache {
         let line = self.line_of(addr);
         let set = self.set_of(line);
         self.clock += 1;
-        let base = set * self.ways;
+        let ways = self.ways;
+        let base = set * ways;
+        let key = line + 1;
 
         // Single pass: hit check across ALL ways (a line resident in a
         // reserved way still hits; the restriction is only on allocation)
         // while simultaneously tracking the in-window LRU victim — the
         // miss path then needs no second scan (§Perf: this function is
         // ~30% of simulator time).
+        let mut hit_way = usize::MAX;
         let mut victim = 0usize;
         let mut victim_stamp = u64::MAX;
-        let set_ways = &mut self.data[base..base + self.ways];
-        for (w, e) in set_ways.iter_mut().enumerate() {
-            if e.valid && e.tag == line {
-                e.stamp = self.clock;
-                let prefetch_hit = e.prefetched;
-                if prefetch_hit {
-                    e.prefetched = false;
-                    self.stats.prefetch_hits += 1;
+        {
+            let tags = &self.tags[base..base + ways];
+            let stamps = &self.stamps[base..base + ways];
+            for w in 0..ways {
+                let t = tags[w];
+                if t == key {
+                    hit_way = w;
+                    break;
                 }
-                if write {
-                    e.dirty = true;
-                    self.stats.write_hits += 1;
-                } else {
-                    self.stats.read_hits += 1;
-                }
-                return AccessOutcome { hit: true, writeback: None, prefetch_hit };
-            }
-            if w < way_limit {
-                let stamp = if e.valid { e.stamp } else { 0 };
-                if stamp < victim_stamp {
-                    victim_stamp = stamp;
-                    victim = w;
+                if w < way_limit {
+                    let stamp = if t == 0 { 0 } else { stamps[w] };
+                    if stamp < victim_stamp {
+                        victim_stamp = stamp;
+                        victim = w;
+                    }
                 }
             }
+        }
+
+        if hit_way != usize::MAX {
+            let idx = base + hit_way;
+            self.stamps[idx] = self.clock;
+            let fl = self.flags[idx];
+            let prefetch_hit = fl & FLAG_PREFETCHED != 0;
+            let mut fl = fl & !FLAG_PREFETCHED;
+            if prefetch_hit {
+                self.stats.prefetch_hits += 1;
+            }
+            if write {
+                fl |= FLAG_DIRTY;
+                self.stats.write_hits += 1;
+            } else {
+                self.stats.read_hits += 1;
+            }
+            self.flags[idx] = fl;
+            return AccessOutcome { hit: true, writeback: None, prefetch_hit };
         }
 
         // Miss: allocate (write-allocate policy) in the LRU way within the
@@ -182,16 +206,15 @@ impl Cache {
     pub fn access_second_tag(&mut self, addr: u64, way_limit: usize) -> AccessOutcome {
         let line = self.line_of(addr);
         let base = self.set_of(line) * self.ways;
+        let key = line + 1;
         // Resident? Touch LRU only.
         self.clock += 1;
-        for w in 0..self.ways {
-            let e = &mut self.data[base + w];
-            if e.valid && e.tag == line {
-                e.stamp = self.clock;
-                let prefetch_hit = e.prefetched;
-                e.prefetched = false;
-                return AccessOutcome { hit: true, writeback: None, prefetch_hit };
-            }
+        if let Some(w) = self.find_way(base, key) {
+            let idx = base + w;
+            self.stamps[idx] = self.clock;
+            let prefetch_hit = self.flags[idx] & FLAG_PREFETCHED != 0;
+            self.flags[idx] &= !FLAG_PREFETCHED;
+            return AccessOutcome { hit: true, writeback: None, prefetch_hit };
         }
         self.stats.read_misses += 1;
         let victim = self.lru_way(base, way_limit);
@@ -206,10 +229,8 @@ impl Cache {
         let line = self.line_of(addr);
         let set = self.set_of(line);
         let base = set * self.ways;
-        for w in 0..self.ways {
-            if self.data[base + w].valid && self.data[base + w].tag == line {
-                return None;
-            }
+        if self.find_way(base, line + 1).is_some() {
+            return None;
         }
         self.clock += 1;
         self.stats.prefetch_fills += 1;
@@ -221,37 +242,34 @@ impl Cache {
     pub fn probe(&self, addr: u64) -> bool {
         let line = self.line_of(addr);
         let base = self.set_of(line) * self.ways;
-        (0..self.ways).any(|w| {
-            let e = &self.data[base + w];
-            e.valid && e.tag == line
-        })
+        self.find_way(base, line + 1).is_some()
     }
 
     /// Invalidate a line (coherence). Returns true if it was dirty.
     pub fn invalidate(&mut self, addr: u64) -> bool {
         let line = self.line_of(addr);
         let base = self.set_of(line) * self.ways;
-        for w in 0..self.ways {
-            let e = &mut self.data[base + w];
-            if e.valid && e.tag == line {
-                e.valid = false;
-                let dirty = e.dirty;
-                e.dirty = false;
-                return dirty;
-            }
+        if let Some(w) = self.find_way(base, line + 1) {
+            let idx = base + w;
+            self.tags[idx] = 0;
+            let dirty = self.flags[idx] & FLAG_DIRTY != 0;
+            self.flags[idx] = 0;
+            return dirty;
         }
         false
     }
 
     /// Fraction of valid lines (occupancy), for reports.
     pub fn occupancy(&self) -> f64 {
-        let valid = self.data.iter().filter(|e| e.valid).count();
-        valid as f64 / self.data.len() as f64
+        let valid = self.tags.iter().filter(|&&t| t != 0).count();
+        valid as f64 / self.tags.len() as f64
     }
 
     /// Reset tags and stats (new run).
     pub fn reset(&mut self) {
-        self.data.fill(Way::default());
+        self.tags.fill(0);
+        self.stamps.fill(0);
+        self.flags.fill(0);
         self.stats = CacheStats::default();
         self.clock = 0;
     }
@@ -263,17 +281,24 @@ impl Cache {
         self.stats = CacheStats::default();
     }
 
+    /// Index (within the set) of the way holding `key` (= line + 1), if
+    /// resident. Pure tag scan — the common helper for the cold paths.
+    #[inline]
+    fn find_way(&self, base: usize, key: u64) -> Option<usize> {
+        self.tags[base..base + self.ways].iter().position(|&t| t == key)
+    }
+
     fn lru_way(&self, base: usize, way_limit: usize) -> usize {
         // Prefer an invalid way inside the window; else the LRU stamp.
         let mut victim = 0usize;
         let mut best = u64::MAX;
         for w in 0..way_limit {
-            let e = &self.data[base + w];
-            if !e.valid {
+            if self.tags[base + w] == 0 {
                 return w;
             }
-            if e.stamp < best {
-                best = e.stamp;
+            let stamp = self.stamps[base + w];
+            if stamp < best {
+                best = stamp;
                 victim = w;
             }
         }
@@ -281,20 +306,18 @@ impl Cache {
     }
 
     fn fill_way(&mut self, idx: usize, line: u64, dirty: bool, prefetched: bool) -> Option<u64> {
-        let e = &mut self.data[idx];
+        let old = self.tags[idx];
         let mut writeback = None;
-        if e.valid {
+        if old != 0 {
             self.stats.evictions += 1;
-            if e.dirty {
+            if self.flags[idx] & FLAG_DIRTY != 0 {
                 self.stats.writebacks += 1;
-                writeback = Some(e.tag);
+                writeback = Some(old - 1);
             }
         }
-        e.tag = line;
-        e.valid = true;
-        e.dirty = dirty;
-        e.stamp = self.clock;
-        e.prefetched = prefetched;
+        self.tags[idx] = line + 1;
+        self.stamps[idx] = self.clock;
+        self.flags[idx] = (dirty as u8) * FLAG_DIRTY | (prefetched as u8) * FLAG_PREFETCHED;
         writeback
     }
 }

@@ -14,8 +14,6 @@ pub mod shared;
 
 pub use shared::SharedMem;
 
-use std::collections::VecDeque;
-
 use crate::config::SimConfig;
 use crate::isa::{CasperProgram, StreamSpec};
 
@@ -65,6 +63,53 @@ impl SpuStats {
     }
 }
 
+/// Fixed-capacity ring buffer of in-flight load completion times — the
+/// hardware's 10-entry load queue. Replaces a `VecDeque` on the group
+/// hot path: capacity is fixed at construction, so push/pop are two or
+/// three arithmetic ops on a flat slice with no growth or wrap-masking
+/// machinery (§Perf, `spu_64k_points`).
+#[derive(Debug, Clone)]
+struct LoadQueue {
+    slots: Box<[u64]>,
+    head: usize,
+    len: usize,
+}
+
+impl LoadQueue {
+    fn new(capacity: usize) -> LoadQueue {
+        assert!(capacity >= 1, "load queue needs at least one entry");
+        LoadQueue { slots: vec![0; capacity].into_boxed_slice(), head: 0, len: 0 }
+    }
+
+    #[inline]
+    fn is_full(&self) -> bool {
+        self.len == self.slots.len()
+    }
+
+    #[inline]
+    fn pop_front(&mut self) -> u64 {
+        debug_assert!(self.len > 0);
+        let v = self.slots[self.head];
+        self.head += 1;
+        if self.head == self.slots.len() {
+            self.head = 0;
+        }
+        self.len -= 1;
+        v
+    }
+
+    #[inline]
+    fn push_back(&mut self, v: u64) {
+        debug_assert!(self.len < self.slots.len());
+        let mut tail = self.head + self.len;
+        if tail >= self.slots.len() {
+            tail -= self.slots.len();
+        }
+        self.slots[tail] = v;
+        self.len += 1;
+    }
+}
+
 /// One stencil processing unit attached to LLC slice `slice`.
 #[derive(Debug, Clone)]
 pub struct Spu {
@@ -74,8 +119,7 @@ pub struct Spu {
     program: CasperProgram,
     streams: Vec<BoundStream>,
     /// Completion times of in-flight loads (bounded by the LQ size).
-    lq: VecDeque<u64>,
-    lq_size: usize,
+    lq: LoadQueue,
     /// Local pipeline time (next issue cycle).
     pub now: u64,
     /// Completion time of the latest retired group.
@@ -96,8 +140,7 @@ impl Spu {
             slice,
             program,
             streams: Vec::with_capacity(n_streams),
-            lq: VecDeque::new(),
-            lq_size: cfg.spu.load_queue,
+            lq: LoadQueue::new(cfg.spu.load_queue),
             now: 0,
             done: 0,
             acc: [0.0; LANES],
@@ -162,27 +205,27 @@ impl Spu {
             return false;
         }
         let lanes = (self.remaining as usize).min(self.simd_lanes);
+        let lanes_bytes = (lanes * 8) as u64;
         let n_instrs = self.program.instrs.len();
         let mut group_ready: u64 = self.now;
 
         for k in 0..n_instrs {
             let instr = self.program.instrs[k];
+            let sidx = instr.stream_idx as usize;
+            // Hoisted stream lookup: only the bound address is needed
+            // here, not the whole BoundStream record.
+            let base = self.streams[sidx].addr.wrapping_add_signed(instr.dx() * 8);
             // Issue: 1 instruction per cycle.
             let mut t = self.now;
 
             // Load-queue back-pressure: wait for the oldest entry.
-            if self.lq.len() >= self.lq_size {
-                let free_at = self.lq.pop_front().unwrap();
+            if self.lq.is_full() {
+                let free_at = self.lq.pop_front();
                 if free_at > t {
                     self.stats.lq_stall_cycles += free_at - t;
                     t = free_at;
                 }
             }
-
-            let stream = self.streams[instr.stream_idx as usize];
-            let base = stream
-                .addr
-                .wrapping_add_signed(instr.dx() * 8);
 
             // Timed load of the 64 B operand (8 B-aligned).
             let completion = self.timed_load(mem, base, t);
@@ -208,19 +251,19 @@ impl Spu {
                 // store enters the LLC queue at issue time (the data
                 // follows once the accumulator retires); its completion
                 // cannot precede the group's last load.
-                let out = self.streams[CasperProgram::OUT_STREAM as usize];
-                mem.store.write_slice(out.addr, &self.acc[..lanes]);
-                let st = self.timed_store(mem, out.addr, t);
+                let out_addr = self.streams[CasperProgram::OUT_STREAM as usize].addr;
+                mem.store.write_slice(out_addr, &self.acc[..lanes]);
+                let st = self.timed_store(mem, out_addr, t);
                 group_ready = group_ready.max(st);
                 self.stats.stores += 1;
             }
             if instr.advance_stream {
-                self.streams[instr.stream_idx as usize].addr += (lanes * 8) as u64;
+                self.streams[sidx].addr += lanes_bytes;
             }
             self.now = t + 1;
         }
         // Output stream advances implicitly with each group.
-        self.streams[CasperProgram::OUT_STREAM as usize].addr += (lanes * 8) as u64;
+        self.streams[CasperProgram::OUT_STREAM as usize].addr += lanes_bytes;
 
         self.remaining -= lanes as u64;
         self.stats.groups += 1;
@@ -407,7 +450,7 @@ mod tests {
     }
 
     #[test]
-    fn local_loads_dominante_on_local_block() {
+    fn local_loads_dominate_on_local_block() {
         let (_cfg, mut mem, mut spu) = setup(StencilKind::Jacobi1D);
         let base = mem.store.base();
         // All streams inside block 0 → slice 0 = SPU 0's slice.

@@ -7,7 +7,14 @@ use casper::harness::{run_experiments, Experiment, SweepOptions};
 
 fn quick_report() -> casper::harness::Report {
     let cfg = SimConfig::default();
-    run_experiments(&cfg, &Experiment::ALL, SweepOptions { quick: true, steps: 1 }).unwrap()
+    // Exercise the parallel sweep engine in the smoke path; reports are
+    // byte-identical to `jobs: 1` (asserted in `harness::tests`).
+    run_experiments(
+        &cfg,
+        &Experiment::ALL,
+        SweepOptions { quick: true, steps: 1, jobs: casper::harness::auto_jobs() },
+    )
+    .unwrap()
 }
 
 #[test]
