@@ -8,6 +8,7 @@
 
 #![allow(dead_code)] // each bench binary uses a subset of this module
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -80,6 +81,62 @@ pub fn write_bench_json(path: &Path, suite: &str, stats: &[BenchStat]) -> std::i
     std::fs::write(path, out)
 }
 
+/// Where the committed reference record lives: `$CASPER_BENCH_BASELINE`
+/// if set, else `benches/baseline/BENCH_micro.json` in the crate (the
+/// copy refreshed from the CI reference machine — see `rust/PERF.md`).
+pub fn baseline_path() -> PathBuf {
+    std::env::var_os("CASPER_BENCH_BASELINE")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("benches/baseline/BENCH_micro.json")
+        })
+}
+
+/// Parse a bench-JSON file into `name → median_ms` (hand-rolled scan of
+/// the schema `write_bench_json` emits; no serde offline).
+pub fn parse_bench_json(text: &str) -> HashMap<String, f64> {
+    let mut out = HashMap::new();
+    for seg in text.split("{\"name\": \"").skip(1) {
+        let Some(name_end) = seg.find('"') else { continue };
+        let name = &seg[..name_end];
+        let Some(idx) = seg.find("\"median_ms\": ") else { continue };
+        let rest = &seg[idx + "\"median_ms\": ".len()..];
+        let end = rest.find(|c| c == ',' || c == '}').unwrap_or(rest.len());
+        if let Ok(v) = rest[..end].trim().parse::<f64>() {
+            out.insert(name.to_string(), v);
+        }
+    }
+    out
+}
+
+/// Print each record's wall-time delta against the committed baseline
+/// (positive = slower than the baseline). Records without a committed
+/// reference — including everything while the baseline file is still the
+/// empty placeholder — print `(no baseline)`.
+pub fn print_baseline_delta(records: &[BenchStat]) {
+    let path = baseline_path();
+    let base = match std::fs::read_to_string(&path) {
+        Ok(text) => parse_bench_json(&text),
+        Err(_) => {
+            println!("no committed bench baseline at {}", path.display());
+            return;
+        }
+    };
+    println!("delta vs committed baseline ({}):", path.display());
+    for r in records {
+        match base.get(&r.name) {
+            Some(&b) if b > 0.0 => {
+                let pct = (r.median_ms - b) / b * 100.0;
+                println!(
+                    "  {:<28} {:>9.2} ms vs {:>9.2} ms  ({:+.1}%)",
+                    r.name, r.median_ms, b, pct
+                );
+            }
+            _ => println!("  {:<28} {:>9.2} ms  (no baseline)", r.name, r.median_ms),
+        }
+    }
+}
+
 /// Standard driver for a one-experiment bench binary: run the experiment
 /// sweep (timed), then print the regenerated table. `quick` honours
 /// `CASPER_BENCH_QUICK=1` so CI can keep bench time bounded, and
@@ -92,7 +149,7 @@ pub fn bench_experiment(e: Experiment, samples: usize) {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1);
-    let opts = SweepOptions { quick, steps: 1, jobs };
+    let opts = SweepOptions { quick, steps: 1, jobs, spu_threads: 1 };
     let report = measure(e.id(), samples, || {
         run_experiments(&cfg, &[e], opts).expect("experiment failed")
     });

@@ -27,6 +27,9 @@ pub enum Command {
         steps: usize,
         /// Sweep worker threads (default: one per hardware thread).
         jobs: usize,
+        /// Intra-run SPU worker threads per cell (`None` = engine default:
+        /// serial, since the sweep already parallelizes across cells).
+        spu_threads: Option<usize>,
         out_dir: Option<PathBuf>,
         config: Option<PathBuf>,
     },
@@ -34,6 +37,8 @@ pub enum Command {
         kernel: StencilKind,
         level: SizeClass,
         steps: usize,
+        /// Intra-run SPU worker threads (`None` = one per SPU).
+        spu_threads: Option<usize>,
         config: Option<PathBuf>,
     },
     Validate {
@@ -48,13 +53,19 @@ pub const USAGE: &str = "\
 casper — near-cache stencil acceleration (full-system reproduction)
 
 USAGE:
-  casper experiments [--only IDs] [--quick] [--steps N] [--jobs N] [--out-dir DIR] [--config FILE]
+  casper experiments [--only IDs] [--quick] [--steps N] [--jobs N]
+                     [--spu-threads N] [--out-dir DIR] [--config FILE]
       Regenerate the paper's tables/figures. IDs: fig1 fig10 fig11 fig12
       fig13 fig14 table4 table5 table6 (comma-separated; default all).
       --jobs N runs the sweep on N worker threads (default: all hardware
-      threads; 1 = serial). Reports are identical at any job count.
-  casper run --kernel NAME --level {l2|llc|dram} [--steps N] [--config FILE]
+      threads; 1 = serial). --spu-threads N additionally parallelizes
+      INSIDE each Casper cell (default 1 here — the sweep already fans
+      out across cells). Reports are byte-identical at any combination.
+  casper run --kernel NAME --level {l2|llc|dram} [--steps N]
+             [--spu-threads N] [--config FILE]
       Run one stencil on Casper + all baselines and print the comparison.
+      --spu-threads N runs the 16 SPUs epoch-parallel on N workers
+      (default: one per SPU; 1 = the serial engine; identical results).
   casper validate [--artifacts DIR]
       Execute the AOT JAX/Pallas artifacts via PJRT and cross-check the
       simulator numerics (requires `make artifacts`).
@@ -134,7 +145,7 @@ pub fn parse(argv: &[String]) -> Result<Command> {
     }
     match cmd {
         "experiments" => {
-            rest.reject_unknown(&["only", "quick", "steps", "jobs", "out-dir", "config"])?;
+            rest.reject_unknown(&["only", "quick", "steps", "jobs", "spu-threads", "out-dir", "config"])?;
             let only = match rest.get("only") {
                 None => Experiment::ALL.to_vec(),
                 Some(s) => s
@@ -150,12 +161,13 @@ pub fn parse(argv: &[String]) -> Result<Command> {
                 quick: rest.has("quick"),
                 steps: parse_steps(&rest)?,
                 jobs: parse_jobs(&rest)?,
+                spu_threads: parse_spu_threads(&rest)?,
                 out_dir: rest.get("out-dir").map(PathBuf::from),
                 config: rest.get("config").map(PathBuf::from),
             })
         }
         "run" => {
-            rest.reject_unknown(&["kernel", "level", "steps", "config"])?;
+            rest.reject_unknown(&["kernel", "level", "steps", "spu-threads", "config"])?;
             let kernel = rest
                 .get("kernel")
                 .context("run requires --kernel")
@@ -164,7 +176,13 @@ pub fn parse(argv: &[String]) -> Result<Command> {
                 .get("level")
                 .context("run requires --level")
                 .and_then(|s| SizeClass::parse(s).with_context(|| format!("unknown level '{s}'")))?;
-            Ok(Command::Run { kernel, level, steps: parse_steps(&rest)?, config: rest.get("config").map(PathBuf::from) })
+            Ok(Command::Run {
+                kernel,
+                level,
+                steps: parse_steps(&rest)?,
+                spu_threads: parse_spu_threads(&rest)?,
+                config: rest.get("config").map(PathBuf::from),
+            })
         }
         "validate" => {
             rest.reject_unknown(&["artifacts"])?;
@@ -201,6 +219,17 @@ fn parse_jobs(args: &Args) -> Result<usize> {
             let n: usize = s.parse().with_context(|| format!("bad --jobs '{s}'"))?;
             anyhow::ensure!(n >= 1, "--jobs must be >= 1");
             Ok(n)
+        }
+    }
+}
+
+fn parse_spu_threads(args: &Args) -> Result<Option<usize>> {
+    match args.get("spu-threads") {
+        None => Ok(None),
+        Some(s) => {
+            let n: usize = s.parse().with_context(|| format!("bad --spu-threads '{s}'"))?;
+            anyhow::ensure!(n >= 1, "--spu-threads must be >= 1");
+            Ok(Some(n))
         }
     }
 }
@@ -247,6 +276,24 @@ mod tests {
     }
 
     #[test]
+    fn parses_spu_threads_flag() {
+        match parse(&argv("experiments --spu-threads 16")).unwrap() {
+            Command::Experiments { spu_threads, .. } => assert_eq!(spu_threads, Some(16)),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("experiments")).unwrap() {
+            Command::Experiments { spu_threads, .. } => assert_eq!(spu_threads, None),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("run --kernel jacobi2d --level llc --spu-threads 1")).unwrap() {
+            Command::Run { spu_threads, .. } => assert_eq!(spu_threads, Some(1)),
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("run --kernel jacobi2d --level llc --spu-threads 0")).is_err());
+        assert!(parse(&argv("experiments --spu-threads x")).is_err());
+    }
+
+    #[test]
     fn parses_run() {
         let c = parse(&argv("run --kernel jacobi2d --level llc --steps 3")).unwrap();
         assert_eq!(
@@ -255,6 +302,7 @@ mod tests {
                 kernel: StencilKind::Jacobi2D,
                 level: SizeClass::Llc,
                 steps: 3,
+                spu_threads: None,
                 config: None
             }
         );

@@ -8,32 +8,31 @@ use crate::config::{SimConfig, SpuPlacement};
 use crate::isa::CasperProgram;
 use crate::mapping::StencilSegment;
 use crate::mem::cache::Cache;
-use crate::spu::{SharedMem, Spu};
+use crate::spu::{ShardedMem, Spu};
 
-/// The Casper runtime: owns the SPUs and the shared memory-system models.
+/// The Casper runtime: owns the SPUs and the sharded memory-system models.
 pub struct CasperRuntime {
     pub(crate) cfg: SimConfig,
-    pub mem: SharedMem,
+    pub mem: ShardedMem,
     pub(crate) spus: Vec<Spu>,
     pub(crate) program: Option<CasperProgram>,
+    /// Fig-14 NearL1 placement: give every SPU a private L1 tag model.
+    near_l1: bool,
 }
 
 impl CasperRuntime {
     pub fn new(cfg: &SimConfig) -> CasperRuntime {
-        let mut mem = SharedMem::new(cfg, cfg.mapping);
+        let mut mem = ShardedMem::new(cfg, cfg.mapping);
         // §4.4: one LLC way stays reserved for concurrent CPU processes.
         mem.llc.set_reserved_ways(cfg.llc.reserved_ways);
-        if cfg.placement == SpuPlacement::NearL1 {
+        let near_l1 = cfg.placement == SpuPlacement::NearL1;
+        if near_l1 {
             // Near-L1 SPUs pay the core→LLC latency instead of the
-            // SPU-local 8 cycles, but gain a private L1 in front.
+            // SPU-local 8 cycles, but gain a private L1 in front (attached
+            // to each SPU at `init_stencil_code`).
             mem.spu_local_latency = cfg.llc.core_latency;
-            mem.spu_l1 = Some(
-                (0..cfg.spu.count)
-                    .map(|_| Cache::from_config(&cfg.l1))
-                    .collect(),
-            );
         }
-        CasperRuntime { cfg: cfg.clone(), mem, spus: Vec::new(), program: None }
+        CasperRuntime { cfg: cfg.clone(), mem, spus: Vec::new(), program: None, near_l1 }
     }
 
     /// `initStencilSegment(size)`: allocate the physically contiguous
@@ -51,7 +50,13 @@ impl CasperRuntime {
     pub fn init_stencil_code(&mut self, program: CasperProgram) -> Result<()> {
         program.validate()?;
         self.spus = (0..self.cfg.spu.count)
-            .map(|id| Spu::new(id, id, &self.cfg, program.clone()))
+            .map(|id| {
+                let mut spu = Spu::new(id, id, &self.cfg, program.clone());
+                if self.near_l1 {
+                    spu.set_l1(Some(Cache::from_config(&self.cfg.l1)));
+                }
+                spu
+            })
             .collect();
         self.program = Some(program);
         Ok(())
@@ -68,10 +73,12 @@ impl CasperRuntime {
             prog.constants.resize(index + 1, 0.0);
         }
         prog.constants[index] = value;
-        // Re-broadcast to SPUs.
+        // Re-broadcast to SPUs (preserving any private-L1 tag state).
         let prog = prog.clone();
         for spu in &mut self.spus {
+            let l1 = spu.take_l1();
             *spu = Spu::new(spu.id, spu.slice, &self.cfg, prog.clone());
+            spu.set_l1(l1);
         }
         Ok(())
     }

@@ -6,13 +6,27 @@ use anyhow::Result;
 
 use crate::config::SimConfig;
 use crate::isa::ProgramBuilder;
+use crate::spu::Spu;
 use crate::stencil::{Domain, StencilDesc, StencilKind};
 
 use super::api::CasperRuntime;
+use super::epoch;
 use super::layout::SegmentLayout;
 use super::metrics::RunStats;
 
-/// Options for ablation runs (Fig 14 and the unaligned-hardware study).
+/// Default intra-run SPU worker threads: `CASPER_SPU_THREADS` if set to a
+/// positive integer (the CI matrix runs the whole test suite under both
+/// engines this way), else 1 (the serial path).
+pub fn default_spu_threads() -> usize {
+    std::env::var("CASPER_SPU_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// Options for ablation runs (Fig 14 and the unaligned-hardware study)
+/// and for the intra-run execution mode.
 #[derive(Debug, Clone, Copy)]
 pub struct CasperOptions {
     /// Model the §4.1 unaligned-load hardware (default true).
@@ -24,11 +38,24 @@ pub struct CasperOptions {
     pub warm_llc: bool,
     /// Seed for the input grid.
     pub seed: u64,
+    /// Worker threads for intra-run SPU execution: `1` = the serial
+    /// round-robin path, `> 1` = the epoch-parallel engine. Results are
+    /// byte-identical either way (see `rust/DESIGN-parallel.md`).
+    pub spu_threads: usize,
+    /// Rounds per epoch in the parallel engine (bounds trace memory;
+    /// results are independent of the value).
+    pub epoch_rounds: usize,
 }
 
 impl Default for CasperOptions {
     fn default() -> Self {
-        CasperOptions { unaligned_hw: true, warm_llc: true, seed: 0xCA5_9E12 }
+        CasperOptions {
+            unaligned_hw: true,
+            warm_llc: true,
+            seed: 0xCA5_9E12,
+            spu_threads: default_spu_threads(),
+            epoch_rounds: epoch::DEFAULT_EPOCH_ROUNDS,
+        }
     }
 }
 
@@ -49,6 +76,11 @@ pub fn interior_runs(desc: &StencilDesc, domain: &Domain) -> Vec<Chunk> {
     let [rx, ry, rz] = desc.radius();
     let (nx, ny, nz) = (domain.nx as u64, domain.ny as u64, domain.nz as u64);
     let (rx, ry, rz) = (rx as u64, ry as u64, rz as u64);
+    // Degenerate domains (any dimension ≤ its halo) have no interior
+    // points: no runs, rather than underflowing the run-length math.
+    if nx <= 2 * rx || ny <= 2 * ry || nz <= 2 * rz {
+        return Vec::new();
+    }
     let mut runs = Vec::new();
     for z in rz..nz - rz {
         let start = (z * ny + ry) * nx + rx;
@@ -153,28 +185,21 @@ pub fn run_casper_with(
         let parts: &Vec<Vec<Chunk>> = parts_cache[step & 1]
             .get_or_insert_with(|| partition(&runs, &layout, &rt.mem.mapper, cfg.spu.count));
 
-        // Per-SPU chunk cursors into the cached partition, driven in
-        // lockstep rounds. Chunk transitions rebind the streams
-        // (`initStream`) and element count (`setNElements`) exactly as
-        // Fig 8 does per SPU. Cursors (not queues) so the cached
-        // partition is never cloned or consumed.
-        let mut cursors = vec![0usize; parts.len()];
-        loop {
-            let mut progress = false;
-            for spu_id in 0..rt.spus.len() {
-                if rt.spus[spu_id].is_done() && cursors[spu_id] < parts[spu_id].len() {
-                    let chunk = parts[spu_id][cursors[spu_id]];
-                    cursors[spu_id] += 1;
-                    bind_chunk(&mut rt, spu_id, &layout, chunk, nx, nxy)?;
-                }
-                progress |= {
-                    let spu = &mut rt.spus[spu_id];
-                    spu.run_group(&mut rt.mem)
-                };
-            }
-            if !progress {
-                break;
-            }
+        if opts.spu_threads > 1 {
+            // Epoch-parallel engine: byte-identical to the serial loop
+            // below (`rust/DESIGN-parallel.md`; identity tests under
+            // this module).
+            epoch::run_step(
+                &mut rt,
+                parts,
+                &layout,
+                nx,
+                nxy,
+                opts.spu_threads,
+                opts.epoch_rounds,
+            )?;
+        } else {
+            run_step_serial(&mut rt, parts, &layout, nx, nxy)?;
         }
 
         // Leader aggregation (§5.2): completion messages to SPU 0.
@@ -221,19 +246,49 @@ pub fn run_casper_with(
     })
 }
 
+/// The serial round-robin execution of one time step: per-SPU chunk
+/// cursors into the cached partition, driven in lockstep rounds. Chunk
+/// transitions rebind the streams (`initStream`) and element count
+/// (`setNElements`) exactly as Fig 8 does per SPU. Cursors (not queues)
+/// so the cached partition is never cloned or consumed.
+fn run_step_serial(
+    rt: &mut CasperRuntime,
+    parts: &[Vec<Chunk>],
+    layout: &SegmentLayout,
+    nx: i64,
+    nxy: i64,
+) -> Result<()> {
+    let mut cursors = vec![0usize; parts.len()];
+    loop {
+        let mut progress = false;
+        for spu_id in 0..rt.spus.len() {
+            if rt.spus[spu_id].is_done() && cursors[spu_id] < parts[spu_id].len() {
+                let chunk = parts[spu_id][cursors[spu_id]];
+                cursors[spu_id] += 1;
+                bind_chunk(&mut rt.spus[spu_id], layout, chunk, nx, nxy)?;
+            }
+            progress |= {
+                let spu = &mut rt.spus[spu_id];
+                spu.run_group(&mut rt.mem)
+            };
+        }
+        if !progress {
+            break;
+        }
+    }
+    Ok(())
+}
+
 /// Bind one chunk's streams on one SPU. Works directly on the SPU so the
 /// stream-spec table is read in place — the old path cloned the whole
 /// `Vec<StreamSpec>` per chunk transition (§Perf).
-fn bind_chunk(
-    rt: &mut CasperRuntime,
-    spu_id: usize,
+pub(crate) fn bind_chunk(
+    spu: &mut Spu,
     layout: &SegmentLayout,
     chunk: Chunk,
     nx: i64,
     nxy: i64,
 ) -> Result<()> {
-    anyhow::ensure!(spu_id < rt.spus.len(), "SPU {spu_id} out of range");
-    let spu = &mut rt.spus[spu_id];
     let n_streams = spu.program().streams.len();
     for sid in 0..n_streams {
         let spec = spu.program().streams[sid];
@@ -263,7 +318,7 @@ fn patch_boundary(
     let [rx, ry, rz] = desc.radius();
     let (nx, ny, nz) = (domain.nx, domain.ny, domain.nz);
     let mut buf: Vec<f64> = Vec::with_capacity(nx);
-    let mut copy_run = |store: &mut crate::spu::shared::SimStore, start: u64, n: usize| {
+    let mut copy_run = |store: &mut crate::spu::SimStore, start: u64, n: usize| {
         if n == 0 {
             return;
         }
@@ -288,9 +343,132 @@ fn patch_boundary(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{MappingPolicy, SizeClass};
+    use crate::config::{MappingPolicy, SizeClass, SpuPlacement};
     use crate::mapping::{SliceMapper, StencilSegment};
     use crate::stencil::golden;
+
+    #[test]
+    fn epoch_parallel_is_byte_identical_to_serial() {
+        // The centerpiece identity: serial round-robin and epoch-parallel
+        // execution must agree on EVERY counter, cycle count, and output
+        // bit — across thread counts and epoch sizes (including an epoch
+        // of a single round and one far larger than the run).
+        let cfg = SimConfig::default();
+        for kind in [StencilKind::Jacobi1D, StencilKind::Jacobi2D, StencilKind::Heat3D] {
+            let d = Domain::tiny(kind);
+            let serial = run_casper_with(
+                &cfg,
+                kind,
+                &d,
+                3,
+                CasperOptions { spu_threads: 1, ..Default::default() },
+            )
+            .unwrap();
+            for threads in [2usize, 16] {
+                for rounds in [1usize, 3, 1 << 20] {
+                    let par = run_casper_with(
+                        &cfg,
+                        kind,
+                        &d,
+                        3,
+                        CasperOptions {
+                            spu_threads: threads,
+                            epoch_rounds: rounds,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                    let tag = format!("{kind} threads={threads} epoch_rounds={rounds}");
+                    assert_eq!(serial.cycles, par.cycles, "{tag}");
+                    assert_eq!(serial.spu, par.spu, "{tag}");
+                    assert_eq!(serial.llc, par.llc, "{tag}");
+                    assert_eq!(serial.dram_accesses, par.dram_accesses, "{tag}");
+                    assert_eq!(serial.noc_messages, par.noc_messages, "{tag}");
+                    assert_eq!(serial.noc_hops, par.noc_hops, "{tag}");
+                    assert_eq!(serial.output, par.output, "{tag}");
+                    assert_eq!(serial.digest(), par.digest(), "{tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_parallel_identity_under_stress_configs() {
+        // Crafted conflict pressure: the Baseline mapping scatters
+        // consecutive lines across slices, so nearly every load is a
+        // cross-slice epoch message; NearL1 adds the private-L1 filter;
+        // disabling the §4.1 hardware splits every unaligned load in two.
+        let kind = StencilKind::Blur2D;
+        let d = Domain::tiny(kind);
+        for mapping in [MappingPolicy::Baseline, MappingPolicy::StencilSegment] {
+            for placement in [SpuPlacement::NearLlc, SpuPlacement::NearL1] {
+                for unaligned_hw in [true, false] {
+                    let mut cfg = SimConfig::default();
+                    cfg.mapping = mapping;
+                    cfg.placement = placement;
+                    let serial = run_casper_with(
+                        &cfg,
+                        kind,
+                        &d,
+                        2,
+                        CasperOptions { unaligned_hw, spu_threads: 1, ..Default::default() },
+                    )
+                    .unwrap();
+                    let par = run_casper_with(
+                        &cfg,
+                        kind,
+                        &d,
+                        2,
+                        CasperOptions {
+                            unaligned_hw,
+                            spu_threads: 8,
+                            epoch_rounds: 5,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                    let tag = format!("mapping={mapping:?} placement={placement:?} hw={unaligned_hw}");
+                    assert_eq!(serial.cycles, par.cycles, "{tag}");
+                    assert_eq!(serial.digest(), par.digest(), "{tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_domain_has_no_interior_runs() {
+        let desc = StencilKind::Jacobi2D.descriptor();
+        assert!(interior_runs(&desc, &Domain::new(6, 2, 1)).is_empty(), "ny == 2*ry");
+        assert!(interior_runs(&desc, &Domain::new(2, 6, 1)).is_empty(), "nx == 2*rx");
+        assert!(interior_runs(&desc, &Domain::new(1, 1, 1)).is_empty());
+        let desc3 = StencilKind::Heat3D.descriptor();
+        assert!(interior_runs(&desc3, &Domain::new(8, 8, 2)).is_empty(), "nz == 2*rz");
+        // One past degenerate: a single interior point.
+        let runs = interior_runs(&desc, &Domain::new(3, 3, 1));
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].n, 1);
+    }
+
+    #[test]
+    fn degenerate_domain_run_copies_input_through() {
+        // A boundary-only domain executes zero SPU work and the host
+        // boundary policy copies the input through — on both engines.
+        let cfg = SimConfig::default();
+        let d = Domain::new(64, 2, 1); // ny == 2*ry for Jacobi2D
+        let input = d.alloc_random(CasperOptions::default().seed);
+        for threads in [1usize, 4] {
+            let stats = run_casper_with(
+                &cfg,
+                StencilKind::Jacobi2D,
+                &d,
+                2,
+                CasperOptions { spu_threads: threads, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(stats.total_instrs, 0, "threads={threads}");
+            assert_eq!(stats.output, input, "threads={threads}");
+        }
+    }
 
     #[test]
     fn interior_runs_cover_interior() {

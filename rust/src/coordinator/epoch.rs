@@ -1,0 +1,345 @@
+//! Epoch-parallel intra-run SPU execution.
+//!
+//! One serial "round" of the engine loop runs one vector group on every
+//! SPU. The epoch engine executes `epoch_rounds` such rounds as one epoch
+//! in three phases (see `rust/DESIGN-parallel.md` for the full protocol
+//! and the determinism argument):
+//!
+//! 1. **Functional fan-out** (parallel over SPUs): every SPU runs its
+//!    groups functionally — input loads read the step-immutable input
+//!    array, output writes are staged per SPU — while queueing each LLC
+//!    tag access as an *epoch message* tagged `(round, spu, seq)` and
+//!    recording the per-instruction request geometry.
+//! 2. **Tag reconciliation** (parallel over slices): each slice's worker
+//!    owns that slice's [`SliceState`] outright and drains its incoming
+//!    messages in `(round, spu, seq)` order — exactly the order the serial
+//!    round-robin interleaving would have applied them — producing the tag
+//!    outcomes (hit / writeback).
+//! 3. **Timing replay** (serial, cheap): the exact serial timing
+//!    arithmetic (issue, load queue, slice ports, NoC latencies, DRAM
+//!    channels) replays in global `(round, spu, seq)` order with the
+//!    reconciled outcomes injected — no tag scans left on this path.
+//!
+//! Tag outcomes depend only on per-slice access *order* (never on
+//! timestamps), and timestamps depend only on outcomes plus processing
+//! order — which phase 3 reproduces exactly. Hence serial and
+//! epoch-parallel execution are byte-identical; `coordinator::engine`'s
+//! identity tests enforce this across kernels, mappings, thread counts,
+//! and epoch sizes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::spu::sharded::{SpuTrace, TagOut, TagOutStream, TagReq, NO_LINE};
+use crate::spu::{SliceState, Spu};
+
+use super::api::CasperRuntime;
+use super::engine::{bind_chunk, Chunk};
+use super::layout::SegmentLayout;
+
+/// Rounds per epoch: large enough to amortize worker spawn + phase
+/// hand-off, small enough to bound trace memory (~tens of MB).
+pub(crate) const DEFAULT_EPOCH_ROUNDS: usize = 2048;
+
+/// Run one full time step of the engine loop with `threads` workers,
+/// epoch by epoch, binding chunks from `parts` exactly as the serial
+/// round-robin loop does.
+pub(crate) fn run_step(
+    rt: &mut CasperRuntime,
+    parts: &[Vec<Chunk>],
+    layout: &SegmentLayout,
+    nx: i64,
+    nxy: i64,
+    threads: usize,
+    epoch_rounds: usize,
+) -> Result<()> {
+    let n_spus = rt.spus.len();
+    let mut cursors = vec![0usize; n_spus];
+    let epoch_rounds = epoch_rounds.max(1);
+    loop {
+        let pending = rt
+            .spus
+            .iter()
+            .enumerate()
+            .any(|(i, s)| !s.is_done() || cursors[i] < parts[i].len());
+        if !pending {
+            break;
+        }
+        run_epoch(rt, parts, &mut cursors, layout, nx, nxy, threads, epoch_rounds);
+    }
+    Ok(())
+}
+
+/// Execute up to `epoch_rounds` rounds: phase 1 (parallel over SPUs),
+/// phase 2 (parallel over slices), phase 3 (serial replay).
+fn run_epoch(
+    rt: &mut CasperRuntime,
+    parts: &[Vec<Chunk>],
+    cursors: &mut [usize],
+    layout: &SegmentLayout,
+    nx: i64,
+    nxy: i64,
+    threads: usize,
+    epoch_rounds: usize,
+) {
+    let n_spus = rt.spus.len();
+    let n_slices = rt.cfg.llc.slices;
+    let n_instrs = rt.spus[0].program().instrs.len();
+
+    // ---- Phase 1: parallel functional execution + trace generation ----
+    let slots: Vec<Mutex<Option<SpuTrace>>> = (0..n_spus).map(|_| Mutex::new(None)).collect();
+    {
+        let mem = &rt.mem;
+        let cells: Vec<Mutex<(&mut Spu, usize)>> = rt
+            .spus
+            .iter_mut()
+            .zip(cursors.iter())
+            .map(|(s, &c)| Mutex::new((s, c)))
+            .collect();
+        let cursor = AtomicUsize::new(0);
+        let workers = threads.min(n_spus).max(1);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_spus {
+                        break;
+                    }
+                    let mut guard = cells[i].lock().expect("spu cell poisoned");
+                    let cell = &mut *guard;
+                    let spu: &mut Spu = &mut *cell.0;
+                    let cur = &mut cell.1;
+                    let mut trace = SpuTrace::new(n_slices);
+                    trace.instrs.reserve(epoch_rounds.min(8192) * n_instrs);
+                    let mut round: u32 = 0;
+                    while (round as usize) < epoch_rounds {
+                        if spu.is_done() {
+                            if *cur < parts[i].len() {
+                                bind_chunk(spu, layout, parts[i][*cur], nx, nxy)
+                                    .expect("stream binding failed");
+                                *cur += 1;
+                            } else {
+                                break;
+                            }
+                        }
+                        let _ran = spu.run_group_functional(mem, round, &mut trace);
+                        debug_assert!(_ran, "bound chunk must yield a group");
+                        round += 1;
+                    }
+                    *slots[i].lock().expect("trace slot poisoned") = Some(trace);
+                });
+            }
+        });
+        for (i, cell) in cells.into_iter().enumerate() {
+            cursors[i] = cell.into_inner().expect("spu cell poisoned").1;
+        }
+    }
+    let mut traces: Vec<SpuTrace> = slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("trace slot poisoned")
+                .expect("phase-1 worker skipped an SPU")
+        })
+        .collect();
+
+    // Apply the staged functional output writes (disjoint across SPUs;
+    // never read back within the step, so ordering is irrelevant — apply
+    // in SPU order for determinism of the store anyway).
+    for tr in &mut traces {
+        for run in tr.outs.drain(..) {
+            rt.mem.store.write_slice(run.addr, &run.data);
+        }
+    }
+
+    // ---- Phase 2: per-slice tag reconciliation (parallel over slices) ----
+    let way_limit = rt.mem.llc.way_limit();
+    let banks = rt.mem.llc.take_banks();
+    debug_assert_eq!(banks.len(), n_slices);
+    // per_slice[s][spu] = that SPU's queued messages for slice s.
+    let mut per_slice: Vec<Vec<Vec<TagReq>>> =
+        (0..n_slices).map(|_| Vec::with_capacity(n_spus)).collect();
+    for tr in &mut traces {
+        for (s, q) in tr.tagq.iter_mut().enumerate() {
+            per_slice[s].push(std::mem::take(q));
+        }
+    }
+    let tasks: Vec<Mutex<Option<(SliceState, Vec<Vec<TagReq>>)>>> = banks
+        .into_iter()
+        .zip(per_slice)
+        .map(|(b, q)| Mutex::new(Some((b, q))))
+        .collect();
+    let out_slots: Vec<Mutex<Option<(SliceState, Vec<Vec<TagOut>>)>>> =
+        (0..n_slices).map(|_| Mutex::new(None)).collect();
+    {
+        let cursor = AtomicUsize::new(0);
+        let workers = threads.min(n_slices).max(1);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let s = cursor.fetch_add(1, Ordering::Relaxed);
+                    if s >= n_slices {
+                        break;
+                    }
+                    let (mut bank, reqs) = tasks[s]
+                        .lock()
+                        .expect("slice task poisoned")
+                        .take()
+                        .expect("slice task claimed twice");
+                    let outs = drain_slice_requests(&mut bank, &reqs, way_limit);
+                    *out_slots[s].lock().expect("slice out slot poisoned") = Some((bank, outs));
+                });
+            }
+        });
+    }
+    let mut restored: Vec<SliceState> = Vec::with_capacity(n_slices);
+    let mut outs_by_slice: Vec<Vec<Vec<TagOut>>> = Vec::with_capacity(n_slices);
+    for slot in out_slots {
+        let (bank, outs) = slot
+            .into_inner()
+            .expect("slice out slot poisoned")
+            .expect("phase-2 worker skipped a slice");
+        restored.push(bank);
+        outs_by_slice.push(outs);
+    }
+    rt.mem.llc.restore_banks(restored);
+
+    // Transpose into per-SPU outcome streams: streams[spu][slice].
+    let mut streams: Vec<Vec<TagOutStream>> =
+        (0..n_spus).map(|_| Vec::with_capacity(n_slices)).collect();
+    for outs in outs_by_slice {
+        for (spu, v) in outs.into_iter().enumerate() {
+            streams[spu].push(TagOutStream::new(v));
+        }
+    }
+
+    // ---- Phase 3: deterministic serial timing replay ----
+    let groups: Vec<u32> = traces.iter().map(|t| t.groups).collect();
+    let max_rounds = groups.iter().copied().max().unwrap_or(0);
+    for round in 0..max_rounds {
+        for spu_id in 0..n_spus {
+            if round < groups[spu_id] {
+                let lo = round as usize * n_instrs;
+                let recs = &traces[spu_id].instrs[lo..lo + n_instrs];
+                let spu = &mut rt.spus[spu_id];
+                spu.replay_group_timing(&mut rt.mem, recs, &mut streams[spu_id]);
+            }
+        }
+    }
+    debug_assert!(
+        streams.iter().all(|per| per.iter().all(|s| s.fully_consumed())),
+        "replay must consume every reconciled outcome"
+    );
+}
+
+/// Drain one slice's queued messages in deterministic `(round, spu, seq)`
+/// order — the exact interleaving the serial round-robin loop applies —
+/// against the slice's private tag bank. Returns per-SPU outcome streams
+/// in issue order.
+pub(crate) fn drain_slice_requests(
+    bank: &mut SliceState,
+    reqs: &[Vec<TagReq>],
+    way_limit: usize,
+) -> Vec<Vec<TagOut>> {
+    let n = reqs.len();
+    let mut pos = vec![0usize; n];
+    let mut outs: Vec<Vec<TagOut>> = reqs.iter().map(|q| Vec::with_capacity(q.len())).collect();
+    let Some(max_round) = reqs.iter().filter_map(|q| q.last().map(|r| r.round)).max() else {
+        return outs;
+    };
+    for round in 0..=max_round {
+        for spu in 0..n {
+            while pos[spu] < reqs[spu].len() && reqs[spu][pos[spu]].round == round {
+                let r = reqs[spu][pos[spu]];
+                pos[spu] += 1;
+                outs[spu].push(apply_tag_req(bank, &r, way_limit));
+            }
+        }
+    }
+    debug_assert!(
+        pos.iter().zip(reqs).all(|(&p, q)| p == q.len()),
+        "per-SPU queues must be sorted by round"
+    );
+    outs
+}
+
+/// Apply one message to the bank — the same access sequence the serial
+/// path runs inline.
+fn apply_tag_req(bank: &mut SliceState, r: &TagReq, way_limit: usize) -> TagOut {
+    if r.line1 != NO_LINE {
+        // §4.1 merged dual-tag access: first line is the data access, the
+        // second a tag-only match.
+        let o0 = bank.cache.access_ways(r.line0, false, way_limit);
+        let o1 = bank.cache.access_second_tag(r.line1, way_limit);
+        TagOut::pair(o0, o1)
+    } else {
+        TagOut::single(bank.cache.access_ways(r.line0, r.write, way_limit))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(round: u32, line0: u64) -> TagReq {
+        TagReq { round, line0, line1: NO_LINE, write: false }
+    }
+
+    #[test]
+    fn reconciliation_orders_by_round_before_spu_id() {
+        // SPU 1 touched the line in round 0; SPU 0 only in round 1. The
+        // earlier *round* must apply first even though SPU 0 has the lower
+        // id — so SPU 1 takes the cold miss and SPU 0 hits.
+        let mut bank = SliceState::new(128, 2, 64);
+        let reqs = vec![vec![req(1, 0x40)], vec![req(0, 0x40)]];
+        let outs = drain_slice_requests(&mut bank, &reqs, 2);
+        assert!(!outs[1][0].hit[0], "round-0 message is the cold miss");
+        assert!(outs[0][0].hit[0], "round-1 message sees the line resident");
+    }
+
+    #[test]
+    fn reconciliation_same_round_orders_by_spu_then_seq() {
+        // Within one round, all of SPU 0's messages (in issue order)
+        // precede SPU 1's — SPU 0 fills both ways before SPU 1 hits.
+        let mut bank = SliceState::new(128, 2, 64);
+        let reqs = vec![vec![req(0, 0x80), req(0, 0xC0)], vec![req(0, 0x80)]];
+        let outs = drain_slice_requests(&mut bank, &reqs, 2);
+        assert!(!outs[0][0].hit[0] && !outs[0][1].hit[0]);
+        assert!(outs[1][0].hit[0], "later SPU id sees earlier fills");
+    }
+
+    #[test]
+    fn reconciliation_reports_writebacks_in_order() {
+        // 1 set × 2 ways: SPU 0 dirties line 1 (write), SPU 1 then fills
+        // two more lines; the second fill evicts the dirty line and must
+        // report its writeback.
+        let mut bank = SliceState::new(128, 2, 64);
+        let reqs = vec![
+            vec![TagReq { round: 0, line0: 0x40, line1: NO_LINE, write: true }],
+            vec![req(1, 0x80), req(1, 0xC0)],
+        ];
+        let outs = drain_slice_requests(&mut bank, &reqs, 2);
+        assert!(!outs[0][0].hit[0]);
+        assert_eq!(outs[1][1].wb[0], 1, "dirty line 1 written back by the eviction");
+    }
+
+    #[test]
+    fn merged_requests_apply_both_tags() {
+        let mut bank = SliceState::new(2 * 1024 * 1024, 16, 64);
+        let reqs =
+            vec![vec![TagReq { round: 0, line0: 0x0, line1: 0x40, write: false }, req(1, 0x40)]];
+        let outs = drain_slice_requests(&mut bank, &reqs, 16);
+        assert!(!outs[0][0].hit[0] && !outs[0][0].hit[1], "both lines cold-missed");
+        assert!(outs[0][1].hit[0], "second tag line was installed");
+    }
+
+    #[test]
+    fn empty_queues_drain_to_empty_streams() {
+        let mut bank = SliceState::new(128, 2, 64);
+        let reqs: Vec<Vec<TagReq>> = vec![Vec::new(), Vec::new()];
+        let outs = drain_slice_requests(&mut bank, &reqs, 2);
+        assert!(outs.iter().all(|o| o.is_empty()));
+    }
+}

@@ -5,7 +5,7 @@ use crate::spu::SpuStats;
 use crate::stencil::Grid;
 
 /// Result of a full Casper run (all time steps).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunStats {
     /// End-to-end cycles (leader-observed completion).
     pub cycles: u64,
@@ -38,5 +38,102 @@ impl RunStats {
     /// LLC hit rate seen by the SPUs.
     pub fn llc_hit_rate(&self) -> f64 {
         self.llc.hit_rate()
+    }
+
+    /// Order-stable FNV-1a digest of every counter and every output bit.
+    /// The determinism tests compare these across `--spu-threads` values:
+    /// serial and epoch-parallel runs must produce identical digests.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.mix(self.cycles);
+        h.mix(self.total_instrs);
+        h.mix(self.per_spu_instrs);
+        let s = &self.spu;
+        for v in [
+            s.instrs,
+            s.groups,
+            s.loads,
+            s.stores,
+            s.local_loads,
+            s.remote_loads,
+            s.merged_unaligned,
+            s.split_unaligned,
+            s.lq_stall_cycles,
+        ] {
+            h.mix(v);
+        }
+        let c = &self.llc;
+        for v in [
+            c.read_hits,
+            c.read_misses,
+            c.write_hits,
+            c.write_misses,
+            c.evictions,
+            c.writebacks,
+            c.prefetch_fills,
+            c.prefetch_hits,
+        ] {
+            h.mix(v);
+        }
+        h.mix(self.dram_accesses);
+        h.mix(self.noc_messages);
+        h.mix(self.noc_hops);
+        h.mix(self.noc_contention_cycles);
+        h.mix(self.output.nx as u64);
+        h.mix(self.output.ny as u64);
+        h.mix(self.output.nz as u64);
+        for &v in &self.output.data {
+            h.mix(v.to_bits());
+        }
+        h.0
+    }
+}
+
+/// FNV-1a over 64-bit words.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xCBF2_9CE4_8422_2325)
+    }
+
+    #[inline]
+    fn mix(&mut self, v: u64) {
+        // Word-at-a-time FNV-1a (byte-order-free: counters, not bytes).
+        self.0 ^= v;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::Grid;
+
+    fn stats() -> RunStats {
+        RunStats {
+            cycles: 123,
+            total_instrs: 456,
+            per_spu_instrs: 78,
+            spu: SpuStats::default(),
+            llc: CacheStats::default(),
+            dram_accesses: 9,
+            noc_messages: 10,
+            noc_hops: 11,
+            noc_contention_cycles: 0,
+            output: Grid::random(8, 4, 1, 7),
+        }
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let a = stats();
+        let mut b = stats();
+        assert_eq!(a.digest(), b.digest());
+        b.cycles += 1;
+        assert_ne!(a.digest(), b.digest(), "cycle change must move the digest");
+        let mut c = stats();
+        c.output.data[3] += 1e-15;
+        assert_ne!(a.digest(), c.digest(), "single output ULP must move the digest");
     }
 }

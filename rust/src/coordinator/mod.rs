@@ -13,10 +13,11 @@
 
 pub mod api;
 pub mod engine;
+pub(crate) mod epoch;
 pub mod layout;
 pub mod metrics;
 
 pub use api::CasperRuntime;
-pub use engine::{run_casper, run_casper_with, CasperOptions};
+pub use engine::{default_spu_threads, run_casper, run_casper_with, CasperOptions};
 pub use layout::SegmentLayout;
 pub use metrics::RunStats;

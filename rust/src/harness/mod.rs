@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 
 use crate::area::{perf_per_area_improvement, CasperArea};
 use crate::config::{MappingPolicy, SimConfig, SizeClass, SpuPlacement};
-use crate::coordinator::{run_casper, RunStats};
+use crate::coordinator::{default_spu_threads, run_casper_with, CasperOptions, RunStats};
 use crate::cpu::{run_cpu, CpuRunStats};
 use crate::energy::{casper_energy, cpu_energy};
 use crate::gpu::GpuModel;
@@ -96,11 +96,16 @@ pub struct SweepOptions {
     /// cell through [`sweep::parallel_map`] first. Reports are identical
     /// either way — cells are deterministic and consumed in fixed order.
     pub jobs: usize,
+    /// Worker threads *inside* each Casper cell (the epoch-parallel
+    /// engine; `1` = serial). Reports are byte-identical at any value —
+    /// the engine identity tests pin that — so this purely trades
+    /// cell-level against intra-run parallelism.
+    pub spu_threads: usize,
 }
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        SweepOptions { quick: false, steps: 1, jobs: 1 }
+        SweepOptions { quick: false, steps: 1, jobs: 1, spu_threads: default_spu_threads() }
     }
 }
 
@@ -193,10 +198,11 @@ impl SweepCache {
         }
         let cfg = self.cfg.clone();
         let steps = self.opts.steps;
+        let spu_threads = self.opts.spu_threads;
         let outs = sweep::parallel_map(cells.clone(), self.opts.jobs, |cell| match cell {
             Cell::Casper(kind, level) => {
                 let d = Domain::for_level(kind, level);
-                CellOut::Casper(run_casper(&cfg, kind, &d, steps))
+                CellOut::Casper(run_casper_cell(&cfg, kind, &d, steps, spu_threads))
             }
             Cell::Cpu(kind, level) => {
                 let d = Domain::for_level(kind, level);
@@ -207,10 +213,10 @@ impl SweepCache {
                 let mut near_l1 = cfg.clone();
                 near_l1.placement = SpuPlacement::NearL1;
                 near_l1.mapping = MappingPolicy::Baseline;
-                let a = run_casper(&near_l1, kind, &d, steps).cycles;
+                let a = run_casper_cell(&near_l1, kind, &d, steps, spu_threads).cycles;
                 let mut near_l1_mapped = near_l1.clone();
                 near_l1_mapped.mapping = MappingPolicy::StencilSegment;
-                let b = run_casper(&near_l1_mapped, kind, &d, steps).cycles;
+                let b = run_casper_cell(&near_l1_mapped, kind, &d, steps, spu_threads).cycles;
                 CellOut::Ablation(a, b)
             }
         });
@@ -242,7 +248,7 @@ impl SweepCache {
         if !self.casper.contains_key(&(kind, level)) {
             self.lazy_fills += 1;
             let d = Domain::for_level(kind, level);
-            let stats = run_casper(&self.cfg, kind, &d, self.opts.steps);
+            let stats = run_casper_cell(&self.cfg, kind, &d, self.opts.steps, self.opts.spu_threads);
             self.casper.insert((kind, level), stats);
         }
         &self.casper[&(kind, level)]
@@ -265,18 +271,31 @@ impl SweepCache {
         self.lazy_fills += 1;
         let d = Domain::for_level(kind, level);
         let steps = self.opts.steps;
+        let spu_threads = self.opts.spu_threads;
         let mut near_l1 = self.cfg.clone();
         near_l1.placement = SpuPlacement::NearL1;
         near_l1.mapping = MappingPolicy::Baseline;
-        let a = run_casper(&near_l1, kind, &d, steps).cycles;
+        let a = run_casper_cell(&near_l1, kind, &d, steps, spu_threads).cycles;
         let mut near_l1_mapped = near_l1.clone();
         near_l1_mapped.mapping = MappingPolicy::StencilSegment;
-        let b = run_casper(&near_l1_mapped, kind, &d, steps).cycles;
+        let b = run_casper_cell(&near_l1_mapped, kind, &d, steps, spu_threads).cycles;
         let full = self.casper(kind, level).cycles;
         let p = AblationPoint { near_l1_base: a, near_l1_mapped: b, full };
         self.ablation.insert((kind, level), p);
         p
     }
+}
+
+/// One Casper cell, honouring the sweep's intra-run thread setting.
+fn run_casper_cell(
+    cfg: &SimConfig,
+    kind: StencilKind,
+    d: &Domain,
+    steps: usize,
+    spu_threads: usize,
+) -> RunStats {
+    run_casper_with(cfg, kind, d, steps, CasperOptions { spu_threads, ..Default::default() })
+        .expect("casper run failed")
 }
 
 type CellSet = HashSet<(StencilKind, SizeClass)>;
@@ -672,7 +691,7 @@ mod tests {
     #[test]
     fn quick_sweep_produces_all_tables() {
         let cfg = SimConfig::default();
-        let opts = SweepOptions { quick: true, steps: 1, jobs: 1 };
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 1, spu_threads: 1 };
         let report = ExperimentSet::run_all(&cfg, opts).unwrap();
         assert_eq!(report.tables.len(), 9);
         // Every experiment id present, every table non-empty.
@@ -698,13 +717,13 @@ mod tests {
         let serial = run_experiments(
             &cfg,
             &Experiment::ALL,
-            SweepOptions { quick: true, steps: 1, jobs: 1 },
+            SweepOptions { quick: true, steps: 1, jobs: 1, spu_threads: 1 },
         )
         .unwrap();
         let parallel = run_experiments(
             &cfg,
             &Experiment::ALL,
-            SweepOptions { quick: true, steps: 1, jobs: 4 },
+            SweepOptions { quick: true, steps: 1, jobs: 4, spu_threads: 1 },
         )
         .unwrap();
         assert_eq!(serial.to_markdown(), parallel.to_markdown());
@@ -719,7 +738,7 @@ mod tests {
         // parallel prefill of ALL experiments, running every builder must
         // be pure cache hits — zero serial (lazy) simulations.
         let cfg = SimConfig::default();
-        let opts = SweepOptions { quick: true, steps: 1, jobs: 2 };
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
         let mut cache = SweepCache::new(&cfg, opts);
         cache.prefill(&Experiment::ALL);
         assert_eq!(cache.lazy_fills, 0, "prefill itself must not fall back to lazy fills");
@@ -740,7 +759,7 @@ mod tests {
 
     #[test]
     fn needed_cells_are_minimal_for_fig1() {
-        let opts = SweepOptions { quick: true, steps: 1, jobs: 4 };
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 4, spu_threads: 1 };
         let (casper, cpu, abl) = needed_cells(&[Experiment::Fig1], opts);
         assert!(casper.is_empty());
         assert!(abl.is_empty());

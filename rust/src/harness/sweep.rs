@@ -13,9 +13,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Number of workers to use when the caller doesn't specify: one per
-/// available hardware thread.
+/// available hardware thread (see [`crate::util::auto_threads`]).
 pub fn auto_jobs() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    crate::util::auto_threads()
 }
 
 /// Apply `f` to every item, using up to `jobs` worker threads, returning

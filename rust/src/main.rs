@@ -5,7 +5,7 @@ use anyhow::Result;
 use casper::area::CasperArea;
 use casper::cli::{self, Command, USAGE};
 use casper::config::SimConfig;
-use casper::coordinator::run_casper;
+use casper::coordinator::run_casper_with;
 use casper::cpu::run_cpu;
 use casper::energy::{casper_energy, cpu_energy};
 use casper::gpu::GpuModel;
@@ -68,18 +68,25 @@ fn dispatch(cmd: Command) -> Result<()> {
             }
             Ok(())
         }
-        Command::Run { kernel, level, steps, config } => {
+        Command::Run { kernel, level, steps, spu_threads, config } => {
             let cfg = cli::load_config(config.as_ref())?;
-            run_one(&cfg, kernel, level, steps)
+            // Default: one worker per SPU (the epoch-parallel engine).
+            let spu_threads = spu_threads.unwrap_or(cfg.spu.count);
+            run_one(&cfg, kernel, level, steps, spu_threads)
         }
-        Command::Experiments { only, quick, steps, jobs, out_dir, config } => {
+        Command::Experiments { only, quick, steps, jobs, spu_threads, out_dir, config } => {
             let cfg = cli::load_config(config.as_ref())?;
-            let opts = SweepOptions { quick, steps, jobs };
+            // Default: serial cells (the sweep already fans out; env
+            // CASPER_SPU_THREADS can override for CI matrices).
+            let spu_threads =
+                spu_threads.unwrap_or_else(casper::coordinator::default_spu_threads);
+            let opts = SweepOptions { quick, steps, jobs, spu_threads };
             eprintln!(
-                "running {} experiment(s), classes: {:?}, jobs: {} ...",
+                "running {} experiment(s), classes: {:?}, jobs: {}, spu-threads: {} ...",
                 only.len(),
                 opts.classes(),
-                opts.jobs
+                opts.jobs,
+                opts.spu_threads
             );
             let report = run_experiments(&cfg, &only, opts)?;
             print!("{}", report.to_markdown());
@@ -126,17 +133,20 @@ fn run_one(
     kernel: StencilKind,
     level: casper::config::SizeClass,
     steps: usize,
+    spu_threads: usize,
 ) -> Result<()> {
     let domain = Domain::for_level(kernel, level);
     println!(
-        "{} @ {} ({} points, {} steps)\n",
+        "{} @ {} ({} points, {} steps, {} SPU worker thread(s))\n",
         kernel.name(),
         domain,
         domain.points(),
-        steps
+        steps,
+        spu_threads
     );
 
-    let casper_stats = run_casper(cfg, kernel, &domain, steps);
+    let casper_opts = casper::coordinator::CasperOptions { spu_threads, ..Default::default() };
+    let casper_stats = run_casper_with(cfg, kernel, &domain, steps, casper_opts)?;
     let cpu_stats = run_cpu(cfg, kernel, &domain, steps);
     let gpu = GpuModel::default().cycles(cfg, kernel, &domain, steps);
     let pims = PimsModel::default().cycles(cfg, kernel, &domain, steps);

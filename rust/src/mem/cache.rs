@@ -204,20 +204,50 @@ impl Cache {
     /// see a single access, but a miss on either line is still a real
     /// miss (counted, fill, possible writeback).
     pub fn access_second_tag(&mut self, addr: u64, way_limit: usize) -> AccessOutcome {
+        debug_assert!(way_limit > 0 && way_limit <= self.ways);
         let line = self.line_of(addr);
         let base = self.set_of(line) * self.ways;
         let key = line + 1;
-        // Resident? Touch LRU only.
         self.clock += 1;
-        if let Some(w) = self.find_way(base, key) {
-            let idx = base + w;
+        // Same single-pass hit + in-window LRU-victim scan as
+        // [`access_ways`] — this sits on the merged-unaligned hot path, so
+        // the old two-scan (find, then LRU) version cost a second pass
+        // over the set on every miss. Victim choice is identical: invalid
+        // ways scan as stamp 0, which no valid way can carry (the clock is
+        // pre-incremented before every fill), so the first invalid way —
+        // else the oldest stamp — wins, exactly as `lru_way` chose.
+        let ways = self.ways;
+        let mut hit_way = usize::MAX;
+        let mut victim = 0usize;
+        let mut victim_stamp = u64::MAX;
+        {
+            let tags = &self.tags[base..base + ways];
+            let stamps = &self.stamps[base..base + ways];
+            for w in 0..ways {
+                let t = tags[w];
+                if t == key {
+                    hit_way = w;
+                    break;
+                }
+                if w < way_limit {
+                    let stamp = if t == 0 { 0 } else { stamps[w] };
+                    if stamp < victim_stamp {
+                        victim_stamp = stamp;
+                        victim = w;
+                    }
+                }
+            }
+        }
+        if hit_way != usize::MAX {
+            // Resident: touch LRU only (no hit counted — the merged
+            // access's first line carried the access).
+            let idx = base + hit_way;
             self.stamps[idx] = self.clock;
             let prefetch_hit = self.flags[idx] & FLAG_PREFETCHED != 0;
             self.flags[idx] &= !FLAG_PREFETCHED;
             return AccessOutcome { hit: true, writeback: None, prefetch_hit };
         }
         self.stats.read_misses += 1;
-        let victim = self.lru_way(base, way_limit);
         let writeback = self.fill_way(base + victim, line, false, false);
         AccessOutcome { hit: false, writeback, prefetch_hit: false }
     }
@@ -382,6 +412,25 @@ mod tests {
             c.access_ways(i * 64, false, 3);
         }
         assert!(c.probe(3 * 64), "reserved-way line was evicted");
+    }
+
+    #[test]
+    fn second_tag_fills_lru_within_window_and_counts_no_hit() {
+        // Regression for the single-pass rewrite: same victim policy as
+        // the old find-then-lru version, same "no hit counted" contract.
+        let mut c = Cache::new(256, 4, 64); // 1 set × 4 ways
+        for i in 0..4u64 {
+            c.access(i * 64, false);
+        }
+        c.access(0, false); // refresh line 0 → line 1 is LRU
+        let out = c.access_second_tag(9 * 64, 3); // allocation window: 3 ways
+        assert!(!out.hit);
+        assert!(!c.probe(64), "LRU line inside the window evicted");
+        assert!(c.probe(3 * 64), "reserved way untouched");
+        assert_eq!(c.stats.read_misses, 5);
+        let hits_before = c.stats.hits();
+        assert!(c.access_second_tag(9 * 64, 3).hit);
+        assert_eq!(c.stats.hits(), hits_before, "second tag match counts no hit");
     }
 
     #[test]

@@ -10,6 +10,10 @@ use super::ratelimit::RateLimiter;
 pub struct DramModel {
     cfg: DramConfig,
     line_bytes: u64,
+    /// Bus cycles per line transfer, hoisted out of [`access`](Self::access)
+    /// — the old per-access recompute was a real `f64` divide on the
+    /// miss path.
+    burst: u64,
     /// Per-channel data-bus scheduler.
     channels: Vec<RateLimiter>,
     /// Event counters.
@@ -26,6 +30,7 @@ impl DramModel {
         DramModel {
             cfg: *cfg,
             line_bytes: line_bytes as u64,
+            burst,
             channels: (0..cfg.channels).map(|_| RateLimiter::new(burst, 32)).collect(),
             accesses: 0,
             reads: 0,
@@ -50,10 +55,9 @@ impl DramModel {
             self.reads += 1;
         }
         let ch = self.channel_of(addr);
-        let burst = (self.line_bytes as f64 / self.cfg.bytes_per_cycle_per_channel).ceil() as u64;
         let start = self.channels[ch].claim(now);
         self.queue_cycles += start - now;
-        start + burst + self.cfg.latency
+        start + self.burst + self.cfg.latency
     }
 
     /// Aggregate peak bandwidth in bytes/cycle.

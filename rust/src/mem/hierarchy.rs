@@ -8,6 +8,7 @@
 
 use crate::config::SimConfig;
 use crate::mapping::SliceMapper;
+use crate::spu::SliceState;
 
 use super::cache::{Cache, CacheStats};
 use super::dram::DramModel;
@@ -42,29 +43,51 @@ pub struct HierAccess {
     pub l1_fill: bool,
 }
 
-/// The shared sliced last-level cache: per-slice tag arrays plus a
-/// single-ported (1 access/cycle, 64 B) bank scheduler per slice.
+/// The shared sliced last-level cache: a facade over the independently
+/// owned per-slice states ([`SliceState`]: tag bank + single 1-access/cycle
+/// 64 B port each). The epoch-parallel engine temporarily takes the banks
+/// out ([`take_banks`](Self::take_banks)) so worker threads can own one
+/// slice each during tag reconciliation.
 #[derive(Debug, Clone)]
 pub struct SlicedLlc {
-    pub slices: Vec<Cache>,
-    ports: Vec<super::ratelimit::RateLimiter>,
+    banks: Vec<SliceState>,
     way_limit: usize,
     ways: usize,
 }
 
 impl SlicedLlc {
     pub fn new(cfg: &SimConfig) -> SlicedLlc {
-        let slices = (0..cfg.llc.slices)
-            .map(|_| Cache::new(cfg.llc.slice_bytes, cfg.llc.ways, cfg.llc.line_bytes))
-            .collect();
         SlicedLlc {
-            slices,
-            ports: (0..cfg.llc.slices)
-                .map(|_| super::ratelimit::RateLimiter::new(1, 64))
+            banks: (0..cfg.llc.slices)
+                .map(|_| SliceState::new(cfg.llc.slice_bytes, cfg.llc.ways, cfg.llc.line_bytes))
                 .collect(),
             way_limit: cfg.llc.ways,
             ways: cfg.llc.ways,
         }
+    }
+
+    /// Borrow one slice's private state.
+    #[inline]
+    pub fn bank(&self, slice: usize) -> &SliceState {
+        &self.banks[slice]
+    }
+
+    /// Mutably borrow one slice's private state.
+    #[inline]
+    pub fn bank_mut(&mut self, slice: usize) -> &mut SliceState {
+        &mut self.banks[slice]
+    }
+
+    /// Move the slice states out for a parallel phase (each worker thread
+    /// then owns one). Pair with [`restore_banks`](Self::restore_banks).
+    pub fn take_banks(&mut self) -> Vec<SliceState> {
+        std::mem::take(&mut self.banks)
+    }
+
+    /// Put the slice states back after a parallel phase, in slice order.
+    pub fn restore_banks(&mut self, banks: Vec<SliceState>) {
+        debug_assert!(self.banks.is_empty(), "banks restored twice");
+        self.banks = banks;
     }
 
     /// Restrict allocations to `ways - reserved` ways (§4.4) — used while
@@ -81,56 +104,53 @@ impl SlicedLlc {
     /// Claim the slice port at `now`: returns the cycle the access starts.
     #[inline]
     pub fn claim_port(&mut self, slice: usize, now: u64) -> u64 {
-        self.ports[slice].claim(now)
+        self.banks[slice].port.claim(now)
     }
 
     /// Total cycles requests waited on slice ports (diagnostics).
     pub fn port_wait_cycles(&self) -> u64 {
-        self.ports.iter().map(|p| p.wait_cycles).sum()
+        self.banks.iter().map(|b| b.port.wait_cycles).sum()
     }
 
     /// Tag access on a slice (no port accounting — callers that model
     /// bandwidth call [`claim_port`](Self::claim_port) themselves).
     #[inline]
     pub fn access(&mut self, slice: usize, addr: u64, write: bool) -> super::cache::AccessOutcome {
-        self.slices[slice].access_ways(addr, write, self.way_limit)
+        self.banks[slice].cache.access_ways(addr, write, self.way_limit)
     }
 
     pub fn probe(&self, slice: usize, addr: u64) -> bool {
-        self.slices[slice].probe(addr)
+        self.banks[slice].cache.probe(addr)
     }
 
     /// Second tag match of a merged unaligned access (§4.1) — state
     /// updates and real misses, but no double-counted hit.
     pub fn access_second_tag(&mut self, slice: usize, addr: u64) -> super::cache::AccessOutcome {
-        self.slices[slice].access_second_tag(addr, self.way_limit)
+        self.banks[slice].cache.access_second_tag(addr, self.way_limit)
     }
 
     pub fn prefetch_fill(&mut self, slice: usize, addr: u64) -> Option<u64> {
-        self.slices[slice].prefetch_fill(addr, self.way_limit)
+        self.banks[slice].cache.prefetch_fill(addr, self.way_limit)
     }
 
     pub fn stats(&self) -> CacheStats {
         let mut s = CacheStats::default();
-        for c in &self.slices {
-            s.add(&c.stats);
+        for b in &self.banks {
+            s.add(&b.cache.stats);
         }
         s
     }
 
     pub fn reset(&mut self) {
-        for c in &mut self.slices {
-            c.reset();
-        }
-        for p in &mut self.ports {
-            p.reset();
+        for b in &mut self.banks {
+            b.reset();
         }
     }
 
     /// Keep tags, clear counters (post-warm-up).
     pub fn reset_stats(&mut self) {
-        for c in &mut self.slices {
-            c.reset_stats();
+        for b in &mut self.banks {
+            b.cache.reset_stats();
         }
     }
 }
@@ -316,8 +336,8 @@ impl CpuHierarchy {
             cc.l2.reset_stats();
         }
         self.llc.reset_stats();
-        for p in &mut self.llc.ports {
-            p.reset();
+        for s in 0..self.cfg.llc.slices {
+            self.llc.bank_mut(s).port.reset();
         }
         self.dram.reset();
     }

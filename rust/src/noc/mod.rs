@@ -75,6 +75,15 @@ impl MeshNoc {
         self.total_hops += self.hops(from, to);
     }
 
+    /// Record a message and return its contention-free traversal latency —
+    /// the SPU hot-path pairing of [`record`](Self::record) +
+    /// [`latency`](Self::latency) in one call.
+    #[inline]
+    pub fn record_latency(&mut self, from: usize, to: usize, bytes: usize) -> u64 {
+        self.record(from, to);
+        self.latency(from, to, bytes)
+    }
+
     /// Route one message of `bytes` from `from` to `to`, starting at
     /// `now`. Returns the arrival cycle. XY routing: all X hops first.
     pub fn send(&mut self, from: usize, to: usize, bytes: usize, now: u64) -> u64 {
@@ -189,6 +198,18 @@ mod tests {
         let before = n.contention_cycles;
         n.send(4, 5, 64, 0); // different row
         assert_eq!(n.contention_cycles, before);
+    }
+
+    #[test]
+    fn record_latency_matches_record_plus_latency() {
+        let mut a = noc();
+        let mut b = noc();
+        for (f, t, bytes) in [(0usize, 5usize, 8usize), (3, 3, 64), (15, 0, 256)] {
+            b.record(f, t);
+            assert_eq!(a.record_latency(f, t, bytes), b.latency(f, t, bytes));
+        }
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.total_hops, b.total_hops);
     }
 
     #[test]

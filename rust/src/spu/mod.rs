@@ -9,13 +9,28 @@
 //! loads occupy load-queue slots until their (possibly remote / DRAM)
 //! completion, and the MAC retires in order — giving exactly the stall
 //! behaviour §3.3 describes without a global cycle loop.
+//!
+//! Two execution modes share this model (see `rust/DESIGN-parallel.md`):
+//!
+//! - [`Spu::run_group`] — the serial path: one vector group, functional +
+//!   timed, directly against the [`ShardedMem`] facade.
+//! - [`Spu::run_group_functional`] + [`Spu::replay_group_timing`] — the
+//!   epoch-parallel split: phase 1 runs the functional side and queues
+//!   every tag access as an epoch message; phase 3 replays the identical
+//!   timing arithmetic with the reconciled tag outcomes injected.
 
-pub mod shared;
+pub mod sharded;
+pub mod slice_state;
 
-pub use shared::SharedMem;
+pub use sharded::ShardedMem;
+pub use sharded::SimStore;
+pub use slice_state::SliceState;
 
 use crate::config::SimConfig;
 use crate::isa::{CasperProgram, StreamSpec};
+use crate::mem::cache::Cache;
+
+use sharded::{InstrRec, OutRun, SpuTrace, TagOutStream, TagReq, NO_LINE};
 
 /// SIMD lanes of one SPU (512-bit over f64).
 pub const LANES: usize = 8;
@@ -29,7 +44,7 @@ pub struct BoundStream {
 }
 
 /// Per-SPU event counters.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct SpuStats {
     /// Dynamic Casper instructions executed.
     pub instrs: u64,
@@ -130,6 +145,10 @@ pub struct Spu {
     /// Remaining output elements (`setNElements` countdown).
     remaining: u64,
     simd_lanes: usize,
+    /// Fig-14 `NearL1` placement: a per-SPU private L1 tag model checked
+    /// before the LLC (owned by the SPU so phase 1 can run it without
+    /// touching shared state).
+    l1: Option<Cache>,
 }
 
 impl Spu {
@@ -147,7 +166,19 @@ impl Spu {
             stats: SpuStats::default(),
             remaining: 0,
             simd_lanes: cfg.spu.simd_lanes().min(LANES),
+            l1: None,
         }
+    }
+
+    /// Attach (or detach) the NearL1 private L1 tag model, preserving any
+    /// existing tag state the caller hands back.
+    pub fn set_l1(&mut self, l1: Option<Cache>) {
+        self.l1 = l1;
+    }
+
+    /// Take the private L1 out (e.g. to survive an SPU rebuild).
+    pub fn take_l1(&mut self) -> Option<Cache> {
+        self.l1.take()
     }
 
     /// Bind stream base addresses for the next work chunk (`initStream`).
@@ -200,7 +231,7 @@ impl Spu {
 
     /// Execute one vector group (≤ 8 output elements; the tail group may
     /// be narrower). Returns false when no work remains.
-    pub fn run_group(&mut self, mem: &mut SharedMem) -> bool {
+    pub fn run_group(&mut self, mem: &mut ShardedMem) -> bool {
         if self.remaining == 0 {
             return false;
         }
@@ -271,32 +302,198 @@ impl Spu {
         true
     }
 
+    /// Epoch phase 1: execute one vector group *functionally* — real loads
+    /// from the (step-immutable) input array, the MAC, and a staged output
+    /// write — while queueing every LLC tag access as an epoch message in
+    /// `trace` and recording the per-instruction request geometry for the
+    /// phase-3 timing replay. Mirrors [`run_group`] exactly minus the
+    /// timing state (`now`/`done`/load queue), which
+    /// [`replay_group_timing`](Self::replay_group_timing) advances later;
+    /// the engine identity tests pin the equivalence.
+    pub(crate) fn run_group_functional(
+        &mut self,
+        mem: &ShardedMem,
+        round: u32,
+        trace: &mut SpuTrace,
+    ) -> bool {
+        if self.remaining == 0 {
+            return false;
+        }
+        let lanes = (self.remaining as usize).min(self.simd_lanes);
+        let lanes_bytes = (lanes * 8) as u64;
+        let n_instrs = self.program.instrs.len();
+
+        for k in 0..n_instrs {
+            let instr = self.program.instrs[k];
+            let sidx = instr.stream_idx as usize;
+            let base = self.streams[sidx].addr.wrapping_add_signed(instr.dx() * 8);
+
+            let req = crate::mem::unaligned::decompose(base, &mem.llc_cfg, &mem.mapper);
+            let mut rec = if self.l1_serves(&req.lines[..req.n_lines]) {
+                self.stats.local_loads += 1;
+                InstrRec::l1_served()
+            } else {
+                let merged = req.n_lines == 2 && req.single_access && mem.unaligned_hw;
+                if req.n_lines == 2 {
+                    if merged {
+                        self.stats.merged_unaligned += 1;
+                    } else {
+                        self.stats.split_unaligned += 1;
+                    }
+                }
+                let n_reqs = req.llc_requests(mem.unaligned_hw);
+                if (0..req.n_lines).all(|i| req.slices[i] == self.slice) {
+                    self.stats.local_loads += 1;
+                } else {
+                    self.stats.remote_loads += 1;
+                }
+                for r in 0..n_reqs {
+                    let slice = req.slices[r.min(req.n_lines - 1)];
+                    let (line0, line1) = if merged {
+                        (req.lines[0], req.lines[1])
+                    } else {
+                        (req.lines[r], NO_LINE)
+                    };
+                    trace.tagq[slice].push(TagReq { round, line0, line1, write: false });
+                }
+                InstrRec {
+                    l1_hit: false,
+                    n_reqs: n_reqs as u8,
+                    merged,
+                    slices: [req.slices[0] as u16, req.slices[1] as u16],
+                    lines: req.lines,
+                    has_store: false,
+                    store_slice: 0,
+                    store_addr: 0,
+                }
+            };
+
+            // Functional MAC (identical to the serial path).
+            let c = self.program.constants[instr.const_idx as usize];
+            if instr.clear_acc {
+                self.acc = [0.0; LANES];
+            }
+            let operand = mem.store.read_slice(base, lanes);
+            for (a, &v) in self.acc.iter_mut().zip(operand) {
+                *a += c * v;
+            }
+
+            self.stats.instrs += 1;
+            self.stats.loads += 1;
+
+            if instr.enable_output {
+                let out_addr = self.streams[CasperProgram::OUT_STREAM as usize].addr;
+                // Stage the output write instead of touching the shared
+                // store: chunks are disjoint across SPUs and never read
+                // back within the step, so epoch-end application is
+                // invisible.
+                match trace.outs.last_mut() {
+                    Some(run) if run.addr + run.data.len() as u64 * 8 == out_addr => {
+                        run.data.extend_from_slice(&self.acc[..lanes]);
+                    }
+                    _ => trace.outs.push(OutRun { addr: out_addr, data: self.acc[..lanes].to_vec() }),
+                }
+                let slice = mem.mapper.slice_of(out_addr);
+                rec.has_store = true;
+                rec.store_slice = slice as u16;
+                rec.store_addr = out_addr;
+                let line0 = out_addr & !(mem.llc_cfg.line_bytes as u64 - 1);
+                trace.tagq[slice].push(TagReq { round, line0, line1: NO_LINE, write: true });
+                self.stats.stores += 1;
+            }
+            if instr.advance_stream {
+                self.streams[sidx].addr += lanes_bytes;
+            }
+            trace.instrs.push(rec);
+        }
+        self.streams[CasperProgram::OUT_STREAM as usize].addr += lanes_bytes;
+
+        self.remaining -= lanes as u64;
+        self.stats.groups += 1;
+        trace.groups += 1;
+        true
+    }
+
+    /// Epoch phase 3: replay one group's timing (issue, load queue,
+    /// ports, NoC, DRAM) with the reconciled tag outcomes injected from
+    /// `outs[slice]`. Mirrors the timing half of [`run_group`] exactly.
+    pub(crate) fn replay_group_timing(
+        &mut self,
+        mem: &mut ShardedMem,
+        recs: &[InstrRec],
+        outs: &mut [TagOutStream],
+    ) {
+        let mut group_ready: u64 = self.now;
+        for rec in recs {
+            let mut t = self.now;
+            if self.lq.is_full() {
+                let free_at = self.lq.pop_front();
+                if free_at > t {
+                    self.stats.lq_stall_cycles += free_at - t;
+                    t = free_at;
+                }
+            }
+            let completion = if rec.l1_hit {
+                t + mem.spu_l1_latency
+            } else {
+                let mut ready = t;
+                for r in 0..rec.n_reqs as usize {
+                    let slice = rec.slices[r] as usize;
+                    let lines: &[u64] =
+                        if rec.merged { &rec.lines[..2] } else { &rec.lines[r..r + 1] };
+                    let out = outs[slice].next();
+                    ready = ready.max(mem.load_slice_request(self.slice, slice, lines, t, Some(&out)));
+                }
+                ready
+            };
+            self.lq.push_back(completion);
+            group_ready = group_ready.max(completion);
+            if rec.has_store {
+                let slice = rec.store_slice as usize;
+                let out = outs[slice].next();
+                let st = mem.store_request(self.slice, slice, rec.store_addr, t, Some(&out));
+                group_ready = group_ready.max(st);
+            }
+            self.now = t + 1;
+        }
+        self.done = self.done.max(group_ready);
+    }
+
     /// Drain: the SPU is finished when its pipeline AND last memory
     /// operation complete.
     pub fn finish_time(&self) -> u64 {
         self.done.max(self.now)
     }
 
+    /// NearL1 check shared by both execution modes: probe (and fill) the
+    /// private L1 tags for every line of the request; true when the L1
+    /// serves the whole load. A miss still installs the lines for reuse.
+    #[inline]
+    fn l1_serves(&mut self, lines: &[u64]) -> bool {
+        match self.l1.as_mut() {
+            None => false,
+            Some(l1) => {
+                let mut all_hit = true;
+                for &line in lines {
+                    all_hit &= l1.access(line, false).hit;
+                }
+                all_hit
+            }
+        }
+    }
+
     /// Timed 64 B load at 8 B-aligned `addr`, issued at `t`; returns the
     /// data-ready cycle. Implements §4.1 (merged unaligned access when
     /// both lines share the local... any single slice) and remote-slice
     /// NoC round trips.
-    fn timed_load(&mut self, mem: &mut SharedMem, addr: u64, t: u64) -> u64 {
+    fn timed_load(&mut self, mem: &mut ShardedMem, addr: u64, t: u64) -> u64 {
         let req = crate::mem::unaligned::decompose(addr, &mem.llc_cfg, &mem.mapper);
 
-        // Fig-14 NearL1 placement: a private L1 fronts the LLC.
-        if let Some(l1s) = mem.spu_l1.as_mut() {
-            let l1 = &mut l1s[self.id];
-            let mut all_hit = true;
-            for i in 0..req.n_lines {
-                all_hit &= l1.access(req.lines[i], false).hit;
-            }
-            if all_hit {
-                self.stats.local_loads += 1;
-                return t + mem.spu_l1_latency;
-            }
-            // Miss: fall through to the LLC path (lines now resident in
-            // the L1 tags for future reuse).
+        // Fig-14 NearL1 placement: a private L1 fronts the LLC. On a miss
+        // the lines are now resident in the L1 tags for future reuse.
+        if self.l1_serves(&req.lines[..req.n_lines]) {
+            self.stats.local_loads += 1;
+            return t + mem.spu_l1_latency;
         }
         let merged = req.n_lines == 2 && req.single_access && mem.unaligned_hw;
         if req.n_lines == 2 {
@@ -306,87 +503,29 @@ impl Spu {
                 self.stats.split_unaligned += 1;
             }
         }
-        let mut ready = t;
         let n_reqs = req.llc_requests(mem.unaligned_hw);
-        let all_local = (0..req.n_lines).all(|i| req.slices[i] == self.slice);
-        if all_local {
+        if (0..req.n_lines).all(|i| req.slices[i] == self.slice) {
             self.stats.local_loads += 1;
         } else {
             self.stats.remote_loads += 1;
         }
 
+        let mut ready = t;
         for r in 0..n_reqs {
             let slice = req.slices[r.min(req.n_lines - 1)];
-            // Request traversal to the slice (free when local). Remote
-            // messages pay NoC latency; the contended resource is the
-            // slice's single load/store port, arbitrated below.
-            let arrive = if slice == self.slice {
-                t
-            } else {
-                mem.noc.record(self.slice, slice);
-                t + mem.noc.latency(self.slice, slice, 8)
-            };
-            let start = mem.llc.claim_port(slice, arrive);
-            // Tag/data access. A merged unaligned access checks BOTH lines
-            // under one port slot (dual tag port).
-            let lines_here: &[u64] = if merged {
-                &req.lines[..2]
-            } else {
-                std::slice::from_ref(&req.lines[r])
-            };
-            let mut data_at = start + mem.spu_local_latency;
-            for (k, &line) in lines_here.iter().enumerate() {
-                // A merged access is ONE data-array access with a dual
-                // tag match: only the first line counts as the access.
-                let out = if k == 0 {
-                    mem.llc.access(slice, line, false)
-                } else {
-                    mem.llc.access_second_tag(slice, line)
-                };
-                if !out.hit {
-                    let done = mem.dram.access(line, false, start);
-                    if let Some(wb) = out.writeback {
-                        mem.dram.access(wb * mem.llc_cfg.line_bytes as u64, true, start);
-                    }
-                    data_at = data_at.max(done);
-                }
-            }
-            // Response traversal back.
-            let resp = if slice == self.slice {
-                data_at
-            } else {
-                mem.noc.record(slice, self.slice);
-                data_at + mem.noc.latency(slice, self.slice, 64)
-            };
-            ready = ready.max(resp);
-            if merged {
-                break; // one access covered both lines
-            }
+            // A merged unaligned access checks BOTH lines under one port
+            // slot (dual tag port).
+            let lines: &[u64] =
+                if merged { &req.lines[..2] } else { std::slice::from_ref(&req.lines[r]) };
+            ready = ready.max(mem.load_slice_request(self.slice, slice, lines, t, None));
         }
         ready
     }
 
     /// Timed 64 B store of the accumulator at `t`.
-    fn timed_store(&mut self, mem: &mut SharedMem, addr: u64, t: u64) -> u64 {
+    fn timed_store(&mut self, mem: &mut ShardedMem, addr: u64, t: u64) -> u64 {
         let slice = mem.mapper.slice_of(addr);
-        let arrive = if slice == self.slice {
-            t
-        } else {
-            mem.noc.record(self.slice, slice);
-            t + mem.noc.latency(self.slice, slice, 64)
-        };
-        let start = mem.llc.claim_port(slice, arrive);
-        let out = mem.llc.access(slice, addr & !(mem.llc_cfg.line_bytes as u64 - 1), true);
-        let mut done = start + mem.spu_local_latency;
-        if !out.hit {
-            // Write-allocate fill from DRAM (or lower): coherence §4.3 —
-            // the LLC obtains the line in writable state.
-            done = done.max(mem.dram.access(addr, false, start));
-        }
-        if let Some(wb) = out.writeback {
-            mem.dram.access(wb * mem.llc_cfg.line_bytes as u64, true, start);
-        }
-        done
+        mem.store_request(self.slice, slice, addr, t, None)
     }
 }
 
@@ -398,9 +537,9 @@ mod tests {
     use crate::mapping::StencilSegment;
     use crate::stencil::StencilKind;
 
-    fn setup(kind: StencilKind) -> (SimConfig, SharedMem, Spu) {
+    fn setup(kind: StencilKind) -> (SimConfig, ShardedMem, Spu) {
         let cfg = SimConfig::default();
-        let mut mem = SharedMem::new(&cfg, MappingPolicy::StencilSegment);
+        let mut mem = ShardedMem::new(&cfg, MappingPolicy::StencilSegment);
         let seg = mem.store.alloc_segment(4 << 20);
         mem.mapper.set_segment(StencilSegment::new(seg, 4 << 20));
         let prog = ProgramBuilder::new().build(&kind.descriptor()).unwrap();
@@ -472,6 +611,7 @@ mod tests {
         while spu.run_group(&mut mem) {}
         assert!(spu.stats.remote_loads > 0);
         assert!(mem.noc.messages > 0);
+        assert!(mem.llc.bank(1).remote_reqs > 0, "target slice saw remote requests");
     }
 
     #[test]
@@ -515,5 +655,67 @@ mod tests {
         // bound but still bounded.
         assert!(t >= 640, "too fast: {t}");
         assert!(t < 60_000, "too slow: {t}");
+    }
+
+    #[test]
+    fn functional_plus_replay_equals_run_group() {
+        // The split execution (phase 1 functional + phase 3 replay) must
+        // reproduce the serial path bit for bit on a single SPU, including
+        // timing, stats, and bank state.
+        for offset in [0u64, 8, 128 * 1024 - 8] {
+            let (_cfg, mut mem_a, mut spu_a) = setup(StencilKind::Jacobi1D);
+            let (_cfg, mut mem_b, mut spu_b) = setup(StencilKind::Jacobi1D);
+            let base = mem_a.store.base();
+            for i in 0..4096u64 {
+                let v = (i % 97) as f64;
+                mem_a.store.write_f64(base + i * 8, v);
+                mem_b.store.write_f64(base + i * 8, v);
+            }
+            let streams = [base + (1 << 20), base + offset + 8];
+            spu_a.init_streams(&streams);
+            spu_a.set_n_elements(300);
+            while spu_a.run_group(&mut mem_a) {}
+
+            spu_b.init_streams(&streams);
+            spu_b.set_n_elements(300);
+            // Phase 1: functional + trace.
+            let mut trace = SpuTrace::new(mem_b.llc_cfg.slices);
+            let mut round = 0u32;
+            while spu_b.run_group_functional(&mem_b, round, &mut trace) {
+                round += 1;
+            }
+            for run in trace.outs.drain(..) {
+                mem_b.store.write_slice(run.addr, &run.data);
+            }
+            // Phase 2: per-slice tag reconciliation through the REAL
+            // reconciliation code (single SPU → trivial merge order),
+            // against the same banks the serial path used.
+            let way_limit = mem_b.llc.way_limit();
+            let mut streams_out: Vec<TagOutStream> = Vec::new();
+            for (s, q) in trace.tagq.iter().enumerate() {
+                let outs = crate::coordinator::epoch::drain_slice_requests(
+                    mem_b.llc.bank_mut(s),
+                    std::slice::from_ref(q),
+                    way_limit,
+                );
+                streams_out.push(TagOutStream::new(outs.into_iter().next().unwrap()));
+            }
+            // Phase 3: timing replay, group by group.
+            let n_instrs = spu_b.program().instrs.len();
+            for g in 0..trace.groups as usize {
+                let recs = &trace.instrs[g * n_instrs..(g + 1) * n_instrs];
+                spu_b.replay_group_timing(&mut mem_b, recs, &mut streams_out);
+            }
+
+            assert_eq!(spu_a.stats, spu_b.stats, "offset {offset}");
+            assert_eq!(spu_a.finish_time(), spu_b.finish_time(), "offset {offset}");
+            assert_eq!(mem_a.llc.stats(), mem_b.llc.stats(), "offset {offset}");
+            assert_eq!(mem_a.dram.accesses, mem_b.dram.accesses, "offset {offset}");
+            assert_eq!(mem_a.noc.messages, mem_b.noc.messages, "offset {offset}");
+            let a_out = mem_a.store.read_vec(base + (1 << 20), 300);
+            let b_out = mem_b.store.read_vec(base + (1 << 20), 300);
+            assert_eq!(a_out, b_out, "offset {offset}");
+            assert!(streams_out.iter().all(|s| s.fully_consumed()));
+        }
     }
 }

@@ -1,0 +1,77 @@
+//! Slice-private memory-system state: everything one LLC slice owns.
+//!
+//! The epoch-parallel engine (see `rust/DESIGN-parallel.md`) relies on the
+//! fact that the contended per-slice resources — the tag/data bank and the
+//! single load/store port — are *independently owned*: during the tag
+//! reconciliation phase each [`SliceState`] is handed to exactly one worker
+//! thread, so slices are simulated concurrently without locks. The serial
+//! path uses the very same states through the
+//! [`SlicedLlc`](crate::mem::hierarchy::SlicedLlc) facade, which keeps the
+//! two execution modes byte-identical.
+
+use crate::mem::cache::Cache;
+use crate::mem::ratelimit::RateLimiter;
+
+/// One LLC slice's private state: tag/data bank, the single-ported bank
+/// scheduler, NoC injection-point counters, and this slice's share of the
+/// DRAM queue (the requests it issued on misses/writebacks).
+#[derive(Debug, Clone)]
+pub struct SliceState {
+    /// The slice's set-associative tag bank.
+    pub cache: Cache,
+    /// The slice's single load/store port (1 access/cycle, 64 B).
+    pub port: RateLimiter,
+    /// NoC port counter: requests that arrived from a remote SPU.
+    pub remote_reqs: u64,
+    /// DRAM-queue share: line fetches this slice issued on misses.
+    pub dram_reads: u64,
+    /// DRAM-queue share: dirty writebacks this slice issued.
+    pub dram_writes: u64,
+}
+
+impl SliceState {
+    pub fn new(slice_bytes: usize, ways: usize, line_bytes: usize) -> SliceState {
+        SliceState {
+            cache: Cache::new(slice_bytes, ways, line_bytes),
+            port: RateLimiter::new(1, 64),
+            remote_reqs: 0,
+            dram_reads: 0,
+            dram_writes: 0,
+        }
+    }
+
+    /// Reset tags, port clock, and counters (new run).
+    pub fn reset(&mut self) {
+        self.cache.reset();
+        self.port.reset();
+        self.remote_reqs = 0;
+        self.dram_reads = 0;
+        self.dram_writes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_state_is_clean() {
+        let s = SliceState::new(2 * 1024 * 1024, 16, 64);
+        assert_eq!(s.cache.stats.accesses(), 0);
+        assert_eq!((s.remote_reqs, s.dram_reads, s.dram_writes), (0, 0, 0));
+    }
+
+    #[test]
+    fn reset_clears_counters_and_tags() {
+        let mut s = SliceState::new(256, 2, 64);
+        s.cache.access(0x40, true);
+        s.port.claim(0);
+        s.remote_reqs = 3;
+        s.dram_reads = 2;
+        s.dram_writes = 1;
+        s.reset();
+        assert!(!s.cache.probe(0x40));
+        assert_eq!((s.remote_reqs, s.dram_reads, s.dram_writes), (0, 0, 0));
+        assert_eq!(s.port.grants, 0);
+    }
+}

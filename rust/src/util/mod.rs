@@ -11,3 +11,10 @@ pub mod stats;
 pub use fmt::{human_bytes, human_count, human_time_cycles};
 pub use rng::SplitMix64;
 pub use stats::{geomean, mean, median, median_abs_dev, Summary};
+
+/// Worker threads to use when the caller doesn't specify: one per
+/// available hardware thread. The single source of truth for every
+/// "auto" parallelism default (sweep jobs, golden bands, bench runs).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

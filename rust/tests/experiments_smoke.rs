@@ -2,8 +2,10 @@
 //! (L2-class) sweep must regenerate every table with sane shapes, and the
 //! report writers must produce parseable output.
 
-use casper::config::SimConfig;
+use casper::config::{SimConfig, SizeClass};
+use casper::coordinator::{run_casper_with, CasperOptions};
 use casper::harness::{run_experiments, Experiment, SweepOptions};
+use casper::stencil::{Domain, StencilKind};
 
 fn quick_report() -> casper::harness::Report {
     let cfg = SimConfig::default();
@@ -12,9 +14,63 @@ fn quick_report() -> casper::harness::Report {
     run_experiments(
         &cfg,
         &Experiment::ALL,
-        SweepOptions { quick: true, steps: 1, jobs: casper::harness::auto_jobs() },
+        SweepOptions { quick: true, steps: 1, jobs: casper::harness::auto_jobs(), spu_threads: 1 },
     )
     .unwrap()
+}
+
+#[test]
+fn runstats_digests_identical_across_spu_thread_counts() {
+    // The full quick experiment grid (every kernel, L2 class) must hash
+    // identically at --spu-threads 1, 4, and 16: the epoch-parallel
+    // engine may change wall time only, never a counter or an output bit.
+    let cfg = SimConfig::default();
+    for kind in StencilKind::ALL {
+        let d = Domain::for_level(kind, SizeClass::L2);
+        let digests: Vec<u64> = [1usize, 4, 16]
+            .into_iter()
+            .map(|spu_threads| {
+                run_casper_with(
+                    &cfg,
+                    kind,
+                    &d,
+                    1,
+                    CasperOptions { spu_threads, ..Default::default() },
+                )
+                .unwrap()
+                .digest()
+            })
+            .collect();
+        assert_eq!(digests[0], digests[1], "{kind}: 1 vs 4 threads");
+        assert_eq!(digests[0], digests[2], "{kind}: 1 vs 16 threads");
+    }
+}
+
+#[test]
+fn multistep_digests_identical_across_spu_thread_counts() {
+    // Multi-step runs cross epoch AND step boundaries (ping-pong swaps,
+    // boundary patching) — digests must still match.
+    let cfg = SimConfig::default();
+    for kind in [StencilKind::Jacobi2D, StencilKind::Heat3D] {
+        let d = Domain::tiny(kind);
+        let serial = run_casper_with(
+            &cfg,
+            kind,
+            &d,
+            4,
+            CasperOptions { spu_threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        let parallel = run_casper_with(
+            &cfg,
+            kind,
+            &d,
+            4,
+            CasperOptions { spu_threads: 16, epoch_rounds: 7, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(serial.digest(), parallel.digest(), "{kind}");
+    }
 }
 
 #[test]
