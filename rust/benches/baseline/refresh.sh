@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Install the BENCH_micro artifact from the latest green `main` CI run as
+# the committed baseline. This is the pull-based half of the refresh flow;
+# the push-based half is the `refresh-bench-baseline` workflow
+# (.github/workflows/bench-baseline.yml), which runs the bench on the CI
+# reference machine and commits the result directly.
+#
+# Requires the GitHub CLI (`gh`) authenticated against this repository.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+run_id=$(gh run list --workflow ci --branch main --status success --limit 1 \
+  --json databaseId --jq '.[0].databaseId')
+if [ -z "${run_id:-}" ] || [ "$run_id" = "null" ]; then
+  echo "error: no green main CI run found" >&2
+  exit 1
+fi
+
+tmp=$(mktemp -d)
+trap 'rm -rf "$tmp"' EXIT
+gh run download "$run_id" --name BENCH_micro --dir "$tmp"
+mv "$tmp/BENCH_micro.json" BENCH_micro.json
+echo "WARNING: the CI test-job artifact is produced under CASPER_BENCH_QUICK=1"
+echo "(1-2 samples per record) — fine for trend-watching, noisy as a blocking"
+echo "baseline. Prefer the refresh-bench-baseline workflow (full samples) for"
+echo "the committed record."
+echo "installed BENCH_micro.json from CI run $run_id — review the diff and commit:"
+echo "  git add rust/benches/baseline/BENCH_micro.json"
+echo "  git commit -m 'Refresh BENCH_micro baseline from CI run $run_id'"

@@ -3,7 +3,12 @@
 //! ```text
 //! casper experiments [--only fig10,table5] [--quick] [--steps N]
 //!                    [--jobs N] [--out-dir DIR] [--config FILE]
+//!                    [--kernel-file FILE]... [--extended-kernels]
+//!                    [--kernels id1,id2]
 //! casper run --kernel jacobi2d --level llc [--steps N] [--config FILE]
+//!            [--kernel-file FILE]...
+//! casper kernels list [--kernel-file FILE]...
+//! casper kernels show ID [--kernel-file FILE]...
 //! casper validate [--artifacts DIR]
 //! casper roofline
 //! casper info
@@ -16,7 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{SimConfig, SizeClass};
 use crate::harness::Experiment;
-use crate::stencil::StencilKind;
+use crate::stencil::KernelRegistry;
 
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,14 +37,28 @@ pub enum Command {
         spu_threads: Option<usize>,
         out_dir: Option<PathBuf>,
         config: Option<PathBuf>,
+        /// TOML kernel-spec files to load into the registry (each kernel
+        /// joins the sweep).
+        kernel_files: Vec<PathBuf>,
+        /// Include the extended built-in presets in the sweep.
+        extended_kernels: bool,
+        /// Explicit kernel-id selection (overrides the default set).
+        kernels: Option<Vec<String>>,
     },
     Run {
-        kernel: StencilKind,
+        /// Kernel id (preset or file-defined), resolved against the
+        /// registry at dispatch time.
+        kernel: String,
         level: SizeClass,
         steps: usize,
         /// Intra-run SPU worker threads (`None` = one per SPU).
         spu_threads: Option<usize>,
         config: Option<PathBuf>,
+        kernel_files: Vec<PathBuf>,
+    },
+    Kernels {
+        action: KernelsAction,
+        kernel_files: Vec<PathBuf>,
     },
     Validate {
         artifacts: Option<PathBuf>,
@@ -49,23 +68,40 @@ pub enum Command {
     Help,
 }
 
+/// `casper kernels` subcommands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum KernelsAction {
+    List,
+    Show(String),
+}
+
 pub const USAGE: &str = "\
 casper — near-cache stencil acceleration (full-system reproduction)
 
 USAGE:
   casper experiments [--only IDs] [--quick] [--steps N] [--jobs N]
                      [--spu-threads N] [--out-dir DIR] [--config FILE]
+                     [--kernel-file FILE]... [--extended-kernels]
+                     [--kernels id1,id2]
       Regenerate the paper's tables/figures. IDs: fig1 fig10 fig11 fig12
-      fig13 fig14 table4 table5 table6 (comma-separated; default all).
-      --jobs N runs the sweep on N worker threads (default: all hardware
-      threads; 1 = serial). --spu-threads N additionally parallelizes
-      INSIDE each Casper cell (default 1 here — the sweep already fans
-      out across cells). Reports are byte-identical at any combination.
-  casper run --kernel NAME --level {l2|llc|dram} [--steps N]
-             [--spu-threads N] [--config FILE]
+      fig13 fig14 table4 table5 table6 slices (comma-separated; default:
+      the paper's nine). --jobs N runs the sweep on N worker threads
+      (default: all hardware threads; 1 = serial). --spu-threads N
+      additionally parallelizes INSIDE each Casper cell (default 1 here —
+      the sweep already fans out across cells). Reports are byte-identical
+      at any combination. The kernel set defaults to the paper's six;
+      --extended-kernels adds the built-in extras, --kernel-file adds
+      TOML-defined kernels, --kernels selects an exact id list.
+  casper run --kernel ID --level {l2|llc|dram} [--steps N]
+             [--spu-threads N] [--config FILE] [--kernel-file FILE]...
       Run one stencil on Casper + all baselines and print the comparison.
+      ID may be any registry kernel: preset, extended, or file-defined.
       --spu-threads N runs the 16 SPUs epoch-parallel on N workers
       (default: one per SPU; 1 = the serial engine; identical results).
+  casper kernels list [--kernel-file FILE]...
+      List every registered kernel (presets + loaded spec files).
+  casper kernels show ID [--kernel-file FILE]...
+      Print one kernel's taps, domains, and compiled Casper program.
   casper validate [--artifacts DIR]
       Execute the AOT JAX/Pallas artifacts via PJRT and cross-check the
       simulator numerics (requires `make artifacts`).
@@ -76,7 +112,8 @@ USAGE:
   casper help
       This message.
 
-KERNELS: jacobi1d pts7_1d jacobi2d blur2d heat3d pts33_3d
+KERNELS: jacobi1d pts7_1d jacobi2d blur2d heat3d pts33_3d (paper);
+         hdiff star25_3d (extended); plus any --kernel-file specs.
 ";
 
 /// A tiny flag parser: `--key value` pairs plus boolean flags.
@@ -93,7 +130,7 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                let boolean = matches!(name, "quick" | "help");
+                let boolean = matches!(name, "quick" | "help" | "extended-kernels");
                 if boolean {
                     flags.push((name.to_string(), None));
                 } else {
@@ -117,6 +154,15 @@ impl Args {
             .rev()
             .find(|(n, _)| n == name)
             .and_then(|(_, v)| v.as_deref())
+    }
+
+    /// Every occurrence of a repeatable flag, in order.
+    fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(n, _)| n == name)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
     }
 
     fn has(&self, name: &str) -> bool {
@@ -145,7 +191,18 @@ pub fn parse(argv: &[String]) -> Result<Command> {
     }
     match cmd {
         "experiments" => {
-            rest.reject_unknown(&["only", "quick", "steps", "jobs", "spu-threads", "out-dir", "config"])?;
+            rest.reject_unknown(&[
+                "only",
+                "quick",
+                "steps",
+                "jobs",
+                "spu-threads",
+                "out-dir",
+                "config",
+                "kernel-file",
+                "extended-kernels",
+                "kernels",
+            ])?;
             let only = match rest.get("only") {
                 None => Experiment::ALL.to_vec(),
                 Some(s) => s
@@ -164,14 +221,23 @@ pub fn parse(argv: &[String]) -> Result<Command> {
                 spu_threads: parse_spu_threads(&rest)?,
                 out_dir: rest.get("out-dir").map(PathBuf::from),
                 config: rest.get("config").map(PathBuf::from),
+                kernel_files: kernel_file_flags(&rest),
+                extended_kernels: rest.has("extended-kernels"),
+                kernels: rest
+                    .get("kernels")
+                    .map(|s| s.split(',').map(|k| k.trim().to_string()).collect()),
             })
         }
         "run" => {
-            rest.reject_unknown(&["kernel", "level", "steps", "spu-threads", "config"])?;
-            let kernel = rest
-                .get("kernel")
-                .context("run requires --kernel")
-                .and_then(|s| StencilKind::parse(s).with_context(|| format!("unknown kernel '{s}'")))?;
+            rest.reject_unknown(&[
+                "kernel",
+                "level",
+                "steps",
+                "spu-threads",
+                "config",
+                "kernel-file",
+            ])?;
+            let kernel = rest.get("kernel").context("run requires --kernel")?.to_string();
             let level = rest
                 .get("level")
                 .context("run requires --level")
@@ -182,7 +248,23 @@ pub fn parse(argv: &[String]) -> Result<Command> {
                 steps: parse_steps(&rest)?,
                 spu_threads: parse_spu_threads(&rest)?,
                 config: rest.get("config").map(PathBuf::from),
+                kernel_files: kernel_file_flags(&rest),
             })
+        }
+        "kernels" => {
+            rest.reject_unknown(&["kernel-file"])?;
+            let action = match rest.positional.first().map(String::as_str) {
+                None | Some("list") => KernelsAction::List,
+                Some("show") => {
+                    let id = rest
+                        .positional
+                        .get(1)
+                        .context("kernels show requires a kernel id")?;
+                    KernelsAction::Show(id.clone())
+                }
+                Some(other) => bail!("unknown kernels subcommand '{other}' (list | show ID)"),
+            };
+            Ok(Command::Kernels { action, kernel_files: kernel_file_flags(&rest) })
         }
         "validate" => {
             rest.reject_unknown(&["artifacts"])?;
@@ -199,6 +281,10 @@ pub fn parse(argv: &[String]) -> Result<Command> {
         "help" | "--help" | "-h" => Ok(Command::Help),
         other => bail!("unknown command '{other}' (see `casper help`)"),
     }
+}
+
+fn kernel_file_flags(args: &Args) -> Vec<PathBuf> {
+    args.get_all("kernel-file").into_iter().map(PathBuf::from).collect()
 }
 
 fn parse_steps(args: &Args) -> Result<usize> {
@@ -242,6 +328,16 @@ pub fn load_config(path: Option<&PathBuf>) -> Result<SimConfig> {
     }
 }
 
+/// Build the kernel registry a command resolves ids against: every
+/// built-in preset (paper + extended) plus the `--kernel-file` specs.
+pub fn build_registry(kernel_files: &[PathBuf]) -> Result<KernelRegistry> {
+    let mut reg = KernelRegistry::builtin();
+    for f in kernel_files {
+        reg.load_file(f)?;
+    }
+    Ok(reg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,12 +350,13 @@ mod tests {
     fn parses_experiments() {
         let c = parse(&argv("experiments --only fig10,table5 --quick --out-dir out")).unwrap();
         match c {
-            Command::Experiments { only, quick, steps, jobs, out_dir, .. } => {
+            Command::Experiments { only, quick, steps, jobs, out_dir, kernels, .. } => {
                 assert_eq!(only, vec![Experiment::Fig10, Experiment::Table5]);
                 assert!(quick);
                 assert_eq!(steps, 1);
                 assert!(jobs >= 1, "default --jobs is auto (>= 1)");
                 assert_eq!(out_dir.unwrap().to_str().unwrap(), "out");
+                assert_eq!(kernels, None);
             }
             other => panic!("{other:?}"),
         }
@@ -299,11 +396,12 @@ mod tests {
         assert_eq!(
             c,
             Command::Run {
-                kernel: StencilKind::Jacobi2D,
+                kernel: "jacobi2d".to_string(),
                 level: SizeClass::Llc,
                 steps: 3,
                 spu_threads: None,
-                config: None
+                config: None,
+                kernel_files: Vec::new(),
             }
         );
     }
@@ -312,7 +410,62 @@ mod tests {
     fn run_requires_kernel_and_level() {
         assert!(parse(&argv("run --level llc")).is_err());
         assert!(parse(&argv("run --kernel jacobi2d")).is_err());
-        assert!(parse(&argv("run --kernel bogus --level llc")).is_err());
+        // Unknown kernel ids now surface at dispatch time (the registry
+        // may hold file-defined kernels the parser can't know about).
+        assert!(parse(&argv("run --kernel anything --level llc")).is_ok());
+        assert!(parse(&argv("run --kernel jacobi2d --level bogus")).is_err());
+    }
+
+    #[test]
+    fn parses_kernel_files_and_extended_flag() {
+        let c = parse(&argv(
+            "experiments --kernel-file a.toml --extended-kernels --kernel-file b.toml --kernels hdiff,jacobi2d",
+        ))
+        .unwrap();
+        match c {
+            Command::Experiments { kernel_files, extended_kernels, kernels, .. } => {
+                assert_eq!(kernel_files, vec![PathBuf::from("a.toml"), PathBuf::from("b.toml")]);
+                assert!(extended_kernels);
+                assert_eq!(kernels, Some(vec!["hdiff".to_string(), "jacobi2d".to_string()]));
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("run --kernel hdiff9 --level l2 --kernel-file k.toml")).unwrap() {
+            Command::Run { kernel, kernel_files, .. } => {
+                assert_eq!(kernel, "hdiff9");
+                assert_eq!(kernel_files, vec![PathBuf::from("k.toml")]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_kernels_subcommands() {
+        assert_eq!(
+            parse(&argv("kernels list")).unwrap(),
+            Command::Kernels { action: KernelsAction::List, kernel_files: Vec::new() }
+        );
+        assert_eq!(
+            parse(&argv("kernels")).unwrap(),
+            Command::Kernels { action: KernelsAction::List, kernel_files: Vec::new() }
+        );
+        assert_eq!(
+            parse(&argv("kernels show hdiff --kernel-file x.toml")).unwrap(),
+            Command::Kernels {
+                action: KernelsAction::Show("hdiff".into()),
+                kernel_files: vec![PathBuf::from("x.toml")],
+            }
+        );
+        assert!(parse(&argv("kernels show")).is_err());
+        assert!(parse(&argv("kernels frobnicate")).is_err());
+    }
+
+    #[test]
+    fn parses_slices_experiment_id() {
+        match parse(&argv("experiments --only slices")).unwrap() {
+            Command::Experiments { only, .. } => assert_eq!(only, vec![Experiment::Slices]),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -321,6 +474,7 @@ mod tests {
         assert!(parse(&argv("frobnicate")).is_err());
         assert!(parse(&argv("experiments --only fig99")).is_err());
         assert!(parse(&argv("experiments --steps 0")).is_err());
+        assert!(parse(&argv("kernels --extended-kernels")).is_err());
     }
 
     #[test]
@@ -328,5 +482,13 @@ mod tests {
         assert_eq!(parse(&[]).unwrap(), Command::Help);
         assert_eq!(parse(&argv("help")).unwrap(), Command::Help);
         assert_eq!(parse(&argv("run --help")).unwrap(), Command::Help);
+    }
+
+    #[test]
+    fn build_registry_has_builtins() {
+        let reg = build_registry(&[]).unwrap();
+        assert!(reg.get("jacobi2d").is_some());
+        assert!(reg.get("hdiff").is_some());
+        assert!(build_registry(&[PathBuf::from("/nonexistent/k.toml")]).is_err());
     }
 }

@@ -38,6 +38,15 @@ impl SizeClass {
             _ => None,
         }
     }
+
+    /// Slot in `[L2, LLC, DRAM]`-ordered tables (paper data, spec domains).
+    pub fn index(self) -> usize {
+        match self {
+            SizeClass::L2 => 0,
+            SizeClass::Llc => 1,
+            SizeClass::Dram => 2,
+        }
+    }
 }
 
 impl std::fmt::Display for SizeClass {

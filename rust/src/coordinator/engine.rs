@@ -7,7 +7,7 @@ use anyhow::Result;
 use crate::config::SimConfig;
 use crate::isa::ProgramBuilder;
 use crate::spu::Spu;
-use crate::stencil::{Domain, StencilDesc, StencilKind};
+use crate::stencil::{Domain, KernelSpec, StencilDesc, StencilKind};
 
 use super::api::CasperRuntime;
 use super::epoch;
@@ -121,14 +121,14 @@ pub fn partition(
     per_spu
 }
 
-/// Run one stencil on Casper for `steps` Jacobi iterations and return the
-/// cycle count, event counters, and the functional output grid.
+/// Run one preset stencil on Casper for `steps` Jacobi iterations and
+/// return the cycle count, event counters, and the functional output grid.
 pub fn run_casper(cfg: &SimConfig, kind: StencilKind, domain: &Domain, steps: usize) -> RunStats {
     run_casper_with(cfg, kind, domain, steps, CasperOptions::default())
         .expect("casper run failed")
 }
 
-/// Full-control variant.
+/// Full-control variant over a preset kernel.
 pub fn run_casper_with(
     cfg: &SimConfig,
     kind: StencilKind,
@@ -136,8 +136,19 @@ pub fn run_casper_with(
     steps: usize,
     opts: CasperOptions,
 ) -> Result<RunStats> {
-    let desc = kind.descriptor();
-    let program = ProgramBuilder::new().build(&desc)?;
+    run_casper_spec(cfg, &kind.spec(), domain, steps, opts)
+}
+
+/// The spec-driven primary entry point: run any [`KernelSpec`] — preset
+/// or TOML-defined — on Casper.
+pub fn run_casper_spec(
+    cfg: &SimConfig,
+    desc: &KernelSpec,
+    domain: &Domain,
+    steps: usize,
+    opts: CasperOptions,
+) -> Result<RunStats> {
+    let program = ProgramBuilder::new().build(desc)?;
     let mut rt = CasperRuntime::new(cfg);
     rt.mem.unaligned_hw = opts.unaligned_hw;
 
@@ -173,7 +184,7 @@ pub fn run_casper_with(
 
     let nx = domain.nx as i64;
     let nxy = (domain.nx * domain.ny) as i64;
-    let runs = interior_runs(&desc, domain);
+    let runs = interior_runs(desc, domain);
 
     let mut cycles_done = 0u64;
     // The work partition depends only on the A/B layout parity (the block
@@ -214,7 +225,7 @@ pub fn run_casper_with(
         // Host boundary policy: copy non-interior elements through and
         // repair streamed-over x-edge elements (surface work, not on the
         // accelerator's critical path — see DESIGN.md §5).
-        patch_boundary(&mut rt, &desc, domain, &layout);
+        patch_boundary(&mut rt, desc, domain, &layout);
 
         layout = layout.swapped();
     }
@@ -232,6 +243,18 @@ pub fn run_casper_with(
         spu_stats.add(&s.stats);
         per_spu_max = per_spu_max.max(s.stats.instrs);
     }
+    // Per-slice NoC/DRAM counters (tracked by `SliceState`; identical on
+    // the serial and epoch-parallel engines — both run the same request
+    // arithmetic in the same order).
+    let mut slice_remote_reqs = Vec::with_capacity(cfg.llc.slices);
+    let mut slice_dram_reads = Vec::with_capacity(cfg.llc.slices);
+    let mut slice_dram_writes = Vec::with_capacity(cfg.llc.slices);
+    for s in 0..cfg.llc.slices {
+        let bank = rt.mem.llc.bank(s);
+        slice_remote_reqs.push(bank.remote_reqs);
+        slice_dram_reads.push(bank.dram_reads);
+        slice_dram_writes.push(bank.dram_writes);
+    }
     Ok(RunStats {
         cycles: cycles_done,
         total_instrs: spu_stats.instrs,
@@ -242,6 +265,9 @@ pub fn run_casper_with(
         noc_messages: rt.mem.noc.messages,
         noc_hops: rt.mem.noc.total_hops,
         noc_contention_cycles: rt.mem.noc.contention_cycles,
+        slice_remote_reqs,
+        slice_dram_reads,
+        slice_dram_writes,
         output,
     })
 }
@@ -385,6 +411,9 @@ mod tests {
                     assert_eq!(serial.dram_accesses, par.dram_accesses, "{tag}");
                     assert_eq!(serial.noc_messages, par.noc_messages, "{tag}");
                     assert_eq!(serial.noc_hops, par.noc_hops, "{tag}");
+                    assert_eq!(serial.slice_remote_reqs, par.slice_remote_reqs, "{tag}");
+                    assert_eq!(serial.slice_dram_reads, par.slice_dram_reads, "{tag}");
+                    assert_eq!(serial.slice_dram_writes, par.slice_dram_writes, "{tag}");
                     assert_eq!(serial.output, par.output, "{tag}");
                     assert_eq!(serial.digest(), par.digest(), "{tag}");
                 }
@@ -586,6 +615,43 @@ mod tests {
         // And both still compute the right answer.
         let want = golden::run_kind(kind, &d, 1, CasperOptions::default().seed);
         assert!(base.output.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn slice_counters_sum_to_aggregates() {
+        // The per-slice DRAM shares partition the DRAM access count, and
+        // the per-slice NoC injection counters cover at least every
+        // remote SPU load — under both mapping policies.
+        for mapping in [MappingPolicy::StencilSegment, MappingPolicy::Baseline] {
+            let mut cfg = SimConfig::default();
+            cfg.mapping = mapping;
+            let kind = StencilKind::Jacobi2D;
+            let d = Domain::for_level(kind, SizeClass::L2);
+            let stats = run_casper(&cfg, kind, &d, 1);
+            assert_eq!(stats.slice_remote_reqs.len(), cfg.llc.slices);
+            let dram: u64 = stats.slice_dram_reads.iter().sum::<u64>()
+                + stats.slice_dram_writes.iter().sum::<u64>();
+            assert_eq!(dram, stats.dram_accesses, "{mapping:?}");
+            let remote: u64 = stats.slice_remote_reqs.iter().sum();
+            assert!(
+                remote >= stats.spu.remote_loads,
+                "{mapping:?}: {remote} slice-port remote reqs vs {} SPU remote loads",
+                stats.spu.remote_loads
+            );
+        }
+    }
+
+    #[test]
+    fn spec_and_kind_entry_points_agree() {
+        // `run_casper_spec` over the preset spec is the same simulation
+        // as the historical kind-keyed entry point.
+        let cfg = SimConfig::default();
+        let kind = StencilKind::Jacobi2D;
+        let d = Domain::tiny(kind);
+        let via_kind = run_casper(&cfg, kind, &d, 2);
+        let via_spec =
+            run_casper_spec(&cfg, &kind.spec(), &d, 2, CasperOptions::default()).unwrap();
+        assert_eq!(via_kind.digest(), via_spec.digest());
     }
 
     #[test]

@@ -20,8 +20,27 @@ pub struct RunStats {
     pub noc_messages: u64,
     pub noc_hops: u64,
     pub noc_contention_cycles: u64,
+    /// Per-slice NoC injection-point counter: requests that arrived from a
+    /// remote SPU (one entry per LLC slice, slice order).
+    pub slice_remote_reqs: Vec<u64>,
+    /// Per-slice DRAM-queue share: line fetches issued on misses.
+    pub slice_dram_reads: Vec<u64>,
+    /// Per-slice DRAM-queue share: dirty writebacks issued.
+    pub slice_dram_writes: Vec<u64>,
     /// Functional result grid.
     pub output: Grid,
+}
+
+/// Max-over-mean imbalance of a per-slice counter: `1.0` is perfectly
+/// even, `slices as f64` is fully concentrated on one slice, `0.0` means
+/// the counter never fired.
+pub fn imbalance(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 || counts.is_empty() {
+        return 0.0;
+    }
+    let mean = total as f64 / counts.len() as f64;
+    *counts.iter().max().unwrap() as f64 / mean
 }
 
 impl RunStats {
@@ -38,6 +57,17 @@ impl RunStats {
     /// LLC hit rate seen by the SPUs.
     pub fn llc_hit_rate(&self) -> f64 {
         self.llc.hit_rate()
+    }
+
+    /// NoC imbalance: busiest slice's remote-request count over the mean
+    /// (ROADMAP's NoC imbalance studies).
+    pub fn remote_req_imbalance(&self) -> f64 {
+        imbalance(&self.slice_remote_reqs)
+    }
+
+    /// DRAM-queue imbalance over the slices' read (miss-fetch) shares.
+    pub fn dram_read_imbalance(&self) -> f64 {
+        imbalance(&self.slice_dram_reads)
     }
 
     /// Order-stable FNV-1a digest of every counter and every output bit.
@@ -79,6 +109,12 @@ impl RunStats {
         h.mix(self.noc_messages);
         h.mix(self.noc_hops);
         h.mix(self.noc_contention_cycles);
+        for v in [&self.slice_remote_reqs, &self.slice_dram_reads, &self.slice_dram_writes] {
+            h.mix(v.len() as u64);
+            for &x in v.iter() {
+                h.mix(x);
+            }
+        }
         h.mix(self.output.nx as u64);
         h.mix(self.output.ny as u64);
         h.mix(self.output.nz as u64);
@@ -121,6 +157,9 @@ mod tests {
             noc_messages: 10,
             noc_hops: 11,
             noc_contention_cycles: 0,
+            slice_remote_reqs: vec![4, 0, 2, 6],
+            slice_dram_reads: vec![1, 1, 1, 1],
+            slice_dram_writes: vec![0, 0, 0, 0],
             output: Grid::random(8, 4, 1, 7),
         }
     }
@@ -135,5 +174,19 @@ mod tests {
         let mut c = stats();
         c.output.data[3] += 1e-15;
         assert_ne!(a.digest(), c.digest(), "single output ULP must move the digest");
+        let mut d = stats();
+        d.slice_remote_reqs[1] += 1;
+        assert_ne!(a.digest(), d.digest(), "slice counter change must move the digest");
+    }
+
+    #[test]
+    fn imbalance_metrics() {
+        assert_eq!(imbalance(&[]), 0.0);
+        assert_eq!(imbalance(&[0, 0, 0]), 0.0);
+        assert_eq!(imbalance(&[5, 5, 5, 5]), 1.0);
+        assert_eq!(imbalance(&[12, 0, 0, 0]), 4.0);
+        let s = stats();
+        assert_eq!(s.remote_req_imbalance(), 2.0); // max 6, mean 3
+        assert_eq!(s.dram_read_imbalance(), 1.0);
     }
 }

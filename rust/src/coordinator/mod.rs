@@ -18,6 +18,8 @@ pub mod layout;
 pub mod metrics;
 
 pub use api::CasperRuntime;
-pub use engine::{default_spu_threads, run_casper, run_casper_with, CasperOptions};
+pub use engine::{
+    default_spu_threads, run_casper, run_casper_spec, run_casper_with, CasperOptions,
+};
 pub use layout::SegmentLayout;
-pub use metrics::RunStats;
+pub use metrics::{imbalance, RunStats};

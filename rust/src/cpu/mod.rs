@@ -15,7 +15,7 @@
 use crate::config::SimConfig;
 use crate::mem::hierarchy::{CpuHierarchy, MemEvents};
 use crate::mapping::SliceMapper;
-use crate::stencil::{Domain, StencilDesc, StencilKind};
+use crate::stencil::{Domain, KernelSpec, StencilDesc, StencilKind};
 
 /// Outcome of a baseline-CPU run.
 #[derive(Debug, Clone)]
@@ -162,7 +162,7 @@ fn partition_strips(desc: &StencilDesc, domain: &Domain, cores: usize) -> Vec<Ve
     parts
 }
 
-/// Run the stencil on the baseline CPU model.
+/// Run a preset stencil on the baseline CPU model.
 pub fn run_cpu(cfg: &SimConfig, kind: StencilKind, domain: &Domain, steps: usize) -> CpuRunStats {
     run_cpu_with(cfg, kind, domain, steps, CpuOptions::default())
 }
@@ -174,7 +174,27 @@ pub fn run_cpu_with(
     steps: usize,
     opts: CpuOptions,
 ) -> CpuRunStats {
-    let desc = kind.descriptor();
+    run_cpu_spec_with(cfg, &kind.spec(), domain, steps, opts)
+}
+
+/// Spec-driven primary entry point: run any [`KernelSpec`] on the
+/// baseline CPU model.
+pub fn run_cpu_spec(
+    cfg: &SimConfig,
+    spec: &KernelSpec,
+    domain: &Domain,
+    steps: usize,
+) -> CpuRunStats {
+    run_cpu_spec_with(cfg, spec, domain, steps, CpuOptions::default())
+}
+
+pub fn run_cpu_spec_with(
+    cfg: &SimConfig,
+    desc: &KernelSpec,
+    domain: &Domain,
+    steps: usize,
+    opts: CpuOptions,
+) -> CpuRunStats {
     // The CPU baseline uses the conventional address mapping (§4.2).
     let mapper = SliceMapper::new(&cfg.llc, crate::config::MappingPolicy::Baseline);
     let mut hier = CpuHierarchy::new(cfg, mapper);
@@ -186,8 +206,8 @@ pub fn run_cpu_with(
     let b_base = a_base + array_bytes.next_multiple_of(2 << 20);
 
     let lanes = cfg.cpu.simd_lanes();
-    let shape = IterShape::of(&desc, domain, lanes);
-    let parts = partition_strips(&desc, domain, cfg.cpu.cores);
+    let shape = IterShape::of(desc, domain, lanes);
+    let parts = partition_strips(desc, domain, cfg.cpu.cores);
 
     if opts.warm {
         run_trace(cfg, &mut hier, &shape, &parts, domain, a_base, b_base, &opts, true, 1);

@@ -9,7 +9,7 @@
 //! bandwidth plus ≈1.5 µs of launch overhead.
 
 use crate::config::SimConfig;
-use crate::stencil::{Domain, StencilKind};
+use crate::stencil::{Domain, KernelSpec, StencilKind};
 
 /// Titan V parameters (public spec [165, 171]).
 #[derive(Debug, Clone, Copy)]
@@ -47,9 +47,13 @@ impl Default for GpuModel {
 impl GpuModel {
     /// Execution time for `steps` stencil steps, in seconds.
     pub fn time_s(&self, kind: StencilKind, domain: &Domain, steps: usize) -> f64 {
-        let desc = kind.descriptor();
+        self.time_s_spec(&kind.spec(), domain, steps)
+    }
+
+    /// Spec-driven twin of [`time_s`](Self::time_s).
+    pub fn time_s_spec(&self, spec: &KernelSpec, domain: &Domain, steps: usize) -> f64 {
         let points = domain.points() as f64;
-        let flops = points * desc.flops_per_point() as f64;
+        let flops = points * spec.flops_per_point() as f64;
         let bytes = points * self.bytes_per_point;
         let compute = flops / (self.fp64_flops * self.flop_efficiency);
         let traffic = bytes / (self.mem_bw * self.bw_efficiency);
@@ -59,7 +63,18 @@ impl GpuModel {
     /// Execution time expressed in baseline-CPU clock cycles (how Table 5
     /// reports it).
     pub fn cycles(&self, cfg: &SimConfig, kind: StencilKind, domain: &Domain, steps: usize) -> u64 {
-        (self.time_s(kind, domain, steps) * cfg.cpu.freq_ghz * 1e9).round() as u64
+        self.cycles_spec(cfg, &kind.spec(), domain, steps)
+    }
+
+    /// Spec-driven twin of [`cycles`](Self::cycles).
+    pub fn cycles_spec(
+        &self,
+        cfg: &SimConfig,
+        spec: &KernelSpec,
+        domain: &Domain,
+        steps: usize,
+    ) -> u64 {
+        (self.time_s_spec(spec, domain, steps) * cfg.cpu.freq_ghz * 1e9).round() as u64
     }
 }
 

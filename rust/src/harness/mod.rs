@@ -3,30 +3,38 @@
 //! Each experiment regenerates the paper artifact from the simulator and
 //! prints our measured value next to the paper's published value (appendix
 //! tables), with the ratio — the format EXPERIMENTS.md records.
+//!
+//! The sweep grid is `kernels × size classes`. The kernel set defaults to
+//! the paper's six ([`paper_kernels`]); [`run_experiments_with`] accepts
+//! any [`KernelSpec`] list — extended presets, TOML-defined kernels —
+//! and the paper-reference columns print `-` for kernels the paper never
+//! measured.
 
 pub mod paperdata;
 pub mod report;
 pub mod sweep;
 
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::area::{perf_per_area_improvement, CasperArea};
 use crate::config::{MappingPolicy, SimConfig, SizeClass, SpuPlacement};
-use crate::coordinator::{default_spu_threads, run_casper_with, CasperOptions, RunStats};
-use crate::cpu::{run_cpu, CpuRunStats};
+use crate::coordinator::{default_spu_threads, run_casper_spec, CasperOptions, RunStats};
+use crate::cpu::{run_cpu_spec, CpuRunStats};
 use crate::energy::{casper_energy, cpu_energy};
 use crate::gpu::GpuModel;
 use crate::pims::PimsModel;
 use crate::roofline;
-use crate::stencil::{Domain, StencilKind};
+use crate::stencil::{KernelId, KernelSpec, StencilKind};
 use crate::util::geomean;
 
 pub use report::{Report, Table};
 pub use sweep::{auto_jobs, parallel_map};
 
-/// The experiments — one per paper table/figure.
+/// The experiments — one per paper table/figure, plus repo-grown extras
+/// (not in [`Experiment::ALL`], so the default report stays the paper's).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Experiment {
     Fig1,
@@ -38,9 +46,12 @@ pub enum Experiment {
     Table4,
     Table5,
     Table6,
+    /// Per-slice NoC/DRAM imbalance (ROADMAP open item; `--only slices`).
+    Slices,
 }
 
 impl Experiment {
+    /// The paper's tables/figures — the default `experiments` selection.
     pub const ALL: [Experiment; 9] = [
         Experiment::Fig1,
         Experiment::Fig10,
@@ -53,6 +64,10 @@ impl Experiment {
         Experiment::Table6,
     ];
 
+    /// Extra experiments selectable via `--only` but not in the default
+    /// report (which must stay byte-stable against the paper set).
+    pub const EXTRA: [Experiment; 1] = [Experiment::Slices];
+
     pub fn id(self) -> &'static str {
         match self {
             Experiment::Fig1 => "fig1",
@@ -64,11 +79,16 @@ impl Experiment {
             Experiment::Table4 => "table4",
             Experiment::Table5 => "table5",
             Experiment::Table6 => "table6",
+            Experiment::Slices => "slices",
         }
     }
 
     pub fn parse(s: &str) -> Option<Experiment> {
-        Experiment::ALL.into_iter().find(|e| e.id() == s.trim().to_ascii_lowercase())
+        let q = s.trim().to_ascii_lowercase();
+        Experiment::ALL
+            .into_iter()
+            .chain(Experiment::EXTRA)
+            .find(|e| e.id() == q)
     }
 
     pub fn title(self) -> &'static str {
@@ -82,8 +102,14 @@ impl Experiment {
             Experiment::Table4 => "Dynamic instruction counts",
             Experiment::Table5 => "Execution cycles (CPU / GPU / Casper)",
             Experiment::Table6 => "Energy consumption (J)",
+            Experiment::Slices => "Per-slice NoC/DRAM imbalance",
         }
     }
+}
+
+/// The six paper kernels as specs, in paper order — the default sweep set.
+pub fn paper_kernels() -> Vec<Arc<KernelSpec>> {
+    StencilKind::ALL.iter().map(|k| k.spec()).collect()
 }
 
 /// Which size classes to sweep. `quick` limits to L2 (for CI-speed runs).
@@ -119,13 +145,15 @@ impl SweepOptions {
     }
 }
 
-/// Cache of (kernel, class) → (casper, cpu) runs shared by experiments.
+/// Cache of (kernel, class) → (casper, cpu) runs shared by experiments,
+/// keyed by interned [`KernelId`].
 pub struct SweepCache {
     cfg: SimConfig,
     opts: SweepOptions,
-    casper: HashMap<(StencilKind, SizeClass), RunStats>,
-    cpu: HashMap<(StencilKind, SizeClass), CpuRunStats>,
-    ablation: HashMap<(StencilKind, SizeClass), AblationPoint>,
+    kernels: Vec<Arc<KernelSpec>>,
+    casper: HashMap<(KernelId, SizeClass), RunStats>,
+    cpu: HashMap<(KernelId, SizeClass), CpuRunStats>,
+    ablation: HashMap<(KernelId, SizeClass), AblationPoint>,
     /// Cells simulated on the serial (lazy) path. After a `prefill` this
     /// should stay 0 — a nonzero count means [`needed_cells`] drifted
     /// from what the builders actually read (tested below).
@@ -144,12 +172,12 @@ pub struct AblationPoint {
 }
 
 /// One independent simulation cell of the sweep grid.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 enum Cell {
-    Casper(StencilKind, SizeClass),
-    Cpu(StencilKind, SizeClass),
+    Casper(Arc<KernelSpec>, SizeClass),
+    Cpu(Arc<KernelSpec>, SizeClass),
     /// Fig 14 near-L1 pair: (baseline mapping, +stencil mapping) cycles.
-    Ablation(StencilKind, SizeClass),
+    Ablation(Arc<KernelSpec>, SizeClass),
 }
 
 /// Result of one sweep cell (paired with its [`Cell`] by index).
@@ -160,15 +188,31 @@ enum CellOut {
 }
 
 impl SweepCache {
+    /// Cache over the default (paper six) kernel set.
     pub fn new(cfg: &SimConfig, opts: SweepOptions) -> SweepCache {
+        SweepCache::with_kernels(cfg, opts, &paper_kernels())
+    }
+
+    /// Cache over an explicit kernel set (specs in sweep order).
+    pub fn with_kernels(
+        cfg: &SimConfig,
+        opts: SweepOptions,
+        kernels: &[Arc<KernelSpec>],
+    ) -> SweepCache {
         SweepCache {
             cfg: cfg.clone(),
             opts,
+            kernels: kernels.to_vec(),
             casper: HashMap::new(),
             cpu: HashMap::new(),
             ablation: HashMap::new(),
             lazy_fills: 0,
         }
+    }
+
+    /// The sweep's kernel set (cheap `Arc` clones, in sweep order).
+    pub fn kernels(&self) -> Vec<Arc<KernelSpec>> {
+        self.kernels.clone()
     }
 
     /// Compute every cell the selected experiments will ask for, fanned
@@ -179,20 +223,22 @@ impl SweepCache {
         if self.opts.jobs <= 1 {
             return; // serial path: lazy fill, identical to the old flow
         }
-        let (want_casper, want_cpu, want_ablation) = needed_cells(which, self.opts);
-        // Enumerate cells in the fixed paper order (kind-major, then
+        let (want_casper, want_cpu, want_ablation) =
+            needed_cells(which, self.opts, &self.kernels);
+        // Enumerate cells in the fixed sweep order (kernel-major, then
         // class) so the work list — and thus any tie-breaking — is stable.
         let mut cells: Vec<Cell> = Vec::new();
-        for &kind in &StencilKind::ALL {
+        for spec in &self.kernels {
             for &level in &SizeClass::ALL {
-                if want_casper.contains(&(kind, level)) && !self.casper.contains_key(&(kind, level)) {
-                    cells.push(Cell::Casper(kind, level));
+                let key = (spec.id.clone(), level);
+                if want_casper.contains(&key) && !self.casper.contains_key(&key) {
+                    cells.push(Cell::Casper(spec.clone(), level));
                 }
-                if want_cpu.contains(&(kind, level)) && !self.cpu.contains_key(&(kind, level)) {
-                    cells.push(Cell::Cpu(kind, level));
+                if want_cpu.contains(&key) && !self.cpu.contains_key(&key) {
+                    cells.push(Cell::Cpu(spec.clone(), level));
                 }
-                if want_ablation.contains(&(kind, level)) && !self.ablation.contains_key(&(kind, level)) {
-                    cells.push(Cell::Ablation(kind, level));
+                if want_ablation.contains(&key) && !self.ablation.contains_key(&key) {
+                    cells.push(Cell::Ablation(spec.clone(), level));
                 }
             }
         }
@@ -200,88 +246,94 @@ impl SweepCache {
         let steps = self.opts.steps;
         let spu_threads = self.opts.spu_threads;
         let outs = sweep::parallel_map(cells.clone(), self.opts.jobs, |cell| match cell {
-            Cell::Casper(kind, level) => {
-                let d = Domain::for_level(kind, level);
-                CellOut::Casper(run_casper_cell(&cfg, kind, &d, steps, spu_threads))
+            Cell::Casper(spec, level) => {
+                let d = spec.domain(level);
+                CellOut::Casper(run_casper_cell(&cfg, &spec, &d, steps, spu_threads))
             }
-            Cell::Cpu(kind, level) => {
-                let d = Domain::for_level(kind, level);
-                CellOut::Cpu(run_cpu(&cfg, kind, &d, steps))
+            Cell::Cpu(spec, level) => {
+                let d = spec.domain(level);
+                CellOut::Cpu(run_cpu_spec(&cfg, &spec, &d, steps))
             }
-            Cell::Ablation(kind, level) => {
-                let d = Domain::for_level(kind, level);
+            Cell::Ablation(spec, level) => {
+                let d = spec.domain(level);
                 let mut near_l1 = cfg.clone();
                 near_l1.placement = SpuPlacement::NearL1;
                 near_l1.mapping = MappingPolicy::Baseline;
-                let a = run_casper_cell(&near_l1, kind, &d, steps, spu_threads).cycles;
+                let a = run_casper_cell(&near_l1, &spec, &d, steps, spu_threads).cycles;
                 let mut near_l1_mapped = near_l1.clone();
                 near_l1_mapped.mapping = MappingPolicy::StencilSegment;
-                let b = run_casper_cell(&near_l1_mapped, kind, &d, steps, spu_threads).cycles;
+                let b = run_casper_cell(&near_l1_mapped, &spec, &d, steps, spu_threads).cycles;
                 CellOut::Ablation(a, b)
             }
         });
         // Casper cells land first so ablation `full` backfill always finds
         // them; ablation entries are assembled in a second pass below.
-        let mut pending_ablation: Vec<((StencilKind, SizeClass), (u64, u64))> = Vec::new();
+        let mut pending_ablation: Vec<(Arc<KernelSpec>, SizeClass, (u64, u64))> = Vec::new();
         for (cell, out) in cells.into_iter().zip(outs) {
             match (cell, out) {
-                (Cell::Casper(k, l), CellOut::Casper(s)) => {
-                    self.casper.insert((k, l), s);
+                (Cell::Casper(s, l), CellOut::Casper(stats)) => {
+                    self.casper.insert((s.id.clone(), l), stats);
                 }
-                (Cell::Cpu(k, l), CellOut::Cpu(s)) => {
-                    self.cpu.insert((k, l), s);
+                (Cell::Cpu(s, l), CellOut::Cpu(stats)) => {
+                    self.cpu.insert((s.id.clone(), l), stats);
                 }
-                (Cell::Ablation(k, l), CellOut::Ablation(a, b)) => {
-                    pending_ablation.push(((k, l), (a, b)));
+                (Cell::Ablation(s, l), CellOut::Ablation(a, b)) => {
+                    pending_ablation.push((s, l, (a, b)));
                 }
                 _ => unreachable!("cell/result kind mismatch"),
             }
         }
-        for ((kind, level), (a, b)) in pending_ablation {
-            let full = self.casper(kind, level).cycles;
-            self.ablation
-                .insert((kind, level), AblationPoint { near_l1_base: a, near_l1_mapped: b, full });
+        for (spec, level, (a, b)) in pending_ablation {
+            let full = self.casper(&spec, level).cycles;
+            self.ablation.insert(
+                (spec.id.clone(), level),
+                AblationPoint { near_l1_base: a, near_l1_mapped: b, full },
+            );
         }
     }
 
-    pub fn casper(&mut self, kind: StencilKind, level: SizeClass) -> &RunStats {
-        if !self.casper.contains_key(&(kind, level)) {
+    pub fn casper(&mut self, spec: &KernelSpec, level: SizeClass) -> &RunStats {
+        let key = (spec.id.clone(), level);
+        if !self.casper.contains_key(&key) {
             self.lazy_fills += 1;
-            let d = Domain::for_level(kind, level);
-            let stats = run_casper_cell(&self.cfg, kind, &d, self.opts.steps, self.opts.spu_threads);
-            self.casper.insert((kind, level), stats);
+            let d = spec.domain(level);
+            let stats =
+                run_casper_cell(&self.cfg, spec, &d, self.opts.steps, self.opts.spu_threads);
+            self.casper.insert(key.clone(), stats);
         }
-        &self.casper[&(kind, level)]
+        &self.casper[&key]
     }
 
-    pub fn cpu(&mut self, kind: StencilKind, level: SizeClass) -> &CpuRunStats {
-        if !self.cpu.contains_key(&(kind, level)) {
+    pub fn cpu(&mut self, spec: &KernelSpec, level: SizeClass) -> &CpuRunStats {
+        let key = (spec.id.clone(), level);
+        if !self.cpu.contains_key(&key) {
             self.lazy_fills += 1;
-            let d = Domain::for_level(kind, level);
-            let stats = run_cpu(&self.cfg, kind, &d, self.opts.steps);
-            self.cpu.insert((kind, level), stats);
+            let d = spec.domain(level);
+            let stats = run_cpu_spec(&self.cfg, spec, &d, self.opts.steps);
+            self.cpu.insert(key.clone(), stats);
         }
-        &self.cpu[&(kind, level)]
+        &self.cpu[&key]
     }
 
-    pub fn ablation(&mut self, kind: StencilKind, level: SizeClass) -> AblationPoint {
-        if let Some(p) = self.ablation.get(&(kind, level)) {
+    pub fn ablation(&mut self, spec: &KernelSpec, level: SizeClass) -> AblationPoint {
+        let key = (spec.id.clone(), level);
+        if let Some(p) = self.ablation.get(&key) {
             return *p;
         }
         self.lazy_fills += 1;
-        let d = Domain::for_level(kind, level);
+        let d = spec.domain(level);
         let steps = self.opts.steps;
         let spu_threads = self.opts.spu_threads;
         let mut near_l1 = self.cfg.clone();
         near_l1.placement = SpuPlacement::NearL1;
         near_l1.mapping = MappingPolicy::Baseline;
-        let a = run_casper_cell(&near_l1, kind, &d, steps, spu_threads).cycles;
+        let a = run_casper_cell(&near_l1, spec, &d, steps, spu_threads).cycles;
         let mut near_l1_mapped = near_l1.clone();
         near_l1_mapped.mapping = MappingPolicy::StencilSegment;
-        let b = run_casper_cell(&near_l1_mapped, kind, &d, steps, spu_threads).cycles;
-        let full = self.casper(kind, level).cycles;
+        let b = run_casper_cell(&near_l1_mapped, spec, &d, steps, spu_threads).cycles;
+        let full = self.casper(spec, level).cycles;
         let p = AblationPoint { near_l1_base: a, near_l1_mapped: b, full };
-        self.ablation.insert((kind, level), p);
+        self.ablation.insert(key, p);
         p
     }
 }
@@ -289,28 +341,32 @@ impl SweepCache {
 /// One Casper cell, honouring the sweep's intra-run thread setting.
 fn run_casper_cell(
     cfg: &SimConfig,
-    kind: StencilKind,
-    d: &Domain,
+    spec: &KernelSpec,
+    d: &crate::stencil::Domain,
     steps: usize,
     spu_threads: usize,
 ) -> RunStats {
-    run_casper_with(cfg, kind, d, steps, CasperOptions { spu_threads, ..Default::default() })
+    run_casper_spec(cfg, spec, d, steps, CasperOptions { spu_threads, ..Default::default() })
         .expect("casper run failed")
 }
 
-type CellSet = HashSet<(StencilKind, SizeClass)>;
+type CellSet = HashSet<(KernelId, SizeClass)>;
 
 /// Exactly which (kernel, class) cells each selected experiment reads —
 /// mirrors the builders below, so prefill never simulates a cell a serial
 /// run would not have.
-fn needed_cells(which: &[Experiment], opts: SweepOptions) -> (CellSet, CellSet, CellSet) {
+fn needed_cells(
+    which: &[Experiment],
+    opts: SweepOptions,
+    kernels: &[Arc<KernelSpec>],
+) -> (CellSet, CellSet, CellSet) {
     let mut casper: CellSet = HashSet::new();
     let mut cpu: CellSet = HashSet::new();
     let mut ablation: CellSet = HashSet::new();
     let all = |set: &mut CellSet| {
-        for &kind in &StencilKind::ALL {
+        for spec in kernels {
             for &level in opts.classes() {
-                set.insert((kind, level));
+                set.insert((spec.id.clone(), level));
             }
         }
     };
@@ -318,15 +374,15 @@ fn needed_cells(which: &[Experiment], opts: SweepOptions) -> (CellSet, CellSet, 
         match e {
             Experiment::Fig1 => {
                 let level = if opts.quick { SizeClass::L2 } else { SizeClass::Llc };
-                for &kind in &StencilKind::ALL {
-                    cpu.insert((kind, level));
+                for spec in kernels {
+                    cpu.insert((spec.id.clone(), level));
                 }
             }
             Experiment::Fig10 | Experiment::Fig11 | Experiment::Table4 | Experiment::Table6 => {
                 all(&mut casper);
                 all(&mut cpu);
             }
-            Experiment::Fig12 | Experiment::Fig13 => all(&mut casper),
+            Experiment::Fig12 | Experiment::Fig13 | Experiment::Slices => all(&mut casper),
             Experiment::Fig14 => {
                 all(&mut ablation);
                 all(&mut casper); // the `full` configuration
@@ -348,16 +404,31 @@ fn ratio(ours: f64, paper: f64) -> String {
     }
 }
 
-/// Run a set of experiments, returning the report.
+/// Run a set of experiments over the default (paper six) kernel set.
 pub fn run_experiments(
     cfg: &SimConfig,
     which: &[Experiment],
     opts: SweepOptions,
 ) -> Result<Report> {
+    run_experiments_with(cfg, which, opts, &paper_kernels())
+}
+
+/// Run a set of experiments over an explicit kernel set — extended
+/// presets and TOML-defined kernels sweep exactly like the paper six;
+/// paper-reference cells print `-` where the paper has no number.
+pub fn run_experiments_with(
+    cfg: &SimConfig,
+    which: &[Experiment],
+    opts: SweepOptions,
+    kernels: &[Arc<KernelSpec>],
+) -> Result<Report> {
     if which.is_empty() {
         bail!("no experiments selected");
     }
-    let mut cache = SweepCache::new(cfg, opts);
+    if kernels.is_empty() {
+        bail!("no kernels selected");
+    }
+    let mut cache = SweepCache::with_kernels(cfg, opts, kernels);
     cache.prefill(which);
     let mut report = Report::default();
     for e in which {
@@ -371,6 +442,7 @@ pub fn run_experiments(
             Experiment::Table4 => table4(&mut cache, opts),
             Experiment::Table5 => table5(cfg, &mut cache, opts),
             Experiment::Table6 => table6(cfg, &mut cache, opts),
+            Experiment::Slices => slices_table(&mut cache, opts),
         };
         report.tables.push(table);
     }
@@ -378,6 +450,7 @@ pub fn run_experiments(
 }
 
 fn fig1(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
     let mut t = Table::new(
         "fig1",
         Experiment::Fig1.title(),
@@ -387,14 +460,11 @@ fn fig1(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
     // setting), or L2 in quick mode.
     let level = if opts.quick { SizeClass::L2 } else { SizeClass::Llc };
     let freq = cfg.cpu.freq_ghz;
-    let measured: Vec<f64> = StencilKind::ALL
-        .iter()
-        .map(|&k| cache.cpu(k, level).gflops(freq))
-        .collect();
+    let measured: Vec<f64> = kernels.iter().map(|s| cache.cpu(s, level).gflops(freq)).collect();
     let m = roofline::Machine::of(cfg);
-    for (i, p) in roofline::roofline(cfg, Some(&measured)).iter().enumerate() {
+    for (i, p) in roofline::roofline_specs(cfg, &kernels, Some(&measured)).iter().enumerate() {
         t.row(vec![
-            p.kind.name().into(),
+            p.name.clone(),
             format!("{:.3}", p.ai),
             format!("{:.1}", p.dram_bound / 1e9),
             format!("{:.1}", p.llc_bound / 1e9),
@@ -412,29 +482,34 @@ fn fig1(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
 }
 
 fn fig10(cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
     let mut t = Table::new(
         "fig10",
         Experiment::Fig10.title(),
         &["kernel", "class", "casper cycles", "cpu cycles", "speedup", "paper speedup", "ours/paper"],
     );
     let mut llc_speedups = Vec::new();
-    for &kind in &StencilKind::ALL {
+    for spec in &kernels {
         for &level in opts.classes() {
-            let c = cache.casper(kind, level).cycles;
-            let p = cache.cpu(kind, level).cycles;
+            let c = cache.casper(spec, level).cycles;
+            let p = cache.cpu(spec, level).cycles;
             let s = p as f64 / c as f64;
             if level == SizeClass::Llc {
                 llc_speedups.push(s);
             }
-            let paper = paperdata::paper_speedup(kind, level);
+            let (paper_cell, ratio_cell) =
+                match paperdata::paper_speedup_of(spec.id.as_str(), level) {
+                    Some(paper) => (format!("{paper:.2}x"), ratio(s, paper)),
+                    None => ("-".into(), "-".into()),
+                };
             t.row(vec![
-                kind.name().into(),
+                spec.name.clone(),
                 level.name().into(),
                 c.to_string(),
                 p.to_string(),
                 format!("{s:.2}x"),
-                format!("{paper:.2}x"),
-                ratio(s, paper),
+                paper_cell,
+                ratio_cell,
             ]);
         }
     }
@@ -448,22 +523,23 @@ fn fig10(cache: &mut SweepCache, opts: SweepOptions) -> Table {
 }
 
 fn fig11(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
     let mut t = Table::new(
         "fig11",
         Experiment::Fig11.title(),
         &["kernel", "class", "casper (J)", "cpu (J)", "normalized", "dynamic-only norm."],
     );
     let mut norms = Vec::new();
-    for &kind in &StencilKind::ALL {
+    for spec in &kernels {
         for &level in opts.classes() {
-            let ce = casper_energy(cfg, cache.casper(kind, level));
-            let pe = cpu_energy(cfg, cache.cpu(kind, level));
+            let ce = casper_energy(cfg, cache.casper(spec, level));
+            let pe = cpu_energy(cfg, cache.cpu(spec, level));
             let norm = ce.total_j() / pe.total_j();
             if level == SizeClass::Llc {
                 norms.push(norm);
             }
             t.row(vec![
-                kind.name().into(),
+                spec.name.clone(),
                 level.name().into(),
                 format!("{:.4e}", ce.total_j()),
                 format!("{:.4e}", pe.total_j()),
@@ -483,6 +559,7 @@ fn fig11(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
 }
 
 fn fig12(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
     let gpu = GpuModel::default();
     let area = CasperArea::of(cfg);
     let mut t = Table::new(
@@ -491,22 +568,24 @@ fn fig12(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
         &["kernel", "class", "perf vs GPU", "perf/area vs GPU", "paper perf/area basis"],
     );
     let mut improvements = Vec::new();
-    for &kind in &StencilKind::ALL {
+    for spec in &kernels {
         for &level in opts.classes() {
-            let d = Domain::for_level(kind, level);
-            let g = gpu.cycles(cfg, kind, &d, opts.steps);
-            let c = cache.casper(kind, level).cycles;
+            let d = spec.domain(level);
+            let g = gpu.cycles_spec(cfg, spec, &d, opts.steps);
+            let c = cache.casper(spec, level).cycles;
             // Fig 12 compares the 16 SPUs' area against the full die.
             let ppa = perf_per_area_improvement(c, area.spus_mm2, g, gpu.area_mm2);
             improvements.push(ppa);
-            let paper_ppa =
-                (gpu.area_mm2 / area.spus_mm2) / paperdata::paper_gpu_ratio(kind, level);
+            let paper_cell = match paperdata::paper_gpu_ratio_of(spec.id.as_str(), level) {
+                Some(r) => format!("{:.0}x", (gpu.area_mm2 / area.spus_mm2) / r),
+                None => "-".into(),
+            };
             t.row(vec![
-                kind.name().into(),
+                spec.name.clone(),
                 level.name().into(),
                 format!("{:.2}x", g as f64 / c as f64),
                 format!("{ppa:.0}x"),
-                format!("{paper_ppa:.0}x"),
+                paper_cell,
             ]);
         }
     }
@@ -520,6 +599,7 @@ fn fig12(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
 }
 
 fn fig13(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
     let pims = PimsModel::default();
     let mut t = Table::new(
         "fig13",
@@ -527,17 +607,17 @@ fn fig13(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
         &["kernel", "class", "casper cycles", "pims cycles", "speedup vs PIMS"],
     );
     let mut on_chip = Vec::new();
-    for &kind in &StencilKind::ALL {
+    for spec in &kernels {
         for &level in opts.classes() {
-            let d = Domain::for_level(kind, level);
-            let p = pims.cycles(cfg, kind, &d, opts.steps);
-            let c = cache.casper(kind, level).cycles;
+            let d = spec.domain(level);
+            let p = pims.cycles_spec(cfg, spec, &d, opts.steps);
+            let c = cache.casper(spec, level).cycles;
             let s = p as f64 / c as f64;
             if level != SizeClass::Dram {
                 on_chip.push(s);
             }
             t.row(vec![
-                kind.name().into(),
+                spec.name.clone(),
                 level.name().into(),
                 c.to_string(),
                 p.to_string(),
@@ -553,14 +633,15 @@ fn fig13(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
 }
 
 fn fig14(cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
     let mut t = Table::new(
         "fig14",
         Experiment::Fig14.title(),
         &["kernel", "class", "near-L1 cycles", "+mapping", "+near-LLC (full)", "mapping %", "near-cache %"],
     );
-    for &kind in &StencilKind::ALL {
+    for spec in &kernels {
         for &level in opts.classes() {
-            let p = cache.ablation(kind, level);
+            let p = cache.ablation(spec, level);
             // Fig 14 attribution: total speedup from baseline to full is
             // normalized to 100%; the mapping share is the step from the
             // baseline to +mapping, the placement share is the rest.
@@ -572,7 +653,7 @@ fn fig14(cache: &mut SweepCache, opts: SweepOptions) -> Table {
                 (m, 100.0 - m)
             };
             t.row(vec![
-                kind.name().into(),
+                spec.name.clone(),
                 level.name().into(),
                 p.near_l1_base.to_string(),
                 p.near_l1_mapped.to_string(),
@@ -587,26 +668,33 @@ fn fig14(cache: &mut SweepCache, opts: SweepOptions) -> Table {
 }
 
 fn table4(cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
     let mut t = Table::new(
         "table4",
         Experiment::Table4.title(),
         &["kernel", "class", "cpu instrs", "paper cpu", "ratio", "casper instrs/SPU", "paper casper", "ratio"],
     );
-    for &kind in &StencilKind::ALL {
-        let k = paperdata::kernel_index(kind);
+    for spec in &kernels {
         for &level in opts.classes() {
-            let c = paperdata::class_index(level);
-            let cpu = cache.cpu(kind, level).instrs;
-            let casper = cache.casper(kind, level).per_spu_instrs;
+            let cpu = cache.cpu(spec, level).instrs;
+            let casper = cache.casper(spec, level).per_spu_instrs;
+            let (p_cpu, r_cpu) = match paperdata::cpu_instrs_of(spec.id.as_str(), level) {
+                Some(v) => (v.to_string(), ratio(cpu as f64, v as f64)),
+                None => ("-".into(), "-".into()),
+            };
+            let (p_casper, r_casper) = match paperdata::casper_instrs_of(spec.id.as_str(), level) {
+                Some(v) => (v.to_string(), ratio(casper as f64, v as f64)),
+                None => ("-".into(), "-".into()),
+            };
             t.row(vec![
-                kind.name().into(),
+                spec.name.clone(),
                 level.name().into(),
                 cpu.to_string(),
-                paperdata::CPU_INSTRS[k][c].to_string(),
-                ratio(cpu as f64, paperdata::CPU_INSTRS[k][c] as f64),
+                p_cpu,
+                r_cpu,
                 casper.to_string(),
-                paperdata::CASPER_INSTRS[k][c].to_string(),
-                ratio(casper as f64, paperdata::CASPER_INSTRS[k][c] as f64),
+                p_casper,
+                r_casper,
             ]);
         }
     }
@@ -615,26 +703,27 @@ fn table4(cache: &mut SweepCache, opts: SweepOptions) -> Table {
 }
 
 fn table5(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
     let gpu = GpuModel::default();
     let mut t = Table::new(
         "table5",
         Experiment::Table5.title(),
         &["kernel", "class", "cpu", "paper cpu", "gpu", "paper gpu", "casper", "paper casper"],
     );
-    for &kind in &StencilKind::ALL {
-        let k = paperdata::kernel_index(kind);
+    for spec in &kernels {
         for &level in opts.classes() {
-            let c = paperdata::class_index(level);
-            let d = Domain::for_level(kind, level);
+            let d = spec.domain(level);
+            let id = spec.id.as_str();
+            let opt_cell = |v: Option<u64>| v.map_or_else(|| "-".into(), |x| x.to_string());
             t.row(vec![
-                kind.name().into(),
+                spec.name.clone(),
                 level.name().into(),
-                cache.cpu(kind, level).cycles.to_string(),
-                paperdata::CPU_CYCLES[k][c].to_string(),
-                gpu.cycles(cfg, kind, &d, opts.steps).to_string(),
-                paperdata::GPU_CYCLES[k][c].to_string(),
-                cache.casper(kind, level).cycles.to_string(),
-                paperdata::CASPER_CYCLES[k][c].to_string(),
+                cache.cpu(spec, level).cycles.to_string(),
+                opt_cell(paperdata::cpu_cycles_of(id, level)),
+                gpu.cycles_spec(cfg, spec, &d, opts.steps).to_string(),
+                opt_cell(paperdata::gpu_cycles_of(id, level)),
+                cache.casper(spec, level).cycles.to_string(),
+                opt_cell(paperdata::casper_cycles_of(id, level)),
             ]);
         }
     }
@@ -642,28 +731,72 @@ fn table5(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table 
 }
 
 fn table6(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
     let mut t = Table::new(
         "table6",
         Experiment::Table6.title(),
         &["kernel", "class", "cpu (J)", "paper cpu", "casper (J)", "paper casper"],
     );
-    for &kind in &StencilKind::ALL {
-        let k = paperdata::kernel_index(kind);
+    for spec in &kernels {
         for &level in opts.classes() {
-            let c = paperdata::class_index(level);
-            let pe = cpu_energy(cfg, cache.cpu(kind, level));
-            let ce = casper_energy(cfg, cache.casper(kind, level));
+            let id = spec.id.as_str();
+            let pe = cpu_energy(cfg, cache.cpu(spec, level));
+            let ce = casper_energy(cfg, cache.casper(spec, level));
+            let opt_cell = |v: Option<f64>| v.map_or_else(|| "-".into(), |x| format!("{x:.4e}"));
             t.row(vec![
-                kind.name().into(),
+                spec.name.clone(),
                 level.name().into(),
                 format!("{:.4e}", pe.dynamic_j()),
-                format!("{:.4e}", paperdata::CPU_ENERGY_J[k][c]),
+                opt_cell(paperdata::cpu_energy_of(id, level)),
                 format!("{:.4e}", ce.dynamic_j()),
-                format!("{:.4e}", paperdata::CASPER_ENERGY_J[k][c]),
+                opt_cell(paperdata::casper_energy_of(id, level)),
             ]);
         }
     }
     t.note("dynamic energy only, matching the paper's appendix Table 6 scale.");
+    t
+}
+
+fn slices_table(cache: &mut SweepCache, opts: SweepOptions) -> Table {
+    let kernels = cache.kernels();
+    let mut t = Table::new(
+        "slices",
+        Experiment::Slices.title(),
+        &["kernel", "class", "remote reqs", "remote imbalance", "dram reads", "dram writes", "dram-rd imbalance", "busiest slice"],
+    );
+    for spec in &kernels {
+        for &level in opts.classes() {
+            let s = cache.casper(spec, level);
+            let remote: u64 = s.slice_remote_reqs.iter().sum();
+            let dr: u64 = s.slice_dram_reads.iter().sum();
+            let dw: u64 = s.slice_dram_writes.iter().sum();
+            // `-` when no remote traffic exists: max_by_key would
+            // otherwise name the last slice of an all-zero vector.
+            let busiest = if remote == 0 {
+                "-".to_string()
+            } else {
+                s.slice_remote_reqs
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(_, &v)| v)
+                    .map(|(i, _)| i.to_string())
+                    .unwrap_or_else(|| "-".to_string())
+            };
+            let remote_imb = s.remote_req_imbalance();
+            let dram_imb = s.dram_read_imbalance();
+            t.row(vec![
+                spec.name.clone(),
+                level.name().into(),
+                remote.to_string(),
+                format!("{remote_imb:.2}"),
+                dr.to_string(),
+                dw.to_string(),
+                format!("{dram_imb:.2}"),
+                busiest,
+            ]);
+        }
+    }
+    t.note("per-slice SliceState counters (ROADMAP: NoC/DRAM imbalance studies). Imbalance = busiest slice / mean over all slices (1.00 = even, 0.00 = no traffic of that kind).");
     t
 }
 
@@ -679,13 +812,18 @@ impl ExperimentSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stencil::extended_presets;
 
     #[test]
     fn experiment_parse_roundtrip() {
-        for e in Experiment::ALL {
+        for e in Experiment::ALL.into_iter().chain(Experiment::EXTRA) {
             assert_eq!(Experiment::parse(e.id()), Some(e));
         }
         assert_eq!(Experiment::parse("nope"), None);
+        assert!(
+            !Experiment::ALL.contains(&Experiment::Slices),
+            "extras stay out of the default set"
+        );
     }
 
     #[test]
@@ -707,6 +845,13 @@ mod tests {
     fn empty_selection_errors() {
         let cfg = SimConfig::default();
         assert!(run_experiments(&cfg, &[], SweepOptions::default()).is_err());
+        assert!(run_experiments_with(
+            &cfg,
+            &[Experiment::Fig10],
+            SweepOptions::default(),
+            &[]
+        )
+        .is_err());
     }
 
     #[test]
@@ -733,14 +878,72 @@ mod tests {
     }
 
     #[test]
+    fn default_kernel_set_is_the_paper_six() {
+        // `run_experiments` must stay byte-identical to an explicit
+        // paper-six sweep — the registry refactor must not move the
+        // default report.
+        let cfg = SimConfig::default();
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 1, spu_threads: 1 };
+        let default = run_experiments(&cfg, &[Experiment::Fig10], opts).unwrap();
+        let explicit =
+            run_experiments_with(&cfg, &[Experiment::Fig10], opts, &paper_kernels()).unwrap();
+        assert_eq!(default.to_markdown(), explicit.to_markdown());
+    }
+
+    #[test]
+    fn extended_kernels_extend_the_tables() {
+        let cfg = SimConfig::default();
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
+        let mut kernels = paper_kernels();
+        kernels.extend(extended_presets().into_iter().map(Arc::new));
+        let report =
+            run_experiments_with(&cfg, &[Experiment::Fig10, Experiment::Table5], opts, &kernels)
+                .unwrap();
+        let t = report.get("fig10").unwrap();
+        assert_eq!(t.rows.len(), 8, "6 paper + 2 extended kernels at 1 class");
+        // Paper-reference cells are dashes for the non-paper kernels.
+        for row in &t.rows {
+            if row[0] == "HDiff 2D" || row[0] == "25-point 3D star" {
+                assert_eq!(row[5], "-", "{row:?}");
+                assert_eq!(row[6], "-", "{row:?}");
+            } else {
+                assert!(row[5].ends_with('x'), "{row:?}");
+            }
+        }
+        let t5 = report.get("table5").unwrap();
+        for row in &t5.rows {
+            if row[0] == "HDiff 2D" {
+                assert_eq!(row[3], "-");
+                assert_eq!(row[5], "-");
+                assert_eq!(row[7], "-");
+            }
+        }
+    }
+
+    #[test]
+    fn slices_experiment_regenerates() {
+        let cfg = SimConfig::default();
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 1, spu_threads: 1 };
+        let report = run_experiments(&cfg, &[Experiment::Slices], opts).unwrap();
+        let t = report.get("slices").unwrap();
+        assert_eq!(t.rows.len(), 6);
+        for row in &t.rows {
+            let imb: f64 = row[3].parse().unwrap();
+            assert!(imb >= 0.0, "{row:?}");
+        }
+    }
+
+    #[test]
     fn prefill_covers_every_builder_access() {
         // Guard against `needed_cells` drifting from the builders: after a
-        // parallel prefill of ALL experiments, running every builder must
-        // be pure cache hits — zero serial (lazy) simulations.
+        // parallel prefill of ALL experiments (+ extras), running every
+        // builder must be pure cache hits — zero serial (lazy) fills.
         let cfg = SimConfig::default();
         let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
         let mut cache = SweepCache::new(&cfg, opts);
-        cache.prefill(&Experiment::ALL);
+        let mut which: Vec<Experiment> = Experiment::ALL.to_vec();
+        which.extend(Experiment::EXTRA);
+        cache.prefill(&which);
         assert_eq!(cache.lazy_fills, 0, "prefill itself must not fall back to lazy fills");
         let _ = fig1(&cfg, &mut cache, opts);
         let _ = fig10(&mut cache, opts);
@@ -751,6 +954,7 @@ mod tests {
         let _ = table4(&mut cache, opts);
         let _ = table5(&cfg, &mut cache, opts);
         let _ = table6(&cfg, &mut cache, opts);
+        let _ = slices_table(&mut cache, opts);
         assert_eq!(
             cache.lazy_fills, 0,
             "a builder read a cell needed_cells() did not prefill — keep them in sync"
@@ -760,10 +964,11 @@ mod tests {
     #[test]
     fn needed_cells_are_minimal_for_fig1() {
         let opts = SweepOptions { quick: true, steps: 1, jobs: 4, spu_threads: 1 };
-        let (casper, cpu, abl) = needed_cells(&[Experiment::Fig1], opts);
+        let kernels = paper_kernels();
+        let (casper, cpu, abl) = needed_cells(&[Experiment::Fig1], opts, &kernels);
         assert!(casper.is_empty());
         assert!(abl.is_empty());
-        assert_eq!(cpu.len(), StencilKind::ALL.len());
-        assert!(cpu.iter().all(|&(_, l)| l == SizeClass::L2));
+        assert_eq!(cpu.len(), kernels.len());
+        assert!(cpu.iter().all(|(_, l)| *l == SizeClass::L2));
     }
 }

@@ -83,13 +83,64 @@ pub fn kernel_index(kind: StencilKind) -> usize {
     StencilKind::ALL.iter().position(|&k| k == kind).unwrap()
 }
 
-/// Index of a size class in `[L2, LLC, DRAM]` order.
+/// Index of a kernel *id* in paper order — `None` for kernels beyond the
+/// paper's six (extended presets, file-defined specs), whose report cells
+/// have no published reference column.
+pub fn kernel_index_of(id: &str) -> Option<usize> {
+    StencilKind::ALL.iter().position(|k| k.id() == id)
+}
+
+/// `table[kernel][class]` lookup by kernel id; `None` off the paper grid.
+fn lookup<T: Copy>(table: &[[T; 3]; 6], id: &str, level: SizeClass) -> Option<T> {
+    kernel_index_of(id).map(|k| table[k][class_index(level)])
+}
+
+pub fn cpu_instrs_of(id: &str, level: SizeClass) -> Option<u64> {
+    lookup(&CPU_INSTRS, id, level)
+}
+
+pub fn casper_instrs_of(id: &str, level: SizeClass) -> Option<u64> {
+    lookup(&CASPER_INSTRS, id, level)
+}
+
+pub fn cpu_cycles_of(id: &str, level: SizeClass) -> Option<u64> {
+    lookup(&CPU_CYCLES, id, level)
+}
+
+pub fn gpu_cycles_of(id: &str, level: SizeClass) -> Option<u64> {
+    lookup(&GPU_CYCLES, id, level)
+}
+
+pub fn casper_cycles_of(id: &str, level: SizeClass) -> Option<u64> {
+    lookup(&CASPER_CYCLES, id, level)
+}
+
+pub fn cpu_energy_of(id: &str, level: SizeClass) -> Option<f64> {
+    lookup(&CPU_ENERGY_J, id, level)
+}
+
+pub fn casper_energy_of(id: &str, level: SizeClass) -> Option<f64> {
+    lookup(&CASPER_ENERGY_J, id, level)
+}
+
+/// Paper speedup by kernel id; `None` for non-paper kernels.
+pub fn paper_speedup_of(id: &str, level: SizeClass) -> Option<f64> {
+    let cpu = cpu_cycles_of(id, level)?;
+    let casper = casper_cycles_of(id, level)?;
+    Some(cpu as f64 / casper as f64)
+}
+
+/// Paper Casper-vs-GPU slowdown by kernel id; `None` off the paper grid.
+pub fn paper_gpu_ratio_of(id: &str, level: SizeClass) -> Option<f64> {
+    let casper = casper_cycles_of(id, level)?;
+    let gpu = gpu_cycles_of(id, level)?;
+    Some(casper as f64 / gpu as f64)
+}
+
+/// Index of a size class in `[L2, LLC, DRAM]` order (the same slot order
+/// [`SizeClass::index`] defines — single source of truth).
 pub fn class_index(level: SizeClass) -> usize {
-    match level {
-        SizeClass::L2 => 0,
-        SizeClass::Llc => 1,
-        SizeClass::Dram => 2,
-    }
+    level.index()
 }
 
 /// Paper speedup of Casper over the CPU (derived from Table 5).
@@ -113,8 +164,25 @@ mod tests {
     fn indices_roundtrip() {
         for (i, k) in StencilKind::ALL.iter().enumerate() {
             assert_eq!(kernel_index(*k), i);
+            assert_eq!(kernel_index_of(k.id()), Some(i));
         }
         assert_eq!(class_index(SizeClass::Llc), 1);
+        assert_eq!(kernel_index_of("hdiff"), None);
+    }
+
+    #[test]
+    fn id_lookups_match_kind_lookups() {
+        for k in StencilKind::ALL {
+            for c in SizeClass::ALL {
+                assert_eq!(paper_speedup_of(k.id(), c), Some(paper_speedup(k, c)));
+                assert_eq!(paper_gpu_ratio_of(k.id(), c), Some(paper_gpu_ratio(k, c)));
+                assert_eq!(
+                    cpu_instrs_of(k.id(), c),
+                    Some(CPU_INSTRS[kernel_index(k)][class_index(c)])
+                );
+            }
+        }
+        assert_eq!(paper_speedup_of("star25_3d", SizeClass::Llc), None);
     }
 
     #[test]

@@ -66,9 +66,11 @@ pub mod util;
 /// Most-used types, re-exported for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{SimConfig, SizeClass};
-    pub use crate::coordinator::{run_casper, CasperRuntime, RunStats};
-    pub use crate::cpu::run_cpu;
+    pub use crate::coordinator::{run_casper, run_casper_spec, CasperRuntime, RunStats};
+    pub use crate::cpu::{run_cpu, run_cpu_spec};
     pub use crate::harness::{Experiment, ExperimentSet};
     pub use crate::isa::{CasperInstr, CasperProgram, ProgramBuilder};
-    pub use crate::stencil::{Domain, Grid, StencilKind};
+    pub use crate::stencil::{
+        Domain, Grid, KernelId, KernelRegistry, KernelSpec, StencilKind,
+    };
 }

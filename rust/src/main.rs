@@ -1,19 +1,22 @@
 //! `casper` — the leader binary: CLI entrypoint over the library.
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
 
 use casper::area::CasperArea;
-use casper::cli::{self, Command, USAGE};
-use casper::config::SimConfig;
-use casper::coordinator::run_casper_with;
-use casper::cpu::run_cpu;
+use casper::cli::{self, Command, KernelsAction, USAGE};
+use casper::config::{SimConfig, SizeClass};
+use casper::coordinator::run_casper_spec;
+use casper::cpu::run_cpu_spec;
 use casper::energy::{casper_energy, cpu_energy};
 use casper::gpu::GpuModel;
-use casper::harness::{run_experiments, SweepOptions};
+use casper::harness::{run_experiments_with, SweepOptions};
+use casper::isa::ProgramBuilder;
 use casper::pims::PimsModel;
 use casper::roofline;
 use casper::runtime::{default_artifacts_dir, StencilRuntime};
-use casper::stencil::{golden, Domain, StencilKind};
+use casper::stencil::{golden, KernelOrigin, KernelSpec};
 use casper::util::human_time_cycles;
 
 fn main() {
@@ -60,7 +63,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             for p in roofline::roofline(&cfg, None) {
                 println!(
                     "{:<14} {:>10.3} {:>16.1} {:>16.1}",
-                    p.kind.name(),
+                    p.name,
                     p.ai,
                     p.dram_bound / 1e9,
                     p.llc_bound / 1e9
@@ -68,27 +71,94 @@ fn dispatch(cmd: Command) -> Result<()> {
             }
             Ok(())
         }
-        Command::Run { kernel, level, steps, spu_threads, config } => {
+        Command::Kernels { action, kernel_files } => {
+            let reg = cli::build_registry(&kernel_files)?;
+            match action {
+                KernelsAction::List => {
+                    println!(
+                        "{:<12} {:<22} {:>4} {:>5} {:>8} {:>8}  {}",
+                        "id", "name", "dims", "taps", "radius", "streams", "origin"
+                    );
+                    for s in reg.specs() {
+                        let r = s.radius();
+                        println!(
+                            "{:<12} {:<22} {:>4} {:>5} {:>8} {:>8}  {}",
+                            s.id,
+                            s.name,
+                            s.dims,
+                            s.num_points(),
+                            format!("{},{},{}", r[0], r[1], r[2]),
+                            s.row_groups().len() + 1,
+                            s.origin.name()
+                        );
+                    }
+                    Ok(())
+                }
+                KernelsAction::Show(id) => {
+                    let s = reg.resolve(&id).with_context(|| {
+                        format!("unknown kernel '{id}' (see `casper kernels list`)")
+                    })?;
+                    show_kernel(&s)
+                }
+            }
+        }
+        Command::Run { kernel, level, steps, spu_threads, config, kernel_files } => {
             let cfg = cli::load_config(config.as_ref())?;
+            let reg = cli::build_registry(&kernel_files)?;
+            let spec = reg.resolve(&kernel).with_context(|| {
+                format!("unknown kernel '{kernel}' (see `casper kernels list`)")
+            })?;
             // Default: one worker per SPU (the epoch-parallel engine).
             let spu_threads = spu_threads.unwrap_or(cfg.spu.count);
-            run_one(&cfg, kernel, level, steps, spu_threads)
+            run_one(&cfg, &spec, level, steps, spu_threads)
         }
-        Command::Experiments { only, quick, steps, jobs, spu_threads, out_dir, config } => {
+        Command::Experiments {
+            only,
+            quick,
+            steps,
+            jobs,
+            spu_threads,
+            out_dir,
+            config,
+            kernel_files,
+            extended_kernels,
+            kernels,
+        } => {
             let cfg = cli::load_config(config.as_ref())?;
+            let registry = cli::build_registry(&kernel_files)?;
+            // Default sweep set: the paper six, plus the extended presets
+            // under --extended-kernels, plus every file-defined kernel.
+            // --kernels replaces the set with an explicit id list.
+            let selected: Vec<Arc<KernelSpec>> = match &kernels {
+                Some(ids) => ids
+                    .iter()
+                    .map(|id| {
+                        registry.resolve(id).with_context(|| {
+                            format!("unknown kernel '{id}' (see `casper kernels list`)")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                None => registry
+                    .specs()
+                    .iter()
+                    .filter(|s| extended_kernels || s.origin != KernelOrigin::Extended)
+                    .cloned()
+                    .collect(),
+            };
             // Default: serial cells (the sweep already fans out; env
             // CASPER_SPU_THREADS can override for CI matrices).
             let spu_threads =
                 spu_threads.unwrap_or_else(casper::coordinator::default_spu_threads);
             let opts = SweepOptions { quick, steps, jobs, spu_threads };
             eprintln!(
-                "running {} experiment(s), classes: {:?}, jobs: {}, spu-threads: {} ...",
+                "running {} experiment(s) over {} kernel(s), classes: {:?}, jobs: {}, spu-threads: {} ...",
                 only.len(),
+                selected.len(),
                 opts.classes(),
                 opts.jobs,
                 opts.spu_threads
             );
-            let report = run_experiments(&cfg, &only, opts)?;
+            let report = run_experiments_with(&cfg, &only, opts, &selected)?;
             print!("{}", report.to_markdown());
             if let Some(dir) = out_dir {
                 report.write_to(&dir)?;
@@ -127,18 +197,57 @@ fn dispatch(cmd: Command) -> Result<()> {
     }
 }
 
+/// `casper kernels show`: one kernel's full story.
+fn show_kernel(s: &KernelSpec) -> Result<()> {
+    let r = s.radius();
+    println!("{} ({}, origin: {})", s.name, s.id, s.origin.name());
+    println!(
+        "  dims {} | {} taps | radius [{},{},{}] | coef sum {:.6} | AI {:.3} FLOP/B",
+        s.dims,
+        s.num_points(),
+        r[0],
+        r[1],
+        r[2],
+        s.coef_sum(),
+        s.arithmetic_intensity()
+    );
+    println!("  domains:");
+    for level in SizeClass::ALL {
+        let d = s.domain(level);
+        println!(
+            "    {:<5} {:>16}  ({} points, {:.1} MB working set)",
+            level.name(),
+            d.to_string(),
+            d.points(),
+            d.working_set_bytes() as f64 / (1024.0 * 1024.0)
+        );
+    }
+    let groups = s.row_groups();
+    println!("  streams: {} ({} input rows + 1 output)", groups.len() + 1, groups.len());
+    let prog = ProgramBuilder::new().build(s)?;
+    println!(
+        "  program: {} instrs, {} constants — disassembly (c, s, dir, amt, clr, out, adv):",
+        prog.instrs.len(),
+        prog.constants.len()
+    );
+    for line in prog.disasm().lines() {
+        println!("    {line}");
+    }
+    Ok(())
+}
+
 /// `casper run`: one kernel on every engine, with the comparison table.
 fn run_one(
     cfg: &SimConfig,
-    kernel: StencilKind,
-    level: casper::config::SizeClass,
+    spec: &Arc<KernelSpec>,
+    level: SizeClass,
     steps: usize,
     spu_threads: usize,
 ) -> Result<()> {
-    let domain = Domain::for_level(kernel, level);
+    let domain = spec.domain(level);
     println!(
         "{} @ {} ({} points, {} steps, {} SPU worker thread(s))\n",
-        kernel.name(),
+        spec.name,
         domain,
         domain.points(),
         steps,
@@ -146,10 +255,10 @@ fn run_one(
     );
 
     let casper_opts = casper::coordinator::CasperOptions { spu_threads, ..Default::default() };
-    let casper_stats = run_casper_with(cfg, kernel, &domain, steps, casper_opts)?;
-    let cpu_stats = run_cpu(cfg, kernel, &domain, steps);
-    let gpu = GpuModel::default().cycles(cfg, kernel, &domain, steps);
-    let pims = PimsModel::default().cycles(cfg, kernel, &domain, steps);
+    let casper_stats = run_casper_spec(cfg, spec, &domain, steps, casper_opts)?;
+    let cpu_stats = run_cpu_spec(cfg, spec, &domain, steps);
+    let gpu = GpuModel::default().cycles_spec(cfg, spec, &domain, steps);
+    let pims = PimsModel::default().cycles_spec(cfg, spec, &domain, steps);
 
     println!("{:<10} {:>28}", "engine", "time");
     println!("{:<10} {:>28}", "casper", human_time_cycles(casper_stats.cycles, cfg.cpu.freq_ghz));
@@ -173,10 +282,22 @@ fn run_one(
         100.0 * casper_stats.llc_hit_rate(),
         casper_stats.spu.merged_unaligned,
     );
+    // Per-slice NoC/DRAM shares (ROADMAP: imbalance studies).
+    let remote: u64 = casper_stats.slice_remote_reqs.iter().sum();
+    let dram_rd: u64 = casper_stats.slice_dram_reads.iter().sum();
+    let dram_wr: u64 = casper_stats.slice_dram_writes.iter().sum();
+    println!(
+        "per-slice: {} remote reqs (imbalance {:.2}x) | DRAM {} reads / {} writes (rd imbalance {:.2}x)",
+        remote,
+        casper_stats.remote_req_imbalance(),
+        dram_rd,
+        dram_wr,
+        casper_stats.dram_read_imbalance(),
+    );
 
     // Functional check against the golden reference.
-    let want = golden::run_kind(
-        kernel,
+    let want = golden::run_spec(
+        spec,
         &domain,
         steps,
         casper::coordinator::CasperOptions::default().seed,

@@ -11,7 +11,7 @@
 //! wins on cache-resident sets and loses on DRAM-sized ones (Fig 13).
 
 use crate::config::SimConfig;
-use crate::stencil::{Domain, StencilKind};
+use crate::stencil::{Domain, KernelSpec, StencilKind};
 
 /// HMC-based PIMS parameters.
 #[derive(Debug, Clone, Copy)]
@@ -38,12 +38,22 @@ impl Default for PimsModel {
 impl PimsModel {
     /// One atomic add per stencil tap per grid point.
     pub fn atomic_ops(&self, kind: StencilKind, domain: &Domain, steps: usize) -> u64 {
-        (domain.points() * kind.descriptor().num_points() * steps) as u64
+        self.atomic_ops_spec(&kind.spec(), domain, steps)
+    }
+
+    /// Spec-driven twin of [`atomic_ops`](Self::atomic_ops).
+    pub fn atomic_ops_spec(&self, spec: &KernelSpec, domain: &Domain, steps: usize) -> u64 {
+        (domain.points() * spec.num_points() * steps) as u64
     }
 
     /// Execution time in seconds.
     pub fn time_s(&self, kind: StencilKind, domain: &Domain, steps: usize) -> f64 {
-        let ops = self.atomic_ops(kind, domain, steps) as f64;
+        self.time_s_spec(&kind.spec(), domain, steps)
+    }
+
+    /// Spec-driven twin of [`time_s`](Self::time_s).
+    pub fn time_s_spec(&self, spec: &KernelSpec, domain: &Domain, steps: usize) -> f64 {
+        let ops = self.atomic_ops_spec(spec, domain, steps) as f64;
         let throughput_bound = ops / self.atomic_ops_per_s;
         let bw_bound = ops * self.bytes_per_op / self.internal_bw;
         throughput_bound.max(bw_bound)
@@ -51,7 +61,18 @@ impl PimsModel {
 
     /// In baseline-CPU cycles, for Fig 13.
     pub fn cycles(&self, cfg: &SimConfig, kind: StencilKind, domain: &Domain, steps: usize) -> u64 {
-        (self.time_s(kind, domain, steps) * cfg.cpu.freq_ghz * 1e9).round() as u64
+        self.cycles_spec(cfg, &kind.spec(), domain, steps)
+    }
+
+    /// Spec-driven twin of [`cycles`](Self::cycles).
+    pub fn cycles_spec(
+        &self,
+        cfg: &SimConfig,
+        spec: &KernelSpec,
+        domain: &Domain,
+        steps: usize,
+    ) -> u64 {
+        (self.time_s_spec(spec, domain, steps) * cfg.cpu.freq_ghz * 1e9).round() as u64
     }
 }
 

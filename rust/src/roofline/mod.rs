@@ -1,8 +1,10 @@
 //! Roofline model (Fig 1): arithmetic intensity per kernel vs. the
 //! machine's compute peak and the DRAM / L3 bandwidth ceilings.
 
+use std::sync::Arc;
+
 use crate::config::SimConfig;
-use crate::stencil::StencilKind;
+use crate::stencil::{KernelSpec, StencilKind};
 
 /// The machine ceilings of Fig 1.
 #[derive(Debug, Clone, Copy)]
@@ -41,9 +43,10 @@ impl Machine {
 }
 
 /// One kernel's placement on the roofline.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct RooflinePoint {
-    pub kind: StencilKind,
+    /// Kernel display name (as printed in Fig 1's legend).
+    pub name: String,
     pub ai: f64,
     /// Attainable under the DRAM roof.
     pub dram_bound: f64,
@@ -53,17 +56,28 @@ pub struct RooflinePoint {
     pub measured: Option<f64>,
 }
 
-/// Build the Fig 1 dataset. `measured[i]` pairs with `StencilKind::ALL[i]`
-/// when given.
+/// Build the Fig 1 dataset over the six paper kernels. `measured[i]`
+/// pairs with `StencilKind::ALL[i]` when given.
 pub fn roofline(cfg: &SimConfig, measured: Option<&[f64]>) -> Vec<RooflinePoint> {
+    let specs: Vec<Arc<KernelSpec>> = StencilKind::ALL.iter().map(|k| k.spec()).collect();
+    roofline_specs(cfg, &specs, measured)
+}
+
+/// Build a roofline dataset over any kernel set. `measured[i]` pairs with
+/// `specs[i]` when given.
+pub fn roofline_specs(
+    cfg: &SimConfig,
+    specs: &[Arc<KernelSpec>],
+    measured: Option<&[f64]>,
+) -> Vec<RooflinePoint> {
     let m = Machine::of(cfg);
-    StencilKind::ALL
+    specs
         .iter()
         .enumerate()
-        .map(|(i, &kind)| {
-            let ai = kind.descriptor().arithmetic_intensity();
+        .map(|(i, spec)| {
+            let ai = spec.arithmetic_intensity();
             RooflinePoint {
-                kind,
+                name: spec.name.clone(),
                 ai,
                 dram_bound: m.attainable(ai, m.dram_bw),
                 llc_bound: m.attainable(ai, m.llc_bw),
@@ -96,14 +110,14 @@ mod tests {
         let cfg = SimConfig::default();
         let m = Machine::of(&cfg);
         for p in roofline(&cfg, None) {
-            assert!(p.ai < m.dram_knee(), "{}: AI right of DRAM knee", p.kind);
-            assert!(p.llc_bound > p.dram_bound, "{}", p.kind);
-            assert!(p.llc_bound < m.peak_flops, "{}: LLC roof above peak", p.kind);
+            assert!(p.ai < m.dram_knee(), "{}: AI right of DRAM knee", p.name);
+            assert!(p.llc_bound > p.dram_bound, "{}", p.name);
+            assert!(p.llc_bound < m.peak_flops, "{}: LLC roof above peak", p.name);
             // <20% of peak even at the LLC roof — the paper's headline.
             assert!(
                 p.llc_bound < 0.2 * m.peak_flops * 6.0,
                 "{}: implausibly high bound",
-                p.kind
+                p.name
             );
         }
     }

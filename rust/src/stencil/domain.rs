@@ -11,41 +11,44 @@ pub struct Domain {
     pub nz: usize,
 }
 
+/// Table 3: default domain size for a dimensionality and size class —
+/// the built-in specs' domains; file-defined specs may override per class.
+///
+/// | Level | 1D        | 2D        | 3D          |
+/// |-------|-----------|-----------|-------------|
+/// | L2    | 131,072   | 512×256   | 64×64×32    |
+/// | L3    | 1,048,576 | 1024×1024 | 128×128×64  |
+/// | DRAM  | 4,194,304 | 2048×2048 | 256×256×64  |
+pub fn table3(dims: usize, level: SizeClass) -> Domain {
+    match (dims, level) {
+        (1, SizeClass::L2) => Domain::new(131_072, 1, 1),
+        (1, SizeClass::Llc) => Domain::new(1_048_576, 1, 1),
+        (1, SizeClass::Dram) => Domain::new(4_194_304, 1, 1),
+        (2, SizeClass::L2) => Domain::new(512, 256, 1),
+        (2, SizeClass::Llc) => Domain::new(1024, 1024, 1),
+        (2, SizeClass::Dram) => Domain::new(2048, 2048, 1),
+        (3, SizeClass::L2) => Domain::new(64, 64, 32),
+        (3, SizeClass::Llc) => Domain::new(128, 128, 64),
+        (3, SizeClass::Dram) => Domain::new(256, 256, 64),
+        _ => unreachable!("dims is always 1..=3"),
+    }
+}
+
 impl Domain {
     pub const fn new(nx: usize, ny: usize, nz: usize) -> Domain {
         Domain { nx, ny, nz }
     }
 
-    /// Table 3: domain size for a stencil's dimensionality and size class.
-    ///
-    /// | Level | 1D        | 2D        | 3D          |
-    /// |-------|-----------|-----------|-------------|
-    /// | L2    | 131,072   | 512×256   | 64×64×32    |
-    /// | L3    | 1,048,576 | 1024×1024 | 128×128×64  |
-    /// | DRAM  | 4,194,304 | 2048×2048 | 256×256×64  |
+    /// Table-3 domain of a paper kernel (see [`table3`]; preset specs
+    /// carry the same values via [`KernelSpec::domain`](super::KernelSpec::domain)).
     pub fn for_level(kind: StencilKind, level: SizeClass) -> Domain {
-        match (kind.dims(), level) {
-            (1, SizeClass::L2) => Domain::new(131_072, 1, 1),
-            (1, SizeClass::Llc) => Domain::new(1_048_576, 1, 1),
-            (1, SizeClass::Dram) => Domain::new(4_194_304, 1, 1),
-            (2, SizeClass::L2) => Domain::new(512, 256, 1),
-            (2, SizeClass::Llc) => Domain::new(1024, 1024, 1),
-            (2, SizeClass::Dram) => Domain::new(2048, 2048, 1),
-            (3, SizeClass::L2) => Domain::new(64, 64, 32),
-            (3, SizeClass::Llc) => Domain::new(128, 128, 64),
-            (3, SizeClass::Dram) => Domain::new(256, 256, 64),
-            _ => unreachable!("dims is always 1..=3"),
-        }
+        table3(kind.dims(), level)
     }
 
     /// A small domain of the right dimensionality for unit tests — big
-    /// enough for every stencil's halo, small enough to simulate fast.
+    /// enough for the stencil's halo, small enough to simulate fast.
     pub fn tiny(kind: StencilKind) -> Domain {
-        match kind.dims() {
-            1 => Domain::new(256, 1, 1),
-            2 => Domain::new(32, 16, 1),
-            _ => Domain::new(16, 12, 8),
-        }
+        kind.spec().tiny_domain()
     }
 
     pub fn points(&self) -> usize {

@@ -23,7 +23,7 @@
 //! +fma` it lowers to a libm call — slower, and bitwise-divergent from the
 //! SPU model's `acc += c * v`.)
 
-use super::{Domain, Grid, StencilDesc, StencilKind};
+use super::{Domain, Grid, KernelSpec, StencilDesc, StencilKind};
 use crate::util::auto_threads;
 
 /// Apply one stencil step: read `src`, write `dst` (disjoint arrays,
@@ -168,11 +168,16 @@ pub fn run(desc: &StencilDesc, initial: &Grid, steps: usize) -> Grid {
     a
 }
 
-/// Convenience: run a kernel at a domain from a seeded random grid.
+/// Convenience: run a preset kernel at a domain from a seeded random grid.
 pub fn run_kind(kind: StencilKind, domain: &Domain, steps: usize, seed: u64) -> Grid {
-    let desc = kind.descriptor();
+    run_spec(&kind.spec(), domain, steps, seed)
+}
+
+/// Convenience: run any [`KernelSpec`] at a domain from a seeded random
+/// grid — the spec-driven twin of [`run_kind`].
+pub fn run_spec(spec: &KernelSpec, domain: &Domain, steps: usize, seed: u64) -> Grid {
     let g = domain.alloc_random(seed);
-    run(&desc, &g, steps)
+    run(spec, &g, steps)
 }
 
 #[cfg(test)]

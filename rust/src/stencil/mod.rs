@@ -1,8 +1,11 @@
-//! Stencil definitions: the six kernels of §7.2, their coefficient
-//! patterns, grids, domain sizes (Table 3), and a scalar golden reference.
+//! Stencil definitions: the open, data-driven kernel layer.
 //!
-//! All six are Jacobi-style stencils (disjoint read/write arrays) over
-//! double-precision grids, matching the paper:
+//! [`KernelSpec`] (see [`spec`]) is the single source of truth for a
+//! kernel — name, id, taps, dimensionality, per-size-class domain sizes
+//! (see [`crate::config::SizeClass`]) — and [`KernelRegistry`] holds
+//! the built-in presets plus any TOML-defined kernels. The six kernels of
+//! the paper's §7.2 remain available through the [`StencilKind`] enum,
+//! which is now just a preset constructor over the registry:
 //!
 //! | kernel       | dims | points | source                         |
 //! |--------------|------|--------|--------------------------------|
@@ -13,19 +16,35 @@
 //! | 7-point 3D   | 3    | 7      | PolyBench `heat-3d` (1 stage)  |
 //! | 33-point 3D  | 3    | 33     | high-order 3D stencil [43,175] |
 //!
-//! The 33-point stencil is a 27-point box plus the six distance-2 axis
-//! points — a standard higher-order discretization shape; the paper does
-//! not publish the exact coefficient set, so we use a normalized symmetric
-//! one (documented in DESIGN.md §3).
+//! All are Jacobi-style stencils (disjoint read/write arrays) over
+//! double-precision grids. The 33-point stencil is a 27-point box plus
+//! the six distance-2 axis points; the paper does not publish the exact
+//! coefficient set, so we use a normalized symmetric one (DESIGN.md §3).
+//!
+//! Beyond the paper, [`spec::extended_presets`] ships `hdiff` (NERO-style
+//! horizontal diffusion) and `star25_3d` (25-point high-order 3D star),
+//! and user kernels load from TOML files — see DESIGN.md, "Kernel
+//! registry".
 
 pub mod domain;
 pub mod golden;
 pub mod grid;
+pub mod spec;
+
+use std::sync::{Arc, OnceLock};
 
 pub use domain::Domain;
 pub use grid::Grid;
+pub use spec::{
+    extended_presets, KernelId, KernelOrigin, KernelRegistry, KernelSpec, RowGroup, StencilPoint,
+};
 
-/// The six stencil kernels evaluated in the paper (§7.2).
+/// Historical name for a kernel's compute pattern; the spec now carries
+/// identity and domains too, so the two types merged.
+pub type StencilDesc = KernelSpec;
+
+/// The six stencil kernels evaluated in the paper (§7.2), kept as a thin
+/// preset constructor over [`KernelSpec`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum StencilKind {
     Jacobi1D,
@@ -59,7 +78,7 @@ impl StencilKind {
         }
     }
 
-    /// Short machine-friendly id (artifact file names, CLI).
+    /// Short machine-friendly id (artifact file names, CLI, registry key).
     pub fn id(self) -> &'static str {
         match self {
             StencilKind::Jacobi1D => "jacobi1d",
@@ -87,9 +106,16 @@ impl StencilKind {
         }
     }
 
-    /// The coefficient pattern.
+    /// The shared preset spec (cheap `Arc` clone; built once per process).
+    pub fn spec(self) -> Arc<KernelSpec> {
+        static PAPER: OnceLock<[Arc<KernelSpec>; 6]> = OnceLock::new();
+        let all = PAPER.get_or_init(|| StencilKind::ALL.map(|k| Arc::new(spec::paper_preset(k))));
+        all[self as usize].clone()
+    }
+
+    /// An owned copy of the preset (the historical `descriptor()` shape).
     pub fn descriptor(self) -> StencilDesc {
-        StencilDesc::of(self)
+        (*self.spec()).clone()
     }
 }
 
@@ -97,193 +123,6 @@ impl std::fmt::Display for StencilKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.name())
     }
-}
-
-/// One tap of a stencil: offset (in elements) and coefficient.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct StencilPoint {
-    pub dx: i64,
-    pub dy: i64,
-    pub dz: i64,
-    pub coef: f64,
-}
-
-impl StencilPoint {
-    pub const fn new(dx: i64, dy: i64, dz: i64, coef: f64) -> Self {
-        StencilPoint { dx, dy, dz, coef }
-    }
-}
-
-/// Full description of a stencil's compute pattern.
-#[derive(Debug, Clone, PartialEq)]
-pub struct StencilDesc {
-    pub kind: StencilKind,
-    pub points: Vec<StencilPoint>,
-}
-
-impl StencilDesc {
-    pub fn of(kind: StencilKind) -> StencilDesc {
-        let points = match kind {
-            StencilKind::Jacobi1D => {
-                // PolyBench: B[i] = (A[i-1] + A[i] + A[i+1]) / 3
-                let c = 1.0 / 3.0;
-                vec![
-                    StencilPoint::new(-1, 0, 0, c),
-                    StencilPoint::new(0, 0, 0, c),
-                    StencilPoint::new(1, 0, 0, c),
-                ]
-            }
-            StencilKind::Points7_1D => {
-                // Holewinski et al. 7-point 1D: symmetric radius-3 average.
-                let c = 1.0 / 7.0;
-                (-3..=3).map(|d| StencilPoint::new(d, 0, 0, c)).collect()
-            }
-            StencilKind::Jacobi2D => {
-                // Paper §2.1 / Fig 8: 5-point, every tap × 0.2.
-                let c = 0.2;
-                vec![
-                    StencilPoint::new(0, -1, 0, c),
-                    StencilPoint::new(-1, 0, 0, c),
-                    StencilPoint::new(0, 0, 0, c),
-                    StencilPoint::new(1, 0, 0, c),
-                    StencilPoint::new(0, 1, 0, c),
-                ]
-            }
-            StencilKind::Blur2D => {
-                // Canonical 5×5 Gaussian blur (σ≈1), integer kernel / 273.
-                const W: [[f64; 5]; 5] = [
-                    [1.0, 4.0, 7.0, 4.0, 1.0],
-                    [4.0, 16.0, 26.0, 16.0, 4.0],
-                    [7.0, 26.0, 41.0, 26.0, 7.0],
-                    [4.0, 16.0, 26.0, 16.0, 4.0],
-                    [1.0, 4.0, 7.0, 4.0, 1.0],
-                ];
-                let mut pts = Vec::with_capacity(25);
-                for (j, row) in W.iter().enumerate() {
-                    for (i, w) in row.iter().enumerate() {
-                        pts.push(StencilPoint::new(i as i64 - 2, j as i64 - 2, 0, w / 273.0));
-                    }
-                }
-                pts
-            }
-            StencilKind::Heat3D => {
-                // 7-point heat diffusion: 0.4·center + 0.1·(6 face points).
-                let mut pts = vec![StencilPoint::new(0, 0, 0, 0.4)];
-                for (dx, dy, dz) in [
-                    (-1, 0, 0),
-                    (1, 0, 0),
-                    (0, -1, 0),
-                    (0, 1, 0),
-                    (0, 0, -1),
-                    (0, 0, 1),
-                ] {
-                    pts.push(StencilPoint::new(dx, dy, dz, 0.1));
-                }
-                pts
-            }
-            StencilKind::Points33_3D => {
-                // 27-point box + 6 distance-2 axis points = 33 taps.
-                // Weights by tap class, normalized to sum to 1 (total
-                // weight 8 + 6·3 + 12·1.5 + 8·0.5 + 6·1 = 54):
-                //   center 8/54, face(6) 3/54, edge(12) 1.5/54,
-                //   corner(8) 0.5/54, axis-2(6) 1/54.
-                let mut pts = Vec::with_capacity(33);
-                for dz in -1i64..=1 {
-                    for dy in -1i64..=1 {
-                        for dx in -1i64..=1 {
-                            let dist = dx.abs() + dy.abs() + dz.abs();
-                            let w = match dist {
-                                0 => 8.0,
-                                1 => 3.0,
-                                2 => 1.5,
-                                _ => 0.5,
-                            } / 54.0;
-                            pts.push(StencilPoint::new(dx, dy, dz, w));
-                        }
-                    }
-                }
-                for (dx, dy, dz) in [
-                    (-2, 0, 0),
-                    (2, 0, 0),
-                    (0, -2, 0),
-                    (0, 2, 0),
-                    (0, 0, -2),
-                    (0, 0, 2),
-                ] {
-                    pts.push(StencilPoint::new(dx, dy, dz, 1.0 / 54.0));
-                }
-                pts
-            }
-        };
-        StencilDesc { kind, points }
-    }
-
-    /// Number of taps (input grid points per output point).
-    pub fn num_points(&self) -> usize {
-        self.points.len()
-    }
-
-    /// Halo radius along each axis `[rx, ry, rz]`.
-    pub fn radius(&self) -> [usize; 3] {
-        let mut r = [0i64; 3];
-        for p in &self.points {
-            r[0] = r[0].max(p.dx.abs());
-            r[1] = r[1].max(p.dy.abs());
-            r[2] = r[2].max(p.dz.abs());
-        }
-        [r[0] as usize, r[1] as usize, r[2] as usize]
-    }
-
-    /// FLOPs per output point: one MAC (2 flops) per tap.
-    pub fn flops_per_point(&self) -> usize {
-        2 * self.num_points()
-    }
-
-    /// Distinct `(dy, dz)` row-offsets — these become Casper *streams*:
-    /// taps within one row share a stream and use shifted (unaligned)
-    /// loads (§6). One extra stream is the output.
-    pub fn row_groups(&self) -> Vec<RowGroup> {
-        let mut groups: Vec<RowGroup> = Vec::new();
-        for p in &self.points {
-            match groups.iter_mut().find(|g| g.dy == p.dy && g.dz == p.dz) {
-                Some(g) => g.taps.push((p.dx, p.coef)),
-                None => groups.push(RowGroup {
-                    dy: p.dy,
-                    dz: p.dz,
-                    taps: vec![(p.dx, p.coef)],
-                }),
-            }
-        }
-        for g in &mut groups {
-            g.taps.sort_by_key(|t| t.0);
-        }
-        // Deterministic order: by (dz, dy).
-        groups.sort_by_key(|g| (g.dz, g.dy));
-        groups
-    }
-
-    /// Sum of coefficients (≈1.0 for all our kernels — averaging stencils).
-    pub fn coef_sum(&self) -> f64 {
-        self.points.iter().map(|p| p.coef).sum()
-    }
-
-    /// Arithmetic intensity in FLOP/B for the roofline (Fig 1): every tap
-    /// read from cache plus the output store and its write-allocate fill,
-    /// 8 B each — the no-register-reuse traffic a cache-level roofline sees.
-    pub fn arithmetic_intensity(&self) -> f64 {
-        let flops = self.flops_per_point() as f64;
-        let bytes = (self.num_points() as f64 + 2.0) * 8.0;
-        flops / bytes
-    }
-}
-
-/// Taps sharing one row (same `dy`,`dz`): a single Casper stream.
-#[derive(Debug, Clone, PartialEq)]
-pub struct RowGroup {
-    pub dy: i64,
-    pub dz: i64,
-    /// `(dx, coef)` per tap, sorted by `dx`.
-    pub taps: Vec<(i64, f64)>,
 }
 
 #[cfg(test)]
@@ -353,5 +192,15 @@ mod tests {
         }
         assert_eq!(StencilKind::parse("jacobi2d"), Some(StencilKind::Jacobi2D));
         assert_eq!(StencilKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn spec_is_shared_and_matches_descriptor() {
+        for k in StencilKind::ALL {
+            let a = k.spec();
+            let b = k.spec();
+            assert!(Arc::ptr_eq(&a, &b), "{k}: preset must be interned");
+            assert_eq!(*a, k.descriptor(), "{k}");
+        }
     }
 }

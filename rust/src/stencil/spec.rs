@@ -1,0 +1,824 @@
+//! The data-driven kernel layer: [`KernelSpec`] is the single source of
+//! truth every other layer consumes — taps, dimensionality, and the
+//! per-[`SizeClass`] domain sizes that used to be hard-coded per
+//! `StencilKind` arm across config, harness, CLI, and golden reference.
+//!
+//! The paper's six kernels (§7.2) are *presets* built through the same
+//! type ([`paper_preset`]); anything the SPU datapath can execute is
+//! expressible as a spec, including kernels loaded from TOML files at
+//! runtime (`--kernel-file`, parsed with the in-tree
+//! [`toml_mini`](crate::config::toml_mini) subset) — the paper's six are
+//! evaluation points, not the design's limit.
+//!
+//! [`KernelSpec::validate`] enforces both the physical constraints
+//! (radius vs. domain, dimensionality consistency) and the Casper ISA
+//! envelope (§5.1: 3-bit shift field, 16-entry stream/constant buffers,
+//! 64-entry instruction buffer), so a registered kernel is guaranteed to
+//! compile with [`ProgramBuilder`](crate::isa::ProgramBuilder).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::toml_mini::TomlDoc;
+use crate::config::SizeClass;
+use crate::isa::program::{MAX_CONSTANTS, MAX_INSTRUCTIONS, MAX_SHIFT, MAX_STREAMS};
+
+use super::domain::table3;
+use super::{Domain, StencilKind};
+
+/// Interned kernel identifier: the machine-friendly id used in CLI flags,
+/// artifact file names, and sweep-cache keys. Cloning is an `Arc` bump.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KernelId(Arc<str>);
+
+impl KernelId {
+    pub fn new(id: &str) -> KernelId {
+        KernelId(Arc::from(id))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for KernelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Where a spec came from — paper preset, extended built-in, or a user
+/// TOML file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelOrigin {
+    /// One of the six §7.2 kernels (always in the default sweep).
+    Paper,
+    /// Built-in beyond the paper (behind `--extended-kernels`).
+    Extended,
+    /// Loaded from a `--kernel-file` TOML spec.
+    File,
+}
+
+impl KernelOrigin {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelOrigin::Paper => "paper",
+            KernelOrigin::Extended => "extended",
+            KernelOrigin::File => "file",
+        }
+    }
+}
+
+/// One tap of a stencil: offset (in elements) and coefficient.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StencilPoint {
+    pub dx: i64,
+    pub dy: i64,
+    pub dz: i64,
+    pub coef: f64,
+}
+
+impl StencilPoint {
+    pub const fn new(dx: i64, dy: i64, dz: i64, coef: f64) -> Self {
+        StencilPoint { dx, dy, dz, coef }
+    }
+}
+
+/// Taps sharing one row (same `dy`,`dz`): a single Casper stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowGroup {
+    pub dy: i64,
+    pub dz: i64,
+    /// `(dx, coef)` per tap, sorted by `dx`.
+    pub taps: Vec<(i64, f64)>,
+}
+
+/// Full description of one stencil kernel: identity, compute pattern, and
+/// the per-size-class domains (Table 3 for the built-ins).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelSpec {
+    pub id: KernelId,
+    /// Human name, as printed in tables and figures.
+    pub name: String,
+    /// Grid dimensionality (1, 2, or 3).
+    pub dims: usize,
+    pub points: Vec<StencilPoint>,
+    /// Domains in `[L2, LLC, DRAM]` order (see [`SizeClass::index`]).
+    pub domains: [Domain; 3],
+    pub origin: KernelOrigin,
+}
+
+impl KernelSpec {
+    /// Plain constructor with the Table-3 default domains for `dims`.
+    /// Call [`validate`](Self::validate) before use.
+    pub fn new(
+        id: &str,
+        name: &str,
+        dims: usize,
+        points: Vec<StencilPoint>,
+        origin: KernelOrigin,
+    ) -> KernelSpec {
+        KernelSpec {
+            id: KernelId::new(id),
+            name: name.to_string(),
+            dims,
+            points,
+            domains: default_domains(dims),
+            origin,
+        }
+    }
+
+    /// Preset descriptor of a built-in kernel (compat shim for the old
+    /// `StencilDesc::of`).
+    pub fn of(kind: StencilKind) -> KernelSpec {
+        kind.descriptor()
+    }
+
+    /// Number of taps (input grid points per output point).
+    pub fn num_points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Halo radius along each axis `[rx, ry, rz]`. Unsigned arithmetic:
+    /// `i64::MIN` offsets in a hostile spec file must not overflow `abs`.
+    pub fn radius(&self) -> [usize; 3] {
+        let mut r = [0u64; 3];
+        for p in &self.points {
+            r[0] = r[0].max(p.dx.unsigned_abs());
+            r[1] = r[1].max(p.dy.unsigned_abs());
+            r[2] = r[2].max(p.dz.unsigned_abs());
+        }
+        [r[0] as usize, r[1] as usize, r[2] as usize]
+    }
+
+    /// FLOPs per output point: one MAC (2 flops) per tap.
+    pub fn flops_per_point(&self) -> usize {
+        2 * self.num_points()
+    }
+
+    /// Distinct `(dy, dz)` row-offsets — these become Casper *streams*:
+    /// taps within one row share a stream and use shifted (unaligned)
+    /// loads (§6). One extra stream is the output.
+    pub fn row_groups(&self) -> Vec<RowGroup> {
+        let mut groups: Vec<RowGroup> = Vec::new();
+        for p in &self.points {
+            match groups.iter_mut().find(|g| g.dy == p.dy && g.dz == p.dz) {
+                Some(g) => g.taps.push((p.dx, p.coef)),
+                None => groups.push(RowGroup {
+                    dy: p.dy,
+                    dz: p.dz,
+                    taps: vec![(p.dx, p.coef)],
+                }),
+            }
+        }
+        for g in &mut groups {
+            g.taps.sort_by_key(|t| t.0);
+        }
+        // Deterministic order: by (dz, dy).
+        groups.sort_by_key(|g| (g.dz, g.dy));
+        groups
+    }
+
+    /// Sum of coefficients (≈1.0 for averaging stencils).
+    pub fn coef_sum(&self) -> f64 {
+        self.points.iter().map(|p| p.coef).sum()
+    }
+
+    /// Arithmetic intensity in FLOP/B for the roofline (Fig 1): every tap
+    /// read from cache plus the output store and its write-allocate fill,
+    /// 8 B each — the no-register-reuse traffic a cache-level roofline sees.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let flops = self.flops_per_point() as f64;
+        let bytes = (self.num_points() as f64 + 2.0) * 8.0;
+        flops / bytes
+    }
+
+    /// The domain of one size class (Table 3 for built-ins; spec files may
+    /// override per class).
+    pub fn domain(&self, level: SizeClass) -> Domain {
+        self.domains[level.index()]
+    }
+
+    /// A small domain of the right dimensionality for unit tests: big
+    /// enough for this kernel's halo, small enough to simulate fast.
+    /// Matches the historical `Domain::tiny` values for the paper six.
+    pub fn tiny_domain(&self) -> Domain {
+        let [rx, ry, rz] = self.radius();
+        let (bx, by, bz) = match self.dims {
+            1 => (256, 1, 1),
+            2 => (32, 16, 1),
+            _ => (16, 12, 8),
+        };
+        Domain::new(
+            bx.max(2 * rx + 4),
+            if self.dims >= 2 { by.max(2 * ry + 4) } else { 1 },
+            if self.dims >= 3 { bz.max(2 * rz + 4) } else { 1 },
+        )
+    }
+
+    /// Validate the spec: identity, physical shape (dimensionality, taps,
+    /// radius vs. every configured domain) and the Casper ISA envelope.
+    pub fn validate(&self) -> Result<()> {
+        let id = self.id.as_str();
+        ensure!(!id.is_empty(), "kernel id must be non-empty");
+        ensure!(
+            id.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+            "kernel id '{id}' must be lowercase [a-z0-9_]"
+        );
+        ensure!(!self.name.is_empty(), "kernel '{id}': name must be non-empty");
+        ensure!(!self.name.contains('"'), "kernel '{id}': name must not contain quotes");
+        ensure!((1..=3).contains(&self.dims), "kernel '{id}': dims must be 1, 2, or 3");
+        ensure!(!self.points.is_empty(), "kernel '{id}': at least one tap required");
+        for p in &self.points {
+            ensure!(
+                p.coef.is_finite(),
+                "kernel '{id}': non-finite coefficient at ({},{},{})",
+                p.dx,
+                p.dy,
+                p.dz
+            );
+            if self.dims < 2 {
+                ensure!(p.dy == 0, "kernel '{id}': dy offsets need dims >= 2");
+            }
+            if self.dims < 3 {
+                ensure!(p.dz == 0, "kernel '{id}': dz offsets need dims = 3");
+            }
+        }
+        for (i, a) in self.points.iter().enumerate() {
+            for b in &self.points[i + 1..] {
+                ensure!(
+                    (a.dx, a.dy, a.dz) != (b.dx, b.dy, b.dz),
+                    "kernel '{id}': duplicate tap at ({},{},{})",
+                    a.dx,
+                    a.dy,
+                    a.dz
+                );
+            }
+        }
+        // Casper ISA envelope (§5.1) — guarantees ProgramBuilder succeeds.
+        ensure!(
+            self.points.len() <= MAX_INSTRUCTIONS,
+            "kernel '{id}': {} taps exceed the {MAX_INSTRUCTIONS}-entry instruction buffer",
+            self.points.len()
+        );
+        for p in &self.points {
+            ensure!(
+                p.dx.unsigned_abs() <= MAX_SHIFT as u64,
+                "kernel '{id}': tap dx {} exceeds the 3-bit shift field (|dx| <= {MAX_SHIFT})",
+                p.dx
+            );
+            // Row offsets have no ISA field limit, but a halo beyond any
+            // plausible domain is a spec bug — and the bound keeps the
+            // `2 * radius` domain arithmetic below overflow-free for
+            // hostile i64 offsets.
+            const MAX_ROW_OFFSET: u64 = 1024;
+            ensure!(
+                p.dy.unsigned_abs() <= MAX_ROW_OFFSET && p.dz.unsigned_abs() <= MAX_ROW_OFFSET,
+                "kernel '{id}': tap row offset ({}, {}) exceeds the sanity bound of {MAX_ROW_OFFSET}",
+                p.dy,
+                p.dz
+            );
+        }
+        let streams = self.row_groups().len() + 1;
+        ensure!(
+            streams <= MAX_STREAMS,
+            "kernel '{id}': {streams} streams ({} input rows + output) exceed the {MAX_STREAMS}-entry stream buffer",
+            streams - 1
+        );
+        let mut coefs: Vec<u64> = self.points.iter().map(|p| p.coef.to_bits()).collect();
+        coefs.sort_unstable();
+        coefs.dedup();
+        ensure!(
+            coefs.len() <= MAX_CONSTANTS,
+            "kernel '{id}': {} distinct coefficients exceed the {MAX_CONSTANTS}-entry constant buffer",
+            coefs.len()
+        );
+        // Radius vs. every configured domain: boundary copy-through needs
+        // a non-empty interior in each class.
+        let [rx, ry, rz] = self.radius();
+        for level in SizeClass::ALL {
+            let d = self.domain(level);
+            ensure!(
+                d.nx > 0 && d.ny > 0 && d.nz > 0,
+                "kernel '{id}': empty {level} domain"
+            );
+            if self.dims < 2 {
+                ensure!(
+                    d.ny == 1 && d.nz == 1,
+                    "kernel '{id}': 1D kernel with 2D/3D {level} domain {d}"
+                );
+            }
+            if self.dims < 3 {
+                ensure!(
+                    d.nz == 1,
+                    "kernel '{id}': {}D kernel with 3D {level} domain {d}",
+                    self.dims
+                );
+            }
+            ensure!(
+                d.nx > 2 * rx && d.ny > 2 * ry && d.nz > 2 * rz,
+                "kernel '{id}': {level} domain {d} smaller than halo (radius [{rx},{ry},{rz}])"
+            );
+        }
+        Ok(())
+    }
+
+    /// Parse a spec from a TOML-subset file (see `to_toml_string` for the
+    /// format, and `examples/kernels/hdiff9.toml` for a worked example).
+    pub fn from_file(path: &Path) -> Result<KernelSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading kernel spec {}", path.display()))?;
+        Self::from_toml_str(&text)
+            .with_context(|| format!("parsing kernel spec {}", path.display()))
+    }
+
+    /// Parse a spec from TOML text:
+    ///
+    /// ```toml
+    /// [kernel]
+    /// id = "hdiff9"          # lowercase [a-z0-9_]
+    /// name = "HDiff 9-point" # optional (defaults to the id)
+    /// dims = 2
+    ///
+    /// [domain]               # optional: Table-3 defaults by dims
+    /// l2 = "512x256"
+    /// llc = "1024x1024"
+    /// dram = "2048x2048"
+    ///
+    /// [tap-0]                # one section per tap, numbered from 0
+    /// dx = 0                 # omitted offsets default to 0
+    /// dy = 0
+    /// coef = 0.2
+    /// ```
+    pub fn from_toml_str(text: &str) -> Result<KernelSpec> {
+        let doc = TomlDoc::parse(text)?;
+        let id = doc.get_str("kernel.id")?.context("missing kernel.id")?;
+        let name = match doc.get_str("kernel.name")? {
+            Some(n) => n,
+            None => id.clone(),
+        };
+        let dims = doc.get_int("kernel.dims")?.context("missing kernel.dims")? as usize;
+
+        let mut points = Vec::new();
+        loop {
+            let sect = format!("tap-{}", points.len());
+            if doc.get(&format!("{sect}.coef")).is_none() {
+                break;
+            }
+            let coef = doc.get_float(&format!("{sect}.coef"))?.unwrap();
+            let dx = doc.get_int(&format!("{sect}.dx"))?.unwrap_or(0);
+            let dy = doc.get_int(&format!("{sect}.dy"))?.unwrap_or(0);
+            let dz = doc.get_int(&format!("{sect}.dz"))?.unwrap_or(0);
+            points.push(StencilPoint::new(dx, dy, dz, coef));
+        }
+        ensure!(!points.is_empty(), "no tap sections found ([tap-0], [tap-1], ...)");
+        // Reject stray tap sections outside the consecutive 0..n run
+        // (a numbering gap would silently drop taps otherwise).
+        for key in doc.keys() {
+            if let Some(rest) = key.strip_prefix("tap-") {
+                let n = rest.split('.').next().unwrap_or("");
+                let n: usize = n
+                    .parse()
+                    .with_context(|| format!("bad tap section 'tap-{n}'"))?;
+                ensure!(
+                    n < points.len(),
+                    "tap-{n} is out of sequence: tap sections must be numbered consecutively from tap-0 and each needs a coef"
+                );
+            }
+        }
+
+        let mut spec = KernelSpec::new(&id, &name, dims, points, KernelOrigin::File);
+        for (key, slot) in [("domain.l2", 0usize), ("domain.llc", 1), ("domain.dram", 2)] {
+            if let Some(s) = doc.get_str(key)? {
+                spec.domains[slot] =
+                    parse_domain(&s).with_context(|| format!("bad {key}"))?;
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Serialize to the TOML-subset format [`from_toml_str`] reads.
+    /// Coefficients use Rust's shortest-roundtrip float formatting, so
+    /// write → parse is bit-exact.
+    pub fn to_toml_string(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "# Casper kernel spec (see DESIGN.md, \"Kernel registry\")");
+        let _ = writeln!(out, "[kernel]");
+        let _ = writeln!(out, "id = \"{}\"", self.id);
+        let _ = writeln!(out, "name = \"{}\"", self.name);
+        let _ = writeln!(out, "dims = {}", self.dims);
+        let _ = writeln!(out, "\n[domain]");
+        let _ = writeln!(out, "l2 = \"{}\"", self.domains[0]);
+        let _ = writeln!(out, "llc = \"{}\"", self.domains[1]);
+        let _ = writeln!(out, "dram = \"{}\"", self.domains[2]);
+        for (i, p) in self.points.iter().enumerate() {
+            let _ = writeln!(out, "\n[tap-{i}]");
+            let _ = writeln!(out, "dx = {}", p.dx);
+            let _ = writeln!(out, "dy = {}", p.dy);
+            let _ = writeln!(out, "dz = {}", p.dz);
+            let _ = writeln!(out, "coef = {:?}", p.coef);
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for KernelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
+/// Table-3 default domains for a dimensionality, `[L2, LLC, DRAM]`.
+fn default_domains(dims: usize) -> [Domain; 3] {
+    let dims = dims.clamp(1, 3);
+    [
+        table3(dims, SizeClass::L2),
+        table3(dims, SizeClass::Llc),
+        table3(dims, SizeClass::Dram),
+    ]
+}
+
+/// Parse `"NX"`, `"NXxNY"`, or `"NXxNYxNZ"` (underscores allowed).
+fn parse_domain(s: &str) -> Result<Domain> {
+    let parts: Vec<&str> = s.split('x').collect();
+    ensure!(
+        (1..=3).contains(&parts.len()),
+        "bad domain '{s}' (use \"NX\", \"NXxNY\", or \"NXxNYxNZ\")"
+    );
+    let mut v = [1usize; 3];
+    for (i, p) in parts.iter().enumerate() {
+        let cleaned: String = p.trim().chars().filter(|&c| c != '_').collect();
+        v[i] = cleaned
+            .parse()
+            .with_context(|| format!("bad domain '{s}'"))?;
+    }
+    Ok(Domain::new(v[0], v[1], v[2]))
+}
+
+/// The tap pattern of one paper kernel (§7.2) — moved verbatim from the
+/// old closed `StencilDesc::of` match so presets are bit-identical to the
+/// historical definitions.
+pub(super) fn paper_preset(kind: StencilKind) -> KernelSpec {
+    let points = match kind {
+        StencilKind::Jacobi1D => {
+            // PolyBench: B[i] = (A[i-1] + A[i] + A[i+1]) / 3
+            let c = 1.0 / 3.0;
+            vec![
+                StencilPoint::new(-1, 0, 0, c),
+                StencilPoint::new(0, 0, 0, c),
+                StencilPoint::new(1, 0, 0, c),
+            ]
+        }
+        StencilKind::Points7_1D => {
+            // Holewinski et al. 7-point 1D: symmetric radius-3 average.
+            let c = 1.0 / 7.0;
+            (-3..=3).map(|d| StencilPoint::new(d, 0, 0, c)).collect()
+        }
+        StencilKind::Jacobi2D => {
+            // Paper §2.1 / Fig 8: 5-point, every tap × 0.2.
+            let c = 0.2;
+            vec![
+                StencilPoint::new(0, -1, 0, c),
+                StencilPoint::new(-1, 0, 0, c),
+                StencilPoint::new(0, 0, 0, c),
+                StencilPoint::new(1, 0, 0, c),
+                StencilPoint::new(0, 1, 0, c),
+            ]
+        }
+        StencilKind::Blur2D => {
+            // Canonical 5×5 Gaussian blur (σ≈1), integer kernel / 273.
+            const W: [[f64; 5]; 5] = [
+                [1.0, 4.0, 7.0, 4.0, 1.0],
+                [4.0, 16.0, 26.0, 16.0, 4.0],
+                [7.0, 26.0, 41.0, 26.0, 7.0],
+                [4.0, 16.0, 26.0, 16.0, 4.0],
+                [1.0, 4.0, 7.0, 4.0, 1.0],
+            ];
+            let mut pts = Vec::with_capacity(25);
+            for (j, row) in W.iter().enumerate() {
+                for (i, w) in row.iter().enumerate() {
+                    pts.push(StencilPoint::new(i as i64 - 2, j as i64 - 2, 0, w / 273.0));
+                }
+            }
+            pts
+        }
+        StencilKind::Heat3D => {
+            // 7-point heat diffusion: 0.4·center + 0.1·(6 face points).
+            let mut pts = vec![StencilPoint::new(0, 0, 0, 0.4)];
+            for (dx, dy, dz) in [
+                (-1, 0, 0),
+                (1, 0, 0),
+                (0, -1, 0),
+                (0, 1, 0),
+                (0, 0, -1),
+                (0, 0, 1),
+            ] {
+                pts.push(StencilPoint::new(dx, dy, dz, 0.1));
+            }
+            pts
+        }
+        StencilKind::Points33_3D => {
+            // 27-point box + 6 distance-2 axis points = 33 taps.
+            // Weights by tap class, normalized to sum to 1 (total
+            // weight 8 + 6·3 + 12·1.5 + 8·0.5 + 6·1 = 54):
+            //   center 8/54, face(6) 3/54, edge(12) 1.5/54,
+            //   corner(8) 0.5/54, axis-2(6) 1/54.
+            let mut pts = Vec::with_capacity(33);
+            for dz in -1i64..=1 {
+                for dy in -1i64..=1 {
+                    for dx in -1i64..=1 {
+                        let dist = dx.abs() + dy.abs() + dz.abs();
+                        let w = match dist {
+                            0 => 8.0,
+                            1 => 3.0,
+                            2 => 1.5,
+                            _ => 0.5,
+                        } / 54.0;
+                        pts.push(StencilPoint::new(dx, dy, dz, w));
+                    }
+                }
+            }
+            for (dx, dy, dz) in [
+                (-2, 0, 0),
+                (2, 0, 0),
+                (0, -2, 0),
+                (0, 2, 0),
+                (0, 0, -2),
+                (0, 0, 2),
+            ] {
+                pts.push(StencilPoint::new(dx, dy, dz, 1.0 / 54.0));
+            }
+            pts
+        }
+    };
+    KernelSpec::new(kind.id(), kind.name(), kind.dims(), points, KernelOrigin::Paper)
+}
+
+/// The built-in kernels beyond the paper (behind `--extended-kernels`).
+///
+/// - `hdiff`: a NERO-style (Singh et al., 2020) 9-point radius-2
+///   horizontal-diffusion star in 2D — the irregular-coefficient weather
+///   workload class.
+/// - `star25_3d`: a 25-point high-order 3D star (seismic RTM shape). The
+///   isotropic radius-4 star needs 17 input row streams — beyond the
+///   16-entry stream buffer the 4-bit stream-id field allows — so the
+///   preset uses the anisotropic variant common in RTM codes (x ±5,
+///   y ±4, z ±3): 25 taps over exactly 15 input rows, saturating the
+///   stream buffer at its architectural limit.
+pub fn extended_presets() -> Vec<KernelSpec> {
+    vec![hdiff_preset(), star25_preset()]
+}
+
+fn hdiff_preset() -> KernelSpec {
+    // Radius-2 star: center 1/3, distance-1 arms 1/8, distance-2 arms
+    // 1/24 (sums to 1: 1/3 + 4/8 + 4/24).
+    let mut pts = vec![StencilPoint::new(0, 0, 0, 1.0 / 3.0)];
+    for (d, c) in [(1i64, 1.0 / 8.0), (2, 1.0 / 24.0)] {
+        for s in [-1i64, 1] {
+            pts.push(StencilPoint::new(s * d, 0, 0, c));
+            pts.push(StencilPoint::new(0, s * d, 0, c));
+        }
+    }
+    KernelSpec::new("hdiff", "HDiff 2D", 2, pts, KernelOrigin::Extended)
+}
+
+fn star25_preset() -> KernelSpec {
+    // Per-arm weights by distance, /50 (center 5.5: the total is
+    // 5.5 + 2·7.75 + 2·7.5 + 2·7 = 50, so coefficients sum to 1).
+    const W: [f64; 5] = [4.0, 2.0, 1.0, 0.5, 0.25];
+    let mut pts = vec![StencilPoint::new(0, 0, 0, 5.5 / 50.0)];
+    for s in [-1i64, 1] {
+        for (i, &w) in W.iter().enumerate() {
+            pts.push(StencilPoint::new(s * (i as i64 + 1), 0, 0, w / 50.0));
+        }
+        for (i, &w) in W[..4].iter().enumerate() {
+            pts.push(StencilPoint::new(0, s * (i as i64 + 1), 0, w / 50.0));
+        }
+        for (i, &w) in W[..3].iter().enumerate() {
+            pts.push(StencilPoint::new(0, 0, s * (i as i64 + 1), w / 50.0));
+        }
+    }
+    KernelSpec::new("star25_3d", "25-point 3D star", 3, pts, KernelOrigin::Extended)
+}
+
+/// The open kernel registry: presets plus user-loaded TOML specs, looked
+/// up by id (or fuzzy name, as the CLI always accepted for the paper six).
+#[derive(Debug, Clone, Default)]
+pub struct KernelRegistry {
+    specs: Vec<Arc<KernelSpec>>,
+}
+
+impl KernelRegistry {
+    /// The six paper kernels, in paper order.
+    pub fn paper() -> KernelRegistry {
+        KernelRegistry { specs: StencilKind::ALL.iter().map(|k| k.spec()).collect() }
+    }
+
+    /// Paper six plus the extended presets.
+    pub fn builtin() -> KernelRegistry {
+        let mut r = KernelRegistry::paper();
+        for s in extended_presets() {
+            r.add(s).expect("extended presets are valid and unique");
+        }
+        r
+    }
+
+    /// Register a spec (validated; duplicate ids are an error).
+    pub fn add(&mut self, spec: KernelSpec) -> Result<Arc<KernelSpec>> {
+        spec.validate()?;
+        ensure!(
+            self.get(spec.id.as_str()).is_none(),
+            "duplicate kernel id '{}'",
+            spec.id
+        );
+        let spec = Arc::new(spec);
+        self.specs.push(spec.clone());
+        Ok(spec)
+    }
+
+    /// Load and register one spec from a TOML file.
+    pub fn load_file(&mut self, path: &Path) -> Result<Arc<KernelSpec>> {
+        let spec = KernelSpec::from_file(path)?;
+        self.add(spec)
+            .with_context(|| format!("registering kernel from {}", path.display()))
+    }
+
+    /// All registered specs, in registration order (paper order first).
+    pub fn specs(&self) -> &[Arc<KernelSpec>] {
+        &self.specs
+    }
+
+    /// Exact id lookup.
+    pub fn get(&self, id: &str) -> Option<Arc<KernelSpec>> {
+        self.specs.iter().find(|s| s.id.as_str() == id).cloned()
+    }
+
+    /// CLI-style lookup: exact id, or the human name with separators
+    /// squeezed out (`"jacobi 2d"`, `"Jacobi-2D"` → `jacobi2d`).
+    pub fn resolve(&self, s: &str) -> Option<Arc<KernelSpec>> {
+        let k = s.to_ascii_lowercase();
+        let squeezed = k.replace([' ', '-', '_'], "");
+        self.specs
+            .iter()
+            .find(|sp| {
+                sp.id.as_str() == k
+                    || sp.name.to_ascii_lowercase().replace(' ', "") == squeezed
+            })
+            .cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_presets_validate_and_match_kinds() {
+        for k in StencilKind::ALL {
+            let s = k.spec();
+            s.validate().unwrap();
+            assert_eq!(s.id.as_str(), k.id());
+            assert_eq!(s.name, k.name());
+            assert_eq!(s.dims, k.dims());
+            assert_eq!(s.origin, KernelOrigin::Paper);
+            for level in SizeClass::ALL {
+                assert_eq!(s.domain(level), Domain::for_level(k, level), "{k} {level}");
+            }
+            assert_eq!(s.tiny_domain(), Domain::tiny(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn extended_presets_validate() {
+        for s in extended_presets() {
+            s.validate().unwrap();
+            assert_eq!(s.origin, KernelOrigin::Extended);
+            assert!((s.coef_sum() - 1.0).abs() < 1e-9, "{}", s.id);
+        }
+        let ext = extended_presets();
+        let hdiff = &ext[0];
+        assert_eq!(hdiff.num_points(), 9);
+        assert_eq!(hdiff.radius(), [2, 2, 0]);
+        let star = &ext[1];
+        assert_eq!(star.num_points(), 25);
+        assert_eq!(star.radius(), [5, 4, 3]);
+        // Exactly saturates the stream buffer: 15 input rows + 1 output.
+        assert_eq!(star.row_groups().len() + 1, MAX_STREAMS);
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let tap = vec![StencilPoint::new(0, 0, 0, 1.0)];
+        assert!(KernelSpec::new("Bad-Id", "x", 1, tap.clone(), KernelOrigin::File)
+            .validate()
+            .is_err());
+        assert!(KernelSpec::new("k", "x", 4, tap.clone(), KernelOrigin::File)
+            .validate()
+            .is_err());
+        assert!(KernelSpec::new("k", "x", 1, vec![], KernelOrigin::File).validate().is_err());
+        // dy offset on a 1D kernel.
+        assert!(KernelSpec::new(
+            "k",
+            "x",
+            1,
+            vec![StencilPoint::new(0, 1, 0, 1.0)],
+            KernelOrigin::File
+        )
+        .validate()
+        .is_err());
+        // Duplicate tap.
+        assert!(KernelSpec::new(
+            "k",
+            "x",
+            1,
+            vec![StencilPoint::new(0, 0, 0, 0.5), StencilPoint::new(0, 0, 0, 0.5)],
+            KernelOrigin::File
+        )
+        .validate()
+        .is_err());
+        // Shift field overflow.
+        assert!(KernelSpec::new(
+            "k",
+            "x",
+            1,
+            vec![StencilPoint::new(8, 0, 0, 1.0)],
+            KernelOrigin::File
+        )
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn validate_rejects_radius_exceeding_domain() {
+        let mut s = KernelSpec::new(
+            "k",
+            "k",
+            1,
+            (-3..=3).map(|d| StencilPoint::new(d, 0, 0, 1.0 / 7.0)).collect(),
+            KernelOrigin::File,
+        );
+        s.domains[0] = Domain::new(6, 1, 1); // nx == 2 * radius
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("smaller than halo"), "{err}");
+    }
+
+    #[test]
+    fn toml_roundtrip_paper_six() {
+        for k in StencilKind::ALL {
+            let spec = k.descriptor();
+            let parsed = KernelSpec::from_toml_str(&spec.to_toml_string()).unwrap();
+            assert_eq!(parsed.id, spec.id, "{k}");
+            assert_eq!(parsed.name, spec.name, "{k}");
+            assert_eq!(parsed.dims, spec.dims, "{k}");
+            assert_eq!(parsed.points, spec.points, "{k}");
+            assert_eq!(parsed.domains, spec.domains, "{k}");
+            assert_eq!(parsed.origin, KernelOrigin::File);
+        }
+    }
+
+    #[test]
+    fn toml_parse_rejects_malformed() {
+        assert!(KernelSpec::from_toml_str("").is_err());
+        assert!(KernelSpec::from_toml_str("[kernel]\nid = \"k\"\ndims = 1\n").is_err());
+        // Gap in tap numbering.
+        let gap = "[kernel]\nid = \"k\"\ndims = 1\n[tap-0]\ncoef = 1.0\n[tap-2]\ncoef = 1.0\n";
+        assert!(KernelSpec::from_toml_str(gap).is_err());
+        // Radius exceeding an explicit domain.
+        let small = "[kernel]\nid = \"k\"\ndims = 1\n[domain]\nl2 = \"4\"\n\
+                     [tap-0]\ndx = -3\ncoef = 0.5\n[tap-1]\ndx = 3\ncoef = 0.5\n";
+        let err = KernelSpec::from_toml_str(small).unwrap_err();
+        assert!(format!("{err:#}").contains("smaller than halo"), "{err:#}");
+    }
+
+    #[test]
+    fn domain_string_forms() {
+        assert_eq!(parse_domain("131072").unwrap(), Domain::new(131_072, 1, 1));
+        assert_eq!(parse_domain("1_024x1024").unwrap(), Domain::new(1024, 1024, 1));
+        assert_eq!(parse_domain("64x64x32").unwrap(), Domain::new(64, 64, 32));
+        assert!(parse_domain("1x2x3x4").is_err());
+        assert!(parse_domain("ax2").is_err());
+    }
+
+    #[test]
+    fn registry_lookup_and_duplicates() {
+        let mut reg = KernelRegistry::builtin();
+        assert_eq!(reg.specs().len(), 8);
+        assert_eq!(reg.get("jacobi2d").unwrap().name, "Jacobi 2D");
+        assert_eq!(reg.resolve("Jacobi 2D").unwrap().id.as_str(), "jacobi2d");
+        assert_eq!(reg.resolve("jacobi-2d").unwrap().id.as_str(), "jacobi2d");
+        assert_eq!(reg.resolve("hdiff").unwrap().origin, KernelOrigin::Extended);
+        assert!(reg.resolve("nope").is_none());
+        let dup = KernelSpec::new(
+            "jacobi2d",
+            "dup",
+            1,
+            vec![StencilPoint::new(0, 0, 0, 1.0)],
+            KernelOrigin::File,
+        );
+        assert!(reg.add(dup).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! The open-kernel-registry contract, end to end:
+//!
+//! - property tests over randomly generated valid [`KernelSpec`]s:
+//!   golden `step` ≡ `step_serial` bitwise, ISA program stream count ==
+//!   `row_groups() + 1`, and TOML round-trips exactly;
+//! - negative validation (radius vs. domain);
+//! - the checked-in `examples/kernels/hdiff9.toml` runs through the full
+//!   simulator and matches the golden reference — a kernel defined only
+//!   in TOML, no Rust changes;
+//! - the extended presets (`hdiff`, `star25_3d`) behave like first-class
+//!   kernels, and the experiment harness sweeps arbitrary kernel sets.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use casper::config::{SimConfig, SizeClass};
+use casper::coordinator::{run_casper_spec, CasperOptions};
+use casper::harness::{paper_kernels, run_experiments_with, Experiment, SweepOptions};
+use casper::isa::ProgramBuilder;
+use casper::stencil::{
+    extended_presets, golden, KernelOrigin, KernelRegistry, KernelSpec, StencilPoint,
+};
+use casper::util::SplitMix64;
+
+/// Generate a random spec that satisfies `KernelSpec::validate` by
+/// construction: bounded radii keep the row count inside the 16-entry
+/// stream buffer, and coefficients come from a small palette so the
+/// constant buffer can't overflow.
+fn random_spec(r: &mut SplitMix64, case: usize) -> KernelSpec {
+    const PALETTE: [f64; 8] = [0.5, 0.25, 0.125, -0.125, 0.0625, 1.0, -0.5, 0.75];
+    let dims = 1 + (r.next_u64() % 3) as usize;
+    let rx = 1 + (r.next_u64() % 3) as i64; // 1..=3 <= MAX_SHIFT
+    let ry = if dims >= 2 { 1 + (r.next_u64() % 2) as i64 } else { 0 };
+    let rz = if dims >= 3 { (r.next_u64() % 2) as i64 } else { 0 };
+    let mut points = Vec::new();
+    for dz in -rz..=rz {
+        for dy in -ry..=ry {
+            // Each (dy, dz) row joins with ~60% probability; rows are
+            // bounded by (2·2+1)·(2·1+1) = 15 in the worst 3D case, which
+            // with the output stream exactly fits the stream buffer.
+            if r.chance(0.4) && !(dy == 0 && dz == 0) {
+                continue;
+            }
+            let mut any = false;
+            for dx in -rx..=rx {
+                // Hard cap well under MAX_INSTRUCTIONS (64): the worst
+                // 3D roll is 15 rows × 7 dx candidates = 105 otherwise.
+                if points.len() >= 56 {
+                    break;
+                }
+                if r.chance(0.5) {
+                    let coef = PALETTE[(r.next_u64() % 8) as usize];
+                    points.push(StencilPoint::new(dx, dy, dz, coef));
+                    any = true;
+                }
+            }
+            if !any && points.len() < 56 {
+                points.push(StencilPoint::new(0, dy, dz, PALETTE[case % 8]));
+            }
+        }
+    }
+    if points.is_empty() {
+        points.push(StencilPoint::new(0, 0, 0, 0.5));
+    }
+    KernelSpec::new(
+        &format!("prop_{case}"),
+        &format!("Property kernel {case}"),
+        dims,
+        points,
+        KernelOrigin::File,
+    )
+}
+
+#[test]
+fn property_random_specs_validate_and_cover_the_isa() {
+    let mut rng = SplitMix64::new(0x5EC5);
+    for case in 0..96 {
+        let spec = random_spec(&mut rng, case);
+        spec.validate().unwrap_or_else(|e| panic!("case {case}: {e:#} — {spec:?}"));
+        // (b) of the satellite contract: ISA stream count tracks the
+        // spec's row structure exactly, and the program validates.
+        let prog = ProgramBuilder::new()
+            .build(&spec)
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        assert_eq!(
+            prog.streams.len(),
+            spec.row_groups().len() + 1,
+            "case {case}: streams != row_groups + 1"
+        );
+        assert_eq!(prog.instrs.len(), spec.num_points(), "case {case}");
+        prog.validate().unwrap();
+    }
+}
+
+#[test]
+fn property_golden_step_is_bitwise_identical_to_serial() {
+    // (a) of the satellite contract, over *generated* kernels — not just
+    // the presets the old test hard-coded.
+    let mut rng = SplitMix64::new(0xB17);
+    for case in 0..48 {
+        let spec = random_spec(&mut rng, case);
+        let d = spec.tiny_domain();
+        let src = d.alloc_random(0xB17_1D ^ case as u64);
+        let mut want = d.alloc();
+        golden::step_serial(&spec, &src, &mut want);
+        for threads in [1usize, 3, 8] {
+            let mut got = d.alloc();
+            golden::step_with_threads(&spec, &src, &mut got, threads);
+            assert!(
+                got.data.iter().zip(&want.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "case {case} ({}): threads={threads} diverged bitwise",
+                spec.id
+            );
+        }
+    }
+}
+
+#[test]
+fn property_toml_roundtrip_is_exact() {
+    // (c) of the satellite contract: write → parse reproduces the spec
+    // exactly (ids, taps, coefficient bits, domains).
+    let mut rng = SplitMix64::new(0x70A1);
+    for case in 0..48 {
+        let spec = random_spec(&mut rng, case);
+        let text = spec.to_toml_string();
+        let parsed = KernelSpec::from_toml_str(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}\n{text}"));
+        assert_eq!(parsed, spec, "case {case}");
+    }
+}
+
+#[test]
+fn radius_exceeding_domain_is_rejected() {
+    let text = "[kernel]\nid = \"wide\"\ndims = 1\n[domain]\nl2 = \"8\"\n\
+                [tap-0]\ndx = -4\ncoef = 0.5\n[tap-1]\ndx = 4\ncoef = 0.5\n";
+    let err = KernelSpec::from_toml_str(text).unwrap_err();
+    assert!(format!("{err:#}").contains("smaller than halo"), "{err:#}");
+    // The same kernel with a big-enough domain is fine.
+    let ok = "[kernel]\nid = \"wide\"\ndims = 1\n[domain]\nl2 = \"64\"\n\
+              [tap-0]\ndx = -4\ncoef = 0.5\n[tap-1]\ndx = 4\ncoef = 0.5\n";
+    KernelSpec::from_toml_str(ok).unwrap();
+}
+
+fn example_kernel_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/kernels/hdiff9.toml")
+}
+
+#[test]
+fn checked_in_example_file_loads() {
+    let mut reg = KernelRegistry::builtin();
+    let spec = reg.load_file(&example_kernel_path()).unwrap();
+    assert_eq!(spec.id.as_str(), "hdiff9");
+    assert_eq!(spec.origin, KernelOrigin::File);
+    assert_eq!(spec.num_points(), 9);
+    assert_eq!(spec.radius(), [2, 2, 0]);
+    assert!((spec.coef_sum() - 1.0).abs() < 1e-12);
+    assert_eq!(spec.domain(SizeClass::L2).points(), 512 * 256);
+    // Irregular coefficients: x and y arms differ (the NERO motivation).
+    let x1 = spec.points.iter().find(|p| p.dx == 1 && p.dy == 0).unwrap().coef;
+    let y1 = spec.points.iter().find(|p| p.dx == 0 && p.dy == 1).unwrap().coef;
+    assert_ne!(x1.to_bits(), y1.to_bits());
+}
+
+#[test]
+fn file_defined_kernel_runs_end_to_end_golden_verified() {
+    // The acceptance criterion: a kernel defined ONLY in a TOML file (no
+    // Rust changes) runs through the full simulator and matches golden.
+    let cfg = SimConfig::default();
+    let mut reg = KernelRegistry::builtin();
+    let spec = reg.load_file(&example_kernel_path()).unwrap();
+    let d = spec.tiny_domain();
+    let opts = CasperOptions::default();
+    let stats = run_casper_spec(&cfg, &spec, &d, 2, opts).unwrap();
+    let want = golden::run_spec(&spec, &d, 2, opts.seed);
+    let diff = stats.output.max_abs_diff(&want);
+    assert!(diff < 1e-12, "hdiff9 diverges from golden: {diff}");
+    assert!(stats.cycles > 0);
+    assert!(stats.total_instrs > 0);
+}
+
+#[test]
+fn extended_presets_run_end_to_end_golden_verified() {
+    let cfg = SimConfig::default();
+    for spec in extended_presets() {
+        let d = spec.tiny_domain();
+        let opts = CasperOptions::default();
+        let stats = run_casper_spec(&cfg, &spec, &d, 1, opts).unwrap();
+        let want = golden::run_spec(&spec, &d, 1, opts.seed);
+        let diff = stats.output.max_abs_diff(&want);
+        assert!(diff < 1e-12, "{}: {diff}", spec.id);
+    }
+}
+
+#[test]
+fn file_kernel_appears_in_experiment_report() {
+    // Selected into the sweep, the TOML kernel shows up in the tables
+    // with `-` in the paper-reference columns.
+    let cfg = SimConfig::default();
+    let mut reg = KernelRegistry::builtin();
+    let spec = reg.load_file(&example_kernel_path()).unwrap();
+    let mut kernels = paper_kernels();
+    kernels.push(Arc::clone(&spec));
+    let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
+    let report = run_experiments_with(&cfg, &[Experiment::Fig10], opts, &kernels).unwrap();
+    let t = report.get("fig10").unwrap();
+    assert_eq!(t.rows.len(), 7);
+    let row = t
+        .rows
+        .iter()
+        .find(|r| r[0] == "HDiff 9-point (file)")
+        .expect("file kernel missing from fig10");
+    assert_eq!(row[5], "-", "{row:?}");
+    assert!(row[4].ends_with('x'), "{row:?}");
+}
+
+#[test]
+fn duplicate_and_unknown_ids_error_cleanly() {
+    let mut reg = KernelRegistry::builtin();
+    reg.load_file(&example_kernel_path()).unwrap();
+    let err = reg.load_file(&example_kernel_path()).unwrap_err();
+    assert!(format!("{err:#}").contains("duplicate kernel id"), "{err:#}");
+    assert!(reg.resolve("definitely_not_a_kernel").is_none());
+}
