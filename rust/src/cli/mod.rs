@@ -101,7 +101,8 @@ USAGE:
   casper kernels list [--kernel-file FILE]...
       List every registered kernel (presets + loaded spec files).
   casper kernels show ID [--kernel-file FILE]...
-      Print one kernel's taps, domains, and compiled Casper program.
+      Print one kernel's taps, domains, multi-pass plan with per-pass
+      buffer utilization, and compiled Casper program(s).
   casper validate [--artifacts DIR]
       Execute the AOT JAX/Pallas artifacts via PJRT and cross-check the
       simulator numerics (requires `make artifacts`).
@@ -113,7 +114,9 @@ USAGE:
       This message.
 
 KERNELS: jacobi1d pts7_1d jacobi2d blur2d heat3d pts33_3d (paper);
-         hdiff star25_3d (extended); plus any --kernel-file specs.
+         hdiff star25_3d star17_3d (extended); plus any --kernel-file
+         specs. Kernels wider than the 16-stream ISA envelope compile as
+         multi-pass plans (see docs/KERNELS.md).
 ";
 
 /// A tiny flag parser: `--key value` pairs plus boolean flags.

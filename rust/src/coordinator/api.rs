@@ -62,6 +62,21 @@ impl CasperRuntime {
         Ok(())
     }
 
+    /// Re-broadcast a new program to every SPU *in place* — the
+    /// multi-pass path between accelerator passes of one time step.
+    /// Unlike [`init_stencil_code`](Self::init_stencil_code) this keeps
+    /// the SPU objects (timing state, counters, private L1 tags), so the
+    /// passes of a plan account on one continuous timeline.
+    pub fn set_program(&mut self, program: CasperProgram) -> Result<()> {
+        ensure!(!self.spus.is_empty(), "initStencilcode first");
+        program.validate()?;
+        for spu in &mut self.spus {
+            spu.set_program(program.clone());
+        }
+        self.program = Some(program);
+        Ok(())
+    }
+
     /// `initConstant(const, index)`: set a constant-buffer entry on every
     /// SPU. The [`ProgramBuilder`](crate::isa::ProgramBuilder) already
     /// interns constants; this call overrides one slot (e.g. to retune a
@@ -197,6 +212,27 @@ mod tests {
         }
         // Leader observed every SPU (even the idle ones).
         assert_eq!(rt.spus()[0].stats.stores, 4); // 30 elems → 4 groups
+    }
+
+    #[test]
+    fn set_program_keeps_spu_state() {
+        // The multi-pass re-broadcast path: swapping programs must keep
+        // the SPU objects (timing, counters) instead of rebuilding them.
+        let mut rt = runtime();
+        let prog1 = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi1D.descriptor())
+            .unwrap();
+        assert!(rt.set_program(prog1.clone()).is_err(), "initStencilcode first");
+        rt.init_stencil_code(prog1).unwrap();
+        rt.spus[0].stats.instrs = 7;
+        rt.spus[0].now = 42;
+        let prog2 = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi2D.descriptor())
+            .unwrap();
+        rt.set_program(prog2.clone()).unwrap();
+        assert_eq!(rt.spus[0].stats.instrs, 7, "counters survive the swap");
+        assert_eq!(rt.spus[0].now, 42, "timing survives the swap");
+        assert_eq!(rt.spus[0].program(), &prog2);
     }
 
     #[test]

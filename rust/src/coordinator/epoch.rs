@@ -9,7 +9,11 @@
 //!    groups functionally — input loads read the step-immutable input
 //!    array, output writes are staged per SPU — while queueing each LLC
 //!    tag access as an *epoch message* tagged `(round, spu, seq)` and
-//!    recording the per-instruction request geometry.
+//!    recording the per-instruction request geometry. (Multi-pass
+//!    accumulator streams also read the *output* array, but only the
+//!    elements the reading group itself is about to overwrite — written
+//!    by the previous pass, never within the current `run_step` — so the
+//!    step-immutability argument carries over pass by pass.)
 //! 2. **Tag reconciliation** (parallel over slices): each slice's worker
 //!    owns that slice's [`SliceState`] outright and drains its incoming
 //!    messages in `(round, spu, seq)` order — exactly the order the serial

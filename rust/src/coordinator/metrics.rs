@@ -14,6 +14,9 @@ pub struct RunStats {
     /// Dynamic instructions of the busiest SPU (the paper's Table 4
     /// Casper column reports per-SPU counts).
     pub per_spu_instrs: u64,
+    /// Accelerator passes per time step (1 for envelope-sized kernels;
+    /// wide kernels run their multi-pass plan back-to-back each step).
+    pub passes: usize,
     pub spu: SpuStats,
     pub llc: CacheStats,
     pub dram_accesses: u64,
@@ -78,6 +81,7 @@ impl RunStats {
         h.mix(self.cycles);
         h.mix(self.total_instrs);
         h.mix(self.per_spu_instrs);
+        h.mix(self.passes as u64);
         let s = &self.spu;
         for v in [
             s.instrs,
@@ -151,6 +155,7 @@ mod tests {
             cycles: 123,
             total_instrs: 456,
             per_spu_instrs: 78,
+            passes: 1,
             spu: SpuStats::default(),
             llc: CacheStats::default(),
             dram_accesses: 9,

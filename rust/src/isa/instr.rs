@@ -9,7 +9,9 @@ use anyhow::{bail, Result};
 /// comments (`shift right by 1` loads `A[j][i-1]`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShiftDir {
+    /// Toward higher addresses (`A[i + amount]`).
     Left = 0,
+    /// Toward lower addresses (`A[i - amount]`).
     Right = 1,
 }
 
@@ -33,6 +35,7 @@ pub struct CasperInstr {
 }
 
 impl CasperInstr {
+    /// Width of the wire encoding in bits.
     pub const BITS: u32 = 15;
 
     /// Element offset within the stream's row: `+amount` for left shifts,

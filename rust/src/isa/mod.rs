@@ -9,10 +9,15 @@
 //! [`ProgramBuilder`] is the paper's "programming library": it statically
 //! analyzes a [`StencilDesc`](crate::stencil::StencilDesc) and emits the
 //! instruction sequence, constant table, and stream specifications — the
-//! Fig 9 code, generated.
+//! Fig 9 code, generated. Stencils wider than the hardware envelope (more
+//! distinct rows than the 16-entry stream buffer holds, or overflowing
+//! the instruction/constant buffers) compile through
+//! [`ProgramBuilder::build_passes`] into an ordered [`PassPlan`] of
+//! envelope-legal programs that accumulate into the output grid — see
+//! [`program`] and `docs/KERNELS.md`.
 
 pub mod instr;
 pub mod program;
 
 pub use instr::{CasperInstr, ShiftDir};
-pub use program::{CasperProgram, ProgramBuilder, StreamSpec};
+pub use program::{CasperProgram, PassPlan, ProgramBuilder, StreamSpec};

@@ -1,29 +1,62 @@
-//! Casper programs and the static program builder (§5.2, Fig 8/9).
+//! Casper programs and the static program builder (§5.2, Fig 8/9),
+//! including **multi-pass compilation** for stencils wider than the ISA
+//! envelope (see `docs/KERNELS.md`).
 //!
 //! A program is the per-grid-point instruction sequence plus the constant
 //! table and the stream *shapes* (row offsets relative to the walked grid
 //! point). Per-SPU stream base addresses are bound later by the
 //! coordinator via `init_stream` — the same split as the paper's API.
+//!
+//! The SPU front-end is small (Table 2 / §5.1): 64 instruction-buffer
+//! entries, 16 stream-buffer entries, 16 constant-buffer entries, a 3-bit
+//! shift field. A stencil whose distinct rows (plus the output stream)
+//! exceed 16 — e.g. the isotropic radius-4 3D star, 17 rows — cannot be
+//! expressed as a single program. [`PassPlan`] partitions such a kernel's
+//! row groups into an *ordered* sequence of envelope-legal passes, and
+//! [`ProgramBuilder::build_passes`] compiles one [`CasperProgram`] per
+//! pass: pass 0 writes partial sums to the output array, and every later
+//! pass starts from an *accumulator stream* (an input stream bound to the
+//! pass's own output row, [`StreamSpec::from_output`]) so it computes
+//! `out = 1.0·out + Σ taps` — plain ISA instructions, no new hardware.
 
-use anyhow::{bail, Result};
+use std::ops::Range;
+
+use anyhow::{bail, ensure, Result};
 
 use super::instr::CasperInstr;
-use crate::stencil::StencilDesc;
+use crate::stencil::{RowGroup, StencilDesc};
 
-/// Hardware limits of the SPU front-end (Table 2 / §3.3 / §5.1).
+/// Instruction-buffer capacity of the SPU front-end (Table 2 / §3.3).
 pub const MAX_INSTRUCTIONS: usize = 64;
+/// Stream-buffer capacity (also the reach of the 4-bit stream-id field).
 pub const MAX_STREAMS: usize = 16;
+/// Constant-buffer capacity (also the reach of the 4-bit constant index).
 pub const MAX_CONSTANTS: usize = 16;
 /// Max |dx| encodable in the 3-bit shift-amount field.
 pub const MAX_SHIFT: i64 = 7;
+/// Sanity cap on multi-pass plans (~900 input rows' worth of passes).
+/// Unlike the buffer limits above this is a policy bound, not hardware:
+/// a spec needing more passes is *expressible* (the row-offset sanity
+/// bound admits far larger footprints) but is rejected with a clear
+/// error rather than scheduling thousands of accelerator passes.
+pub const MAX_PASSES: usize = 64;
 
 /// Shape of one stream: the row offset it walks, relative to the current
 /// output point. The output stream has `is_output = true`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StreamSpec {
+    /// Row offset along y, in rows.
     pub dy: i64,
+    /// Row offset along z, in planes.
     pub dz: i64,
+    /// True for the (single) output stream, always stream 0.
     pub is_output: bool,
+    /// True for an *accumulator* input stream: the coordinator binds it to
+    /// the pass's own output row in the output array, so a later pass of a
+    /// multi-pass plan reads the partial sums the previous pass stored.
+    /// Must have `dy == dz == 0` (it aliases exactly the elements the pass
+    /// writes, which is what makes the read-before-write race-free).
+    pub from_output: bool,
 }
 
 /// A complete Casper program: what `initStencilcode` + `initConstant`
@@ -42,6 +75,24 @@ pub struct CasperProgram {
 impl CasperProgram {
     /// Index of the output stream (fixed to 0, as in Fig 8).
     pub const OUT_STREAM: u8 = 0;
+
+    /// True when this program is a later pass of a multi-pass plan: it
+    /// carries an accumulator stream and adds onto the output array's
+    /// partial sums instead of overwriting them.
+    pub fn accumulates(&self) -> bool {
+        self.streams.iter().any(|s| s.from_output)
+    }
+
+    /// One-line buffer-utilization summary against the hardware envelope,
+    /// as printed by `casper kernels show`.
+    pub fn utilization(&self) -> String {
+        format!(
+            "{:>2}/{MAX_INSTRUCTIONS} instrs | {:>2}/{MAX_STREAMS} streams | {:>2}/{MAX_CONSTANTS} constants",
+            self.instrs.len(),
+            self.streams.len(),
+            self.constants.len()
+        )
+    }
 
     /// Validate against the hardware limits and structural rules.
     pub fn validate(&self) -> Result<()> {
@@ -63,6 +114,19 @@ impl CasperProgram {
         if self.streams.iter().skip(1).any(|s| s.is_output) {
             bail!("exactly one output stream allowed");
         }
+        // Accumulator streams (multi-pass): at most one, never the output
+        // stream itself, and pinned to the output row (dy = dz = 0).
+        if self.streams.iter().filter(|s| s.from_output).count() > 1 {
+            bail!("at most one accumulator (from_output) stream allowed");
+        }
+        for (sid, s) in self.streams.iter().enumerate() {
+            if s.from_output && s.is_output {
+                bail!("stream s{sid}: from_output set on the output stream");
+            }
+            if s.from_output && (s.dy != 0 || s.dz != 0) {
+                bail!("stream s{sid}: accumulator stream must have dy = dz = 0");
+            }
+        }
         // First instruction must clear the accumulator; exactly the last
         // must emit output (one store per grid point, §6).
         if !self.instrs[0].clear_acc {
@@ -82,6 +146,12 @@ impl CasperProgram {
             }
             if self.streams[sid].is_output {
                 bail!("instr {n}: loads from the output stream");
+            }
+            if self.streams[sid].from_output && i.shift_amount != 0 {
+                // A shifted accumulator load would read a neighbouring
+                // output element another SPU may be writing this pass —
+                // the same race the dy = dz = 0 rule blocks along rows.
+                bail!("instr {n}: shifted load from the accumulator stream (dx must be 0)");
             }
         }
         // Every input stream must be advanced exactly once per grid point,
@@ -135,14 +205,124 @@ impl CasperProgram {
     }
 }
 
+/// An ordered partition of a kernel's row groups into ISA-envelope-legal
+/// passes (multi-pass compilation; see the module docs and
+/// `docs/KERNELS.md`).
+///
+/// Each pass covers a contiguous index range of
+/// [`KernelSpec::row_groups`](crate::stencil::KernelSpec::row_groups) —
+/// *contiguity in program order is what keeps the multi-pass accumulation
+/// order identical to the single-program accumulation order*, which the
+/// golden pass-split oracle pins bitwise. A one-element plan means the
+/// kernel fits a single program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassPlan {
+    passes: Vec<Range<usize>>,
+}
+
+impl PassPlan {
+    /// Greedily partition `groups` (in order) into the fewest front-loaded
+    /// passes that each satisfy the envelope: per pass, the streams
+    /// (output + accumulator for passes after the first + one per group)
+    /// stay within [`MAX_STREAMS`], the instructions (accumulator + one
+    /// per tap) within [`MAX_INSTRUCTIONS`], and the distinct
+    /// coefficients (plus the accumulator's 1.0) within [`MAX_CONSTANTS`].
+    ///
+    /// Errors when a tap offset exceeds the 3-bit shift field (no pass
+    /// split can fix that), when a single row group alone overflows the
+    /// envelope, or when the plan would exceed [`MAX_PASSES`].
+    ///
+    /// The budget arithmetic here must stay in lockstep with what
+    /// `emit_pass` actually emits (accumulator = 1 stream + 1 instruction
+    /// + the constant 1.0; constants deduped by bit pattern) — that
+    /// agreement is what lets `KernelSpec::validate` promise that every
+    /// accepted spec compiles. The property test in
+    /// `rust/tests/kernel_registry.rs` pins it over random wide specs.
+    pub fn for_groups(groups: &[RowGroup]) -> Result<PassPlan> {
+        ensure!(!groups.is_empty(), "at least one row group required");
+        for g in groups {
+            for &(dx, _) in &g.taps {
+                ensure!(
+                    dx.unsigned_abs() <= MAX_SHIFT as u64,
+                    "tap dx {dx} exceeds the 3-bit shift field (|dx| <= {MAX_SHIFT}); \
+                     multi-pass splitting cannot widen the shift encoding"
+                );
+            }
+        }
+        let mut passes: Vec<Range<usize>> = Vec::new();
+        let mut start = 0usize;
+        while start < groups.len() {
+            // Later passes spend one stream, one instruction, and the
+            // constant 1.0 on the accumulator.
+            let accumulate = !passes.is_empty();
+            let mut instrs = accumulate as usize;
+            let mut streams = 1 + accumulate as usize;
+            let mut coefs: Vec<u64> = if accumulate { vec![1.0f64.to_bits()] } else { Vec::new() };
+            let mut end = start;
+            while end < groups.len() {
+                let g = &groups[end];
+                let mut grown = coefs.clone();
+                for &(_, c) in &g.taps {
+                    let bits = c.to_bits();
+                    if !grown.contains(&bits) {
+                        grown.push(bits);
+                    }
+                }
+                if streams + 1 > MAX_STREAMS
+                    || instrs + g.taps.len() > MAX_INSTRUCTIONS
+                    || grown.len() > MAX_CONSTANTS
+                {
+                    break;
+                }
+                streams += 1;
+                instrs += g.taps.len();
+                coefs = grown;
+                end += 1;
+            }
+            ensure!(
+                end > start,
+                "row group {start} alone exceeds the ISA envelope \
+                 ({} taps vs {MAX_INSTRUCTIONS}-entry instruction / {MAX_CONSTANTS}-entry constant buffers)",
+                groups[start].taps.len()
+            );
+            passes.push(start..end);
+            start = end;
+        }
+        ensure!(
+            passes.len() <= MAX_PASSES,
+            "{} passes exceed the {MAX_PASSES}-pass sanity bound",
+            passes.len()
+        );
+        Ok(PassPlan { passes })
+    }
+
+    /// Per-pass row-group index ranges into the kernel's `row_groups()`,
+    /// in execution order.
+    pub fn passes(&self) -> &[Range<usize>] {
+        &self.passes
+    }
+
+    /// Number of accelerator passes per time step.
+    pub fn num_passes(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// True when the kernel needs more than one pass per time step.
+    pub fn is_multi_pass(&self) -> bool {
+        self.passes.len() > 1
+    }
+}
+
 /// The paper's "programming library": compile a stencil descriptor into a
-/// Casper program.
+/// Casper program — or, past the ISA envelope, an ordered sequence of
+/// them ([`Self::build_passes`]).
 #[derive(Debug, Default)]
 pub struct ProgramBuilder {
     constants: Vec<f64>,
 }
 
 impl ProgramBuilder {
+    /// Fresh builder with an empty constant table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -159,26 +339,67 @@ impl ProgramBuilder {
         Ok((self.constants.len() - 1) as u8)
     }
 
-    /// Compile a stencil: one stream per distinct `(dy, dz)` row (plus the
-    /// output stream), one MAC instruction per tap, in-row taps expressed
-    /// as shifted (unaligned) accesses of the shared stream — exactly the
-    /// Fig 8/9 scheme.
-    pub fn build(mut self, desc: &StencilDesc) -> Result<CasperProgram> {
+    /// Compile a stencil that fits the envelope in a single pass: one
+    /// stream per distinct `(dy, dz)` row (plus the output stream), one
+    /// MAC instruction per tap, in-row taps expressed as shifted
+    /// (unaligned) accesses of the shared stream — exactly the Fig 8/9
+    /// scheme. Errors for wider stencils; use [`Self::build_passes`] to
+    /// get their multi-pass plan instead.
+    pub fn build(self, desc: &StencilDesc) -> Result<CasperProgram> {
         let groups = desc.row_groups();
         if groups.len() + 1 > MAX_STREAMS {
             bail!(
-                "{} row groups need {} streams (> {MAX_STREAMS})",
+                "{} row groups need {} streams (> {MAX_STREAMS}); \
+                 use build_passes for a multi-pass plan",
                 groups.len(),
                 groups.len() + 1
             );
         }
+        self.emit_pass(&groups, false)
+    }
 
-        let mut streams = vec![StreamSpec { dy: 0, dz: 0, is_output: true }];
+    /// Compile a stencil of any width into its ordered multi-pass plan:
+    /// one envelope-legal [`CasperProgram`] per [`PassPlan`] entry. Pass 0
+    /// overwrites the output array with partial sums; every later pass
+    /// leads with an accumulator instruction (`acc = 1.0 · out[i]`) over a
+    /// [`StreamSpec::from_output`] stream, then adds its own taps — so
+    /// running the passes back-to-back computes the full stencil in the
+    /// same tap order as the single-pass program would have. Kernels that
+    /// fit the envelope return a one-element plan identical to
+    /// [`Self::build`].
+    pub fn build_passes(desc: &StencilDesc) -> Result<Vec<CasperProgram>> {
+        let groups = desc.row_groups();
+        let plan = PassPlan::for_groups(&groups)?;
+        plan.passes()
+            .iter()
+            .enumerate()
+            .map(|(pi, r)| ProgramBuilder::new().emit_pass(&groups[r.clone()], pi > 0))
+            .collect()
+    }
+
+    /// Emit one pass over `groups`. `accumulate` prepends the accumulator
+    /// stream + instruction (passes after the first of a multi-pass plan).
+    fn emit_pass(mut self, groups: &[RowGroup], accumulate: bool) -> Result<CasperProgram> {
+        let mut streams = vec![StreamSpec { dy: 0, dz: 0, is_output: true, from_output: false }];
         let mut instrs: Vec<CasperInstr> = Vec::new();
 
-        for (gi, group) in groups.iter().enumerate() {
-            let stream_idx = (gi + 1) as u8;
-            streams.push(StreamSpec { dy: group.dy, dz: group.dz, is_output: false });
+        if accumulate {
+            // `acc = 1.0 · out[i]`: reload the previous pass's partial sum
+            // (multiplying by 1.0 is exact, so the bits carry through).
+            streams.push(StreamSpec { dy: 0, dz: 0, is_output: false, from_output: true });
+            let mut instr = CasperInstr::with_dx(self.constant(1.0)?, 1, 0)?;
+            instr.advance_stream = true;
+            instrs.push(instr);
+        }
+
+        for group in groups {
+            let stream_idx = streams.len() as u8;
+            streams.push(StreamSpec {
+                dy: group.dy,
+                dz: group.dz,
+                is_output: false,
+                from_output: false,
+            });
             let last_tap = group.taps.len() - 1;
             for (ti, &(dx, coef)) in group.taps.iter().enumerate() {
                 if dx.unsigned_abs() as i64 > MAX_SHIFT {
@@ -205,7 +426,7 @@ impl ProgramBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::stencil::StencilKind;
+    use crate::stencil::{extended_presets, StencilKind, StencilPoint};
 
     #[test]
     fn jacobi2d_matches_fig9() {
@@ -239,6 +460,20 @@ mod tests {
             assert!(prog.instrs.len() <= MAX_INSTRUCTIONS, "{k}");
             assert!(prog.streams.len() <= MAX_STREAMS, "{k}");
             assert!(prog.constants.len() <= MAX_CONSTANTS, "{k}");
+        }
+    }
+
+    #[test]
+    fn single_pass_plan_matches_build_exactly() {
+        // For every in-envelope kernel, build_passes must return exactly
+        // the single program `build` emits — the multi-pass machinery may
+        // not perturb the paper kernels (byte-stable default report).
+        for k in StencilKind::ALL {
+            let desc = k.descriptor();
+            let single = ProgramBuilder::new().build(&desc).unwrap();
+            let passes = ProgramBuilder::build_passes(&desc).unwrap();
+            assert_eq!(passes, vec![single], "{k}");
+            assert!(!passes[0].accumulates(), "{k}");
         }
     }
 
@@ -297,10 +532,171 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_malformed_accumulator_streams() {
+        // An accumulator stream off the output row — or a *shifted* load
+        // from it — would read neighbours' in-flight partial sums: data
+        // races the validator must reject. Start from a real accumulating
+        // pass (star17_3d pass 1), which must itself validate.
+        let star = extended_presets()
+            .into_iter()
+            .find(|s| s.id.as_str() == "star17_3d")
+            .expect("star17_3d preset");
+        let good = ProgramBuilder::build_passes(&star).unwrap().remove(1);
+        good.validate().unwrap();
+
+        let mut off_row = good.clone();
+        off_row.streams[1].dy = 1;
+        let err = off_row.validate().unwrap_err().to_string();
+        assert!(err.contains("accumulator"), "{err}");
+
+        let mut shifted = good.clone();
+        shifted.instrs[0].shift_amount = 1;
+        let err = shifted.validate().unwrap_err().to_string();
+        assert!(err.contains("accumulator"), "{err}");
+
+        let mut two_accs = good.clone();
+        two_accs.streams[2] = StreamSpec { dy: 0, dz: 0, is_output: false, from_output: true };
+        let err = two_accs.validate().unwrap_err().to_string();
+        assert!(err.contains("at most one accumulator"), "{err}");
+
+        let mut on_output = good.clone();
+        on_output.streams[0].from_output = true; // the output stream itself
+        assert!(on_output.validate().is_err());
+    }
+
+    fn single_tap_rows(n: usize) -> Vec<RowGroup> {
+        (0..n)
+            .map(|i| RowGroup { dy: i as i64, dz: 0, taps: vec![(0, 0.5)] })
+            .collect()
+    }
+
+    #[test]
+    fn plan_splits_on_the_stream_budget() {
+        // 20 single-tap rows: pass 0 holds 15 (output + 15 = 16 streams),
+        // pass 1 holds the rest (output + accumulator + 5).
+        let plan = PassPlan::for_groups(&single_tap_rows(20)).unwrap();
+        assert_eq!(plan.passes(), &[0..15, 15..20]);
+        assert!(plan.is_multi_pass());
+        // 35 rows: 15 + 14 (accumulator costs a stream) + 6.
+        let plan = PassPlan::for_groups(&single_tap_rows(35)).unwrap();
+        assert_eq!(plan.passes(), &[0..15, 15..29, 29..35]);
+        // 15 rows fit a single pass.
+        let plan = PassPlan::for_groups(&single_tap_rows(15)).unwrap();
+        assert_eq!(plan.passes(), &[0..15]);
+        assert!(!plan.is_multi_pass());
+    }
+
+    #[test]
+    fn plan_splits_on_the_instruction_and_constant_budgets() {
+        // 10 rows × 7 taps = 70 instructions: the instruction buffer (64)
+        // splits before the stream buffer would.
+        let rows: Vec<RowGroup> = (0..10)
+            .map(|i| RowGroup {
+                dy: i as i64,
+                dz: 0,
+                taps: (-3..=3).map(|dx| (dx, 0.25)).collect(),
+            })
+            .collect();
+        let plan = PassPlan::for_groups(&rows).unwrap();
+        assert_eq!(plan.passes(), &[0..9, 9..10]);
+        // 9 rows × 2 taps with 18 distinct coefficients: the constant
+        // buffer (16) splits first — after 8 rows (16 constants, 9
+        // streams, 16 instructions) only the constants are exhausted.
+        let rows: Vec<RowGroup> = (0..9)
+            .map(|i| RowGroup {
+                dy: i as i64,
+                dz: 0,
+                taps: vec![(0, 1.0 / (2 * i + 2) as f64), (1, 1.0 / (2 * i + 3) as f64)],
+            })
+            .collect();
+        let plan = PassPlan::for_groups(&rows).unwrap();
+        assert_eq!(plan.passes(), &[0..8, 8..9]);
+    }
+
+    #[test]
+    fn plan_rejects_unsplittable_shifts() {
+        let rows = vec![RowGroup { dy: 0, dz: 0, taps: vec![(8, 1.0)] }];
+        let err = PassPlan::for_groups(&rows).unwrap_err().to_string();
+        assert!(err.contains("3-bit shift field"), "{err}");
+        assert!(PassPlan::for_groups(&[]).is_err());
+    }
+
+    #[test]
+    fn star17_compiles_as_two_accumulating_passes() {
+        // The previously-impossible kernel: the isotropic radius-4 3D star
+        // has 17 input rows (> 15 the stream buffer can hold next to the
+        // output), so PR 4 had to reject it. It now compiles as 2 passes.
+        let star = extended_presets()
+            .into_iter()
+            .find(|s| s.id.as_str() == "star17_3d")
+            .expect("star17_3d preset");
+        assert_eq!(star.row_groups().len(), 17);
+        assert!(ProgramBuilder::new().build(&star).is_err(), "single-pass must still reject");
+
+        let passes = ProgramBuilder::build_passes(&star).unwrap();
+        assert_eq!(passes.len(), 2);
+        for (pi, p) in passes.iter().enumerate() {
+            p.validate().unwrap_or_else(|e| panic!("pass {pi}: {e:#}"));
+            assert!(p.streams.len() <= MAX_STREAMS, "pass {pi}");
+        }
+        // Pass 0: greedy-filled to the stream budget, plain partial sums.
+        assert!(!passes[0].accumulates());
+        assert_eq!(passes[0].streams.len(), MAX_STREAMS);
+        // Pass 1: accumulator stream + the 2 remaining rows.
+        assert!(passes[1].accumulates());
+        assert_eq!(passes[1].streams.len(), 4); // output + accum + 2 rows
+        let acc = passes[1].instrs[0];
+        assert!(acc.clear_acc && acc.advance_stream && !acc.enable_output);
+        assert_eq!(acc.dx(), 0);
+        assert_eq!(passes[1].constants[acc.const_idx as usize], 1.0);
+        assert!(passes[1].streams[acc.stream_idx as usize].from_output);
+        // Together the passes cover every tap exactly once (plus 1 accum).
+        let taps: usize = passes.iter().map(|p| p.instrs.len()).sum();
+        assert_eq!(taps, star.num_points() + 1);
+    }
+
+    #[test]
     fn disasm_has_one_line_per_instr() {
         let prog = ProgramBuilder::new()
             .build(&StencilKind::Heat3D.descriptor())
             .unwrap();
         assert_eq!(prog.disasm().lines().count(), 7);
+    }
+
+    #[test]
+    fn utilization_reports_the_three_buffers() {
+        let prog = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi2D.descriptor())
+            .unwrap();
+        let u = prog.utilization();
+        assert!(u.contains("5/64 instrs"), "{u}");
+        assert!(u.contains("4/16 streams"), "{u}");
+        assert!(u.contains("1/16 constants"), "{u}");
+    }
+
+    #[test]
+    fn wide_synthetic_kernel_round_trips_through_passes() {
+        // A 1D-ish synthetic with 40 rows in y: every pass validates, the
+        // row coverage is a partition, and only pass 0 overwrites.
+        let mut points = Vec::new();
+        for dy in -20i64..20 {
+            points.push(StencilPoint::new(0, dy, 0, 0.025));
+        }
+        let spec = crate::stencil::KernelSpec::new(
+            "wide40",
+            "wide 40-row",
+            2,
+            points,
+            crate::stencil::KernelOrigin::File,
+        );
+        let passes = ProgramBuilder::build_passes(&spec).unwrap();
+        assert_eq!(passes.len(), 3); // 15 + 14 + 11 rows
+        assert!(!passes[0].accumulates());
+        assert!(passes[1].accumulates() && passes[2].accumulates());
+        let rows: usize = passes
+            .iter()
+            .map(|p| p.streams.iter().filter(|s| !s.is_output && !s.from_output).count())
+            .sum();
+        assert_eq!(rows, 40);
     }
 }

@@ -76,19 +76,22 @@ fn dispatch(cmd: Command) -> Result<()> {
             match action {
                 KernelsAction::List => {
                     println!(
-                        "{:<12} {:<22} {:>4} {:>5} {:>8} {:>8}  {}",
-                        "id", "name", "dims", "taps", "radius", "streams", "origin"
+                        "{:<12} {:<22} {:>4} {:>5} {:>8} {:>8} {:>6}  {}",
+                        "id", "name", "dims", "taps", "radius", "streams", "passes", "origin"
                     );
                     for s in reg.specs() {
                         let r = s.radius();
+                        // Registered specs always plan (validate checked).
+                        let passes = s.pass_plan().map(|p| p.num_passes()).unwrap_or(0);
                         println!(
-                            "{:<12} {:<22} {:>4} {:>5} {:>8} {:>8}  {}",
+                            "{:<12} {:<22} {:>4} {:>5} {:>8} {:>8} {:>6}  {}",
                             s.id,
                             s.name,
                             s.dims,
                             s.num_points(),
                             format!("{},{},{}", r[0], r[1], r[2]),
                             s.row_groups().len() + 1,
+                            passes,
                             s.origin.name()
                         );
                     }
@@ -224,14 +227,40 @@ fn show_kernel(s: &KernelSpec) -> Result<()> {
     }
     let groups = s.row_groups();
     println!("  streams: {} ({} input rows + 1 output)", groups.len() + 1, groups.len());
-    let prog = ProgramBuilder::new().build(s)?;
+    // Multi-pass plan + per-pass envelope headroom (docs/KERNELS.md):
+    // wide kernels split into accumulating passes instead of failing.
+    // The compiled programs are the single source here — each pass's row
+    // range falls out of its stream table (input rows are contiguous in
+    // program order across passes).
+    let programs = ProgramBuilder::build_passes(s)?;
+    let multi = programs.len() > 1;
     println!(
-        "  program: {} instrs, {} constants — disassembly (c, s, dir, amt, clr, out, adv):",
-        prog.instrs.len(),
-        prog.constants.len()
+        "  pass plan: {} pass{} per step{}",
+        programs.len(),
+        if multi { "es" } else { "" },
+        if multi { " (wider than the 16-stream envelope)" } else { "" }
     );
-    for line in prog.disasm().lines() {
-        println!("    {line}");
+    let mut row0 = 0usize;
+    for (pi, prog) in programs.iter().enumerate() {
+        let rows = prog.streams.iter().filter(|st| !st.is_output && !st.from_output).count();
+        println!(
+            "    pass {pi}: {} | rows {}..{}{}",
+            prog.utilization(),
+            row0,
+            row0 + rows,
+            if prog.accumulates() { " | accumulates (out += Σ taps)" } else { "" }
+        );
+        row0 += rows;
+    }
+    for (pi, prog) in programs.iter().enumerate() {
+        println!(
+            "  pass {pi} program: {} instrs, {} constants — disassembly (c, s, dir, amt, clr, out, adv):",
+            prog.instrs.len(),
+            prog.constants.len()
+        );
+        for line in prog.disasm().lines() {
+            println!("    {line}");
+        }
     }
     Ok(())
 }
@@ -272,6 +301,12 @@ fn run_one(
         pims as f64 / casper_stats.cycles as f64,
         casper_stats.cycles as f64 / gpu as f64,
     );
+    if casper_stats.passes > 1 {
+        println!(
+            "multi-pass plan: {} accelerator passes per step (kernel wider than one program's envelope)",
+            casper_stats.passes
+        );
+    }
     let ce = casper_energy(cfg, &casper_stats);
     let pe = cpu_energy(cfg, &cpu_stats);
     println!("energy casper: {ce}");

@@ -229,6 +229,18 @@ impl Spu {
         &self.program
     }
 
+    /// Swap in a new (validated) program in place — the multi-pass path
+    /// between accelerator passes. Unlike rebuilding via [`Spu::new`],
+    /// this preserves the timing state (`now`/`done`/load queue), the
+    /// event counters, and any private L1 tags, so passes account
+    /// back-to-back on one continuous SPU timeline. Stream bindings are
+    /// cleared (the stream table changed); the next `bind_chunk`
+    /// rebinds them.
+    pub fn set_program(&mut self, program: CasperProgram) {
+        self.program = program;
+        self.streams.clear();
+    }
+
     /// Execute one vector group (≤ 8 output elements; the tail group may
     /// be narrower). Returns false when no work remains.
     pub fn run_group(&mut self, mem: &mut ShardedMem) -> bool {
@@ -385,7 +397,9 @@ impl Spu {
                 let out_addr = self.streams[CasperProgram::OUT_STREAM as usize].addr;
                 // Stage the output write instead of touching the shared
                 // store: chunks are disjoint across SPUs and never read
-                // back within the step, so epoch-end application is
+                // back within the current `run_step` (pass) — a later
+                // pass's accumulator stream re-reads them only after this
+                // pass fully flushed — so epoch-end application is
                 // invisible.
                 match trace.outs.last_mut() {
                     Some(run) if run.addr + run.data.len() as u64 * 8 == out_addr => {

@@ -9,8 +9,8 @@
 //! touched by the deterministic serial replay — see
 //! `rust/DESIGN-parallel.md`).
 //!
-//! The timed per-slice request logic ([`ShardedMem::load_slice_request`],
-//! [`ShardedMem::store_request`]) is written ONCE and used by both
+//! The timed per-slice request logic (`ShardedMem::load_slice_request`,
+//! `ShardedMem::store_request` — crate-internal) is written ONCE and used by both
 //! execution modes: the serial path resolves tag outcomes inline
 //! (`pre = None`), the epoch-parallel replay injects outcomes that the
 //! per-slice reconciliation computed (`pre = Some(..)`). Keeping a single

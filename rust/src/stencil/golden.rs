@@ -156,6 +156,72 @@ pub fn step_serial(desc: &StencilDesc, src: &Grid, dst: &mut Grid) {
     }
 }
 
+/// The pass-split oracle: apply one stencil step exactly as the
+/// multi-pass Casper engine does — pass by pass over the kernel's
+/// [`PassPlan`](crate::isa::PassPlan), pass 0 writing partial sums and
+/// every later pass accumulating on top (`acc = 1.0 · dst[i] + Σ taps`).
+///
+/// Taps accumulate in *program order* (row groups sorted by `(dz, dy)`,
+/// in-row taps by `dx` — the `ProgramBuilder` emission order), and the
+/// passes are contiguous ranges of that order, so the multi-pass sum is
+/// the same left-to-right addition sequence as a single program's and the
+/// result is **bitwise identical** to [`step_serial`] over the
+/// program-ordered view of the kernel
+/// ([`KernelSpec::program_ordered`](crate::stencil::KernelSpec::program_ordered))
+/// — pinned by test here and property-tested over random wide specs in
+/// `rust/tests/kernel_registry.rs`. For single-pass kernels it degrades
+/// to exactly one plain partial-sum pass.
+pub fn step_multipass(desc: &StencilDesc, src: &Grid, dst: &mut Grid) {
+    assert_eq!((src.nx, src.ny, src.nz), (dst.nx, dst.ny, dst.nz), "shape mismatch");
+    let [rx, ry, rz] = desc.radius();
+    let (nx, ny, nz) = (src.nx, src.ny, src.nz);
+    assert!(nx > 2 * rx && ny > 2 * ry && nz > 2 * rz, "domain smaller than halo");
+
+    // Boundary copy-through (identical to the single-pass oracles).
+    dst.data.copy_from_slice(&src.data);
+
+    let groups = desc.row_groups();
+    let plan = desc.pass_plan().expect("validated spec must plan");
+    for (pi, pass) in plan.passes().iter().enumerate() {
+        // This pass's taps, flattened in program order.
+        let mut offs: Vec<(isize, f64)> = Vec::new();
+        for g in &groups[pass.clone()] {
+            for &(dx, c) in &g.taps {
+                offs.push((src.tap_offset(dx, g.dy, g.dz) as isize, c));
+            }
+        }
+        for z in rz..nz - rz {
+            for y in ry..ny - ry {
+                let row = src.index(0, y, z);
+                for x in rx..nx - rx {
+                    let i = row + x;
+                    // Later passes reload the previous pass's partial sum
+                    // through the accumulator stream: `acc = 1.0 · out[i]`
+                    // (exact, so the bits carry through — written here as
+                    // the identity it is).
+                    let mut acc = if pi == 0 { 0.0f64 } else { dst.data[i] };
+                    for &(o, c) in &offs {
+                        acc += c * src.data[(i as isize + o) as usize];
+                    }
+                    dst.data[i] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// [`run`] through the pass-split oracle [`step_multipass`]: `steps`
+/// Jacobi iterations with array swapping.
+pub fn run_multipass(desc: &StencilDesc, initial: &Grid, steps: usize) -> Grid {
+    let mut a = initial.clone();
+    let mut b = initial.clone();
+    for _ in 0..steps {
+        step_multipass(desc, &a, &mut b);
+        std::mem::swap(&mut a, &mut b);
+    }
+    a
+}
+
 /// Run `steps` Jacobi iterations with array swapping. Returns the final
 /// grid (which is `a` after an even number of steps, `b` after odd).
 pub fn run(desc: &StencilDesc, initial: &Grid, steps: usize) -> Grid {
@@ -240,6 +306,48 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn multipass_step_is_bitwise_identical_to_program_ordered_serial() {
+        // The pass-split contract: splitting a kernel into accumulating
+        // passes must not change a single bit relative to the unsplit
+        // scalar oracle accumulating in the same (program) order — for
+        // the paper six (1 pass) AND the extended presets including the
+        // 2-pass star17_3d.
+        let mut specs: Vec<KernelSpec> = StencilKind::ALL.iter().map(|k| k.descriptor()).collect();
+        specs.extend(crate::stencil::extended_presets());
+        for spec in &specs {
+            let d = spec.tiny_domain();
+            let src = d.alloc_random(0x9A55);
+            let mut want = d.alloc();
+            step_serial(&spec.program_ordered(), &src, &mut want);
+            let mut got = d.alloc();
+            step_multipass(spec, &src, &mut got);
+            assert!(
+                got.data.iter().zip(&want.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{}: pass-split oracle diverged bitwise from the serial oracle",
+                spec.id
+            );
+        }
+    }
+
+    #[test]
+    fn multipass_run_swaps_like_run() {
+        // Multi-step ping-pong through the pass-split oracle: for a spec
+        // whose taps already sit in program order, run_multipass must be
+        // bitwise-identical to the plain banded `run`.
+        let spec = StencilKind::Blur2D.descriptor();
+        assert_eq!(spec.program_ordered().points, spec.points, "Blur2D is program-ordered");
+        let d = spec.tiny_domain();
+        let g = d.alloc_random(0x5EED);
+        let a = run(&spec, &g, 3);
+        let b = run_multipass(&spec, &g, 3);
+        assert!(
+            a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "multi-step pass-split run diverged"
+        );
+        assert_eq!(run_multipass(&spec, &g, 0), g);
     }
 
     #[test]

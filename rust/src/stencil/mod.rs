@@ -22,9 +22,11 @@
 //! coefficient set, so we use a normalized symmetric one (DESIGN.md §3).
 //!
 //! Beyond the paper, [`spec::extended_presets`] ships `hdiff` (NERO-style
-//! horizontal diffusion) and `star25_3d` (25-point high-order 3D star),
-//! and user kernels load from TOML files — see DESIGN.md, "Kernel
-//! registry".
+//! horizontal diffusion), `star25_3d` (25-point high-order anisotropic 3D
+//! star), and `star17_3d` (the isotropic radius-4 star whose 17 rows
+//! exceed the stream buffer — it compiles as a 2-pass plan, see
+//! `docs/KERNELS.md`), and user kernels load from TOML files — see
+//! DESIGN.md, "Kernel registry".
 
 pub mod domain;
 pub mod golden;

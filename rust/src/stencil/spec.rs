@@ -4,7 +4,8 @@
 //! `StencilKind` arm across config, harness, CLI, and golden reference.
 //!
 //! The paper's six kernels (§7.2) are *presets* built through the same
-//! type ([`paper_preset`]); anything the SPU datapath can execute is
+//! type (`paper_preset`, crate-internal); anything the SPU datapath can
+//! execute is
 //! expressible as a spec, including kernels loaded from TOML files at
 //! runtime (`--kernel-file`, parsed with the in-tree
 //! [`toml_mini`](crate::config::toml_mini) subset) — the paper's six are
@@ -13,8 +14,14 @@
 //! [`KernelSpec::validate`] enforces both the physical constraints
 //! (radius vs. domain, dimensionality consistency) and the Casper ISA
 //! envelope (§5.1: 3-bit shift field, 16-entry stream/constant buffers,
-//! 64-entry instruction buffer), so a registered kernel is guaranteed to
-//! compile with [`ProgramBuilder`](crate::isa::ProgramBuilder).
+//! 64-entry instruction buffer). Kernels wider than one program's
+//! envelope — more distinct rows than the stream buffer holds, say — are
+//! no longer rejected: validation instead requires a *multi-pass plan*
+//! ([`KernelSpec::pass_plan`]), so every registered kernel is guaranteed
+//! to compile with
+//! [`ProgramBuilder::build_passes`](crate::isa::ProgramBuilder::build_passes)
+//! (length 1 for envelope-sized kernels). Only per-tap hard limits (the
+//! 3-bit shift field) remain outright rejections.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -23,7 +30,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::config::toml_mini::TomlDoc;
 use crate::config::SizeClass;
-use crate::isa::program::{MAX_CONSTANTS, MAX_INSTRUCTIONS, MAX_SHIFT, MAX_STREAMS};
+use crate::isa::program::{PassPlan, MAX_SHIFT};
 
 use super::domain::table3;
 use super::{Domain, StencilKind};
@@ -181,6 +188,32 @@ impl KernelSpec {
         groups
     }
 
+    /// The multi-pass compilation plan for this kernel: an ordered
+    /// partition of [`row_groups`](Self::row_groups) into ISA-envelope-
+    /// legal passes (length 1 when the kernel fits a single program).
+    /// Errors only for kernels [`validate`](Self::validate) would reject.
+    pub fn pass_plan(&self) -> Result<PassPlan> {
+        PassPlan::for_groups(&self.row_groups())
+    }
+
+    /// This kernel with its taps re-sorted into *program order* — the
+    /// `(dz, dy)`-then-`dx` order in which
+    /// [`ProgramBuilder`](crate::isa::ProgramBuilder) emits MAC
+    /// instructions and hence the order the SPU (and the multi-pass
+    /// golden oracle) accumulates in. Floating-point addition is not
+    /// associative, so bitwise comparisons between the tap-order oracle
+    /// (`golden::step_serial`) and program-order execution go through
+    /// this view.
+    pub fn program_ordered(&self) -> KernelSpec {
+        let mut points = Vec::with_capacity(self.points.len());
+        for g in self.row_groups() {
+            for &(dx, coef) in &g.taps {
+                points.push(StencilPoint::new(dx, g.dy, g.dz, coef));
+            }
+        }
+        KernelSpec { points, ..self.clone() }
+    }
+
     /// Sum of coefficients (≈1.0 for averaging stencils).
     pub fn coef_sum(&self) -> f64 {
         self.points.iter().map(|p| p.coef).sum()
@@ -257,13 +290,9 @@ impl KernelSpec {
                 );
             }
         }
-        // Casper ISA envelope (§5.1) — guarantees ProgramBuilder succeeds.
-        ensure!(
-            self.points.len() <= MAX_INSTRUCTIONS,
-            "kernel '{id}': {} taps exceed the {MAX_INSTRUCTIONS}-entry instruction buffer",
-            self.points.len()
-        );
         for p in &self.points {
+            // Per-tap hard limit of the Casper ISA (§5.1): the 3-bit
+            // shift field. No pass split can widen it.
             ensure!(
                 p.dx.unsigned_abs() <= MAX_SHIFT as u64,
                 "kernel '{id}': tap dx {} exceeds the 3-bit shift field (|dx| <= {MAX_SHIFT})",
@@ -281,20 +310,11 @@ impl KernelSpec {
                 p.dz
             );
         }
-        let streams = self.row_groups().len() + 1;
-        ensure!(
-            streams <= MAX_STREAMS,
-            "kernel '{id}': {streams} streams ({} input rows + output) exceed the {MAX_STREAMS}-entry stream buffer",
-            streams - 1
-        );
-        let mut coefs: Vec<u64> = self.points.iter().map(|p| p.coef.to_bits()).collect();
-        coefs.sort_unstable();
-        coefs.dedup();
-        ensure!(
-            coefs.len() <= MAX_CONSTANTS,
-            "kernel '{id}': {} distinct coefficients exceed the {MAX_CONSTANTS}-entry constant buffer",
-            coefs.len()
-        );
+        // Casper ISA envelope (§5.1): the kernel must admit a compilation
+        // plan — a single program when everything fits, a multi-pass plan
+        // otherwise. The planner's errors name the offending buffer.
+        self.pass_plan()
+            .with_context(|| format!("kernel '{id}': no ISA-legal pass plan"))?;
         // Radius vs. every configured domain: boundary copy-through needs
         // a non-empty interior in each class.
         let [rx, ry, rz] = self.radius();
@@ -563,14 +583,17 @@ pub(super) fn paper_preset(kind: StencilKind) -> KernelSpec {
 /// - `hdiff`: a NERO-style (Singh et al., 2020) 9-point radius-2
 ///   horizontal-diffusion star in 2D — the irregular-coefficient weather
 ///   workload class.
-/// - `star25_3d`: a 25-point high-order 3D star (seismic RTM shape). The
-///   isotropic radius-4 star needs 17 input row streams — beyond the
-///   16-entry stream buffer the 4-bit stream-id field allows — so the
-///   preset uses the anisotropic variant common in RTM codes (x ±5,
-///   y ±4, z ±3): 25 taps over exactly 15 input rows, saturating the
-///   stream buffer at its architectural limit.
+/// - `star25_3d`: a 25-point high-order 3D star (seismic RTM shape) in
+///   the anisotropic variant common in RTM codes (x ±5, y ±4, z ±3):
+///   25 taps over exactly 15 input rows, saturating the stream buffer at
+///   its single-program limit.
+/// - `star17_3d`: the *isotropic* radius-4 25-point 3D star. Its 17 input
+///   rows exceed the 16-entry stream buffer, so a single program cannot
+///   express it — it compiles as a 2-pass plan
+///   ([`KernelSpec::pass_plan`]), the kernel class multi-pass compilation
+///   exists for.
 pub fn extended_presets() -> Vec<KernelSpec> {
-    vec![hdiff_preset(), star25_preset()]
+    vec![hdiff_preset(), star25_preset(), star17_preset()]
 }
 
 fn hdiff_preset() -> KernelSpec {
@@ -603,6 +626,37 @@ fn star25_preset() -> KernelSpec {
         }
     }
     KernelSpec::new("star25_3d", "25-point 3D star", 3, pts, KernelOrigin::Extended)
+}
+
+fn star17_preset() -> KernelSpec {
+    // Isotropic radius-4 star: center + 6 arms of 4. Per-arm weights by
+    // distance /25 (center 2.5: total 2.5 + 6·(2 + 1 + 0.5 + 0.25) = 25,
+    // so coefficients sum to 1). 17 distinct rows → 2 passes.
+    //
+    // The taps are listed in *program order* — rows sorted by (dz, dy),
+    // in-row taps by dx — so the tap-order golden oracle accumulates in
+    // exactly the order the compiled passes do, and the engine-vs-golden
+    // check for this kernel is bitwise (see `coordinator::engine` tests).
+    const W: [f64; 4] = [2.0 / 25.0, 1.0 / 25.0, 0.5 / 25.0, 0.25 / 25.0];
+    let arm = |d: i64| W[(d.unsigned_abs() - 1) as usize];
+    let mut pts = Vec::with_capacity(25);
+    for dz in -4i64..=-1 {
+        pts.push(StencilPoint::new(0, 0, dz, arm(dz)));
+    }
+    for dy in -4i64..=-1 {
+        pts.push(StencilPoint::new(0, dy, 0, arm(dy)));
+    }
+    for dx in -4i64..=4 {
+        let c = if dx == 0 { 2.5 / 25.0 } else { arm(dx) };
+        pts.push(StencilPoint::new(dx, 0, 0, c));
+    }
+    for dy in 1i64..=4 {
+        pts.push(StencilPoint::new(0, dy, 0, arm(dy)));
+    }
+    for dz in 1i64..=4 {
+        pts.push(StencilPoint::new(0, 0, dz, arm(dz)));
+    }
+    KernelSpec::new("star17_3d", "17-row 3D star", 3, pts, KernelOrigin::Extended)
 }
 
 /// The open kernel registry: presets plus user-loaded TOML specs, looked
@@ -675,6 +729,7 @@ impl KernelRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::isa::program::MAX_STREAMS;
 
     #[test]
     fn paper_presets_validate_and_match_kinds() {
@@ -708,6 +763,69 @@ mod tests {
         assert_eq!(star.radius(), [5, 4, 3]);
         // Exactly saturates the stream buffer: 15 input rows + 1 output.
         assert_eq!(star.row_groups().len() + 1, MAX_STREAMS);
+        assert_eq!(star.pass_plan().unwrap().num_passes(), 1);
+        // The isotropic radius-4 star: one row past the envelope → 2
+        // passes. PR 4 had to reject this exact kernel.
+        let iso = &ext[2];
+        assert_eq!(iso.id.as_str(), "star17_3d");
+        assert_eq!(iso.num_points(), 25);
+        assert_eq!(iso.radius(), [4, 4, 4]);
+        assert_eq!(iso.row_groups().len(), 17);
+        let plan = iso.pass_plan().unwrap();
+        assert!(plan.is_multi_pass());
+        assert_eq!(plan.num_passes(), 2);
+    }
+
+    #[test]
+    fn star17_points_are_in_program_order() {
+        // The preset's tap list must equal its own program-ordered view,
+        // so tap-order and program-order accumulation coincide and the
+        // engine-vs-golden check can be bitwise.
+        let iso = extended_presets()
+            .into_iter()
+            .find(|s| s.id.as_str() == "star17_3d")
+            .unwrap();
+        assert_eq!(iso.program_ordered().points, iso.points);
+    }
+
+    #[test]
+    fn program_ordered_is_a_sorted_permutation() {
+        for k in StencilKind::ALL {
+            let spec = k.descriptor();
+            let ordered = spec.program_ordered();
+            ordered.validate().unwrap();
+            assert_eq!(ordered.num_points(), spec.num_points(), "{k}");
+            assert_eq!(ordered.row_groups(), spec.row_groups(), "{k}");
+            // Sorted by (dz, dy, dx) — the ProgramBuilder emission order.
+            let keys: Vec<_> = ordered.points.iter().map(|p| (p.dz, p.dy, p.dx)).collect();
+            let mut sorted = keys.clone();
+            sorted.sort_unstable();
+            assert_eq!(keys, sorted, "{k}");
+        }
+    }
+
+    #[test]
+    fn wide_specs_validate_with_a_pass_plan() {
+        // 21 single-tap rows in y: impossible as one program (22 streams),
+        // accepted now because a 2-pass plan exists.
+        let mut pts = Vec::new();
+        for dy in -10i64..=10 {
+            pts.push(StencilPoint::new(0, dy, 0, 1.0 / 21.0));
+        }
+        let mut wide = KernelSpec::new("wide21", "Wide 21", 2, pts, KernelOrigin::File);
+        wide.domains = [Domain::new(64, 64, 1); 3];
+        wide.validate().unwrap();
+        assert_eq!(wide.pass_plan().unwrap().num_passes(), 2);
+        // A tap past the 3-bit shift field stays a hard rejection.
+        let bad = KernelSpec::new(
+            "wide_bad",
+            "x",
+            1,
+            vec![StencilPoint::new(-8, 0, 0, 0.5), StencilPoint::new(8, 0, 0, 0.5)],
+            KernelOrigin::File,
+        );
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("3-bit shift field"), "{err}");
     }
 
     #[test]
@@ -806,7 +924,7 @@ mod tests {
     #[test]
     fn registry_lookup_and_duplicates() {
         let mut reg = KernelRegistry::builtin();
-        assert_eq!(reg.specs().len(), 8);
+        assert_eq!(reg.specs().len(), 9);
         assert_eq!(reg.get("jacobi2d").unwrap().name, "Jacobi 2D");
         assert_eq!(reg.resolve("Jacobi 2D").unwrap().id.as_str(), "jacobi2d");
         assert_eq!(reg.resolve("jacobi-2d").unwrap().id.as_str(), "jacobi2d");

@@ -7,8 +7,14 @@
 //! - the checked-in `examples/kernels/hdiff9.toml` runs through the full
 //!   simulator and matches the golden reference — a kernel defined only
 //!   in TOML, no Rust changes;
-//! - the extended presets (`hdiff`, `star25_3d`) behave like first-class
-//!   kernels, and the experiment harness sweeps arbitrary kernel sets.
+//! - the extended presets (`hdiff`, `star25_3d`, `star17_3d`) behave like
+//!   first-class kernels, and the experiment harness sweeps arbitrary
+//!   kernel sets;
+//! - multi-pass compilation (random 17–40-row specs always split into
+//!   passes that each satisfy `Program::validate`, and the pass-split
+//!   golden result is bitwise-identical to the unsplit serial oracle),
+//!   with the checked-in `examples/kernels/wide17_2d.toml` running the
+//!   2-pass path end to end.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -209,6 +215,144 @@ fn file_kernel_appears_in_experiment_report() {
         .iter()
         .find(|r| r[0] == "HDiff 9-point (file)")
         .expect("file kernel missing from fig10");
+    assert_eq!(row[5], "-", "{row:?}");
+    assert!(row[4].ends_with('x'), "{row:?}");
+}
+
+/// Generate a random spec that is *wider than the ISA envelope*: 17–40
+/// distinct rows in 3D, so a single program can never hold it (a pass
+/// plan must). Taps stay inside the per-tap hard limits (|dx| ≤ 2,
+/// palette coefficients), so `validate` must accept every case.
+fn random_wide_spec(r: &mut SplitMix64, case: usize) -> KernelSpec {
+    const PALETTE: [f64; 8] = [0.5, 0.25, 0.125, -0.125, 0.0625, 1.0, -0.5, 0.75];
+    let n_rows = 17 + (r.next_u64() % 24) as usize; // 17..=40
+    let mut offsets: Vec<(i64, i64)> = (-4i64..=4)
+        .flat_map(|dz| (-4i64..=4).map(move |dy| (dy, dz)))
+        .collect();
+    // Fisher–Yates over the 81 candidate (dy, dz) rows, take the first n.
+    for i in (1..offsets.len()).rev() {
+        let j = (r.next_u64() % (i as u64 + 1)) as usize;
+        offsets.swap(i, j);
+    }
+    let mut points = Vec::new();
+    for &(dy, dz) in offsets.iter().take(n_rows) {
+        let n_taps = 1 + (r.next_u64() % 3) as usize;
+        let mut dxs: Vec<i64> = (-2..=2).collect();
+        for i in (1..dxs.len()).rev() {
+            let j = (r.next_u64() % (i as u64 + 1)) as usize;
+            dxs.swap(i, j);
+        }
+        for &dx in dxs.iter().take(n_taps) {
+            let coef = PALETTE[(r.next_u64() % 8) as usize];
+            points.push(StencilPoint::new(dx, dy, dz, coef));
+        }
+    }
+    KernelSpec::new(
+        &format!("wide_{case}"),
+        &format!("Wide property kernel {case}"),
+        3,
+        points,
+        KernelOrigin::File,
+    )
+}
+
+#[test]
+fn property_wide_specs_split_into_validating_passes() {
+    // The multi-pass satellite contract: every generated past-the-envelope
+    // spec (17–40 rows) validates, plans more than one pass, compiles to
+    // per-pass programs that each pass `Program::validate`, covers every
+    // row exactly once, and — the core guarantee — the pass-split golden
+    // result is BITWISE identical to the unsplit serial oracle over the
+    // program-ordered view of the same kernel.
+    let mut rng = SplitMix64::new(0x9A55_17);
+    for case in 0..24 {
+        let spec = random_wide_spec(&mut rng, case);
+        spec.validate().unwrap_or_else(|e| panic!("case {case}: {e:#} — {spec:?}"));
+        let plan = spec.pass_plan().unwrap();
+        let n_rows = spec.row_groups().len();
+        assert!(plan.is_multi_pass(), "case {case}: {n_rows} rows fit one pass?");
+        let single = ProgramBuilder::new().build(&spec);
+        assert!(single.is_err(), "case {case}: single-pass build must reject");
+
+        let programs = ProgramBuilder::build_passes(&spec)
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        assert_eq!(programs.len(), plan.num_passes(), "case {case}");
+        for (pi, p) in programs.iter().enumerate() {
+            p.validate().unwrap_or_else(|e| panic!("case {case} pass {pi}: {e:#}"));
+            assert_eq!(p.accumulates(), pi > 0, "case {case} pass {pi}");
+        }
+        // Every row appears in exactly one pass (accumulator streams and
+        // outputs excluded).
+        let rows: usize = programs
+            .iter()
+            .map(|p| p.streams.iter().filter(|s| !s.is_output && !s.from_output).count())
+            .sum();
+        assert_eq!(rows, spec.row_groups().len(), "case {case}");
+
+        let d = spec.tiny_domain();
+        let src = d.alloc_random(0x1D_5EED ^ case as u64);
+        let mut want = d.alloc();
+        golden::step_serial(&spec.program_ordered(), &src, &mut want);
+        let mut got = d.alloc();
+        golden::step_multipass(&spec, &src, &mut got);
+        assert!(
+            got.data.iter().zip(&want.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "case {case} ({}): pass-split oracle diverged bitwise",
+            spec.id
+        );
+    }
+}
+
+fn wide_kernel_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/kernels/wide17_2d.toml")
+}
+
+#[test]
+fn wide_file_kernel_runs_end_to_end_multipass() {
+    // The acceptance path for TOML-defined wide kernels: 17 rows → a
+    // 2-pass plan, executed by the full simulator (under whatever
+    // CASPER_SPU_THREADS the CI matrix sets) and bitwise-identical to the
+    // pass-split golden oracle — the file lists its taps in program
+    // order, so all accumulation orders coincide.
+    let cfg = SimConfig::default();
+    let mut reg = KernelRegistry::builtin();
+    let spec = reg.load_file(&wide_kernel_path()).unwrap();
+    assert_eq!(spec.id.as_str(), "wide17_2d");
+    assert_eq!(spec.row_groups().len(), 17);
+    assert_eq!(spec.program_ordered().points, spec.points, "file must be program-ordered");
+    assert!((spec.coef_sum() - 1.0).abs() < 1e-12);
+    let plan = spec.pass_plan().unwrap();
+    assert_eq!(plan.num_passes(), 2);
+
+    let d = spec.tiny_domain();
+    let opts = CasperOptions::default();
+    let stats = run_casper_spec(&cfg, &spec, &d, 2, opts).unwrap();
+    assert_eq!(stats.passes, 2);
+    let input = d.alloc_random(opts.seed);
+    let want = golden::run_multipass(&spec, &input, 2);
+    assert!(
+        stats.output.data.iter().zip(&want.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "wide17_2d diverged bitwise from the pass-split golden oracle"
+    );
+}
+
+#[test]
+fn wide_file_kernel_appears_in_experiment_report() {
+    // Sweeps and reports handle multi-pass kernels like any other: the
+    // wide kernel lands in the fig10 grid with `-` paper-reference cells.
+    let cfg = SimConfig::default();
+    let mut reg = KernelRegistry::builtin();
+    let spec = reg.load_file(&wide_kernel_path()).unwrap();
+    let mut kernels = paper_kernels();
+    kernels.push(Arc::clone(&spec));
+    let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
+    let report = run_experiments_with(&cfg, &[Experiment::Fig10], opts, &kernels).unwrap();
+    let t = report.get("fig10").unwrap();
+    let row = t
+        .rows
+        .iter()
+        .find(|r| r[0] == "Wide 17-row 2D")
+        .expect("wide kernel missing from fig10");
     assert_eq!(row[5], "-", "{row:?}");
     assert!(row[4].ends_with('x'), "{row:?}");
 }
