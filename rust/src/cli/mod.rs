@@ -4,7 +4,9 @@
 //! casper experiments [--only fig10,table5] [--quick] [--steps N]
 //!                    [--jobs N] [--out-dir DIR] [--config FILE]
 //!                    [--kernel-file FILE]... [--extended-kernels]
-//!                    [--kernels id1,id2]
+//!                    [--kernels id1,id2] [--keep-going | --fail-fast]
+//!                    [--cell-timeout SECS] [--retries N] [--backoff-ms N]
+//!                    [--resume FILE] [--inject-faults SPEC]
 //! casper run --kernel jacobi2d --level llc [--steps N] [--config FILE]
 //!            [--kernel-file FILE]...
 //! casper kernels list [--kernel-file FILE]...
@@ -14,14 +16,87 @@
 //! casper info
 //! casper help
 //! ```
+//!
+//! Every bad-input path is a named [`CliError`] variant: the binary
+//! prints `error: [<name>] <message>` and exits nonzero — user mistakes
+//! never panic.
 
+use std::fmt;
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
 use crate::config::{SimConfig, SizeClass};
-use crate::harness::Experiment;
+use crate::harness::{Experiment, FaultPlan};
 use crate::stencil::KernelRegistry;
+
+/// Structured CLI parse errors. Each variant has a stable kebab-case
+/// [`CliError::name`] that leads the rendered message, so scripts can
+/// match on the class of mistake without parsing prose.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CliError {
+    MissingValue { flag: String },
+    UnknownFlag { flag: String },
+    UnknownCommand { cmd: String },
+    UnknownExperiment { id: String },
+    UnknownLevel { level: String },
+    UnknownKernelsSubcommand { sub: String },
+    MissingFlag { cmd: &'static str, flag: &'static str },
+    MissingKernelId,
+    BadNumber { flag: &'static str, value: String, must: &'static str },
+    BadFaultSpec { why: String },
+    ConflictingFlags { a: &'static str, b: &'static str },
+}
+
+impl CliError {
+    /// Stable kebab-case error name (the `[<name>]` message prefix).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CliError::MissingValue { .. } => "missing-value",
+            CliError::UnknownFlag { .. } => "unknown-flag",
+            CliError::UnknownCommand { .. } => "unknown-command",
+            CliError::UnknownExperiment { .. } => "unknown-experiment",
+            CliError::UnknownLevel { .. } => "unknown-level",
+            CliError::UnknownKernelsSubcommand { .. } => "unknown-subcommand",
+            CliError::MissingFlag { .. } => "missing-flag",
+            CliError::MissingKernelId => "missing-kernel-id",
+            CliError::BadNumber { .. } => "bad-number",
+            CliError::BadFaultSpec { .. } => "bad-fault-spec",
+            CliError::ConflictingFlags { .. } => "conflicting-flags",
+        }
+    }
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] ", self.name())?;
+        match self {
+            CliError::MissingValue { flag } => write!(f, "--{flag} requires a value"),
+            CliError::UnknownFlag { flag } => {
+                write!(f, "unknown flag --{flag} (see `casper help`)")
+            }
+            CliError::UnknownCommand { cmd } => {
+                write!(f, "unknown command '{cmd}' (see `casper help`)")
+            }
+            CliError::UnknownExperiment { id } => write!(f, "unknown experiment '{id}'"),
+            CliError::UnknownLevel { level } => {
+                write!(f, "unknown level '{level}' (l2 | llc | dram)")
+            }
+            CliError::UnknownKernelsSubcommand { sub } => {
+                write!(f, "unknown kernels subcommand '{sub}' (list | show ID)")
+            }
+            CliError::MissingFlag { cmd, flag } => write!(f, "{cmd} requires --{flag}"),
+            CliError::MissingKernelId => write!(f, "kernels show requires a kernel id"),
+            CliError::BadNumber { flag, value, must } => {
+                write!(f, "bad --{flag} '{value}' ({must})")
+            }
+            CliError::BadFaultSpec { why } => write!(f, "bad --inject-faults spec: {why}"),
+            CliError::ConflictingFlags { a, b } => write!(f, "--{a} conflicts with --{b}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,6 +119,20 @@ pub enum Command {
         extended_kernels: bool,
         /// Explicit kernel-id selection (overrides the default set).
         kernels: Option<Vec<String>>,
+        /// Keep sweeping after a cell fails; failed cells render as
+        /// annotated holes (default: fail fast on the first failure).
+        keep_going: bool,
+        /// Per-cell wall-clock deadline, in milliseconds.
+        cell_timeout_ms: Option<u64>,
+        /// Retry attempts after a transient cell failure.
+        retries: u32,
+        /// Base of the exponential retry backoff, in milliseconds.
+        backoff_ms: u64,
+        /// Checkpoint journal path: resume a sweep, re-running only the
+        /// cells the journal is missing.
+        resume: Option<PathBuf>,
+        /// Deterministic fault-injection plan (testing/CI).
+        inject_faults: Option<FaultPlan>,
     },
     Run {
         /// Kernel id (preset or file-defined), resolved against the
@@ -82,7 +171,9 @@ USAGE:
   casper experiments [--only IDs] [--quick] [--steps N] [--jobs N]
                      [--spu-threads N] [--out-dir DIR] [--config FILE]
                      [--kernel-file FILE]... [--extended-kernels]
-                     [--kernels id1,id2]
+                     [--kernels id1,id2] [--keep-going | --fail-fast]
+                     [--cell-timeout SECS] [--retries N] [--backoff-ms N]
+                     [--resume FILE] [--inject-faults SPEC]
       Regenerate the paper's tables/figures. IDs: fig1 fig10 fig11 fig12
       fig13 fig14 table4 table5 table6 slices (comma-separated; default:
       the paper's nine). --jobs N runs the sweep on N worker threads
@@ -92,6 +183,16 @@ USAGE:
       at any combination. The kernel set defaults to the paper's six;
       --extended-kernels adds the built-in extras, --kernel-file adds
       TOML-defined kernels, --kernels selects an exact id list.
+      Supervision: every cell runs panic-isolated with --retries N
+      retry attempts (default 2, exponential backoff from --backoff-ms,
+      default 25) and an optional --cell-timeout SECS wall-clock deadline.
+      --keep-going sweeps past failed cells, rendering them as annotated
+      holes and exiting nonzero; --fail-fast (the default) aborts on the
+      first failure. --resume FILE journals completed cells to FILE and,
+      on restart, re-runs only the missing ones — the resumed report is
+      byte-identical to an uninterrupted run. --inject-faults plants
+      deterministic faults for testing: seed=N,rate=R,kind=panic|delay|
+      error[,cells=i:j:k][,delay-ms=N] (env: CASPER_FAULTS).
   casper run --kernel ID --level {l2|llc|dram} [--steps N]
              [--spu-threads N] [--config FILE] [--kernel-file FILE]...
       Run one stencil on Casper + all baselines and print the comparison.
@@ -126,20 +227,23 @@ struct Args {
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Result<Args> {
+    fn parse(argv: &[String]) -> Result<Args, CliError> {
         let mut positional = Vec::new();
         let mut flags = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                let boolean = matches!(name, "quick" | "help" | "extended-kernels");
+                let boolean = matches!(
+                    name,
+                    "quick" | "help" | "extended-kernels" | "keep-going" | "fail-fast"
+                );
                 if boolean {
                     flags.push((name.to_string(), None));
                 } else {
                     let v = argv
                         .get(i + 1)
-                        .with_context(|| format!("--{name} requires a value"))?;
+                        .ok_or_else(|| CliError::MissingValue { flag: name.to_string() })?;
                     flags.push((name.to_string(), Some(v.clone())));
                     i += 1;
                 }
@@ -172,10 +276,10 @@ impl Args {
         self.flags.iter().any(|(n, _)| n == name)
     }
 
-    fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
+    fn reject_unknown(&self, allowed: &[&str]) -> Result<(), CliError> {
         for (n, _) in &self.flags {
             if !allowed.contains(&n.as_str()) {
-                bail!("unknown flag --{n} (see `casper help`)");
+                return Err(CliError::UnknownFlag { flag: n.clone() });
             }
         }
         Ok(())
@@ -183,7 +287,7 @@ impl Args {
 }
 
 /// Parse a full argv (without the binary name).
-pub fn parse(argv: &[String]) -> Result<Command> {
+pub fn parse(argv: &[String]) -> Result<Command, CliError> {
     if argv.is_empty() {
         return Ok(Command::Help);
     }
@@ -205,6 +309,13 @@ pub fn parse(argv: &[String]) -> Result<Command> {
                 "kernel-file",
                 "extended-kernels",
                 "kernels",
+                "keep-going",
+                "fail-fast",
+                "cell-timeout",
+                "retries",
+                "backoff-ms",
+                "resume",
+                "inject-faults",
             ])?;
             let only = match rest.get("only") {
                 None => Experiment::ALL.to_vec(),
@@ -212,9 +323,18 @@ pub fn parse(argv: &[String]) -> Result<Command> {
                     .split(',')
                     .map(|id| {
                         Experiment::parse(id)
-                            .with_context(|| format!("unknown experiment '{id}'"))
+                            .ok_or_else(|| CliError::UnknownExperiment { id: id.to_string() })
                     })
-                    .collect::<Result<Vec<_>>>()?,
+                    .collect::<Result<Vec<_>, CliError>>()?,
+            };
+            if rest.has("keep-going") && rest.has("fail-fast") {
+                return Err(CliError::ConflictingFlags { a: "keep-going", b: "fail-fast" });
+            }
+            let inject_faults = match rest.get("inject-faults") {
+                None => None,
+                Some(s) => {
+                    Some(FaultPlan::parse(s).map_err(|why| CliError::BadFaultSpec { why })?)
+                }
             };
             Ok(Command::Experiments {
                 only,
@@ -229,6 +349,12 @@ pub fn parse(argv: &[String]) -> Result<Command> {
                 kernels: rest
                     .get("kernels")
                     .map(|s| s.split(',').map(|k| k.trim().to_string()).collect()),
+                keep_going: rest.has("keep-going"),
+                cell_timeout_ms: parse_cell_timeout(&rest)?,
+                retries: parse_u32_flag(&rest, "retries", 2)?,
+                backoff_ms: parse_u64_flag(&rest, "backoff-ms", 25)?,
+                resume: rest.get("resume").map(PathBuf::from),
+                inject_faults,
             })
         }
         "run" => {
@@ -240,11 +366,14 @@ pub fn parse(argv: &[String]) -> Result<Command> {
                 "config",
                 "kernel-file",
             ])?;
-            let kernel = rest.get("kernel").context("run requires --kernel")?.to_string();
-            let level = rest
-                .get("level")
-                .context("run requires --level")
-                .and_then(|s| SizeClass::parse(s).with_context(|| format!("unknown level '{s}'")))?;
+            let kernel = rest
+                .get("kernel")
+                .ok_or(CliError::MissingFlag { cmd: "run", flag: "kernel" })?
+                .to_string();
+            let level_s =
+                rest.get("level").ok_or(CliError::MissingFlag { cmd: "run", flag: "level" })?;
+            let level = SizeClass::parse(level_s)
+                .ok_or_else(|| CliError::UnknownLevel { level: level_s.to_string() })?;
             Ok(Command::Run {
                 kernel,
                 level,
@@ -259,13 +388,12 @@ pub fn parse(argv: &[String]) -> Result<Command> {
             let action = match rest.positional.first().map(String::as_str) {
                 None | Some("list") => KernelsAction::List,
                 Some("show") => {
-                    let id = rest
-                        .positional
-                        .get(1)
-                        .context("kernels show requires a kernel id")?;
+                    let id = rest.positional.get(1).ok_or(CliError::MissingKernelId)?;
                     KernelsAction::Show(id.clone())
                 }
-                Some(other) => bail!("unknown kernels subcommand '{other}' (list | show ID)"),
+                Some(other) => {
+                    return Err(CliError::UnknownKernelsSubcommand { sub: other.to_string() })
+                }
             };
             Ok(Command::Kernels { action, kernel_files: kernel_file_flags(&rest) })
         }
@@ -282,7 +410,7 @@ pub fn parse(argv: &[String]) -> Result<Command> {
             Ok(Command::Info)
         }
         "help" | "--help" | "-h" => Ok(Command::Help),
-        other => bail!("unknown command '{other}' (see `casper help`)"),
+        other => Err(CliError::UnknownCommand { cmd: other.to_string() }),
     }
 }
 
@@ -290,36 +418,82 @@ fn kernel_file_flags(args: &Args) -> Vec<PathBuf> {
     args.get_all("kernel-file").into_iter().map(PathBuf::from).collect()
 }
 
-fn parse_steps(args: &Args) -> Result<usize> {
+fn parse_steps(args: &Args) -> Result<usize, CliError> {
     match args.get("steps") {
         None => Ok(1),
-        Some(s) => {
-            let n: usize = s.parse().with_context(|| format!("bad --steps '{s}'"))?;
-            anyhow::ensure!(n >= 1, "--steps must be >= 1");
-            Ok(n)
-        }
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(CliError::BadNumber {
+                flag: "steps",
+                value: s.to_string(),
+                must: "must be an integer >= 1",
+            }),
+        },
     }
 }
 
-fn parse_jobs(args: &Args) -> Result<usize> {
+fn parse_jobs(args: &Args) -> Result<usize, CliError> {
     match args.get("jobs") {
         None => Ok(crate::harness::sweep::auto_jobs()),
-        Some(s) => {
-            let n: usize = s.parse().with_context(|| format!("bad --jobs '{s}'"))?;
-            anyhow::ensure!(n >= 1, "--jobs must be >= 1");
-            Ok(n)
-        }
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(CliError::BadNumber {
+                flag: "jobs",
+                value: s.to_string(),
+                must: "must be an integer >= 1",
+            }),
+        },
     }
 }
 
-fn parse_spu_threads(args: &Args) -> Result<Option<usize>> {
+fn parse_spu_threads(args: &Args) -> Result<Option<usize>, CliError> {
     match args.get("spu-threads") {
         None => Ok(None),
-        Some(s) => {
-            let n: usize = s.parse().with_context(|| format!("bad --spu-threads '{s}'"))?;
-            anyhow::ensure!(n >= 1, "--spu-threads must be >= 1");
-            Ok(Some(n))
-        }
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Some(n)),
+            _ => Err(CliError::BadNumber {
+                flag: "spu-threads",
+                value: s.to_string(),
+                must: "must be an integer >= 1",
+            }),
+        },
+    }
+}
+
+/// `--cell-timeout SECS` (fractional allowed) → whole milliseconds.
+fn parse_cell_timeout(args: &Args) -> Result<Option<u64>, CliError> {
+    match args.get("cell-timeout") {
+        None => Ok(None),
+        Some(s) => match s.parse::<f64>() {
+            Ok(secs) if secs > 0.0 && secs.is_finite() => Ok(Some((secs * 1000.0).ceil() as u64)),
+            _ => Err(CliError::BadNumber {
+                flag: "cell-timeout",
+                value: s.to_string(),
+                must: "must be a positive number of seconds",
+            }),
+        },
+    }
+}
+
+fn parse_u32_flag(args: &Args, flag: &'static str, default: u32) -> Result<u32, CliError> {
+    match args.get(flag) {
+        None => Ok(default),
+        Some(s) => s.parse::<u32>().map_err(|_| CliError::BadNumber {
+            flag,
+            value: s.to_string(),
+            must: "must be a non-negative integer",
+        }),
+    }
+}
+
+fn parse_u64_flag(args: &Args, flag: &'static str, default: u64) -> Result<u64, CliError> {
+    match args.get(flag) {
+        None => Ok(default),
+        Some(s) => s.parse::<u64>().map_err(|_| CliError::BadNumber {
+            flag,
+            value: s.to_string(),
+            must: "must be a non-negative integer",
+        }),
     }
 }
 
@@ -344,6 +518,7 @@ pub fn build_registry(kernel_files: &[PathBuf]) -> Result<KernelRegistry> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::harness::FaultKind;
 
     fn argv(s: &str) -> Vec<String> {
         s.split_whitespace().map(str::to_string).collect()
@@ -391,6 +566,95 @@ mod tests {
         }
         assert!(parse(&argv("run --kernel jacobi2d --level llc --spu-threads 0")).is_err());
         assert!(parse(&argv("experiments --spu-threads x")).is_err());
+    }
+
+    #[test]
+    fn parses_supervisor_flags() {
+        let c = parse(&argv(
+            "experiments --keep-going --cell-timeout 0.5 --retries 5 --backoff-ms 10 \
+             --resume ckpt.journal --inject-faults seed=7,rate=0.25,kind=error",
+        ))
+        .unwrap();
+        match c {
+            Command::Experiments {
+                keep_going,
+                cell_timeout_ms,
+                retries,
+                backoff_ms,
+                resume,
+                inject_faults,
+                ..
+            } => {
+                assert!(keep_going);
+                assert_eq!(cell_timeout_ms, Some(500));
+                assert_eq!(retries, 5);
+                assert_eq!(backoff_ms, 10);
+                assert_eq!(resume, Some(PathBuf::from("ckpt.journal")));
+                let plan = inject_faults.unwrap();
+                assert_eq!(plan.seed, 7);
+                assert_eq!(plan.rate, 0.25);
+                assert_eq!(plan.kind, FaultKind::Error);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Defaults: fail-fast, no timeout, 2 retries, 25 ms backoff.
+        match parse(&argv("experiments")).unwrap() {
+            Command::Experiments {
+                keep_going,
+                cell_timeout_ms,
+                retries,
+                backoff_ms,
+                resume,
+                inject_faults,
+                ..
+            } => {
+                assert!(!keep_going);
+                assert_eq!(cell_timeout_ms, None);
+                assert_eq!(retries, 2);
+                assert_eq!(backoff_ms, 25);
+                assert_eq!(resume, None);
+                assert_eq!(inject_faults, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // `--fail-fast` is accepted (it is the default, spelled out).
+        match parse(&argv("experiments --fail-fast")).unwrap() {
+            Command::Experiments { keep_going, .. } => assert!(!keep_going),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn supervisor_flag_errors_are_named() {
+        let err = parse(&argv("experiments --keep-going --fail-fast")).unwrap_err();
+        assert_eq!(err.name(), "conflicting-flags");
+        let err = parse(&argv("experiments --cell-timeout -1")).unwrap_err();
+        assert_eq!(err.name(), "bad-number");
+        let err = parse(&argv("experiments --inject-faults seed=1")).unwrap_err();
+        assert_eq!(err.name(), "bad-fault-spec");
+        assert!(err.to_string().contains("[bad-fault-spec]"), "{err}");
+        let err = parse(&argv("experiments --retries nope")).unwrap_err();
+        assert_eq!(err.name(), "bad-number");
+    }
+
+    #[test]
+    fn errors_render_name_and_message() {
+        let err = parse(&argv("experiments --bogus x")).unwrap_err();
+        assert_eq!(err.name(), "unknown-flag");
+        assert!(err.to_string().contains("[unknown-flag]"), "{err}");
+        assert!(err.to_string().contains("--bogus"), "{err}");
+        let err = parse(&argv("frobnicate")).unwrap_err();
+        assert_eq!(err.name(), "unknown-command");
+        let err = parse(&argv("experiments --only fig99")).unwrap_err();
+        assert_eq!(err.name(), "unknown-experiment");
+        let err = parse(&argv("run --level llc")).unwrap_err();
+        assert_eq!(err.name(), "missing-flag");
+        let err = parse(&argv("run --kernel jacobi2d --level bogus")).unwrap_err();
+        assert_eq!(err.name(), "unknown-level");
+        let err = parse(&argv("experiments --steps")).unwrap_err();
+        assert_eq!(err.name(), "missing-value");
+        let err = parse(&argv("kernels show")).unwrap_err();
+        assert_eq!(err.name(), "missing-kernel-id");
     }
 
     #[test]

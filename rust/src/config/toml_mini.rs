@@ -6,8 +6,50 @@
 //! `section.key`. Duplicate keys are an error (catches config typos).
 
 use std::collections::BTreeMap;
+use std::fmt;
 
-use anyhow::{bail, Context, Result};
+/// Structured parse/access errors. Parse variants carry the 1-based
+/// line number; bad config files print a named error instead of
+/// panicking (the messages keep the `line N:` prefix tests and users
+/// rely on).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlError {
+    UnterminatedSection { line: usize },
+    BadSectionName { line: usize, name: String },
+    ExpectedKeyValue { line: usize },
+    BadKey { line: usize, key: String },
+    BadValue { line: usize, key: String, why: String },
+    DuplicateKey { line: usize, key: String },
+    TypeMismatch { key: String, expected: &'static str, found: String },
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TomlError::UnterminatedSection { line } => {
+                write!(f, "line {line}: unterminated section header")
+            }
+            TomlError::BadSectionName { line, name } => {
+                write!(f, "line {line}: bad section name '{name}'")
+            }
+            TomlError::ExpectedKeyValue { line } => {
+                write!(f, "line {line}: expected 'key = value'")
+            }
+            TomlError::BadKey { line, key } => write!(f, "line {line}: bad key '{key}'"),
+            TomlError::BadValue { line, key, why } => {
+                write!(f, "line {line}: bad value for '{key}': {why}")
+            }
+            TomlError::DuplicateKey { line, key } => {
+                write!(f, "line {line}: duplicate key '{key}'")
+            }
+            TomlError::TypeMismatch { key, expected, found } => {
+                write!(f, "'{key}': expected {expected}, found {found}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// One parsed value.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,7 +68,7 @@ pub struct TomlDoc {
 
 impl TomlDoc {
     /// Parse a document; errors carry the 1-based line number.
-    pub fn parse(text: &str) -> Result<TomlDoc> {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
@@ -37,30 +79,36 @@ impl TomlDoc {
             if let Some(rest) = line.strip_prefix('[') {
                 let name = rest
                     .strip_suffix(']')
-                    .with_context(|| format!("line {}: unterminated section header", lineno + 1))?
+                    .ok_or(TomlError::UnterminatedSection { line: lineno + 1 })?
                     .trim();
                 if name.is_empty() || !name.chars().all(is_key_char) {
-                    bail!("line {}: bad section name '{name}'", lineno + 1);
+                    return Err(TomlError::BadSectionName {
+                        line: lineno + 1,
+                        name: name.to_string(),
+                    });
                 }
                 section = name.to_string();
                 continue;
             }
             let (key, value) = line
                 .split_once('=')
-                .with_context(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+                .ok_or(TomlError::ExpectedKeyValue { line: lineno + 1 })?;
             let key = key.trim();
             if key.is_empty() || !key.chars().all(is_key_char) {
-                bail!("line {}: bad key '{key}'", lineno + 1);
+                return Err(TomlError::BadKey { line: lineno + 1, key: key.to_string() });
             }
             let full = if section.is_empty() {
                 key.to_string()
             } else {
                 format!("{section}.{key}")
             };
-            let value = parse_value(value.trim())
-                .with_context(|| format!("line {}: bad value for '{full}'", lineno + 1))?;
+            let value = parse_value(value.trim()).map_err(|why| TomlError::BadValue {
+                line: lineno + 1,
+                key: full.clone(),
+                why,
+            })?;
             if doc.map.insert(full.clone(), value).is_some() {
-                bail!("line {}: duplicate key '{full}'", lineno + 1);
+                return Err(TomlError::DuplicateKey { line: lineno + 1, key: full });
             }
         }
         Ok(doc)
@@ -75,39 +123,43 @@ impl TomlDoc {
     }
 
     /// Integer accessor; `Ok(None)` if absent, error on type mismatch.
-    pub fn get_int(&self, key: &str) -> Result<Option<i64>> {
+    pub fn get_int(&self, key: &str) -> Result<Option<i64>, TomlError> {
         match self.map.get(key) {
             None => Ok(None),
             Some(TomlValue::Int(v)) => Ok(Some(*v)),
-            Some(other) => bail!("'{key}': expected integer, found {other:?}"),
+            Some(other) => Err(mismatch(key, "integer", other)),
         }
     }
 
     /// Float accessor; integers widen to float.
-    pub fn get_float(&self, key: &str) -> Result<Option<f64>> {
+    pub fn get_float(&self, key: &str) -> Result<Option<f64>, TomlError> {
         match self.map.get(key) {
             None => Ok(None),
             Some(TomlValue::Float(v)) => Ok(Some(*v)),
             Some(TomlValue::Int(v)) => Ok(Some(*v as f64)),
-            Some(other) => bail!("'{key}': expected float, found {other:?}"),
+            Some(other) => Err(mismatch(key, "float", other)),
         }
     }
 
-    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>, TomlError> {
         match self.map.get(key) {
             None => Ok(None),
             Some(TomlValue::Bool(v)) => Ok(Some(*v)),
-            Some(other) => bail!("'{key}': expected bool, found {other:?}"),
+            Some(other) => Err(mismatch(key, "bool", other)),
         }
     }
 
-    pub fn get_str(&self, key: &str) -> Result<Option<String>> {
+    pub fn get_str(&self, key: &str) -> Result<Option<String>, TomlError> {
         match self.map.get(key) {
             None => Ok(None),
             Some(TomlValue::Str(v)) => Ok(Some(v.clone())),
-            Some(other) => bail!("'{key}': expected string, found {other:?}"),
+            Some(other) => Err(mismatch(key, "string", other)),
         }
     }
+}
+
+fn mismatch(key: &str, expected: &'static str, found: &TomlValue) -> TomlError {
+    TomlError::TypeMismatch { key: key.to_string(), expected, found: format!("{found:?}") }
 }
 
 fn is_key_char(c: char) -> bool {
@@ -127,9 +179,9 @@ fn strip_comment(line: &str) -> &str {
     line
 }
 
-fn parse_value(s: &str) -> Result<TomlValue> {
+fn parse_value(s: &str) -> Result<TomlValue, String> {
     if s.is_empty() {
-        bail!("empty value");
+        return Err("empty value".to_string());
     }
     if s == "true" {
         return Ok(TomlValue::Bool(true));
@@ -138,15 +190,15 @@ fn parse_value(s: &str) -> Result<TomlValue> {
         return Ok(TomlValue::Bool(false));
     }
     if let Some(q) = s.strip_prefix('"') {
-        let inner = q.strip_suffix('"').context("unterminated string")?;
+        let inner = q.strip_suffix('"').ok_or_else(|| "unterminated string".to_string())?;
         if inner.contains('"') {
-            bail!("embedded quote in string");
+            return Err("embedded quote in string".to_string());
         }
         return Ok(TomlValue::Str(inner.to_string()));
     }
     let cleaned: String = s.chars().filter(|&c| c != '_').collect();
     if let Some(hex) = cleaned.strip_prefix("0x").or_else(|| cleaned.strip_prefix("0X")) {
-        let v = i64::from_str_radix(hex, 16).context("bad hex integer")?;
+        let v = i64::from_str_radix(hex, 16).map_err(|_| format!("bad hex integer '{s}'"))?;
         return Ok(TomlValue::Int(v));
     }
     if !cleaned.contains('.') && !cleaned.contains('e') && !cleaned.contains('E') {
@@ -157,7 +209,7 @@ fn parse_value(s: &str) -> Result<TomlValue> {
     if let Ok(v) = cleaned.parse::<f64>() {
         return Ok(TomlValue::Float(v));
     }
-    bail!("cannot parse value '{s}'")
+    Err(format!("cannot parse value '{s}'"))
 }
 
 #[cfg(test)]
@@ -221,5 +273,21 @@ hexy = 0x1F
     fn bad_lines_error_with_lineno() {
         let err = TomlDoc::parse("\n\nbogus line\n").unwrap_err();
         assert!(format!("{err:#}").contains("line 3"));
+    }
+
+    #[test]
+    fn errors_are_structured() {
+        assert_eq!(
+            TomlDoc::parse("x = 1\nx = 2\n").unwrap_err(),
+            TomlError::DuplicateKey { line: 2, key: "x".into() }
+        );
+        assert_eq!(
+            TomlDoc::parse("[oops\n").unwrap_err(),
+            TomlError::UnterminatedSection { line: 1 }
+        );
+        let doc = TomlDoc::parse("x = \"s\"\n").unwrap();
+        let err = doc.get_int("x").unwrap_err();
+        assert!(matches!(err, TomlError::TypeMismatch { .. }), "{err}");
+        assert!(err.to_string().contains("expected integer"), "{err}");
     }
 }

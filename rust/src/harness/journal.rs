@@ -1,0 +1,587 @@
+//! Checkpoint journal: crash-safe persistence for finished sweep cells.
+//!
+//! A long sweep appends one line per completed cell to a plain-text
+//! journal. `casper experiments --resume <path>` reloads the journal,
+//! skips every cell it already holds, and re-runs only the missing ones —
+//! the final report is byte-identical to an uninterrupted run, because
+//! cells are deterministic and the builders consume them in a fixed order
+//! regardless of where their numbers came from.
+//!
+//! ## Format
+//!
+//! ```text
+//! casper-journal v1 ctx <16-hex-digit context digest>
+//! C <kernel-id> <class> <digest> <counters...> ;<fnv64 of the line body>
+//! P <kernel-id> <class> <counters...> ;<fnv64>
+//! A <kernel-id> <class> <near-l1-base> <near-l1-mapped> ;<fnv64>
+//! ```
+//!
+//! - The header's **context digest** binds the journal to the sweep that
+//!   wrote it (config, steps, quick flag, kernel set — *not* job count or
+//!   SPU threads, which never change results). Resuming under a different
+//!   context is refused rather than silently mixing incompatible numbers.
+//! - Every record line carries an FNV-1a checksum of its body. A torn
+//!   final record (the process died mid-write) or any corrupted line
+//!   simply fails its checksum and is dropped — that one cell re-runs.
+//! - `C` (Casper) records persist every [`RunStats`] counter plus the
+//!   output-grid dimensions and the recorded [`RunStats::digest`]. The
+//!   grid *data* is not persisted: no report builder reads it, and the
+//!   recorded digest preserves the run's identity for auditing.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::SizeClass;
+use crate::coordinator::RunStats;
+use crate::cpu::CpuRunStats;
+use crate::mem::{CacheStats, MemEvents};
+use crate::spu::SpuStats;
+use crate::stencil::Grid;
+
+/// First line of every journal file; the context digest follows.
+pub const HEADER_PREFIX: &str = "casper-journal v1 ctx ";
+
+/// FNV-1a over a string (same constants as [`RunStats::digest`]'s mixer).
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Digest of the sweep context (config + steps + quick + kernel ids).
+pub fn context_digest(parts: &[&str]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for p in parts {
+        h = h.wrapping_mul(0x0000_0100_0000_01B3) ^ fnv64(p);
+    }
+    h
+}
+
+/// One journaled cell result.
+#[derive(Debug, Clone)]
+pub enum Record {
+    /// A Casper simulation cell: full counters + recorded digest.
+    Casper { id: String, level: SizeClass, digest: u64, stats: RunStats },
+    /// A CPU-baseline cell.
+    Cpu { id: String, level: SizeClass, stats: CpuRunStats },
+    /// A Fig 14 near-L1 ablation pair (baseline, +mapping) in cycles.
+    Ablation { id: String, level: SizeClass, near_l1_base: u64, near_l1_mapped: u64 },
+}
+
+impl Record {
+    /// `(tag, kernel-id, class)` — the record's cell key.
+    pub fn key(&self) -> (char, &str, SizeClass) {
+        match self {
+            Record::Casper { id, level, .. } => ('C', id, *level),
+            Record::Cpu { id, level, .. } => ('P', id, *level),
+            Record::Ablation { id, level, .. } => ('A', id, *level),
+        }
+    }
+}
+
+fn push_u64s(out: &mut String, vals: &[u64]) {
+    for v in vals {
+        out.push(' ');
+        out.push_str(&v.to_string());
+    }
+}
+
+fn push_vec(out: &mut String, vals: &[u64]) {
+    out.push(' ');
+    out.push_str(&vals.len().to_string());
+    push_u64s(out, vals);
+}
+
+fn cache_fields(c: &CacheStats) -> [u64; 8] {
+    [
+        c.read_hits,
+        c.read_misses,
+        c.write_hits,
+        c.write_misses,
+        c.evictions,
+        c.writebacks,
+        c.prefetch_fills,
+        c.prefetch_hits,
+    ]
+}
+
+fn body_of(r: &Record) -> String {
+    match r {
+        Record::Casper { id, level, digest, stats } => {
+            let mut s = format!("C {id} {} {digest:016x}", level_tag(*level));
+            push_u64s(
+                &mut s,
+                &[stats.cycles, stats.total_instrs, stats.per_spu_instrs, stats.passes as u64],
+            );
+            let sp = &stats.spu;
+            push_u64s(
+                &mut s,
+                &[
+                    sp.instrs,
+                    sp.groups,
+                    sp.loads,
+                    sp.stores,
+                    sp.local_loads,
+                    sp.remote_loads,
+                    sp.merged_unaligned,
+                    sp.split_unaligned,
+                    sp.lq_stall_cycles,
+                ],
+            );
+            push_u64s(&mut s, &cache_fields(&stats.llc));
+            push_u64s(
+                &mut s,
+                &[
+                    stats.dram_accesses,
+                    stats.noc_messages,
+                    stats.noc_hops,
+                    stats.noc_contention_cycles,
+                ],
+            );
+            push_vec(&mut s, &stats.slice_remote_reqs);
+            push_vec(&mut s, &stats.slice_dram_reads);
+            push_vec(&mut s, &stats.slice_dram_writes);
+            push_u64s(
+                &mut s,
+                &[stats.output.nx as u64, stats.output.ny as u64, stats.output.nz as u64],
+            );
+            s
+        }
+        Record::Cpu { id, level, stats } => {
+            let mut s = format!("P {id} {}", level_tag(*level));
+            push_u64s(&mut s, &[stats.cycles, stats.instrs, stats.flops]);
+            push_u64s(&mut s, &cache_fields(&stats.mem.l1));
+            push_u64s(&mut s, &cache_fields(&stats.mem.l2));
+            push_u64s(&mut s, &cache_fields(&stats.mem.llc));
+            push_u64s(&mut s, &[stats.mem.dram_accesses, stats.mem.noc_hops]);
+            push_vec(&mut s, &stats.per_core_cycles);
+            s
+        }
+        Record::Ablation { id, level, near_l1_base, near_l1_mapped } => {
+            format!("A {id} {} {near_l1_base} {near_l1_mapped}", level_tag(*level))
+        }
+    }
+}
+
+fn level_tag(level: SizeClass) -> String {
+    level.name().to_ascii_lowercase()
+}
+
+/// Encode a record as one checksummed journal line (no newline).
+pub fn encode_record(r: &Record) -> String {
+    let body = body_of(r);
+    let sum = fnv64(&body);
+    format!("{body} ;{sum:016x}")
+}
+
+fn next_u64<'a>(it: &mut impl Iterator<Item = &'a str>) -> Option<u64> {
+    it.next()?.parse().ok()
+}
+
+fn next_usize<'a>(it: &mut impl Iterator<Item = &'a str>) -> Option<usize> {
+    it.next()?.parse().ok()
+}
+
+fn next_vec<'a>(it: &mut impl Iterator<Item = &'a str>) -> Option<Vec<u64>> {
+    let n = next_usize(it)?;
+    // A sane ceiling so a corrupt length can't balloon allocation.
+    if n > 1 << 20 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(next_u64(it)?);
+    }
+    Some(out)
+}
+
+fn next_cache<'a>(it: &mut impl Iterator<Item = &'a str>) -> Option<CacheStats> {
+    Some(CacheStats {
+        read_hits: next_u64(it)?,
+        read_misses: next_u64(it)?,
+        write_hits: next_u64(it)?,
+        write_misses: next_u64(it)?,
+        evictions: next_u64(it)?,
+        writebacks: next_u64(it)?,
+        prefetch_fills: next_u64(it)?,
+        prefetch_hits: next_u64(it)?,
+    })
+}
+
+fn decode_body(body: &str) -> Option<Record> {
+    let mut it = body.split_whitespace();
+    let tag = it.next()?;
+    let id = it.next()?.to_string();
+    let level = SizeClass::parse(it.next()?)?;
+    let rec = match tag {
+        "C" => {
+            let digest = u64::from_str_radix(it.next()?, 16).ok()?;
+            let cycles = next_u64(&mut it)?;
+            let total_instrs = next_u64(&mut it)?;
+            let per_spu_instrs = next_u64(&mut it)?;
+            let passes = next_usize(&mut it)?;
+            let spu = SpuStats {
+                instrs: next_u64(&mut it)?,
+                groups: next_u64(&mut it)?,
+                loads: next_u64(&mut it)?,
+                stores: next_u64(&mut it)?,
+                local_loads: next_u64(&mut it)?,
+                remote_loads: next_u64(&mut it)?,
+                merged_unaligned: next_u64(&mut it)?,
+                split_unaligned: next_u64(&mut it)?,
+                lq_stall_cycles: next_u64(&mut it)?,
+            };
+            let llc = next_cache(&mut it)?;
+            let dram_accesses = next_u64(&mut it)?;
+            let noc_messages = next_u64(&mut it)?;
+            let noc_hops = next_u64(&mut it)?;
+            let noc_contention_cycles = next_u64(&mut it)?;
+            let slice_remote_reqs = next_vec(&mut it)?;
+            let slice_dram_reads = next_vec(&mut it)?;
+            let slice_dram_writes = next_vec(&mut it)?;
+            let nx = next_usize(&mut it)?;
+            let ny = next_usize(&mut it)?;
+            let nz = next_usize(&mut it)?;
+            if nx == 0 || ny == 0 || nz == 0 {
+                return None;
+            }
+            Record::Casper {
+                id,
+                level,
+                digest,
+                stats: RunStats {
+                    cycles,
+                    total_instrs,
+                    per_spu_instrs,
+                    passes,
+                    spu,
+                    llc,
+                    dram_accesses,
+                    noc_messages,
+                    noc_hops,
+                    noc_contention_cycles,
+                    slice_remote_reqs,
+                    slice_dram_reads,
+                    slice_dram_writes,
+                    // The grid data is not persisted (no builder reads
+                    // it); the recorded digest carries the run identity.
+                    output: Grid::zeros(nx, ny, nz),
+                },
+            }
+        }
+        "P" => {
+            let cycles = next_u64(&mut it)?;
+            let instrs = next_u64(&mut it)?;
+            let flops = next_u64(&mut it)?;
+            let l1 = next_cache(&mut it)?;
+            let l2 = next_cache(&mut it)?;
+            let llc = next_cache(&mut it)?;
+            let dram_accesses = next_u64(&mut it)?;
+            let noc_hops = next_u64(&mut it)?;
+            let per_core_cycles = next_vec(&mut it)?;
+            Record::Cpu {
+                id,
+                level,
+                stats: CpuRunStats {
+                    cycles,
+                    instrs,
+                    flops,
+                    mem: MemEvents { l1, l2, llc, dram_accesses, noc_hops },
+                    per_core_cycles,
+                },
+            }
+        }
+        "A" => {
+            let near_l1_base = next_u64(&mut it)?;
+            let near_l1_mapped = next_u64(&mut it)?;
+            Record::Ablation { id, level, near_l1_base, near_l1_mapped }
+        }
+        _ => return None,
+    };
+    // Trailing garbage means the line is not what we wrote — drop it.
+    if it.next().is_some() {
+        return None;
+    }
+    Some(rec)
+}
+
+/// Decode one journal line; `None` for torn/corrupt lines (the cell will
+/// simply re-run).
+pub fn decode_line(line: &str) -> Option<Record> {
+    let (body, sum) = line.rsplit_once(" ;")?;
+    let want = u64::from_str_radix(sum.trim(), 16).ok()?;
+    if fnv64(body) != want {
+        return None;
+    }
+    decode_body(body)
+}
+
+/// An open, append-mode checkpoint journal.
+#[derive(Debug)]
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+}
+
+impl Journal {
+    /// Open (or create) a journal bound to context `ctx`, returning the
+    /// handle plus every valid record already present. A journal written
+    /// under a *different* context is refused. A torn final record (no
+    /// trailing newline) is dropped and the next append starts cleanly on
+    /// its own line.
+    pub fn open(path: &Path, ctx: u64) -> Result<(Journal, Vec<Record>)> {
+        let existing = match std::fs::read_to_string(path) {
+            Ok(text) => Some(text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading journal {}", path.display()))
+            }
+        };
+        let mut records = Vec::new();
+        let mut needs_header = true;
+        let mut needs_newline = false;
+        if let Some(text) = &existing {
+            if !text.trim().is_empty() {
+                let first = text.lines().next().unwrap_or("");
+                let got = first
+                    .strip_prefix(HEADER_PREFIX)
+                    .and_then(|h| u64::from_str_radix(h.trim(), 16).ok())
+                    .with_context(|| {
+                        format!("{}: not a casper checkpoint journal (bad header)", path.display())
+                    })?;
+                ensure!(
+                    got == ctx,
+                    "{}: journal context mismatch (journal {got:016x}, this sweep {ctx:016x}) — \
+                     it was written by a sweep with a different config/steps/kernel set; delete \
+                     it or point --resume elsewhere",
+                    path.display()
+                );
+                needs_header = false;
+                for line in text.lines().skip(1) {
+                    if let Some(r) = decode_line(line) {
+                        records.push(r);
+                    }
+                }
+                needs_newline = !text.ends_with('\n');
+            }
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        if needs_newline {
+            file.write_all(b"\n")
+                .with_context(|| format!("repairing torn record in {}", path.display()))?;
+        }
+        if needs_header {
+            writeln!(file, "{HEADER_PREFIX}{ctx:016x}")
+                .with_context(|| format!("writing journal header to {}", path.display()))?;
+            file.flush()?;
+        }
+        Ok((Journal { path: path.to_path_buf(), file }, records))
+    }
+
+    /// Append one finished cell. Each record is flushed immediately so a
+    /// crash loses at most the line being written (which the checksum
+    /// then drops on resume).
+    pub fn append(&mut self, r: &Record) -> Result<()> {
+        writeln!(self.file, "{}", encode_record(r))
+            .and_then(|()| self.file.flush())
+            .with_context(|| format!("appending to journal {}", self.path.display()))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_casper() -> Record {
+        let mut stats = RunStats {
+            cycles: 123,
+            total_instrs: 456,
+            per_spu_instrs: 78,
+            passes: 2,
+            spu: SpuStats { instrs: 9, groups: 8, loads: 7, stores: 6, ..Default::default() },
+            llc: CacheStats { read_hits: 5, writebacks: 4, ..Default::default() },
+            dram_accesses: 3,
+            noc_messages: 2,
+            noc_hops: 1,
+            noc_contention_cycles: 11,
+            slice_remote_reqs: vec![1, 2, 3],
+            slice_dram_reads: vec![4, 5, 6],
+            slice_dram_writes: vec![7, 8, 9],
+            output: Grid::zeros(4, 3, 2),
+        };
+        stats.spu.local_loads = 10;
+        let digest = stats.digest();
+        Record::Casper { id: "jacobi2d".into(), level: SizeClass::Llc, digest, stats }
+    }
+
+    fn sample_cpu() -> Record {
+        Record::Cpu {
+            id: "heat3d".into(),
+            level: SizeClass::L2,
+            stats: CpuRunStats {
+                cycles: 1000,
+                instrs: 2000,
+                flops: 3000,
+                mem: MemEvents {
+                    l1: CacheStats { read_hits: 1, ..Default::default() },
+                    l2: CacheStats { read_misses: 2, ..Default::default() },
+                    llc: CacheStats { write_hits: 3, ..Default::default() },
+                    dram_accesses: 4,
+                    noc_hops: 5,
+                },
+                per_core_cycles: vec![10, 20, 30, 40],
+            },
+        }
+    }
+
+    fn sample_ablation() -> Record {
+        Record::Ablation {
+            id: "blur2d".into(),
+            level: SizeClass::Dram,
+            near_l1_base: 999,
+            near_l1_mapped: 888,
+        }
+    }
+
+    fn assert_roundtrips(r: &Record) {
+        let line = encode_record(r);
+        let back = decode_line(&line).expect("line should decode");
+        assert_eq!(encode_record(&back), line, "re-encode must be byte-identical");
+        assert_eq!(back.key(), r.key());
+    }
+
+    #[test]
+    fn records_roundtrip() {
+        assert_roundtrips(&sample_casper());
+        assert_roundtrips(&sample_cpu());
+        assert_roundtrips(&sample_ablation());
+    }
+
+    #[test]
+    fn casper_record_preserves_counters_and_digest() {
+        let r = sample_casper();
+        let line = encode_record(&r);
+        let Record::Casper { digest: d0, stats: s0, .. } = r else {
+            panic!("expected a Casper record");
+        };
+        let Some(Record::Casper { digest, stats, .. }) = decode_line(&line) else {
+            panic!("line should decode to a Casper record");
+        };
+        assert_eq!(digest, d0, "recorded digest survives");
+        assert_eq!(stats.cycles, s0.cycles);
+        assert_eq!(stats.spu, s0.spu);
+        assert_eq!(stats.llc, s0.llc);
+        assert_eq!(stats.slice_remote_reqs, s0.slice_remote_reqs);
+        assert_eq!(
+            (stats.output.nx, stats.output.ny, stats.output.nz),
+            (s0.output.nx, s0.output.ny, s0.output.nz),
+            "grid dimensions survive (data intentionally does not)"
+        );
+    }
+
+    #[test]
+    fn corrupt_lines_are_dropped() {
+        let line = encode_record(&sample_casper());
+        // Flip a digit in the body: checksum fails.
+        let tampered = line.replacen("123", "124", 1);
+        assert!(decode_line(&tampered).is_none());
+        // Torn line (no checksum separator).
+        assert!(decode_line("C jacobi2d llc deadbeef 12 34").is_none());
+        // Bad checksum hex.
+        assert!(decode_line("C x llc ;zzzz").is_none());
+        assert!(decode_line("").is_none());
+    }
+
+    #[test]
+    fn journal_open_append_reload() {
+        let path = std::env::temp_dir().join(format!("casper_journal_{}.log", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let ctx = context_digest(&["cfg", "steps=1", "quick=true", "jacobi2d"]);
+        {
+            let (mut j, loaded) = Journal::open(&path, ctx).unwrap();
+            assert!(loaded.is_empty());
+            j.append(&sample_casper()).unwrap();
+            j.append(&sample_cpu()).unwrap();
+        }
+        let (mut j, loaded) = Journal::open(&path, ctx).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].key(), ('C', "jacobi2d", SizeClass::Llc));
+        assert_eq!(loaded[1].key(), ('P', "heat3d", SizeClass::L2));
+        j.append(&sample_ablation()).unwrap();
+        let (_, loaded) = Journal::open(&path, ctx).unwrap();
+        assert_eq!(loaded.len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_final_record_is_dropped_and_repaired() {
+        let path = std::env::temp_dir().join(format!("casper_torn_{}.log", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let ctx = 7;
+        {
+            let (mut j, _) = Journal::open(&path, ctx).unwrap();
+            j.append(&sample_casper()).unwrap();
+        }
+        // Simulate a crash mid-write: append half a record, no newline.
+        {
+            use std::io::Write;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "P heat3d l2 1000 20").unwrap();
+        }
+        let (mut j, loaded) = Journal::open(&path, ctx).unwrap();
+        assert_eq!(loaded.len(), 1, "torn record dropped");
+        j.append(&sample_cpu()).unwrap();
+        let (_, loaded) = Journal::open(&path, ctx).unwrap();
+        assert_eq!(loaded.len(), 2, "append after torn record starts on a fresh line");
+    }
+
+    #[test]
+    fn context_mismatch_is_refused() {
+        let path = std::env::temp_dir().join(format!("casper_ctx_{}.log", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let (mut j, _) = Journal::open(&path, 1).unwrap();
+            j.append(&sample_casper()).unwrap();
+        }
+        let err = Journal::open(&path, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("context mismatch"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_journal_file_is_refused() {
+        let path = std::env::temp_dir().join(format!("casper_notj_{}.log", std::process::id()));
+        std::fs::write(&path, "hello world\n").unwrap();
+        assert!(Journal::open(&path, 1).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn context_digest_is_order_and_content_sensitive() {
+        let a = context_digest(&["x", "y"]);
+        assert_eq!(a, context_digest(&["x", "y"]));
+        assert_ne!(a, context_digest(&["y", "x"]));
+        assert_ne!(a, context_digest(&["x", "z"]));
+        assert_ne!(a, context_digest(&["x"]));
+    }
+}

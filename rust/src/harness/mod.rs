@@ -10,12 +10,14 @@
 //! and the paper-reference columns print `-` for kernels the paper never
 //! measured.
 
+pub mod journal;
 pub mod paperdata;
 pub mod report;
 pub mod sweep;
 
 use std::collections::{HashMap, HashSet};
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -30,8 +32,11 @@ use crate::roofline;
 use crate::stencil::{KernelId, KernelSpec, StencilKind};
 use crate::util::geomean;
 
-pub use report::{Report, Table};
-pub use sweep::{auto_jobs, parallel_map};
+pub use journal::{Journal, Record};
+pub use report::{CellFailure, Report, Table};
+pub use sweep::{
+    auto_jobs, parallel_map, supervised_map, CellOutcome, FaultKind, FaultPlan, SupervisorPolicy,
+};
 
 /// The experiments — one per paper table/figure, plus repo-grown extras
 /// (not in [`Experiment::ALL`], so the default report stays the paper's).
@@ -145,15 +150,69 @@ impl SweepOptions {
     }
 }
 
+/// The sweep's fault-handling configuration: supervisor policy plus the
+/// optional checkpoint journal (`--resume`). Separate from
+/// [`SweepOptions`] so the latter stays `Copy` for the builders.
+#[derive(Debug, Clone, Default)]
+pub struct SupervisorConfig {
+    pub policy: SupervisorPolicy,
+    /// Checkpoint journal path: completed cells are loaded from it and
+    /// new completions appended, so an interrupted sweep resumes by
+    /// re-running only the missing cells.
+    pub journal: Option<PathBuf>,
+}
+
+impl SupervisorConfig {
+    /// Does this configuration change anything vs a bare serial sweep?
+    /// When false (and `jobs <= 1`) the cache keeps the legacy lazy-fill
+    /// path, byte-identical to the pre-supervisor harness.
+    fn is_active(&self) -> bool {
+        self.journal.is_some()
+            || self.policy.keep_going
+            || self.policy.cell_timeout.is_some()
+            || self.policy.faults.is_some()
+    }
+}
+
+/// Which engine a sweep cell belongs to (failure bookkeeping key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    Casper,
+    Cpu,
+    Ablation,
+}
+
+impl CellKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CellKind::Casper => "casper",
+            CellKind::Cpu => "cpu",
+            CellKind::Ablation => "ablation",
+        }
+    }
+}
+
 /// Cache of (kernel, class) → (casper, cpu) runs shared by experiments,
 /// keyed by interned [`KernelId`].
 pub struct SweepCache {
     cfg: SimConfig,
     opts: SweepOptions,
+    sup: SupervisorConfig,
     kernels: Vec<Arc<KernelSpec>>,
     casper: HashMap<(KernelId, SizeClass), RunStats>,
     cpu: HashMap<(KernelId, SizeClass), CpuRunStats>,
     ablation: HashMap<(KernelId, SizeClass), AblationPoint>,
+    /// Journal-loaded ablation pairs not yet joined with their `full`
+    /// Casper cycles (joined after prefill, when `casper` is populated).
+    ablation_pairs: HashMap<(KernelId, SizeClass), (u64, u64)>,
+    /// Terminal failure text per cell, filled by the supervised prefill;
+    /// the builders render these as annotated holes.
+    failed: HashMap<(CellKind, KernelId, SizeClass), String>,
+    /// Open checkpoint journal (workers append completions through it).
+    journal: Option<Arc<Mutex<Journal>>>,
+    /// Cells actually simulated by this cache (resume diagnostics: a
+    /// resumed sweep re-runs only the cells its journal was missing).
+    executed: usize,
     /// Cells simulated on the serial (lazy) path. After a `prefill` this
     /// should stay 0 — a nonzero count means [`needed_cells`] drifted
     /// from what the builders actually read (tested below).
@@ -187,6 +246,20 @@ enum CellOut {
     Ablation(u64, u64),
 }
 
+/// The context digest a checkpoint journal is bound to: config, steps,
+/// quick flag, and kernel set. Deliberately excludes `jobs` and
+/// `spu_threads` — neither changes any result (the byte-identity tests
+/// pin that), so a journal written at `--jobs 16` resumes at `--jobs 1`.
+pub fn journal_context(cfg: &SimConfig, opts: SweepOptions, kernels: &[Arc<KernelSpec>]) -> u64 {
+    let ids: Vec<&str> = kernels.iter().map(|s| s.id.as_str()).collect();
+    journal::context_digest(&[
+        &format!("{cfg:?}"),
+        &format!("steps={}", opts.steps),
+        &format!("quick={}", opts.quick),
+        &ids.join(","),
+    ])
+}
+
 impl SweepCache {
     /// Cache over the default (paper six) kernel set.
     pub fn new(cfg: &SimConfig, opts: SweepOptions) -> SweepCache {
@@ -199,15 +272,54 @@ impl SweepCache {
         opts: SweepOptions,
         kernels: &[Arc<KernelSpec>],
     ) -> SweepCache {
-        SweepCache {
+        SweepCache::with_supervisor(cfg, opts, kernels, &SupervisorConfig::default())
+            .expect("default supervisor config opens no journal and cannot fail")
+    }
+
+    /// Cache with an explicit supervisor configuration. Opens the
+    /// checkpoint journal (if any) and pre-loads every valid record whose
+    /// context matches this sweep.
+    pub fn with_supervisor(
+        cfg: &SimConfig,
+        opts: SweepOptions,
+        kernels: &[Arc<KernelSpec>],
+        sup: &SupervisorConfig,
+    ) -> Result<SweepCache> {
+        let mut cache = SweepCache {
             cfg: cfg.clone(),
             opts,
+            sup: sup.clone(),
             kernels: kernels.to_vec(),
             casper: HashMap::new(),
             cpu: HashMap::new(),
             ablation: HashMap::new(),
+            ablation_pairs: HashMap::new(),
+            failed: HashMap::new(),
+            journal: None,
+            executed: 0,
             lazy_fills: 0,
+        };
+        if let Some(path) = &sup.journal {
+            let ctx = journal_context(cfg, opts, kernels);
+            let (j, records) = Journal::open(path, ctx)?;
+            for r in records {
+                match r {
+                    Record::Casper { id, level, stats, .. } => {
+                        cache.casper.insert((KernelId::new(&id), level), stats);
+                    }
+                    Record::Cpu { id, level, stats } => {
+                        cache.cpu.insert((KernelId::new(&id), level), stats);
+                    }
+                    Record::Ablation { id, level, near_l1_base, near_l1_mapped } => {
+                        cache
+                            .ablation_pairs
+                            .insert((KernelId::new(&id), level), (near_l1_base, near_l1_mapped));
+                    }
+                }
+            }
+            cache.journal = Some(Arc::new(Mutex::new(j)));
         }
+        Ok(cache)
     }
 
     /// The sweep's kernel set (cheap `Arc` clones, in sweep order).
@@ -215,18 +327,33 @@ impl SweepCache {
         self.kernels.clone()
     }
 
+    /// Cells simulated by this cache (excludes journal-loaded ones).
+    pub fn executed_cells(&self) -> usize {
+        self.executed
+    }
+
     /// Compute every cell the selected experiments will ask for, fanned
-    /// out over `opts.jobs` workers ([`sweep::parallel_map`]). After this,
-    /// the lazy accessors below are pure cache hits, so the fig/table
-    /// builders run unchanged — and in the same deterministic order.
+    /// out over `opts.jobs` supervised workers. After this, the lazy
+    /// accessors below are pure cache hits, so the fig/table builders run
+    /// unchanged — and in the same deterministic order. Kept for
+    /// compatibility with pre-supervisor callers; panics on journal IO
+    /// errors (use [`SweepCache::prefill_checked`] to handle them).
     pub fn prefill(&mut self, which: &[Experiment]) {
-        if self.opts.jobs <= 1 {
-            return; // serial path: lazy fill, identical to the old flow
+        self.prefill_checked(which).expect("sweep prefill failed");
+    }
+
+    /// Supervised prefill. Every needed cell not already cached (or
+    /// journal-loaded) runs under [`sweep::supervised_map`]; failures are
+    /// recorded per cell for the builders to render as holes.
+    pub fn prefill_checked(&mut self, which: &[Experiment]) -> Result<()> {
+        if self.opts.jobs <= 1 && !self.sup.is_active() {
+            return Ok(()); // legacy serial path: lazy fill, identical to the old flow
         }
         let (want_casper, want_cpu, want_ablation) =
             needed_cells(which, self.opts, &self.kernels);
         // Enumerate cells in the fixed sweep order (kernel-major, then
-        // class) so the work list — and thus any tie-breaking — is stable.
+        // class) so the work list — and thus fault-plan cell indices and
+        // any tie-breaking — is stable.
         let mut cells: Vec<Cell> = Vec::new();
         for spec in &self.kernels {
             for &level in &SizeClass::ALL {
@@ -237,59 +364,154 @@ impl SweepCache {
                 if want_cpu.contains(&key) && !self.cpu.contains_key(&key) {
                     cells.push(Cell::Cpu(spec.clone(), level));
                 }
-                if want_ablation.contains(&key) && !self.ablation.contains_key(&key) {
+                if want_ablation.contains(&key)
+                    && !self.ablation.contains_key(&key)
+                    && !self.ablation_pairs.contains_key(&key)
+                {
                     cells.push(Cell::Ablation(spec.clone(), level));
                 }
             }
         }
-        let cfg = self.cfg.clone();
-        let steps = self.opts.steps;
-        let spu_threads = self.opts.spu_threads;
-        let outs = sweep::parallel_map(cells.clone(), self.opts.jobs, |cell| match cell {
-            Cell::Casper(spec, level) => {
-                let d = spec.domain(level);
-                CellOut::Casper(run_casper_cell(&cfg, &spec, &d, steps, spu_threads))
-            }
-            Cell::Cpu(spec, level) => {
-                let d = spec.domain(level);
-                CellOut::Cpu(run_cpu_spec(&cfg, &spec, &d, steps))
-            }
-            Cell::Ablation(spec, level) => {
-                let d = spec.domain(level);
-                let mut near_l1 = cfg.clone();
-                near_l1.placement = SpuPlacement::NearL1;
-                near_l1.mapping = MappingPolicy::Baseline;
-                let a = run_casper_cell(&near_l1, &spec, &d, steps, spu_threads).cycles;
-                let mut near_l1_mapped = near_l1.clone();
-                near_l1_mapped.mapping = MappingPolicy::StencilSegment;
-                let b = run_casper_cell(&near_l1_mapped, &spec, &d, steps, spu_threads).cycles;
-                CellOut::Ablation(a, b)
-            }
-        });
-        // Casper cells land first so ablation `full` backfill always finds
-        // them; ablation entries are assembled in a second pass below.
-        let mut pending_ablation: Vec<(Arc<KernelSpec>, SizeClass, (u64, u64))> = Vec::new();
-        for (cell, out) in cells.into_iter().zip(outs) {
-            match (cell, out) {
-                (Cell::Casper(s, l), CellOut::Casper(stats)) => {
-                    self.casper.insert((s.id.clone(), l), stats);
+        if !cells.is_empty() {
+            let cfg = self.cfg.clone();
+            let steps = self.opts.steps;
+            let spu_threads = self.opts.spu_threads;
+            let journal = self.journal.clone();
+            let run = move |cell: &Cell| -> Result<CellOut, String> {
+                let out = match cell {
+                    Cell::Casper(spec, level) => {
+                        let d = spec.domain(*level);
+                        CellOut::Casper(run_casper_cell(&cfg, spec, &d, steps, spu_threads)?)
+                    }
+                    Cell::Cpu(spec, level) => {
+                        let d = spec.domain(*level);
+                        CellOut::Cpu(run_cpu_spec(&cfg, spec, &d, steps))
+                    }
+                    Cell::Ablation(spec, level) => {
+                        let d = spec.domain(*level);
+                        let mut near_l1 = cfg.clone();
+                        near_l1.placement = SpuPlacement::NearL1;
+                        near_l1.mapping = MappingPolicy::Baseline;
+                        let a = run_casper_cell(&near_l1, spec, &d, steps, spu_threads)?.cycles;
+                        let mut near_l1_mapped = near_l1.clone();
+                        near_l1_mapped.mapping = MappingPolicy::StencilSegment;
+                        let b =
+                            run_casper_cell(&near_l1_mapped, spec, &d, steps, spu_threads)?.cycles;
+                        CellOut::Ablation(a, b)
+                    }
+                };
+                // Journal the completion from the worker, so a kill at any
+                // point loses at most the cells still in flight.
+                if let Some(j) = &journal {
+                    let rec = record_of(cell, &out);
+                    let mut guard = j.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                    if let Err(e) = guard.append(&rec) {
+                        eprintln!("warning: checkpoint append failed: {e:#}");
+                    }
                 }
-                (Cell::Cpu(s, l), CellOut::Cpu(stats)) => {
-                    self.cpu.insert((s.id.clone(), l), stats);
+                Ok(out)
+            };
+            let outcomes =
+                sweep::supervised_map(cells.clone(), self.opts.jobs, &self.sup.policy, run);
+            for (cell, outcome) in cells.into_iter().zip(outcomes) {
+                let (kind, spec, level) = match &cell {
+                    Cell::Casper(s, l) => (CellKind::Casper, s.clone(), *l),
+                    Cell::Cpu(s, l) => (CellKind::Cpu, s.clone(), *l),
+                    Cell::Ablation(s, l) => (CellKind::Ablation, s.clone(), *l),
+                };
+                match outcome {
+                    CellOutcome::Ok(out) => {
+                        self.executed += 1;
+                        match out {
+                            CellOut::Casper(stats) => {
+                                self.casper.insert((spec.id.clone(), level), stats);
+                            }
+                            CellOut::Cpu(stats) => {
+                                self.cpu.insert((spec.id.clone(), level), stats);
+                            }
+                            CellOut::Ablation(a, b) => {
+                                self.ablation_pairs.insert((spec.id.clone(), level), (a, b));
+                            }
+                        }
+                    }
+                    // Fail-fast leftovers: neither done nor failed; the
+                    // caller aborts before any builder reads them.
+                    CellOutcome::Skipped => {}
+                    other => {
+                        self.failed.insert((kind, spec.id.clone(), level), other.describe());
+                    }
                 }
-                (Cell::Ablation(s, l), CellOut::Ablation(a, b)) => {
-                    pending_ablation.push((s, l, (a, b)));
-                }
-                _ => unreachable!("cell/result kind mismatch"),
             }
         }
-        for (spec, level, (a, b)) in pending_ablation {
-            let full = self.casper(&spec, level).cycles;
-            self.ablation.insert(
-                (spec.id.clone(), level),
-                AblationPoint { near_l1_base: a, near_l1_mapped: b, full },
-            );
+        self.join_ablation_pairs();
+        Ok(())
+    }
+
+    /// Join near-L1 ablation pairs with their `full` Casper cycles. A
+    /// pair whose Casper cell failed becomes a dependent ablation
+    /// failure; a pair whose Casper cell was skipped (fail-fast) stays
+    /// pending.
+    fn join_ablation_pairs(&mut self) {
+        let pairs: Vec<_> = self.ablation_pairs.drain().collect();
+        for ((id, level), (a, b)) in pairs {
+            if let Some(full) = self.casper.get(&(id.clone(), level)).map(|s| s.cycles) {
+                self.ablation.insert(
+                    (id, level),
+                    AblationPoint { near_l1_base: a, near_l1_mapped: b, full },
+                );
+            } else if let Some(why) =
+                self.failed.get(&(CellKind::Casper, id.clone(), level)).cloned()
+            {
+                self.failed
+                    .entry((CellKind::Ablation, id, level))
+                    .or_insert_with(|| format!("dependent casper cell failed: {why}"));
+            } else {
+                self.ablation_pairs.insert((id, level), (a, b));
+            }
         }
+    }
+
+    /// Why the given cell kinds failed for this (kernel, class), if any
+    /// did — the builders call this before reading a cell and render the
+    /// reason as an annotated hole instead.
+    pub fn cell_failure(
+        &self,
+        spec: &KernelSpec,
+        level: SizeClass,
+        kinds: &[CellKind],
+    ) -> Option<String> {
+        let mut msgs = Vec::new();
+        for &k in kinds {
+            if let Some(why) = self.failed.get(&(k, spec.id.clone(), level)) {
+                msgs.push(format!("{} {}", k.name(), why));
+            }
+        }
+        if msgs.is_empty() {
+            None
+        } else {
+            Some(msgs.join("; "))
+        }
+    }
+
+    /// Every failed cell in deterministic order (kernel sweep order, then
+    /// class, then kind) — the report's "failed cells" section.
+    pub fn failures(&self) -> Vec<CellFailure> {
+        let mut out = Vec::new();
+        for spec in &self.kernels {
+            for &level in &SizeClass::ALL {
+                for kind in [CellKind::Casper, CellKind::Cpu, CellKind::Ablation] {
+                    if let Some(why) = self.failed.get(&(kind, spec.id.clone(), level)) {
+                        out.push(CellFailure {
+                            kind: kind.name().to_string(),
+                            kernel: spec.id.to_string(),
+                            level: level.name().to_string(),
+                            outcome: why.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        out
     }
 
     pub fn casper(&mut self, spec: &KernelSpec, level: SizeClass) -> &RunStats {
@@ -298,7 +520,8 @@ impl SweepCache {
             self.lazy_fills += 1;
             let d = spec.domain(level);
             let stats =
-                run_casper_cell(&self.cfg, spec, &d, self.opts.steps, self.opts.spu_threads);
+                run_casper_cell(&self.cfg, spec, &d, self.opts.steps, self.opts.spu_threads)
+                    .unwrap_or_else(|e| panic!("casper run failed: {e}"));
             self.casper.insert(key.clone(), stats);
         }
         &self.casper[&key]
@@ -327,10 +550,14 @@ impl SweepCache {
         let mut near_l1 = self.cfg.clone();
         near_l1.placement = SpuPlacement::NearL1;
         near_l1.mapping = MappingPolicy::Baseline;
-        let a = run_casper_cell(&near_l1, spec, &d, steps, spu_threads).cycles;
+        let a = run_casper_cell(&near_l1, spec, &d, steps, spu_threads)
+            .unwrap_or_else(|e| panic!("casper run failed: {e}"))
+            .cycles;
         let mut near_l1_mapped = near_l1.clone();
         near_l1_mapped.mapping = MappingPolicy::StencilSegment;
-        let b = run_casper_cell(&near_l1_mapped, spec, &d, steps, spu_threads).cycles;
+        let b = run_casper_cell(&near_l1_mapped, spec, &d, steps, spu_threads)
+            .unwrap_or_else(|e| panic!("casper run failed: {e}"))
+            .cycles;
         let full = self.casper(spec, level).cycles;
         let p = AblationPoint { near_l1_base: a, near_l1_mapped: b, full };
         self.ablation.insert(key, p);
@@ -338,16 +565,40 @@ impl SweepCache {
     }
 }
 
-/// One Casper cell, honouring the sweep's intra-run thread setting.
+/// Build the journal record for a finished cell.
+fn record_of(cell: &Cell, out: &CellOut) -> Record {
+    match (cell, out) {
+        (Cell::Casper(spec, level), CellOut::Casper(stats)) => Record::Casper {
+            id: spec.id.to_string(),
+            level: *level,
+            digest: stats.digest(),
+            stats: stats.clone(),
+        },
+        (Cell::Cpu(spec, level), CellOut::Cpu(stats)) => {
+            Record::Cpu { id: spec.id.to_string(), level: *level, stats: stats.clone() }
+        }
+        (Cell::Ablation(spec, level), CellOut::Ablation(a, b)) => Record::Ablation {
+            id: spec.id.to_string(),
+            level: *level,
+            near_l1_base: *a,
+            near_l1_mapped: *b,
+        },
+        _ => unreachable!("cell/result kind mismatch"),
+    }
+}
+
+/// One Casper cell, honouring the sweep's intra-run thread setting. The
+/// error is a plain string so the supervisor can carry it across the
+/// `catch_unwind` boundary and into a [`CellOutcome::Failed`].
 fn run_casper_cell(
     cfg: &SimConfig,
     spec: &KernelSpec,
     d: &crate::stencil::Domain,
     steps: usize,
     spu_threads: usize,
-) -> RunStats {
+) -> Result<RunStats, String> {
     run_casper_spec(cfg, spec, d, steps, CasperOptions { spu_threads, ..Default::default() })
-        .expect("casper run failed")
+        .map_err(|e| format!("{e:#}"))
 }
 
 type CellSet = HashSet<(KernelId, SizeClass)>;
@@ -422,14 +673,41 @@ pub fn run_experiments_with(
     opts: SweepOptions,
     kernels: &[Arc<KernelSpec>],
 ) -> Result<Report> {
+    run_experiments_supervised(cfg, which, opts, kernels, &SupervisorConfig::default())
+}
+
+/// Run experiments under an explicit supervisor configuration: panic
+/// isolation, deadlines, retry, checkpoint-resume, fault injection.
+///
+/// With the default configuration this is byte-identical to the
+/// pre-supervisor harness at any job count. Under `keep_going`, failed
+/// cells become annotated holes in the tables and are listed in
+/// [`Report::failures`]; under fail-fast (default) the first terminal
+/// cell failure aborts the run with an error naming the cell.
+pub fn run_experiments_supervised(
+    cfg: &SimConfig,
+    which: &[Experiment],
+    opts: SweepOptions,
+    kernels: &[Arc<KernelSpec>],
+    sup: &SupervisorConfig,
+) -> Result<Report> {
     if which.is_empty() {
         bail!("no experiments selected");
     }
     if kernels.is_empty() {
         bail!("no kernels selected");
     }
-    let mut cache = SweepCache::with_kernels(cfg, opts, kernels);
-    cache.prefill(which);
+    let mut cache = SweepCache::with_supervisor(cfg, opts, kernels, sup)?;
+    cache.prefill_checked(which)?;
+    if !sup.policy.keep_going {
+        if let Some(first) = cache.failures().into_iter().next() {
+            bail!(
+                "sweep aborted (fail-fast): {first}; completed cells are preserved{} — rerun \
+                 with --keep-going to sweep past failures",
+                if sup.journal.is_some() { " in the checkpoint journal" } else { "" }
+            );
+        }
+    }
     let mut report = Report::default();
     for e in which {
         let table = match e {
@@ -446,6 +724,7 @@ pub fn run_experiments_with(
         };
         report.tables.push(table);
     }
+    report.failures = cache.failures();
     Ok(report)
 }
 
@@ -460,9 +739,19 @@ fn fig1(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
     // setting), or L2 in quick mode.
     let level = if opts.quick { SizeClass::L2 } else { SizeClass::Llc };
     let freq = cfg.cpu.freq_ghz;
-    let measured: Vec<f64> = kernels.iter().map(|s| cache.cpu(s, level).gflops(freq)).collect();
+    let failures: Vec<Option<String>> =
+        kernels.iter().map(|s| cache.cell_failure(s, level, &[CellKind::Cpu])).collect();
+    let measured: Vec<f64> = kernels
+        .iter()
+        .zip(&failures)
+        .map(|(s, f)| if f.is_some() { 0.0 } else { cache.cpu(s, level).gflops(freq) })
+        .collect();
     let m = roofline::Machine::of(cfg);
     for (i, p) in roofline::roofline_specs(cfg, &kernels, Some(&measured)).iter().enumerate() {
+        if let Some(why) = &failures[i] {
+            t.hole(vec![p.name.clone()], why);
+            continue;
+        }
         t.row(vec![
             p.name.clone(),
             format!("{:.3}", p.ai),
@@ -491,6 +780,10 @@ fn fig10(cache: &mut SweepCache, opts: SweepOptions) -> Table {
     let mut llc_speedups = Vec::new();
     for spec in &kernels {
         for &level in opts.classes() {
+            if let Some(why) = cache.cell_failure(spec, level, &[CellKind::Casper, CellKind::Cpu]) {
+                t.hole(vec![spec.name.clone(), level.name().into()], &why);
+                continue;
+            }
             let c = cache.casper(spec, level).cycles;
             let p = cache.cpu(spec, level).cycles;
             let s = p as f64 / c as f64;
@@ -532,6 +825,10 @@ fn fig11(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
     let mut norms = Vec::new();
     for spec in &kernels {
         for &level in opts.classes() {
+            if let Some(why) = cache.cell_failure(spec, level, &[CellKind::Casper, CellKind::Cpu]) {
+                t.hole(vec![spec.name.clone(), level.name().into()], &why);
+                continue;
+            }
             let ce = casper_energy(cfg, cache.casper(spec, level));
             let pe = cpu_energy(cfg, cache.cpu(spec, level));
             let norm = ce.total_j() / pe.total_j();
@@ -570,6 +867,10 @@ fn fig12(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
     let mut improvements = Vec::new();
     for spec in &kernels {
         for &level in opts.classes() {
+            if let Some(why) = cache.cell_failure(spec, level, &[CellKind::Casper]) {
+                t.hole(vec![spec.name.clone(), level.name().into()], &why);
+                continue;
+            }
             let d = spec.domain(level);
             let g = gpu.cycles_spec(cfg, spec, &d, opts.steps);
             let c = cache.casper(spec, level).cycles;
@@ -609,6 +910,10 @@ fn fig13(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
     let mut on_chip = Vec::new();
     for spec in &kernels {
         for &level in opts.classes() {
+            if let Some(why) = cache.cell_failure(spec, level, &[CellKind::Casper]) {
+                t.hole(vec![spec.name.clone(), level.name().into()], &why);
+                continue;
+            }
             let d = spec.domain(level);
             let p = pims.cycles_spec(cfg, spec, &d, opts.steps);
             let c = cache.casper(spec, level).cycles;
@@ -641,6 +946,12 @@ fn fig14(cache: &mut SweepCache, opts: SweepOptions) -> Table {
     );
     for spec in &kernels {
         for &level in opts.classes() {
+            if let Some(why) =
+                cache.cell_failure(spec, level, &[CellKind::Ablation, CellKind::Casper])
+            {
+                t.hole(vec![spec.name.clone(), level.name().into()], &why);
+                continue;
+            }
             let p = cache.ablation(spec, level);
             // Fig 14 attribution: total speedup from baseline to full is
             // normalized to 100%; the mapping share is the step from the
@@ -676,6 +987,10 @@ fn table4(cache: &mut SweepCache, opts: SweepOptions) -> Table {
     );
     for spec in &kernels {
         for &level in opts.classes() {
+            if let Some(why) = cache.cell_failure(spec, level, &[CellKind::Casper, CellKind::Cpu]) {
+                t.hole(vec![spec.name.clone(), level.name().into()], &why);
+                continue;
+            }
             let cpu = cache.cpu(spec, level).instrs;
             let casper = cache.casper(spec, level).per_spu_instrs;
             let (p_cpu, r_cpu) = match paperdata::cpu_instrs_of(spec.id.as_str(), level) {
@@ -712,6 +1027,10 @@ fn table5(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table 
     );
     for spec in &kernels {
         for &level in opts.classes() {
+            if let Some(why) = cache.cell_failure(spec, level, &[CellKind::Casper, CellKind::Cpu]) {
+                t.hole(vec![spec.name.clone(), level.name().into()], &why);
+                continue;
+            }
             let d = spec.domain(level);
             let id = spec.id.as_str();
             let opt_cell = |v: Option<u64>| v.map_or_else(|| "-".into(), |x| x.to_string());
@@ -739,6 +1058,10 @@ fn table6(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table 
     );
     for spec in &kernels {
         for &level in opts.classes() {
+            if let Some(why) = cache.cell_failure(spec, level, &[CellKind::Casper, CellKind::Cpu]) {
+                t.hole(vec![spec.name.clone(), level.name().into()], &why);
+                continue;
+            }
             let id = spec.id.as_str();
             let pe = cpu_energy(cfg, cache.cpu(spec, level));
             let ce = casper_energy(cfg, cache.casper(spec, level));
@@ -766,6 +1089,10 @@ fn slices_table(cache: &mut SweepCache, opts: SweepOptions) -> Table {
     );
     for spec in &kernels {
         for &level in opts.classes() {
+            if let Some(why) = cache.cell_failure(spec, level, &[CellKind::Casper]) {
+                t.hole(vec![spec.name.clone(), level.name().into()], &why);
+                continue;
+            }
             let s = cache.casper(spec, level);
             let remote: u64 = s.slice_remote_reqs.iter().sum();
             let dr: u64 = s.slice_dram_reads.iter().sum();
@@ -961,6 +1288,67 @@ mod tests {
             cache.lazy_fills, 0,
             "a builder read a cell needed_cells() did not prefill — keep them in sync"
         );
+    }
+
+    #[test]
+    fn injected_panic_under_keep_going_leaves_survivors_intact() {
+        let cfg = SimConfig::default();
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
+        let clean = run_experiments(&cfg, &[Experiment::Fig10], opts).unwrap();
+        // Cell 0 of the fig10 work list is Casper kernel-0 @ L2 (cells are
+        // kernel-major, Casper before Cpu within a (kernel, class)).
+        let sup = SupervisorConfig {
+            policy: SupervisorPolicy {
+                keep_going: true,
+                faults: Some(FaultPlan {
+                    seed: 1,
+                    rate: 0.0,
+                    kind: FaultKind::Panic,
+                    cells: Some(vec![0]),
+                    delay_ms: 0,
+                }),
+                ..SupervisorPolicy::default()
+            },
+            journal: None,
+        };
+        let faulty =
+            run_experiments_supervised(&cfg, &[Experiment::Fig10], opts, &paper_kernels(), &sup)
+                .unwrap();
+        assert_eq!(faulty.failures.len(), 1, "{:?}", faulty.failures);
+        assert_eq!(faulty.failures[0].kind, "casper");
+        let ft = faulty.get("fig10").unwrap();
+        let ct = clean.get("fig10").unwrap();
+        assert_eq!(ft.rows.len(), ct.rows.len(), "no row lost to the fault");
+        assert!(ft.rows[0][2].starts_with("FAILED:"), "{:?}", ft.rows[0]);
+        for (f, c) in ft.rows.iter().zip(&ct.rows).skip(1) {
+            assert_eq!(f, c, "survivor rows must be bitwise equal to the clean run");
+        }
+        assert!(faulty.to_markdown().contains("### failed cells"));
+    }
+
+    #[test]
+    fn fail_fast_aborts_naming_the_cell() {
+        let cfg = SimConfig::default();
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
+        let sup = SupervisorConfig {
+            policy: SupervisorPolicy {
+                faults: Some(FaultPlan {
+                    seed: 1,
+                    rate: 0.0,
+                    kind: FaultKind::Panic,
+                    cells: Some(vec![0]),
+                    delay_ms: 0,
+                }),
+                ..SupervisorPolicy::default()
+            },
+            journal: None,
+        };
+        let err =
+            run_experiments_supervised(&cfg, &[Experiment::Fig10], opts, &paper_kernels(), &sup)
+                .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fail-fast"), "{msg}");
+        assert!(msg.contains("casper"), "{msg}");
     }
 
     #[test]

@@ -38,6 +38,20 @@ impl Table {
         self.notes.push(s.into());
     }
 
+    /// Render a failed sweep cell as an annotated hole: the identifying
+    /// `prefix` columns (kernel, class, ...) survive, the first data
+    /// column carries the failure, the rest are `-`. The table keeps its
+    /// shape so surviving rows stay byte-identical to a clean run.
+    pub fn hole(&mut self, prefix: Vec<String>, why: &str) {
+        assert!(prefix.len() < self.header.len(), "hole prefix must leave data columns");
+        let mut cells = prefix;
+        cells.push(format!("FAILED: {why}"));
+        while cells.len() < self.header.len() {
+            cells.push("-".to_string());
+        }
+        self.rows.push(cells);
+    }
+
     pub fn to_markdown(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "### {} — {}\n", self.id, self.title);
@@ -77,15 +91,48 @@ fn csv_line(cells: &[String]) -> String {
         .join(",")
 }
 
+/// One sweep cell that did not complete (see the supervised runtime in
+/// [`crate::harness::sweep`]). Rendered as an annotated hole in its
+/// tables and listed in the report's "failed cells" section.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellFailure {
+    /// Cell kind: `casper`, `cpu`, or `ablation`.
+    pub kind: String,
+    /// Kernel id.
+    pub kernel: String,
+    /// Size-class name.
+    pub level: String,
+    /// Terminal outcome text ([`crate::harness::sweep::CellOutcome::describe`]).
+    pub outcome: String,
+}
+
+impl std::fmt::Display for CellFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}@{}: {}", self.kind, self.kernel, self.level, self.outcome)
+    }
+}
+
 /// The full experiment report.
 #[derive(Debug, Default, Clone)]
 pub struct Report {
     pub tables: Vec<Table>,
+    /// Cells that failed under `--keep-going` (empty on a clean sweep —
+    /// and on a clean sweep the markdown is byte-identical to a report
+    /// that predates failure tracking).
+    pub failures: Vec<CellFailure>,
 }
 
 impl Report {
     pub fn to_markdown(&self) -> String {
-        self.tables.iter().map(|t| t.to_markdown()).collect()
+        let mut out: String = self.tables.iter().map(|t| t.to_markdown()).collect();
+        if !self.failures.is_empty() {
+            out.push_str("### failed cells\n\n");
+            for f in &self.failures {
+                let _ = writeln!(out, "- {f}");
+            }
+            out.push('\n');
+        }
+        out
     }
 
     /// Write `<id>.csv` per table plus `report.md` into `dir`.
@@ -134,6 +181,30 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("x", "t", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn holes_pad_to_header_width() {
+        let mut t = Table::new("x", "t", &["kernel", "class", "v1", "v2"]);
+        t.hole(vec!["jacobi2d".into(), "LLC".into()], "panicked: boom");
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0], vec!["jacobi2d", "LLC", "FAILED: panicked: boom", "-"]);
+    }
+
+    #[test]
+    fn failures_section_renders_only_when_present() {
+        let mut r = Report::default();
+        r.tables.push(sample());
+        assert!(!r.to_markdown().contains("failed cells"));
+        r.failures.push(CellFailure {
+            kind: "casper".into(),
+            kernel: "jacobi2d".into(),
+            level: "LLC".into(),
+            outcome: "timed out after 10 ms (attempt 1)".into(),
+        });
+        let md = r.to_markdown();
+        assert!(md.contains("### failed cells"));
+        assert!(md.contains("- casper jacobi2d@LLC: timed out"));
     }
 
     #[test]

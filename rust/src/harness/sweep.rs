@@ -1,21 +1,460 @@
 //! Parallel experiment-sweep engine: fan independent simulation cells out
-//! over a scoped worker pool.
+//! over a *supervised* scoped worker pool.
 //!
 //! Every cell of the paper's evaluation grid (kernel × size class ×
 //! configuration) is an independent, deterministic simulation — the fig/
 //! table builders only ever combine *finished* cell results. That makes
-//! the sweep embarrassingly parallel: [`parallel_map`] runs the cells on
+//! the sweep embarrassingly parallel: [`supervised_map`] runs the cells on
 //! `jobs` worker threads (work-stealing via a shared atomic cursor) and
-//! returns the results **in submission order**, so a parallel sweep
+//! returns the outcomes **in submission order**, so a parallel sweep
 //! produces byte-identical reports to a serial one.
+//!
+//! Unlike a bare thread-scope map, the supervisor *contains* cell
+//! failures instead of propagating them:
+//!
+//! - a panicking cell is caught with `catch_unwind` and reported as
+//!   [`CellOutcome::Panicked`];
+//! - a cell that exceeds the configured wall-clock deadline is abandoned
+//!   by a watchdog and reported as [`CellOutcome::TimedOut`];
+//! - an `Err` from the cell function becomes [`CellOutcome::Failed`];
+//! - panics and errors retry with bounded exponential backoff before a
+//!   terminal outcome is recorded ([`SupervisorPolicy::max_retries`]);
+//! - under fail-fast (the default policy) the first terminal failure
+//!   stops workers from *claiming* further cells (already-running cells
+//!   finish; unclaimed ones come back [`CellOutcome::Skipped`]).
+//!
+//! A deterministic, seeded fault-injection layer ([`FaultPlan`]) plants
+//! panics, delays, or errors at chosen cell indices so every one of those
+//! paths is testable — and CI-gated — without any nondeterminism.
+//!
+//! The legacy [`parallel_map`] survives for fail-together callers (micro
+//! benches); the experiment harness itself always goes through the
+//! supervisor.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::util::SplitMix64;
 
 /// Number of workers to use when the caller doesn't specify: one per
 /// available hardware thread (see [`crate::util::auto_threads`]).
 pub fn auto_jobs() -> usize {
     crate::util::auto_threads()
+}
+
+/// Lock a slot even if a previous holder panicked: the supervisor owns
+/// failure reporting, so mutex poisoning must not cascade one cell's
+/// panic into every later slot access.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Terminal result of one supervised cell.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CellOutcome<R> {
+    /// The cell completed; its result is bitwise identical to what an
+    /// unsupervised serial run would have produced.
+    Ok(R),
+    /// Every attempt panicked; `msg` is the last panic payload.
+    Panicked { msg: String, attempts: u32 },
+    /// The watchdog gave up waiting. The attempt thread is abandoned (it
+    /// may still be running); timeouts are not retried.
+    TimedOut { limit_ms: u64, attempts: u32 },
+    /// Every attempt returned an error; `err` is the last one.
+    Failed { err: String, attempts: u32 },
+    /// Never claimed: an earlier cell failed under fail-fast.
+    Skipped,
+}
+
+impl<R> CellOutcome<R> {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, CellOutcome::Ok(_))
+    }
+
+    pub fn into_ok(self) -> Option<R> {
+        match self {
+            CellOutcome::Ok(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Human-readable outcome (the report's annotated-hole text).
+    pub fn describe(&self) -> String {
+        match self {
+            CellOutcome::Ok(_) => "ok".to_string(),
+            CellOutcome::Panicked { msg, attempts } => {
+                format!("panicked after {attempts} attempt(s): {msg}")
+            }
+            CellOutcome::TimedOut { limit_ms, attempts } => {
+                format!("timed out after {limit_ms} ms (attempt {attempts})")
+            }
+            CellOutcome::Failed { err, attempts } => {
+                format!("failed after {attempts} attempt(s): {err}")
+            }
+            CellOutcome::Skipped => "skipped (fail-fast after an earlier failure)".to_string(),
+        }
+    }
+}
+
+/// How the supervisor treats failing cells.
+#[derive(Debug, Clone)]
+pub struct SupervisorPolicy {
+    /// `true`: record the failure and keep sweeping the remaining cells.
+    /// `false` (default): stop claiming new cells after the first terminal
+    /// failure — unclaimed cells come back [`CellOutcome::Skipped`].
+    pub keep_going: bool,
+    /// Wall-clock deadline per attempt. `None` (default) runs the cell
+    /// inline on the worker; `Some` runs it on a watchdogged thread that
+    /// is abandoned on expiry.
+    pub cell_timeout: Option<Duration>,
+    /// Extra attempts after a panic or error (timeouts never retry).
+    pub max_retries: u32,
+    /// Backoff before retry `k` is `base * 2^k`, capped at
+    /// [`SupervisorPolicy::backoff_cap_ms`].
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+    /// Deterministic fault-injection plan (testing/CI only).
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        SupervisorPolicy {
+            keep_going: false,
+            cell_timeout: None,
+            max_retries: 2,
+            backoff_base_ms: 25,
+            backoff_cap_ms: 1_000,
+            faults: None,
+        }
+    }
+}
+
+impl SupervisorPolicy {
+    fn backoff(&self, attempt: u32) {
+        let ms = self
+            .backoff_base_ms
+            .saturating_mul(1u64 << attempt.min(16))
+            .min(self.backoff_cap_ms);
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+}
+
+/// What an injected fault does to the attempt it fires on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` inside the cell (exercises `catch_unwind` containment).
+    Panic,
+    /// Sleep [`FaultPlan::delay_ms`] before the real work (exercises the
+    /// deadline watchdog when a `cell_timeout` is set; otherwise the cell
+    /// is merely slow and the sweep output is unchanged).
+    Delay,
+    /// Return `Err` from the cell. Errors are *transient*: they fire only
+    /// on attempt 0, so a retrying supervisor recovers byte-identically.
+    Error,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Delay => "delay",
+            FaultKind::Error => "error",
+        }
+    }
+}
+
+/// A deterministic, seeded fault plan: which cell indices (positions in
+/// the sweep's work list) fault, and how. Parsed from
+/// `--inject-faults seed=7,rate=0.25,kind=panic` or the `CASPER_FAULTS`
+/// env var; an explicit `cells=0:3:7` list overrides the seeded rate.
+///
+/// Faults are keyed purely by cell *index* via an independent
+/// [`SplitMix64`] stream per index, so the plan is identical at any job
+/// count and any claim order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability that a given cell index is planted (ignored when
+    /// `cells` is set).
+    pub rate: f64,
+    pub kind: FaultKind,
+    /// Explicit planted indices (overrides `rate`).
+    pub cells: Option<Vec<usize>>,
+    /// Sleep length for [`FaultKind::Delay`].
+    pub delay_ms: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `key=value,...` spec string (see module docs / USAGE).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut seed = 0u64;
+        let mut rate = 0.0f64;
+        let mut kind = None;
+        let mut cells: Option<Vec<usize>> = None;
+        let mut delay_ms = 50u64;
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got '{part}'"))?;
+            let v = v.trim();
+            match k.trim() {
+                "seed" => seed = v.parse().map_err(|_| format!("bad seed '{v}'"))?,
+                "rate" => {
+                    rate = v.parse().map_err(|_| format!("bad rate '{v}'"))?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        return Err(format!("rate must be in [0,1], got {rate}"));
+                    }
+                }
+                "kind" => {
+                    kind = Some(match v {
+                        "panic" => FaultKind::Panic,
+                        "delay" => FaultKind::Delay,
+                        "error" => FaultKind::Error,
+                        other => {
+                            return Err(format!(
+                                "unknown fault kind '{other}' (panic | delay | error)"
+                            ))
+                        }
+                    })
+                }
+                "cells" => {
+                    let parsed: Result<Vec<usize>, _> =
+                        v.split(':').map(|c| c.trim().parse::<usize>()).collect();
+                    cells = Some(parsed.map_err(|_| {
+                        format!("bad cells list '{v}' (colon-separated indices, e.g. 0:3:7)")
+                    })?);
+                }
+                "delay-ms" | "delay_ms" => {
+                    delay_ms = v.parse().map_err(|_| format!("bad delay-ms '{v}'"))?
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault-plan key '{other}' (seed | rate | kind | cells | delay-ms)"
+                    ))
+                }
+            }
+        }
+        let kind = kind.ok_or_else(|| "missing kind= (panic | delay | error)".to_string())?;
+        if cells.is_none() && rate <= 0.0 {
+            return Err("plan plants nothing: set rate= or cells=".to_string());
+        }
+        Ok(FaultPlan { seed, rate, kind, cells, delay_ms })
+    }
+
+    /// Read a plan from the `CASPER_FAULTS` env var (empty/unset = none).
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var("CASPER_FAULTS") {
+            Err(_) => Ok(None),
+            Ok(s) if s.trim().is_empty() => Ok(None),
+            Ok(s) => FaultPlan::parse(&s).map(Some),
+        }
+    }
+
+    /// Is a fault planted at this cell index? Independent per-index draw,
+    /// so the answer does not depend on job count or visit order.
+    pub fn planted(&self, index: usize) -> bool {
+        if let Some(cells) = &self.cells {
+            return cells.contains(&index);
+        }
+        SplitMix64::new(self.seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .chance(self.rate)
+    }
+
+    /// Every planted index among `0..n` (test/diagnostic helper).
+    pub fn planted_indices(&self, n: usize) -> Vec<usize> {
+        (0..n).filter(|&i| self.planted(i)).collect()
+    }
+
+    /// Does the fault fire on this attempt? `Error` is transient (attempt
+    /// 0 only — retries recover); `Panic` and `Delay` are sticky.
+    pub fn fires(&self, index: usize, attempt: u32) -> Option<FaultKind> {
+        if !self.planted(index) {
+            return None;
+        }
+        match self.kind {
+            FaultKind::Error if attempt > 0 => None,
+            kind => Some(kind),
+        }
+    }
+}
+
+/// Run one attempt body: injected fault first (if any fires), then the
+/// real cell function.
+fn exec_attempt<T, R>(
+    f: &impl Fn(&T) -> Result<R, String>,
+    item: &T,
+    index: usize,
+    attempt: u32,
+    faults: Option<&FaultPlan>,
+) -> Result<R, String> {
+    if let Some(kind) = faults.and_then(|p| p.fires(index, attempt)) {
+        match kind {
+            FaultKind::Panic => panic!("injected fault: panic at cell {index}"),
+            FaultKind::Error => return Err(format!("injected fault: error at cell {index}")),
+            FaultKind::Delay => {
+                let ms = faults.map(|p| p.delay_ms).unwrap_or(0);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+    }
+    f(item)
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one cell to a terminal [`CellOutcome`]: catch panics, watchdog the
+/// deadline, retry panics/errors with bounded exponential backoff.
+fn run_cell<T, R, F>(
+    f: &Arc<F>,
+    items: &Arc<Vec<T>>,
+    index: usize,
+    policy: &SupervisorPolicy,
+) -> CellOutcome<R>
+where
+    T: Clone + Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(&T) -> Result<R, String> + Send + Sync + 'static,
+{
+    let mut attempt: u32 = 0;
+    loop {
+        // Outer Err = the attempt panicked; inner Err = it returned one.
+        let result: Result<Result<R, String>, String> = match policy.cell_timeout {
+            None => catch_unwind(AssertUnwindSafe(|| {
+                exec_attempt(&**f, &items[index], index, attempt, policy.faults.as_ref())
+            }))
+            .map_err(panic_message),
+            Some(limit) => {
+                let (tx, rx) = mpsc::channel();
+                let f = Arc::clone(f);
+                let item = items[index].clone();
+                let faults = policy.faults.clone();
+                let spawned = std::thread::Builder::new()
+                    .name(format!("casper-cell-{index}"))
+                    .spawn(move || {
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            exec_attempt(&*f, &item, index, attempt, faults.as_ref())
+                        }))
+                        .map_err(panic_message);
+                        let _ = tx.send(r);
+                    });
+                match spawned {
+                    Err(e) => Ok(Err(format!("cell worker spawn failed: {e}"))),
+                    // The handle is dropped either way: on timeout the
+                    // attempt thread is abandoned (it parks no results —
+                    // the send just fails) rather than joined, so a hung
+                    // simulation cannot hang the sweep.
+                    Ok(_handle) => match rx.recv_timeout(limit) {
+                        Ok(r) => r,
+                        Err(_) => {
+                            return CellOutcome::TimedOut {
+                                limit_ms: limit.as_millis() as u64,
+                                attempts: attempt + 1,
+                            }
+                        }
+                    },
+                }
+            }
+        };
+        match result {
+            Ok(Ok(v)) => return CellOutcome::Ok(v),
+            Ok(Err(err)) => {
+                if attempt < policy.max_retries {
+                    policy.backoff(attempt);
+                    attempt += 1;
+                    continue;
+                }
+                return CellOutcome::Failed { err, attempts: attempt + 1 };
+            }
+            Err(msg) => {
+                if attempt < policy.max_retries {
+                    policy.backoff(attempt);
+                    attempt += 1;
+                    continue;
+                }
+                return CellOutcome::Panicked { msg, attempts: attempt + 1 };
+            }
+        }
+    }
+}
+
+/// Apply `f` to every item under supervision, using up to `jobs` worker
+/// threads, returning one [`CellOutcome`] per item in the order of
+/// `items` regardless of completion order.
+///
+/// With no faults injected and no cell failing, this is observably
+/// identical to [`parallel_map`] — same results, same order — at any job
+/// count (including `jobs == 1`, which runs the whole loop inline on the
+/// calling thread).
+pub fn supervised_map<T, R, F>(
+    items: Vec<T>,
+    jobs: usize,
+    policy: &SupervisorPolicy,
+    f: F,
+) -> Vec<CellOutcome<R>>
+where
+    T: Clone + Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(&T) -> Result<R, String> + Send + Sync + 'static,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.clamp(1, n);
+    let f: Arc<F> = Arc::new(f);
+    let items: Arc<Vec<T>> = Arc::new(items);
+    let slots: Vec<Mutex<Option<CellOutcome<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let worker = || loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let i = cursor.fetch_add(1, Ordering::SeqCst);
+        if i >= n {
+            break;
+        }
+        let out = run_cell(&f, &items, i, policy);
+        let ok = out.is_ok();
+        *lock_clean(&slots[i]) = Some(out);
+        if !ok && !policy.keep_going {
+            stop.store(true, Ordering::SeqCst);
+        }
+    };
+    if jobs == 1 {
+        worker();
+    } else {
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(&worker);
+            }
+        });
+    }
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .unwrap_or(CellOutcome::Skipped)
+        })
+        .collect()
 }
 
 /// Apply `f` to every item, using up to `jobs` worker threads, returning
@@ -24,7 +463,8 @@ pub fn auto_jobs() -> usize {
 /// `jobs <= 1` (or a single item) degenerates to a plain serial map on the
 /// calling thread — no threads are spawned, so serial runs stay exactly as
 /// debuggable (and deterministic) as before. A panic inside `f` on any
-/// worker propagates to the caller when the scope joins.
+/// worker propagates to the caller when the scope joins (fail-together
+/// semantics; the experiment harness uses [`supervised_map`] instead).
 pub fn parallel_map<T, R, F>(items: Vec<T>, jobs: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -40,6 +480,9 @@ where
     // One slot per item: the input is taken by whichever worker claims the
     // index, the output is written back to the same index. The mutex is
     // per-slot and touched twice per (seconds-long) cell — contention-free.
+    // Poisoned slots are recovered, not propagated: the panic itself
+    // resurfaces at scope join, and cascading it into every later slot
+    // access would only bury the real failure.
     let slots: Vec<Mutex<(Option<T>, Option<R>)>> =
         items.into_iter().map(|t| Mutex::new((Some(t), None))).collect();
     let cursor = AtomicUsize::new(0);
@@ -51,14 +494,9 @@ where
                 if i >= n {
                     break;
                 }
-                let item = slots[i]
-                    .lock()
-                    .expect("sweep slot poisoned")
-                    .0
-                    .take()
-                    .expect("sweep item claimed twice");
+                let item = lock_clean(&slots[i]).0.take().expect("sweep item claimed twice");
                 let out = f(item);
-                slots[i].lock().expect("sweep slot poisoned").1 = Some(out);
+                lock_clean(&slots[i]).1 = Some(out);
             });
         }
     });
@@ -66,7 +504,7 @@ where
         .into_iter()
         .map(|m| {
             m.into_inner()
-                .expect("sweep slot poisoned")
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
                 .1
                 .expect("sweep item never completed")
         })
@@ -118,5 +556,219 @@ mod tests {
         let out = parallel_map(items, 4, |s| s.len());
         assert_eq!(out.len(), 20);
         assert!(out.iter().all(|&l| (6..=7).contains(&l)));
+    }
+
+    // ---- supervised_map ------------------------------------------------
+
+    /// A no-retry-delay policy for fast tests.
+    fn quick_policy() -> SupervisorPolicy {
+        SupervisorPolicy { backoff_base_ms: 0, ..Default::default() }
+    }
+
+    fn oks(outs: Vec<CellOutcome<u64>>) -> Vec<u64> {
+        outs.into_iter().map(|o| o.into_ok().expect("expected Ok outcome")).collect()
+    }
+
+    #[test]
+    fn supervised_matches_parallel_map_when_clean() {
+        let items: Vec<u64> = (0..57).collect();
+        let f = |x: &u64| Ok(x.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17));
+        let want: Vec<u64> = items
+            .iter()
+            .map(|x| x.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17))
+            .collect();
+        for jobs in [1, 2, 16] {
+            let policy = quick_policy();
+            assert_eq!(oks(supervised_map(items.clone(), jobs, &policy, f)), want, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn supervised_empty_input() {
+        let policy = quick_policy();
+        let out: Vec<CellOutcome<u64>> = supervised_map(Vec::<u64>::new(), 4, &policy, |x| Ok(*x));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panic_is_contained_and_survivors_complete() {
+        let items: Vec<u64> = (0..12).collect();
+        for jobs in [1, 2, 16] {
+            let policy = SupervisorPolicy { keep_going: true, ..quick_policy() };
+            let outs = supervised_map(items.clone(), jobs, &policy, |x: &u64| {
+                if *x == 5 {
+                    panic!("boom {x}");
+                }
+                Ok(*x * 2)
+            });
+            for (i, o) in outs.iter().enumerate() {
+                if i == 5 {
+                    match o {
+                        CellOutcome::Panicked { msg, attempts } => {
+                            assert_eq!(msg, "boom 5");
+                            assert_eq!(*attempts, 3, "default policy = 1 try + 2 retries");
+                        }
+                        other => panic!("jobs={jobs}: expected Panicked, got {other:?}"),
+                    }
+                } else {
+                    assert_eq!(o.clone().into_ok(), Some(i as u64 * 2), "jobs={jobs} cell {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transient_error_recovers_via_retry() {
+        use std::sync::atomic::AtomicU32;
+        let tries = Arc::new(AtomicU32::new(0));
+        let t = tries.clone();
+        let policy = quick_policy();
+        let outs = supervised_map(vec![7u64], 1, &policy, move |x: &u64| {
+            if t.fetch_add(1, Ordering::SeqCst) == 0 {
+                return Err("flaky".to_string());
+            }
+            Ok(*x)
+        });
+        assert_eq!(outs[0], CellOutcome::Ok(7));
+        assert_eq!(tries.load(Ordering::SeqCst), 2, "one failure + one successful retry");
+    }
+
+    #[test]
+    fn persistent_error_exhausts_retries() {
+        let policy = SupervisorPolicy { max_retries: 1, keep_going: true, ..quick_policy() };
+        let outs = supervised_map(vec![1u64], 4, &policy, |_: &u64| {
+            Err::<u64, _>("always".to_string())
+        });
+        assert_eq!(outs[0], CellOutcome::Failed { err: "always".into(), attempts: 2 });
+    }
+
+    #[test]
+    fn deadline_watchdog_times_out_hung_cells() {
+        let policy = SupervisorPolicy {
+            cell_timeout: Some(Duration::from_millis(50)),
+            keep_going: true,
+            ..quick_policy()
+        };
+        let outs = supervised_map(vec![0u64, 1], 2, &policy, |x: &u64| {
+            if *x == 0 {
+                std::thread::sleep(Duration::from_secs(30));
+            }
+            Ok(*x)
+        });
+        assert_eq!(outs[0], CellOutcome::TimedOut { limit_ms: 50, attempts: 1 });
+        assert_eq!(outs[1], CellOutcome::Ok(1));
+    }
+
+    #[test]
+    fn fail_fast_skips_unclaimed_cells() {
+        // Serial + fail-fast: cell 0 fails terminally, so cells 1.. are
+        // never claimed and come back Skipped.
+        let policy = SupervisorPolicy { max_retries: 0, ..quick_policy() };
+        let outs = supervised_map(vec![0u64, 1, 2, 3], 1, &policy, |x: &u64| {
+            if *x == 0 {
+                return Err("fatal".to_string());
+            }
+            Ok(*x)
+        });
+        assert_eq!(outs[0], CellOutcome::Failed { err: "fatal".into(), attempts: 1 });
+        for o in &outs[1..] {
+            assert_eq!(*o, CellOutcome::Skipped);
+        }
+    }
+
+    #[test]
+    fn injected_fault_plan_is_deterministic_and_order_independent() {
+        let plan = FaultPlan {
+            seed: 42,
+            rate: 0.3,
+            kind: FaultKind::Panic,
+            cells: None,
+            delay_ms: 0,
+        };
+        let planted = plan.planted_indices(64);
+        assert!(!planted.is_empty(), "rate 0.3 over 64 cells should plant something");
+        assert!(planted.len() < 40, "rate 0.3 over 64 cells should not plant everything");
+        // Same seed → same plan; different seed → (almost surely) different.
+        assert_eq!(planted, plan.planted_indices(64));
+        let other = FaultPlan { seed: 43, ..plan.clone() };
+        assert_ne!(planted, other.planted_indices(64));
+    }
+
+    #[test]
+    fn injected_panic_only_hits_planted_cells() {
+        let items: Vec<u64> = (0..16).collect();
+        let plan =
+            FaultPlan { seed: 9, rate: 0.4, kind: FaultKind::Panic, cells: None, delay_ms: 0 };
+        let planted = plan.planted_indices(items.len());
+        for jobs in [1, 2, 16] {
+            let policy = SupervisorPolicy {
+                keep_going: true,
+                max_retries: 0,
+                faults: Some(plan.clone()),
+                ..quick_policy()
+            };
+            let outs = supervised_map(items.clone(), jobs, &policy, |x: &u64| Ok(*x + 100));
+            for (i, o) in outs.iter().enumerate() {
+                if planted.contains(&i) {
+                    assert!(
+                        matches!(o, CellOutcome::Panicked { .. }),
+                        "jobs={jobs} cell {i}: {o:?}"
+                    );
+                } else {
+                    assert_eq!(o.clone().into_ok(), Some(i as u64 + 100), "jobs={jobs} cell {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn injected_error_is_transient_under_retry() {
+        let plan = FaultPlan {
+            seed: 1,
+            rate: 0.0,
+            kind: FaultKind::Error,
+            cells: Some(vec![2]),
+            delay_ms: 0,
+        };
+        assert_eq!(plan.fires(2, 0), Some(FaultKind::Error));
+        assert_eq!(plan.fires(2, 1), None, "error faults fire on attempt 0 only");
+        assert_eq!(plan.fires(1, 0), None);
+        let policy = SupervisorPolicy { faults: Some(plan), ..quick_policy() };
+        let outs = supervised_map((0..4u64).collect(), 2, &policy, |x: &u64| Ok(*x));
+        assert_eq!(oks(outs), vec![0, 1, 2, 3], "retry must recover the transient fault");
+    }
+
+    #[test]
+    fn fault_spec_parses() {
+        let p = FaultPlan::parse("seed=7,rate=0.25,kind=panic").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.rate, 0.25);
+        assert_eq!(p.kind, FaultKind::Panic);
+        assert_eq!(p.cells, None);
+
+        let p = FaultPlan::parse("kind=delay,cells=0:3:7,delay-ms=5").unwrap();
+        assert_eq!(p.cells, Some(vec![0, 3, 7]));
+        assert_eq!(p.delay_ms, 5);
+        assert!(p.planted(3) && !p.planted(1));
+
+        assert!(FaultPlan::parse("rate=0.5").is_err(), "kind is required");
+        assert!(FaultPlan::parse("kind=panic").is_err(), "needs rate or cells");
+        assert!(FaultPlan::parse("kind=frob,rate=0.5").is_err());
+        assert!(FaultPlan::parse("kind=panic,rate=1.5").is_err());
+        assert!(FaultPlan::parse("kind=panic,cells=a:b").is_err());
+        assert!(FaultPlan::parse("bogus").is_err());
+        assert!(FaultPlan::parse("kind=panic,rate=0.5,junk=1").is_err());
+    }
+
+    #[test]
+    fn outcome_descriptions() {
+        assert!(CellOutcome::<u64>::Skipped.describe().contains("fail-fast"));
+        let p = CellOutcome::<u64>::Panicked { msg: "m".into(), attempts: 3 };
+        assert!(p.describe().contains("panicked after 3"));
+        let t = CellOutcome::<u64>::TimedOut { limit_ms: 10, attempts: 1 };
+        assert!(t.describe().contains("timed out after 10 ms"));
+        let f = CellOutcome::<u64>::Failed { err: "e".into(), attempts: 1 };
+        assert!(f.describe().contains("failed after 1"));
+        assert_eq!(CellOutcome::Ok(1u64).describe(), "ok");
     }
 }

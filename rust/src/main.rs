@@ -1,6 +1,7 @@
 //! `casper` — the leader binary: CLI entrypoint over the library.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -11,7 +12,9 @@ use casper::coordinator::run_casper_spec;
 use casper::cpu::run_cpu_spec;
 use casper::energy::{casper_energy, cpu_energy};
 use casper::gpu::GpuModel;
-use casper::harness::{run_experiments_with, SweepOptions};
+use casper::harness::{
+    run_experiments_supervised, FaultPlan, SupervisorConfig, SupervisorPolicy, SweepOptions,
+};
 use casper::isa::ProgramBuilder;
 use casper::pims::PimsModel;
 use casper::roofline;
@@ -21,7 +24,7 @@ use casper::util::human_time_cycles;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let code = match cli::parse(&argv).and_then(dispatch) {
+    let code = match run(&argv) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");
@@ -29,6 +32,11 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let cmd = cli::parse(argv)?;
+    dispatch(cmd)
 }
 
 fn dispatch(cmd: Command) -> Result<()> {
@@ -126,6 +134,12 @@ fn dispatch(cmd: Command) -> Result<()> {
             kernel_files,
             extended_kernels,
             kernels,
+            keep_going,
+            cell_timeout_ms,
+            retries,
+            backoff_ms,
+            resume,
+            inject_faults,
         } => {
             let cfg = cli::load_config(config.as_ref())?;
             let registry = cli::build_registry(&kernel_files)?;
@@ -161,11 +175,37 @@ fn dispatch(cmd: Command) -> Result<()> {
                 opts.jobs,
                 opts.spu_threads
             );
-            let report = run_experiments_with(&cfg, &only, opts, &selected)?;
+            // --inject-faults wins over the CASPER_FAULTS env (the CI
+            // matrix sets the env; explicit flags are for local testing).
+            let faults = match inject_faults {
+                Some(p) => Some(p),
+                None => FaultPlan::from_env()
+                    .map_err(|why| anyhow::anyhow!("bad CASPER_FAULTS: {why}"))?,
+            };
+            let sup = SupervisorConfig {
+                policy: SupervisorPolicy {
+                    keep_going,
+                    cell_timeout: cell_timeout_ms.map(Duration::from_millis),
+                    max_retries: retries,
+                    backoff_base_ms: backoff_ms,
+                    faults,
+                    ..SupervisorPolicy::default()
+                },
+                journal: resume,
+            };
+            let report = run_experiments_supervised(&cfg, &only, opts, &selected, &sup)?;
             print!("{}", report.to_markdown());
             if let Some(dir) = out_dir {
                 report.write_to(&dir)?;
                 eprintln!("wrote {} tables to {}", report.tables.len(), dir.display());
+            }
+            // Exit nonzero iff any cell failed (--keep-going renders the
+            // holes above, but the sweep as a whole did not succeed).
+            if !report.failures.is_empty() {
+                for f in &report.failures {
+                    eprintln!("failed cell: {f}");
+                }
+                anyhow::bail!("{} sweep cell(s) failed", report.failures.len());
             }
             Ok(())
         }

@@ -387,7 +387,9 @@ impl KernelSpec {
             if doc.get(&format!("{sect}.coef")).is_none() {
                 break;
             }
-            let coef = doc.get_float(&format!("{sect}.coef"))?.unwrap();
+            let coef = doc
+                .get_float(&format!("{sect}.coef"))?
+                .with_context(|| format!("missing {sect}.coef"))?;
             let dx = doc.get_int(&format!("{sect}.dx"))?.unwrap_or(0);
             let dy = doc.get_int(&format!("{sect}.dy"))?.unwrap_or(0);
             let dz = doc.get_int(&format!("{sect}.dz"))?.unwrap_or(0);

@@ -1,0 +1,231 @@
+//! The supervised sweep runtime, end to end: clean-path byte identity,
+//! fault containment under `--keep-going`, deadline timeouts, retry
+//! recovery, and checkpoint-resume (including a torn final record).
+//!
+//! All sweeps here are `--quick` (L2 class) over the paper six — the
+//! same cells the harness smoke tests run.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use casper::config::SimConfig;
+use casper::harness::{
+    journal_context, paper_kernels, run_experiments, run_experiments_supervised, Experiment,
+    FaultKind, FaultPlan, Journal, Report, SupervisorConfig, SupervisorPolicy, SweepCache,
+    SweepOptions,
+};
+
+fn quick_opts(jobs: usize) -> SweepOptions {
+    SweepOptions { quick: true, steps: 1, jobs, spu_threads: 1 }
+}
+
+/// Supervisor policy tuned for tests: no retry sleeps.
+fn test_policy() -> SupervisorPolicy {
+    SupervisorPolicy { backoff_base_ms: 0, ..SupervisorPolicy::default() }
+}
+
+fn plant(kind: FaultKind, cells: Vec<usize>) -> FaultPlan {
+    FaultPlan { seed: 0, rate: 0.0, kind, cells: Some(cells), delay_ms: 50 }
+}
+
+fn clean_report(which: &[Experiment], jobs: usize) -> Report {
+    run_experiments(&SimConfig::default(), which, quick_opts(jobs)).unwrap()
+}
+
+fn supervised(which: &[Experiment], jobs: usize, sup: &SupervisorConfig) -> anyhow::Result<Report> {
+    let kernels = paper_kernels();
+    run_experiments_supervised(&SimConfig::default(), which, quick_opts(jobs), &kernels, sup)
+}
+
+fn temp_journal(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("casper_sup_{}_{name}.journal", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Fig 10 quick = 6 kernels × 1 class × (casper + cpu) = 12 cells.
+const FIG10_CELLS: usize = 12;
+
+#[test]
+fn clean_supervised_sweep_is_byte_identical_at_any_job_count() {
+    let which = [Experiment::Fig10, Experiment::Fig14];
+    let baseline = clean_report(&which, 1);
+    for jobs in [1usize, 2, 16] {
+        let sup = SupervisorConfig {
+            policy: SupervisorPolicy { keep_going: true, ..test_policy() },
+            journal: None,
+        };
+        let report = supervised(&which, jobs, &sup).unwrap();
+        assert!(report.failures.is_empty());
+        assert_eq!(
+            report.to_markdown(),
+            baseline.to_markdown(),
+            "supervised jobs={jobs} must be byte-identical to the legacy serial sweep"
+        );
+    }
+}
+
+#[test]
+fn injected_panic_at_any_cell_never_loses_survivors() {
+    // The acceptance property: a panic planted at every cell position in
+    // turn; each run keeps every other cell bitwise equal to the clean
+    // run, renders the faulty cell as a hole, and reports the failure.
+    let which = [Experiment::Fig10];
+    let clean = clean_report(&which, 1);
+    let clean_rows = &clean.get("fig10").unwrap().rows;
+    for i in 0..FIG10_CELLS {
+        let sup = SupervisorConfig {
+            policy: SupervisorPolicy {
+                keep_going: true,
+                max_retries: 0,
+                faults: Some(plant(FaultKind::Panic, vec![i])),
+                ..test_policy()
+            },
+            journal: None,
+        };
+        let report = supervised(&which, 2, &sup).unwrap();
+        assert_eq!(report.failures.len(), 1, "cell {i}: {:?}", report.failures);
+        assert!(report.failures[0].outcome.contains("panicked"), "{:?}", report.failures);
+        let rows = &report.get("fig10").unwrap().rows;
+        assert_eq!(rows.len(), clean_rows.len(), "cell {i}: no row may vanish");
+        let mut holes = 0;
+        for (r, c) in rows.iter().zip(clean_rows) {
+            if r.iter().any(|cell| cell.starts_with("FAILED:")) {
+                holes += 1;
+                // Hole rows keep the identifying prefix of the clean row.
+                assert_eq!(r[0], c[0], "cell {i}");
+                assert_eq!(r[1], c[1], "cell {i}");
+            } else {
+                assert_eq!(r, c, "cell {i}: survivor row diverged");
+            }
+        }
+        assert_eq!(holes, 1, "cell {i}: exactly one hole");
+    }
+}
+
+#[test]
+fn transient_errors_recover_to_a_byte_identical_report() {
+    // Error-kind faults fire only on attempt 0; with retries the sweep
+    // self-heals and the report shows no trace — over many seeded plans.
+    let which = [Experiment::Fig10];
+    let clean = clean_report(&which, 1);
+    for seed in 0..8u64 {
+        let plan = FaultPlan { seed, rate: 0.35, kind: FaultKind::Error, cells: None, delay_ms: 0 };
+        let sup = SupervisorConfig {
+            policy: SupervisorPolicy { keep_going: true, faults: Some(plan), ..test_policy() },
+            journal: None,
+        };
+        let report = supervised(&which, 2, &sup).unwrap();
+        assert!(report.failures.is_empty(), "seed {seed}: {:?}", report.failures);
+        assert_eq!(report.to_markdown(), clean.to_markdown(), "seed {seed}");
+    }
+}
+
+#[test]
+fn delay_past_deadline_becomes_a_timeout_hole() {
+    let which = [Experiment::Fig10];
+    let sup = SupervisorConfig {
+        policy: SupervisorPolicy {
+            keep_going: true,
+            cell_timeout: Some(Duration::from_millis(500)),
+            faults: Some(FaultPlan {
+                seed: 0,
+                rate: 0.0,
+                kind: FaultKind::Delay,
+                cells: Some(vec![3]),
+                delay_ms: 30_000,
+            }),
+            ..test_policy()
+        },
+        journal: None,
+    };
+    let report = supervised(&which, 2, &sup).unwrap();
+    assert_eq!(report.failures.len(), 1, "{:?}", report.failures);
+    assert!(report.failures[0].outcome.contains("timed out"), "{:?}", report.failures);
+    let md = report.to_markdown();
+    assert!(md.contains("FAILED:"), "the timed-out cell must render as a hole");
+}
+
+#[test]
+fn checkpoint_resume_reruns_only_the_missing_cells() {
+    let cfg = SimConfig::default();
+    let which = [Experiment::Fig10];
+    let kernels = paper_kernels();
+    let path = temp_journal("resume");
+    let sup = SupervisorConfig { policy: test_policy(), journal: Some(path.clone()) };
+
+    // Full sweep at jobs=16, journaling every completion.
+    let mut cache = SweepCache::with_supervisor(&cfg, quick_opts(16), &kernels, &sup).unwrap();
+    cache.prefill_checked(&which).unwrap();
+    assert_eq!(cache.executed_cells(), FIG10_CELLS);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1 + FIG10_CELLS, "header + one record per cell");
+
+    // Interrupt: keep the header + 5 complete records, then a torn final
+    // record (half a line, no trailing newline) — as a kill mid-write
+    // would leave it.
+    let keep = 5usize;
+    let mut truncated: String = lines[..=keep].iter().map(|l| format!("{l}\n")).collect();
+    let torn = &lines[keep + 1][..lines[keep + 1].len() / 2];
+    truncated.push_str(torn);
+    std::fs::write(&path, &truncated).unwrap();
+
+    // Resume at jobs=1 (the journal context excludes the job count):
+    // exactly the missing cells re-run, the torn record among them.
+    let mut cache = SweepCache::with_supervisor(&cfg, quick_opts(1), &kernels, &sup).unwrap();
+    cache.prefill_checked(&which).unwrap();
+    assert_eq!(cache.executed_cells(), FIG10_CELLS - keep);
+
+    // The journal is complete again; a fresh resume runs zero cells and
+    // the report is byte-identical to an uninterrupted sweep.
+    let resumed = supervised(&which, 2, &sup).unwrap();
+    let mut cache = SweepCache::with_supervisor(&cfg, quick_opts(2), &kernels, &sup).unwrap();
+    cache.prefill_checked(&which).unwrap();
+    assert_eq!(cache.executed_cells(), 0, "every cell must come from the journal");
+    assert_eq!(resumed.to_markdown(), clean_report(&which, 1).to_markdown());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn journal_context_mismatch_is_refused() {
+    let cfg = SimConfig::default();
+    let kernels = paper_kernels();
+    let path = temp_journal("ctx");
+    let ctx = journal_context(&cfg, quick_opts(1), &kernels);
+    let (_j, records) = Journal::open(&path, ctx).unwrap();
+    assert!(records.is_empty());
+    // Same path, different sweep parameters (steps) → different context.
+    let sup = SupervisorConfig { policy: test_policy(), journal: Some(path.clone()) };
+    let opts = SweepOptions { steps: 2, ..quick_opts(1) };
+    let err = run_experiments_supervised(&cfg, &[Experiment::Fig10], opts, &kernels, &sup)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("journal context mismatch"), "{err:#}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fail_fast_aborts_but_preserves_completed_cells() {
+    let which = [Experiment::Fig10];
+    let path = temp_journal("failfast");
+    let sup = SupervisorConfig {
+        policy: SupervisorPolicy {
+            max_retries: 0,
+            faults: Some(plant(FaultKind::Panic, vec![4])),
+            ..test_policy()
+        },
+        journal: Some(path.clone()),
+    };
+    let err = supervised(&which, 1, &sup).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fail-fast"), "{msg}");
+    assert!(msg.contains("--keep-going"), "{msg}");
+    // Cells completed before the fault are in the journal; a clean resume
+    // reuses them and lands on the uninterrupted report.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.lines().count() > 1, "completed cells must be journaled:\n{text}");
+    let clean_sup = SupervisorConfig { policy: test_policy(), journal: Some(path.clone()) };
+    let resumed = supervised(&which, 1, &clean_sup).unwrap();
+    assert_eq!(resumed.to_markdown(), clean_report(&which, 1).to_markdown());
+    let _ = std::fs::remove_file(&path);
+}
