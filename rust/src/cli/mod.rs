@@ -7,8 +7,9 @@
 //!                    [--kernels id1,id2] [--keep-going | --fail-fast]
 //!                    [--cell-timeout SECS] [--retries N] [--backoff-ms N]
 //!                    [--resume FILE] [--inject-faults SPEC]
+//!                    [--events FILE] [--metrics-out FILE] [--progress]
 //! casper run --kernel jacobi2d --level llc [--steps N] [--config FILE]
-//!            [--kernel-file FILE]...
+//!            [--kernel-file FILE]... [--trace FILE] [--trace-interval N]
 //! casper kernels list [--kernel-file FILE]...
 //! casper kernels show ID [--kernel-file FILE]...
 //! casper validate [--artifacts DIR]
@@ -133,6 +134,12 @@ pub enum Command {
         resume: Option<PathBuf>,
         /// Deterministic fault-injection plan (testing/CI).
         inject_faults: Option<FaultPlan>,
+        /// JSONL cell-lifecycle event log (telemetry; results unchanged).
+        events: Option<PathBuf>,
+        /// Machine-readable sweep-summary JSON output path.
+        metrics_out: Option<PathBuf>,
+        /// Live progress line on stderr.
+        progress: bool,
     },
     Run {
         /// Kernel id (preset or file-defined), resolved against the
@@ -144,6 +151,11 @@ pub enum Command {
         spu_threads: Option<usize>,
         config: Option<PathBuf>,
         kernel_files: Vec<PathBuf>,
+        /// Chrome-trace (Perfetto) JSON output path; enables the
+        /// cycle-domain tracer. Results are byte-identical either way.
+        trace: Option<PathBuf>,
+        /// Counter-sampling bucket width in cycles (`--trace-interval`).
+        trace_interval: u64,
     },
     Kernels {
         action: KernelsAction,
@@ -174,6 +186,7 @@ USAGE:
                      [--kernels id1,id2] [--keep-going | --fail-fast]
                      [--cell-timeout SECS] [--retries N] [--backoff-ms N]
                      [--resume FILE] [--inject-faults SPEC]
+                     [--events FILE] [--metrics-out FILE] [--progress]
       Regenerate the paper's tables/figures. IDs: fig1 fig10 fig11 fig12
       fig13 fig14 table4 table5 table6 slices (comma-separated; default:
       the paper's nine). --jobs N runs the sweep on N worker threads
@@ -193,12 +206,24 @@ USAGE:
       byte-identical to an uninterrupted run. --inject-faults plants
       deterministic faults for testing: seed=N,rate=R,kind=panic|delay|
       error[,cells=i:j:k][,delay-ms=N] (env: CASPER_FAULTS).
+      Telemetry (results and report bytes are unchanged by all three):
+      --events FILE appends one JSON object per cell lifecycle event
+      (scheduled/cached/started/retried/failed/timed-out/finished/result,
+      with wall-clock ms and run digests); --metrics-out FILE writes a
+      machine-readable sweep summary; --progress keeps a live
+      done/failed/ETA line on stderr.
   casper run --kernel ID --level {l2|llc|dram} [--steps N]
              [--spu-threads N] [--config FILE] [--kernel-file FILE]...
+             [--trace FILE] [--trace-interval N]
       Run one stencil on Casper + all baselines and print the comparison.
       ID may be any registry kernel: preset, extended, or file-defined.
       --spu-threads N runs the 16 SPUs epoch-parallel on N workers
       (default: one per SPU; 1 = the serial engine; identical results).
+      --trace FILE writes a Chrome-trace JSON (load in chrome://tracing
+      or https://ui.perfetto.dev): per-SPU and pass spans plus per-slice
+      LLC bandwidth / hit-rate / DRAM / NoC counter samples every
+      --trace-interval cycles (default 1024). The run's counters and
+      digest are byte-identical with tracing on or off.
   casper kernels list [--kernel-file FILE]...
       List every registered kernel (presets + loaded spec files).
   casper kernels show ID [--kernel-file FILE]...
@@ -236,7 +261,7 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 let boolean = matches!(
                     name,
-                    "quick" | "help" | "extended-kernels" | "keep-going" | "fail-fast"
+                    "quick" | "help" | "extended-kernels" | "keep-going" | "fail-fast" | "progress"
                 );
                 if boolean {
                     flags.push((name.to_string(), None));
@@ -316,6 +341,9 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 "backoff-ms",
                 "resume",
                 "inject-faults",
+                "events",
+                "metrics-out",
+                "progress",
             ])?;
             let only = match rest.get("only") {
                 None => Experiment::ALL.to_vec(),
@@ -355,6 +383,9 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 backoff_ms: parse_u64_flag(&rest, "backoff-ms", 25)?,
                 resume: rest.get("resume").map(PathBuf::from),
                 inject_faults,
+                events: rest.get("events").map(PathBuf::from),
+                metrics_out: rest.get("metrics-out").map(PathBuf::from),
+                progress: rest.has("progress"),
             })
         }
         "run" => {
@@ -365,6 +396,8 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 "spu-threads",
                 "config",
                 "kernel-file",
+                "trace",
+                "trace-interval",
             ])?;
             let kernel = rest
                 .get("kernel")
@@ -381,6 +414,8 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 spu_threads: parse_spu_threads(&rest)?,
                 config: rest.get("config").map(PathBuf::from),
                 kernel_files: kernel_file_flags(&rest),
+                trace: rest.get("trace").map(PathBuf::from),
+                trace_interval: parse_trace_interval(&rest)?,
             })
         }
         "kernels" => {
@@ -470,6 +505,21 @@ fn parse_cell_timeout(args: &Args) -> Result<Option<u64>, CliError> {
                 flag: "cell-timeout",
                 value: s.to_string(),
                 must: "must be a positive number of seconds",
+            }),
+        },
+    }
+}
+
+/// `--trace-interval N`: cycles per counter-sample bucket (default 1024).
+fn parse_trace_interval(args: &Args) -> Result<u64, CliError> {
+    match args.get("trace-interval") {
+        None => Ok(1024),
+        Some(s) => match s.parse::<u64>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(CliError::BadNumber {
+                flag: "trace-interval",
+                value: s.to_string(),
+                must: "must be an integer >= 1 (cycles per sample bucket)",
             }),
         },
     }
@@ -669,8 +719,55 @@ mod tests {
                 spu_threads: None,
                 config: None,
                 kernel_files: Vec::new(),
+                trace: None,
+                trace_interval: 1024,
             }
         );
+    }
+
+    #[test]
+    fn parses_trace_flags() {
+        match parse(&argv("run --kernel jacobi2d --level l2 --trace t.json")).unwrap() {
+            Command::Run { trace, trace_interval, .. } => {
+                assert_eq!(trace, Some(PathBuf::from("t.json")));
+                assert_eq!(trace_interval, 1024, "default sampling interval");
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("run --kernel jacobi2d --level l2 --trace-interval 256")).unwrap() {
+            Command::Run { trace_interval, .. } => assert_eq!(trace_interval, 256),
+            other => panic!("{other:?}"),
+        }
+        let err = parse(&argv("run --kernel jacobi2d --level l2 --trace-interval 0")).unwrap_err();
+        assert_eq!(err.name(), "bad-number");
+        // `--trace` belongs to `run` only.
+        assert!(parse(&argv("experiments --trace t.json")).is_err());
+    }
+
+    #[test]
+    fn parses_telemetry_flags() {
+        let c = parse(&argv(
+            "experiments --events ev.jsonl --metrics-out summary.json --progress",
+        ))
+        .unwrap();
+        match c {
+            Command::Experiments { events, metrics_out, progress, .. } => {
+                assert_eq!(events, Some(PathBuf::from("ev.jsonl")));
+                assert_eq!(metrics_out, Some(PathBuf::from("summary.json")));
+                assert!(progress);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("experiments")).unwrap() {
+            Command::Experiments { events, metrics_out, progress, .. } => {
+                assert_eq!(events, None);
+                assert_eq!(metrics_out, None);
+                assert!(!progress);
+            }
+            other => panic!("{other:?}"),
+        }
+        // `--events` / `--progress` belong to `experiments` only.
+        assert!(parse(&argv("run --kernel jacobi2d --level l2 --progress")).is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::config::SimConfig;
 use crate::isa::ProgramBuilder;
 use crate::spu::Spu;
 use crate::stencil::{Domain, KernelSpec, StencilDesc, StencilKind};
+use crate::trace::{TraceSink, Tracer};
 
 use super::api::CasperRuntime;
 use super::epoch;
@@ -148,6 +149,23 @@ pub fn run_casper_spec(
     steps: usize,
     opts: CasperOptions,
 ) -> Result<RunStats> {
+    run_casper_spec_traced(cfg, desc, domain, steps, opts, None).map(|(stats, _)| stats)
+}
+
+/// [`run_casper_spec`] with an optional cycle-domain [`Tracer`]: the
+/// tracer is installed into the memory system after warm-up (so only the
+/// measured region is recorded) and handed back alongside the stats for
+/// serialization. Tracing is observation-only — `RunStats` (and its
+/// digest) are byte-identical with the tracer present or absent, pinned
+/// by `tracing_on_and_off_are_byte_identical` below.
+pub fn run_casper_spec_traced(
+    cfg: &SimConfig,
+    desc: &KernelSpec,
+    domain: &Domain,
+    steps: usize,
+    opts: CasperOptions,
+    tracer: Option<Box<Tracer>>,
+) -> Result<(RunStats, Option<Box<Tracer>>)> {
     // Multi-pass compilation (docs/KERNELS.md): one program per pass of
     // the kernel's plan. Envelope-sized kernels get a one-element plan
     // identical to the historical single `build` — same program, same
@@ -185,6 +203,10 @@ pub fn run_casper_spec(
         rt.mem.dram.reset();
         rt.mem.noc.reset();
     }
+    // Install the tracer only now: warm-up traffic is setup, not the
+    // measured region (it also never claims slice ports, which keeps the
+    // port-grant counters exact for the run).
+    rt.mem.trace = tracer;
 
     let nx = domain.nx as i64;
     let nxy = (domain.nx * domain.ny) as i64;
@@ -227,6 +249,17 @@ pub fn run_casper_spec(
                 }
             }
 
+            // Tracing snapshots (cheap Vec builds, taken only with a
+            // tracer installed): per-SPU busy-interval starts and the
+            // pass's start cycle.
+            let tracing = rt.mem.trace.is_some();
+            let pass_start = cycles_done;
+            let spu_starts: Vec<u64> = if tracing {
+                rt.spus.iter().map(|s| s.finish_time()).collect()
+            } else {
+                Vec::new()
+            };
+
             if opts.spu_threads > 1 {
                 // Epoch-parallel engine: byte-identical to the serial loop
                 // below (`rust/DESIGN-parallel.md`; identity tests under
@@ -247,13 +280,32 @@ pub fn run_casper_spec(
             // Leader aggregation (§5.2): completion messages to SPU 0 —
             // once per pass, since each pass is its own
             // `startAccelerator` invocation on real hardware.
+            let msgs0 = rt.mem.noc.messages;
+            let cont0 = rt.mem.noc.contention_cycles;
             let mut done = cycles_done;
             let finishes: Vec<(usize, u64)> =
                 rt.spus.iter().map(|s| (s.slice, s.finish_time())).collect();
-            for (slice, t) in finishes {
+            for &(slice, t) in &finishes {
                 done = done.max(rt.mem.noc.send(slice, 0, 8, t));
             }
             cycles_done = done;
+
+            if tracing {
+                // Leader sends are the only NoC path that models link
+                // contention; attribute this pass's delta to the bucket
+                // of its completion cycle.
+                let msgs = rt.mem.noc.messages - msgs0;
+                let cont = rt.mem.noc.contention_cycles - cont0;
+                if let Some(tr) = rt.mem.trace.as_deref_mut() {
+                    tr.noc_leader(cycles_done, msgs, cont);
+                    tr.pass_span(step, pi, pass_start, cycles_done);
+                    for (spu_id, (f, &start)) in finishes.iter().zip(&spu_starts).enumerate() {
+                        if f.1 > start {
+                            tr.spu_span(spu_id, step, pi, start, f.1);
+                        }
+                    }
+                }
+            }
         }
 
         // Host boundary policy: copy non-interior elements through and
@@ -283,13 +335,18 @@ pub fn run_casper_spec(
     let mut slice_remote_reqs = Vec::with_capacity(cfg.llc.slices);
     let mut slice_dram_reads = Vec::with_capacity(cfg.llc.slices);
     let mut slice_dram_writes = Vec::with_capacity(cfg.llc.slices);
+    let mut slice_port_grants = Vec::with_capacity(cfg.llc.slices);
     for s in 0..cfg.llc.slices {
         let bank = rt.mem.llc.bank(s);
         slice_remote_reqs.push(bank.remote_reqs);
         slice_dram_reads.push(bank.dram_reads);
         slice_dram_writes.push(bank.dram_writes);
+        // Warm-up touches tags only, never ports, so the grant count is
+        // exactly the measured region's data-array accesses.
+        slice_port_grants.push(bank.port.grants);
     }
-    Ok(RunStats {
+    let trace = rt.mem.trace.take();
+    let stats = RunStats {
         cycles: cycles_done,
         total_instrs: spu_stats.instrs,
         per_spu_instrs: per_spu_max,
@@ -303,8 +360,10 @@ pub fn run_casper_spec(
         slice_remote_reqs,
         slice_dram_reads,
         slice_dram_writes,
+        slice_port_grants,
         output,
-    })
+    };
+    Ok((stats, trace))
 }
 
 /// The serial round-robin execution of one time step: per-SPU chunk
@@ -452,6 +511,7 @@ mod tests {
                     assert_eq!(serial.slice_remote_reqs, par.slice_remote_reqs, "{tag}");
                     assert_eq!(serial.slice_dram_reads, par.slice_dram_reads, "{tag}");
                     assert_eq!(serial.slice_dram_writes, par.slice_dram_writes, "{tag}");
+                    assert_eq!(serial.slice_port_grants, par.slice_port_grants, "{tag}");
                     assert_eq!(serial.output, par.output, "{tag}");
                     assert_eq!(serial.digest(), par.digest(), "{tag}");
                 }
@@ -705,6 +765,65 @@ mod tests {
     }
 
     #[test]
+    fn tracing_on_and_off_are_byte_identical() {
+        // The observability acceptance invariant: installing a tracer
+        // must not move a single counter, cycle, or output bit — across
+        // both engines and on a multi-pass kernel.
+        let cfg = SimConfig::default();
+        let jacobi: KernelSpec = StencilKind::Jacobi2D.spec().as_ref().clone();
+        for spec in [&jacobi, &star17()] {
+            let d = spec.tiny_domain();
+            for threads in [1usize, 16] {
+                let opts = CasperOptions { spu_threads: threads, ..Default::default() };
+                let plain = run_casper_spec(&cfg, spec, &d, 2, opts).unwrap();
+                let tracer = Box::new(Tracer::new(&cfg, 256));
+                let (traced, tr) =
+                    run_casper_spec_traced(&cfg, spec, &d, 2, opts, Some(tracer)).unwrap();
+                let tr = tr.expect("tracer handed back");
+                let tag = format!("{} threads={threads}", spec.id.as_str());
+                assert_eq!(plain.digest(), traced.digest(), "{tag}");
+                assert_eq!(plain, traced, "{tag}: full RunStats identity");
+                assert!(tr.samples() > 0, "{tag}: no samples recorded");
+                let want_spans = 2 * traced.passes; // steps × passes
+                assert_eq!(tr.pass_spans().len(), want_spans, "{tag}");
+                assert!(!tr.spu_spans().is_empty(), "{tag}");
+                crate::trace::chrome::validate_json(&tr.to_chrome_string())
+                    .unwrap_or_else(|e| panic!("{tag}: invalid trace JSON: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn traced_buckets_are_engine_identical() {
+        // Bucket attribution commutes, and both engines issue identical
+        // requests at identical cycles — so the *telemetry itself* (not
+        // just the stats) agrees across engines.
+        let cfg = SimConfig::default();
+        let kind = StencilKind::Jacobi2D;
+        let d = Domain::tiny(kind);
+        let mut per_engine = Vec::new();
+        for threads in [1usize, 16] {
+            let opts = CasperOptions { spu_threads: threads, ..Default::default() };
+            let tracer = Box::new(Tracer::new(&cfg, 128));
+            let (_, tr) =
+                run_casper_spec_traced(&cfg, &kind.spec(), &d, 2, opts, Some(tracer)).unwrap();
+            let tr = tr.unwrap();
+            let mut flat: Vec<u64> = Vec::new();
+            for b in tr.buckets() {
+                flat.extend_from_slice(&b.slice_bytes);
+                flat.extend_from_slice(&b.slice_hits);
+                flat.extend_from_slice(&b.slice_misses);
+                flat.extend_from_slice(&b.chan_bytes);
+                flat.push(b.dram_queue_cycles);
+                flat.push(b.noc_messages);
+                flat.push(b.noc_contention_cycles);
+            }
+            per_engine.push(flat);
+        }
+        assert_eq!(per_engine[0], per_engine[1], "bucketed telemetry diverged across engines");
+    }
+
+    #[test]
     fn single_pass_kernels_report_one_pass() {
         let cfg = SimConfig::default();
         let kind = StencilKind::Jacobi2D;
@@ -757,6 +876,12 @@ mod tests {
                 "{mapping:?}: {remote} slice-port remote reqs vs {} SPU remote loads",
                 stats.spu.remote_loads
             );
+            // Port grants: one per load/store request that reached a
+            // slice, covering at least every SPU load that left the L1.
+            assert_eq!(stats.slice_port_grants.len(), cfg.llc.slices);
+            let grants: u64 = stats.slice_port_grants.iter().sum();
+            assert!(grants > 0, "{mapping:?}: measured region must claim ports");
+            assert!(stats.bandwidth_imbalance() >= 1.0, "{mapping:?}");
         }
     }
 

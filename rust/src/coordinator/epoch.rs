@@ -38,6 +38,7 @@ use anyhow::Result;
 
 use crate::spu::sharded::{SpuTrace, TagOut, TagOutStream, TagReq, NO_LINE};
 use crate::spu::{SliceState, Spu};
+use crate::trace::{EpochPhases, TraceSink};
 
 use super::api::CasperRuntime;
 use super::engine::{bind_chunk, Chunk};
@@ -91,6 +92,14 @@ fn run_epoch(
     let n_spus = rt.spus.len();
     let n_slices = rt.cfg.llc.slices;
     let n_instrs = rt.spus[0].program().instrs.len();
+
+    // Wall-clock phase spans (`--trace`): the three phases have no
+    // cycle-domain duration (they are an implementation artifact, not
+    // simulated time), so they are recorded as real-µs offsets from the
+    // tracer's origin. Observation only — `Instant` reads never touch
+    // simulation state. `origin` is `None` without a tracer.
+    let origin = rt.mem.trace.as_deref().map(|t| t.origin());
+    let m0 = origin.map(us_since);
 
     // ---- Phase 1: parallel functional execution + trace generation ----
     let slots: Vec<Mutex<Option<SpuTrace>>> = (0..n_spus).map(|_| Mutex::new(None)).collect();
@@ -157,6 +166,7 @@ fn run_epoch(
             rt.mem.store.write_slice(run.addr, &run.data);
         }
     }
+    let m1 = origin.map(us_since);
 
     // ---- Phase 2: per-slice tag reconciliation (parallel over slices) ----
     let way_limit = rt.mem.llc.way_limit();
@@ -218,6 +228,7 @@ fn run_epoch(
             streams[spu].push(TagOutStream::new(v));
         }
     }
+    let m2 = origin.map(us_since);
 
     // ---- Phase 3: deterministic serial timing replay ----
     let groups: Vec<u32> = traces.iter().map(|t| t.groups).collect();
@@ -236,6 +247,18 @@ fn run_epoch(
         streams.iter().all(|per| per.iter().all(|s| s.fully_consumed())),
         "replay must consume every reconciled outcome"
     );
+
+    let m3 = origin.map(us_since);
+    if let Some(tr) = rt.mem.trace.as_deref_mut() {
+        let (m0, m1, m2, m3) = (m0.unwrap(), m1.unwrap(), m2.unwrap(), m3.unwrap());
+        tr.epoch_phases(EpochPhases { phases: [[m0, m1], [m1, m2], [m2, m3]] });
+    }
+}
+
+/// Microseconds elapsed since `origin` (saturating at u64 — a trace does
+/// not run for half a million years).
+fn us_since(origin: std::time::Instant) -> u64 {
+    origin.elapsed().as_micros() as u64
 }
 
 /// Drain one slice's queued messages in deterministic `(round, spu, seq)`

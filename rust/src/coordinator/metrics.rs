@@ -30,6 +30,11 @@ pub struct RunStats {
     pub slice_dram_reads: Vec<u64>,
     /// Per-slice DRAM-queue share: dirty writebacks issued.
     pub slice_dram_writes: Vec<u64>,
+    /// Per-slice LLC port grants over the measured region (warm-up never
+    /// claims ports, so this is exactly the run's data-array accesses; at
+    /// one line per grant, `grants × line_bytes` is the slice's data
+    /// bandwidth — the counter behind the peak-LLC-bandwidth claim).
+    pub slice_port_grants: Vec<u64>,
     /// Functional result grid.
     pub output: Grid,
 }
@@ -73,6 +78,13 @@ impl RunStats {
         imbalance(&self.slice_dram_reads)
     }
 
+    /// LLC bandwidth imbalance: busiest slice's port-grant count over the
+    /// mean. `1.0` means the paper's peak-bandwidth claim holds evenly
+    /// across slices; higher means some ports idle while one saturates.
+    pub fn bandwidth_imbalance(&self) -> f64 {
+        imbalance(&self.slice_port_grants)
+    }
+
     /// Order-stable FNV-1a digest of every counter and every output bit.
     /// The determinism tests compare these across `--spu-threads` values:
     /// serial and epoch-parallel runs must produce identical digests.
@@ -113,7 +125,12 @@ impl RunStats {
         h.mix(self.noc_messages);
         h.mix(self.noc_hops);
         h.mix(self.noc_contention_cycles);
-        for v in [&self.slice_remote_reqs, &self.slice_dram_reads, &self.slice_dram_writes] {
+        for v in [
+            &self.slice_remote_reqs,
+            &self.slice_dram_reads,
+            &self.slice_dram_writes,
+            &self.slice_port_grants,
+        ] {
             h.mix(v.len() as u64);
             for &x in v.iter() {
                 h.mix(x);
@@ -165,6 +182,7 @@ mod tests {
             slice_remote_reqs: vec![4, 0, 2, 6],
             slice_dram_reads: vec![1, 1, 1, 1],
             slice_dram_writes: vec![0, 0, 0, 0],
+            slice_port_grants: vec![8, 8, 8, 16],
             output: Grid::random(8, 4, 1, 7),
         }
     }
@@ -182,6 +200,9 @@ mod tests {
         let mut d = stats();
         d.slice_remote_reqs[1] += 1;
         assert_ne!(a.digest(), d.digest(), "slice counter change must move the digest");
+        let mut e = stats();
+        e.slice_port_grants[0] += 1;
+        assert_ne!(a.digest(), e.digest(), "port-grant change must move the digest");
     }
 
     #[test]
@@ -193,5 +214,6 @@ mod tests {
         let s = stats();
         assert_eq!(s.remote_req_imbalance(), 2.0); // max 6, mean 3
         assert_eq!(s.dram_read_imbalance(), 1.0);
+        assert_eq!(s.bandwidth_imbalance(), 1.6); // max 16, mean 10
     }
 }

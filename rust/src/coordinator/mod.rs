@@ -19,7 +19,8 @@ pub mod metrics;
 
 pub use api::CasperRuntime;
 pub use engine::{
-    default_spu_threads, run_casper, run_casper_spec, run_casper_with, CasperOptions,
+    default_spu_threads, run_casper, run_casper_spec, run_casper_spec_traced, run_casper_with,
+    CasperOptions,
 };
 pub use layout::SegmentLayout;
 pub use metrics::{imbalance, RunStats};

@@ -147,6 +147,7 @@ fn body_of(r: &Record) -> String {
             push_vec(&mut s, &stats.slice_remote_reqs);
             push_vec(&mut s, &stats.slice_dram_reads);
             push_vec(&mut s, &stats.slice_dram_writes);
+            push_vec(&mut s, &stats.slice_port_grants);
             push_u64s(
                 &mut s,
                 &[stats.output.nx as u64, stats.output.ny as u64, stats.output.nz as u64],
@@ -245,6 +246,7 @@ fn decode_body(body: &str) -> Option<Record> {
             let slice_remote_reqs = next_vec(&mut it)?;
             let slice_dram_reads = next_vec(&mut it)?;
             let slice_dram_writes = next_vec(&mut it)?;
+            let slice_port_grants = next_vec(&mut it)?;
             let nx = next_usize(&mut it)?;
             let ny = next_usize(&mut it)?;
             let nz = next_usize(&mut it)?;
@@ -269,6 +271,7 @@ fn decode_body(body: &str) -> Option<Record> {
                     slice_remote_reqs,
                     slice_dram_reads,
                     slice_dram_writes,
+                    slice_port_grants,
                     // The grid data is not persisted (no builder reads
                     // it); the recorded digest carries the run identity.
                     output: Grid::zeros(nx, ny, nz),
@@ -427,6 +430,7 @@ mod tests {
             slice_remote_reqs: vec![1, 2, 3],
             slice_dram_reads: vec![4, 5, 6],
             slice_dram_writes: vec![7, 8, 9],
+            slice_port_grants: vec![10, 11, 12],
             output: Grid::zeros(4, 3, 2),
         };
         stats.spu.local_loads = 10;
@@ -492,6 +496,7 @@ mod tests {
         assert_eq!(stats.spu, s0.spu);
         assert_eq!(stats.llc, s0.llc);
         assert_eq!(stats.slice_remote_reqs, s0.slice_remote_reqs);
+        assert_eq!(stats.slice_port_grants, s0.slice_port_grants);
         assert_eq!(
             (stats.output.nx, stats.output.ny, stats.output.nz),
             (s0.output.nx, s0.output.ny, s0.output.nz),

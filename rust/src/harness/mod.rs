@@ -30,6 +30,7 @@ use crate::gpu::GpuModel;
 use crate::pims::PimsModel;
 use crate::roofline;
 use crate::stencil::{KernelId, KernelSpec, StencilKind};
+use crate::trace::{Event, EventSink};
 use crate::util::geomean;
 
 pub use journal::{Journal, Record};
@@ -171,6 +172,8 @@ impl SupervisorConfig {
             || self.policy.keep_going
             || self.policy.cell_timeout.is_some()
             || self.policy.faults.is_some()
+            || self.policy.events.is_some()
+            || self.policy.progress
     }
 }
 
@@ -353,22 +356,41 @@ impl SweepCache {
             needed_cells(which, self.opts, &self.kernels);
         // Enumerate cells in the fixed sweep order (kernel-major, then
         // class) so the work list — and thus fault-plan cell indices and
-        // any tie-breaking — is stable.
+        // any tie-breaking — is stable. Needed-but-already-cached cells
+        // (journal hits on `--resume`) emit `cached`; the rest emit
+        // `scheduled` with their work-list index, which keys every later
+        // lifecycle event for that cell.
+        let events = self.sup.policy.events.clone();
+        let ev = events.as_ref();
         let mut cells: Vec<Cell> = Vec::new();
         for spec in &self.kernels {
             for &level in &SizeClass::ALL {
                 let key = (spec.id.clone(), level);
-                if want_casper.contains(&key) && !self.casper.contains_key(&key) {
-                    cells.push(Cell::Casper(spec.clone(), level));
+                let id = spec.id.as_str();
+                if want_casper.contains(&key) {
+                    if self.casper.contains_key(&key) {
+                        emit_cell(ev, "cached", CellKind::Casper, id, level, None);
+                    } else {
+                        emit_cell(ev, "scheduled", CellKind::Casper, id, level, Some(cells.len()));
+                        cells.push(Cell::Casper(spec.clone(), level));
+                    }
                 }
-                if want_cpu.contains(&key) && !self.cpu.contains_key(&key) {
-                    cells.push(Cell::Cpu(spec.clone(), level));
+                if want_cpu.contains(&key) {
+                    if self.cpu.contains_key(&key) {
+                        emit_cell(ev, "cached", CellKind::Cpu, id, level, None);
+                    } else {
+                        emit_cell(ev, "scheduled", CellKind::Cpu, id, level, Some(cells.len()));
+                        cells.push(Cell::Cpu(spec.clone(), level));
+                    }
                 }
-                if want_ablation.contains(&key)
-                    && !self.ablation.contains_key(&key)
-                    && !self.ablation_pairs.contains_key(&key)
-                {
-                    cells.push(Cell::Ablation(spec.clone(), level));
+                if want_ablation.contains(&key) {
+                    if self.ablation.contains_key(&key) || self.ablation_pairs.contains_key(&key) {
+                        emit_cell(ev, "cached", CellKind::Ablation, id, level, None);
+                    } else {
+                        let idx = Some(cells.len());
+                        emit_cell(ev, "scheduled", CellKind::Ablation, id, level, idx);
+                        cells.push(Cell::Ablation(spec.clone(), level));
+                    }
                 }
             }
         }
@@ -422,6 +444,9 @@ impl SweepCache {
                 match outcome {
                     CellOutcome::Ok(out) => {
                         self.executed += 1;
+                        if let Some(sink) = events.as_ref() {
+                            sink.emit(result_event(kind, spec.id.as_str(), level, &out));
+                        }
                         match out {
                             CellOut::Casper(stats) => {
                                 self.casper.insert((spec.id.clone(), level), stats);
@@ -565,6 +590,43 @@ impl SweepCache {
     }
 }
 
+/// Emit one cell-identity event (`scheduled` / `cached`) when telemetry
+/// is on; `index` is the cell's position in the supervised work list.
+fn emit_cell(
+    events: Option<&EventSink>,
+    kind: &str,
+    cell: CellKind,
+    id: &str,
+    level: SizeClass,
+    index: Option<usize>,
+) {
+    if let Some(sink) = events {
+        let mut ev = Event::new(kind)
+            .str("engine", cell.name())
+            .str("kernel", id)
+            .str("class", level.name());
+        if let Some(i) = index {
+            ev = ev.num("cell", i as u64);
+        }
+        sink.emit(ev);
+    }
+}
+
+/// The `result` event for a completed cell: the Casper variant carries
+/// the run digest (the same 16-hex identity the journal records), so a
+/// log reader can audit determinism without parsing the journal.
+fn result_event(kind: CellKind, id: &str, level: SizeClass, out: &CellOut) -> Event {
+    let ev = Event::new("result")
+        .str("engine", kind.name())
+        .str("kernel", id)
+        .str("class", level.name());
+    match out {
+        CellOut::Casper(stats) => ev.digest("digest", stats.digest()).num("cycles", stats.cycles),
+        CellOut::Cpu(stats) => ev.num("cycles", stats.cycles),
+        CellOut::Ablation(a, b) => ev.num("near_l1_base", *a).num("near_l1_mapped", *b),
+    }
+}
+
 /// Build the journal record for a finished cell.
 fn record_of(cell: &Cell, out: &CellOut) -> Record {
     match (cell, out) {
@@ -691,6 +753,59 @@ pub fn run_experiments_supervised(
     kernels: &[Arc<KernelSpec>],
     sup: &SupervisorConfig,
 ) -> Result<Report> {
+    run_experiments_telemetry(cfg, which, opts, kernels, sup).map(|(report, _)| report)
+}
+
+/// Machine-readable summary of one sweep (`--metrics-out`): what ran,
+/// what was loaded from the journal, what failed, and how long the whole
+/// sweep took. Serialized by hand — the crate's only dependency stays
+/// `anyhow`.
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    /// `(experiment id, emitted table rows)` in report order.
+    pub experiments: Vec<(String, usize)>,
+    pub kernels: usize,
+    /// Cells actually simulated (journal-loaded cells are excluded).
+    pub executed_cells: usize,
+    pub failed_cells: usize,
+    pub wall_ms: u64,
+    pub jobs: usize,
+    pub spu_threads: usize,
+}
+
+impl SweepSummary {
+    pub fn to_json(&self) -> String {
+        use crate::trace::chrome::escape;
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"kernels\": {},\n", self.kernels));
+        s.push_str(&format!("  \"executed_cells\": {},\n", self.executed_cells));
+        s.push_str(&format!("  \"failed_cells\": {},\n", self.failed_cells));
+        s.push_str(&format!("  \"wall_ms\": {},\n", self.wall_ms));
+        s.push_str(&format!("  \"jobs\": {},\n", self.jobs));
+        s.push_str(&format!("  \"spu_threads\": {},\n", self.spu_threads));
+        let rows: Vec<String> = self
+            .experiments
+            .iter()
+            .map(|(id, n)| format!("\"{}\": {n}", escape(id)))
+            .collect();
+        s.push_str(&format!("  \"experiment_rows\": {{{}}}\n", rows.join(", ")));
+        s.push('}');
+        s.push('\n');
+        s
+    }
+}
+
+/// [`run_experiments_supervised`] plus the sweep's [`SweepSummary`]. The
+/// report is byte-identical to the plain call at any telemetry setting —
+/// the summary and event log only *observe* the sweep.
+pub fn run_experiments_telemetry(
+    cfg: &SimConfig,
+    which: &[Experiment],
+    opts: SweepOptions,
+    kernels: &[Arc<KernelSpec>],
+    sup: &SupervisorConfig,
+) -> Result<(Report, SweepSummary)> {
+    let sweep_start = std::time::Instant::now();
     if which.is_empty() {
         bail!("no experiments selected");
     }
@@ -725,7 +840,16 @@ pub fn run_experiments_supervised(
         report.tables.push(table);
     }
     report.failures = cache.failures();
-    Ok(report)
+    let summary = SweepSummary {
+        experiments: report.tables.iter().map(|t| (t.id.clone(), t.rows.len())).collect(),
+        kernels: kernels.len(),
+        executed_cells: cache.executed_cells(),
+        failed_cells: report.failures.len(),
+        wall_ms: sweep_start.elapsed().as_millis() as u64,
+        jobs: opts.jobs,
+        spu_threads: opts.spu_threads,
+    };
+    Ok((report, summary))
 }
 
 fn fig1(cfg: &SimConfig, cache: &mut SweepCache, opts: SweepOptions) -> Table {
@@ -1085,7 +1209,7 @@ fn slices_table(cache: &mut SweepCache, opts: SweepOptions) -> Table {
     let mut t = Table::new(
         "slices",
         Experiment::Slices.title(),
-        &["kernel", "class", "remote reqs", "remote imbalance", "dram reads", "dram writes", "dram-rd imbalance", "busiest slice"],
+        &["kernel", "class", "remote reqs", "remote imbalance", "dram reads", "dram writes", "dram-rd imbalance", "busiest slice", "noc contention", "bw imbalance"],
     );
     for spec in &kernels {
         for &level in opts.classes() {
@@ -1111,6 +1235,7 @@ fn slices_table(cache: &mut SweepCache, opts: SweepOptions) -> Table {
             };
             let remote_imb = s.remote_req_imbalance();
             let dram_imb = s.dram_read_imbalance();
+            let bw_imb = s.bandwidth_imbalance();
             t.row(vec![
                 spec.name.clone(),
                 level.name().into(),
@@ -1120,10 +1245,12 @@ fn slices_table(cache: &mut SweepCache, opts: SweepOptions) -> Table {
                 dw.to_string(),
                 format!("{dram_imb:.2}"),
                 busiest,
+                s.noc_contention_cycles.to_string(),
+                format!("{bw_imb:.2}"),
             ]);
         }
     }
-    t.note("per-slice SliceState counters (ROADMAP: NoC/DRAM imbalance studies). Imbalance = busiest slice / mean over all slices (1.00 = even, 0.00 = no traffic of that kind).");
+    t.note("per-slice SliceState counters (ROADMAP: NoC/DRAM imbalance studies). Imbalance = busiest slice / mean over all slices (1.00 = even, 0.00 = no traffic of that kind). noc contention = total cycles requests spent queued at mesh injection points; bw imbalance = busiest slice's LLC port grants over the mean (grants x 64 B = slice data bandwidth).");
     t
 }
 
@@ -1349,6 +1476,47 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("fail-fast"), "{msg}");
         assert!(msg.contains("casper"), "{msg}");
+    }
+
+    #[test]
+    fn telemetry_observes_without_moving_the_report() {
+        let cfg = SimConfig::default();
+        let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
+        let plain = run_experiments(&cfg, &[Experiment::Fig10], opts).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("casper-harness-ev-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let sup = SupervisorConfig {
+            policy: SupervisorPolicy {
+                events: Some(EventSink::create(&path).unwrap()),
+                ..SupervisorPolicy::default()
+            },
+            journal: None,
+        };
+        let (report, summary) =
+            run_experiments_telemetry(&cfg, &[Experiment::Fig10], opts, &paper_kernels(), &sup)
+                .unwrap();
+        assert_eq!(plain.to_markdown(), report.to_markdown(), "telemetry only observes");
+
+        // fig10 quick: 6 kernels × (casper + cpu) at one class.
+        assert_eq!(summary.executed_cells, 12);
+        assert_eq!(summary.failed_cells, 0);
+        assert_eq!(summary.kernels, 6);
+        let json = summary.to_json();
+        crate::trace::chrome::validate_json(&json).unwrap();
+        assert!(json.contains("\"fig10\": 6"), "{json}");
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        for line in text.lines() {
+            crate::trace::chrome::validate_json(line).unwrap();
+        }
+        for kind in ["scheduled", "started", "finished", "result"] {
+            let tag = format!("\"event\":\"{kind}\"");
+            assert!(text.contains(&tag), "no {kind} events in:\n{text}");
+        }
+        assert!(text.contains("\"digest\":\""), "casper results must carry the digest");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -34,8 +34,9 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::trace::{Event, EventSink};
 use crate::util::SplitMix64;
 
 /// Number of workers to use when the caller doesn't specify: one per
@@ -117,6 +118,11 @@ pub struct SupervisorPolicy {
     pub backoff_cap_ms: u64,
     /// Deterministic fault-injection plan (testing/CI only).
     pub faults: Option<FaultPlan>,
+    /// JSONL lifecycle-event sink (`--events FILE`). Telemetry only: cell
+    /// results and report bytes are identical with or without it.
+    pub events: Option<EventSink>,
+    /// Live `\r`-rewritten progress line on stderr (`--progress`).
+    pub progress: bool,
 }
 
 impl Default for SupervisorPolicy {
@@ -128,6 +134,8 @@ impl Default for SupervisorPolicy {
             backoff_base_ms: 25,
             backoff_cap_ms: 1_000,
             faults: None,
+            events: None,
+            progress: false,
         }
     }
 }
@@ -309,6 +317,12 @@ fn exec_attempt<T, R>(
     f(item)
 }
 
+/// Wall-clock milliseconds since a cell's first attempt began (`0` when
+/// telemetry is off and no start timestamp was taken).
+fn wall_ms(start: Option<Instant>) -> u64 {
+    start.map_or(0, |t| t.elapsed().as_millis() as u64)
+}
+
 fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
@@ -332,8 +346,15 @@ where
     R: Send + 'static,
     F: Fn(&T) -> Result<R, String> + Send + Sync + 'static,
 {
+    let events = policy.events.as_ref();
+    let cell_start = events.map(|_| Instant::now());
     let mut attempt: u32 = 0;
     loop {
+        if let Some(sink) = events {
+            sink.emit(
+                Event::new("started").num("cell", index as u64).num("attempt", attempt as u64 + 1),
+            );
+        }
         // Outer Err = the attempt panicked; inner Err = it returned one.
         let result: Result<Result<R, String>, String> = match policy.cell_timeout {
             None => catch_unwind(AssertUnwindSafe(|| {
@@ -363,30 +384,84 @@ where
                     Ok(_handle) => match rx.recv_timeout(limit) {
                         Ok(r) => r,
                         Err(_) => {
+                            if let Some(sink) = events {
+                                sink.emit(
+                                    Event::new("timed-out")
+                                        .num("cell", index as u64)
+                                        .num("limit_ms", limit.as_millis() as u64)
+                                        .num("wall_ms", wall_ms(cell_start)),
+                                );
+                            }
                             return CellOutcome::TimedOut {
                                 limit_ms: limit.as_millis() as u64,
                                 attempts: attempt + 1,
-                            }
+                            };
                         }
                     },
                 }
             }
         };
         match result {
-            Ok(Ok(v)) => return CellOutcome::Ok(v),
+            Ok(Ok(v)) => {
+                if let Some(sink) = events {
+                    sink.emit(
+                        Event::new("finished")
+                            .num("cell", index as u64)
+                            .num("attempts", attempt as u64 + 1)
+                            .num("wall_ms", wall_ms(cell_start)),
+                    );
+                }
+                return CellOutcome::Ok(v);
+            }
             Ok(Err(err)) => {
                 if attempt < policy.max_retries {
+                    if let Some(sink) = events {
+                        sink.emit(
+                            Event::new("retried")
+                                .num("cell", index as u64)
+                                .num("attempt", attempt as u64 + 1)
+                                .str("reason", &err),
+                        );
+                    }
                     policy.backoff(attempt);
                     attempt += 1;
                     continue;
+                }
+                if let Some(sink) = events {
+                    sink.emit(
+                        Event::new("failed")
+                            .num("cell", index as u64)
+                            .num("attempts", attempt as u64 + 1)
+                            .num("wall_ms", wall_ms(cell_start))
+                            .str("reason", &err),
+                    );
                 }
                 return CellOutcome::Failed { err, attempts: attempt + 1 };
             }
             Err(msg) => {
                 if attempt < policy.max_retries {
+                    if let Some(sink) = events {
+                        sink.emit(
+                            Event::new("retried")
+                                .num("cell", index as u64)
+                                .num("attempt", attempt as u64 + 1)
+                                .str("mode", "panic")
+                                .str("reason", &msg),
+                        );
+                    }
                     policy.backoff(attempt);
                     attempt += 1;
                     continue;
+                }
+                if let Some(sink) = events {
+                    sink.emit(
+                        Event::new("failed")
+                            .num("cell", index as u64)
+                            .num("attempts", attempt as u64 + 1)
+                            .num("wall_ms", wall_ms(cell_start))
+                            .str("mode", "panic")
+                            .str("reason", &msg),
+                    );
                 }
                 return CellOutcome::Panicked { msg, attempts: attempt + 1 };
             }
@@ -423,6 +498,9 @@ where
     let slots: Vec<Mutex<Option<CellOutcome<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let cursor = AtomicUsize::new(0);
     let stop = AtomicBool::new(false);
+    let done = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
+    let sweep_start = Instant::now();
     let worker = || loop {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -434,6 +512,13 @@ where
         let out = run_cell(&f, &items, i, policy);
         let ok = out.is_ok();
         *lock_clean(&slots[i]) = Some(out);
+        if policy.progress {
+            if !ok {
+                failed.fetch_add(1, Ordering::SeqCst);
+            }
+            let d = done.fetch_add(1, Ordering::SeqCst) + 1;
+            print_progress(d, n, failed.load(Ordering::SeqCst), sweep_start);
+        }
         if !ok && !policy.keep_going {
             stop.store(true, Ordering::SeqCst);
         }
@@ -447,6 +532,9 @@ where
             }
         });
     }
+    if policy.progress {
+        eprintln!();
+    }
     slots
         .into_iter()
         .map(|m| {
@@ -455,6 +543,16 @@ where
                 .unwrap_or(CellOutcome::Skipped)
         })
         .collect()
+}
+
+/// One `\r`-rewritten status line on stderr (`--progress`): stderr keeps
+/// the report on stdout clean for redirection, and the coarse ETA comes
+/// from the mean completed-cell rate so far.
+fn print_progress(done: usize, total: usize, failed: usize, start: Instant) {
+    let elapsed = start.elapsed().as_secs_f64();
+    let rate = done as f64 / elapsed.max(1e-9);
+    let left = (total - done) as f64 / rate.max(1e-9);
+    eprint!("\r[sweep] {done}/{total} done, {failed} failed, ~{left:.0}s left   ");
 }
 
 /// Apply `f` to every item, using up to `jobs` worker threads, returning
@@ -758,6 +856,36 @@ mod tests {
         assert!(FaultPlan::parse("kind=panic,cells=a:b").is_err());
         assert!(FaultPlan::parse("bogus").is_err());
         assert!(FaultPlan::parse("kind=panic,rate=0.5,junk=1").is_err());
+    }
+
+    #[test]
+    fn events_record_cell_lifecycle() {
+        let dir = std::env::temp_dir().join(format!("casper-sweep-ev-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ev.jsonl");
+        let sink = EventSink::create(&path).unwrap();
+        let policy = SupervisorPolicy { events: Some(sink), keep_going: true, ..quick_policy() };
+        let outs = supervised_map((0..4u64).collect(), 2, &policy, |x: &u64| {
+            if *x == 1 {
+                return Err("bad".to_string());
+            }
+            Ok(*x)
+        });
+        assert_eq!(outs.iter().filter(|o| o.is_ok()).count(), 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        for line in text.lines() {
+            crate::trace::chrome::validate_json(line)
+                .unwrap_or_else(|e| panic!("bad event line {line:?}: {e}"));
+        }
+        let count = |kind: &str| {
+            let tag = format!("\"event\":\"{kind}\"");
+            text.lines().filter(|l| l.contains(&tag)).count()
+        };
+        assert_eq!(count("finished"), 3);
+        assert_eq!(count("failed"), 1);
+        assert_eq!(count("retried"), 2, "default policy retries the failing cell twice");
+        assert_eq!(count("started"), 6, "one per attempt: 3 clean + 3 for the failing cell");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

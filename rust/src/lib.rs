@@ -61,6 +61,7 @@ pub mod runtime;
 pub mod spu;
 pub mod stencil;
 pub mod testutil;
+pub mod trace;
 pub mod util;
 
 /// Most-used types, re-exported for examples and downstream users.

@@ -1,5 +1,6 @@
 //! `casper` — the leader binary: CLI entrypoint over the library.
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -8,18 +9,19 @@ use anyhow::{Context, Result};
 use casper::area::CasperArea;
 use casper::cli::{self, Command, KernelsAction, USAGE};
 use casper::config::{SimConfig, SizeClass};
-use casper::coordinator::run_casper_spec;
+use casper::coordinator::run_casper_spec_traced;
 use casper::cpu::run_cpu_spec;
 use casper::energy::{casper_energy, cpu_energy};
 use casper::gpu::GpuModel;
 use casper::harness::{
-    run_experiments_supervised, FaultPlan, SupervisorConfig, SupervisorPolicy, SweepOptions,
+    run_experiments_telemetry, FaultPlan, SupervisorConfig, SupervisorPolicy, SweepOptions,
 };
 use casper::isa::ProgramBuilder;
 use casper::pims::PimsModel;
 use casper::roofline;
 use casper::runtime::{default_artifacts_dir, StencilRuntime};
 use casper::stencil::{golden, KernelOrigin, KernelSpec};
+use casper::trace::{EventSink, Tracer};
 use casper::util::human_time_cycles;
 
 fn main() {
@@ -113,7 +115,16 @@ fn dispatch(cmd: Command) -> Result<()> {
                 }
             }
         }
-        Command::Run { kernel, level, steps, spu_threads, config, kernel_files } => {
+        Command::Run {
+            kernel,
+            level,
+            steps,
+            spu_threads,
+            config,
+            kernel_files,
+            trace,
+            trace_interval,
+        } => {
             let cfg = cli::load_config(config.as_ref())?;
             let reg = cli::build_registry(&kernel_files)?;
             let spec = reg.resolve(&kernel).with_context(|| {
@@ -121,7 +132,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             })?;
             // Default: one worker per SPU (the epoch-parallel engine).
             let spu_threads = spu_threads.unwrap_or(cfg.spu.count);
-            run_one(&cfg, &spec, level, steps, spu_threads)
+            run_one(&cfg, &spec, level, steps, spu_threads, trace.as_deref(), trace_interval)
         }
         Command::Experiments {
             only,
@@ -140,6 +151,9 @@ fn dispatch(cmd: Command) -> Result<()> {
             backoff_ms,
             resume,
             inject_faults,
+            events,
+            metrics_out,
+            progress,
         } => {
             let cfg = cli::load_config(config.as_ref())?;
             let registry = cli::build_registry(&kernel_files)?;
@@ -182,6 +196,16 @@ fn dispatch(cmd: Command) -> Result<()> {
                 None => FaultPlan::from_env()
                     .map_err(|why| anyhow::anyhow!("bad CASPER_FAULTS: {why}"))?,
             };
+            // --events: cell-lifecycle JSONL log; created up front so a
+            // bad path fails the sweep before any simulation starts.
+            let event_sink = match &events {
+                Some(path) => {
+                    let sink = EventSink::create(path)
+                        .with_context(|| format!("creating event log {}", path.display()))?;
+                    Some(sink)
+                }
+                None => None,
+            };
             let sup = SupervisorConfig {
                 policy: SupervisorPolicy {
                     keep_going,
@@ -189,15 +213,22 @@ fn dispatch(cmd: Command) -> Result<()> {
                     max_retries: retries,
                     backoff_base_ms: backoff_ms,
                     faults,
+                    events: event_sink,
+                    progress,
                     ..SupervisorPolicy::default()
                 },
                 journal: resume,
             };
-            let report = run_experiments_supervised(&cfg, &only, opts, &selected, &sup)?;
+            let (report, summary) = run_experiments_telemetry(&cfg, &only, opts, &selected, &sup)?;
             print!("{}", report.to_markdown());
             if let Some(dir) = out_dir {
                 report.write_to(&dir)?;
                 eprintln!("wrote {} tables to {}", report.tables.len(), dir.display());
+            }
+            if let Some(path) = metrics_out {
+                std::fs::write(&path, summary.to_json())
+                    .with_context(|| format!("writing sweep summary {}", path.display()))?;
+                eprintln!("wrote sweep summary to {}", path.display());
             }
             // Exit nonzero iff any cell failed (--keep-going renders the
             // holes above, but the sweep as a whole did not succeed).
@@ -306,12 +337,17 @@ fn show_kernel(s: &KernelSpec) -> Result<()> {
 }
 
 /// `casper run`: one kernel on every engine, with the comparison table.
+/// With `trace` set, the Casper engine additionally records a cycle-domain
+/// trace (written as Chrome-trace-event JSON) — the simulated timing and
+/// the printed report are byte-identical either way.
 fn run_one(
     cfg: &SimConfig,
     spec: &Arc<KernelSpec>,
     level: SizeClass,
     steps: usize,
     spu_threads: usize,
+    trace: Option<&Path>,
+    trace_interval: u64,
 ) -> Result<()> {
     let domain = spec.domain(level);
     println!(
@@ -324,7 +360,9 @@ fn run_one(
     );
 
     let casper_opts = casper::coordinator::CasperOptions { spu_threads, ..Default::default() };
-    let casper_stats = run_casper_spec(cfg, spec, &domain, steps, casper_opts)?;
+    let tracer = trace.map(|_| Box::new(Tracer::new(cfg, trace_interval)));
+    let (casper_stats, tracer) =
+        run_casper_spec_traced(cfg, spec, &domain, steps, casper_opts, tracer)?;
     let cpu_stats = run_cpu_spec(cfg, spec, &domain, steps);
     let gpu = GpuModel::default().cycles_spec(cfg, spec, &domain, steps);
     let pims = PimsModel::default().cycles_spec(cfg, spec, &domain, steps);
@@ -340,6 +378,11 @@ fn run_one(
         cpu_stats.cycles as f64 / casper_stats.cycles as f64,
         pims as f64 / casper_stats.cycles as f64,
         casper_stats.cycles as f64 / gpu as f64,
+    );
+    println!(
+        "run digest {:016x} | {} accelerator pass(es) per step",
+        casper_stats.digest(),
+        casper_stats.passes
     );
     if casper_stats.passes > 1 {
         println!(
@@ -369,6 +412,16 @@ fn run_one(
         dram_wr,
         casper_stats.dram_read_imbalance(),
     );
+    // LLC data bandwidth, from per-slice port grants (64 B per grant) —
+    // the time-resolved view lives in the trace (--trace).
+    let grants: u64 = casper_stats.slice_port_grants.iter().sum();
+    println!(
+        "LLC ports: {} grants ({} B data each, bw imbalance {:.2}x) | NoC contention {} cycles",
+        grants,
+        cfg.llc.line_bytes,
+        casper_stats.bandwidth_imbalance(),
+        casper_stats.noc_contention_cycles,
+    );
 
     // Functional check against the golden reference.
     let want = golden::run_spec(
@@ -380,5 +433,30 @@ fn run_one(
     let diff = casper_stats.output.max_abs_diff(&want);
     anyhow::ensure!(diff < 1e-11, "functional mismatch vs golden: {diff}");
     println!("functional check vs golden reference: OK (max |err| = {diff:.2e})");
+
+    if let Some(path) = trace {
+        let tr = tracer.expect("engine returns the tracer it was given");
+        std::fs::write(path, tr.to_chrome_string())
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        print!(
+            "\ntrace: {} samples @ {} cycles/bucket -> {}",
+            tr.samples(),
+            tr.interval(),
+            path.display()
+        );
+        if let Some((peak, mean)) = tr.llc_utilization_peak_mean() {
+            let at = tr.peak_bucket().unwrap_or(0) as u64 * tr.interval();
+            print!(
+                "\ntrace: LLC bandwidth {:.1}% of aggregate port peak at cycle {at} (mean {:.1}%)",
+                100.0 * peak,
+                100.0 * mean
+            );
+        }
+        println!();
+        if tr.clipped() {
+            println!("trace: run outlasted the bucket cap; tail folded into the final sample");
+        }
+        println!("trace: open in chrome://tracing or https://ui.perfetto.dev (1 \"us\" = 1 cycle)");
+    }
     Ok(())
 }

@@ -22,6 +22,7 @@ use crate::mem::cache::AccessOutcome;
 use crate::mem::dram::DramModel;
 use crate::mem::hierarchy::SlicedLlc;
 use crate::noc::MeshNoc;
+use crate::trace::{TraceSink, Tracer};
 
 /// Functional backing store for the (single, physically contiguous)
 /// stencil segment. Addresses are simulated physical addresses.
@@ -252,6 +253,10 @@ pub struct ShardedMem {
     pub unaligned_hw: bool,
     /// Fig-14 `NearL1` hit latency (the L1 tag models live on the SPUs).
     pub spu_l1_latency: u64,
+    /// Cycle-domain trace recorder (`--trace`). `None` — the default —
+    /// keeps every request on the exact untraced path: the hook sites are
+    /// a single `Option` check each and never feed back into timing.
+    pub trace: Option<Box<Tracer>>,
 }
 
 impl ShardedMem {
@@ -266,6 +271,7 @@ impl ShardedMem {
             spu_local_latency: cfg.llc.spu_local_latency,
             unaligned_hw: true,
             spu_l1_latency: cfg.l1.latency,
+            trace: None,
         }
     }
 
@@ -286,14 +292,19 @@ impl ShardedMem {
         // Request traversal to the slice (free when local). Remote
         // messages pay NoC latency; the contended resource is the slice's
         // single load/store port, arbitrated by its rate limiter.
-        let arrive = if slice == from_slice {
-            t
-        } else {
+        let remote = slice != from_slice;
+        let arrive = if remote {
             self.llc.bank_mut(slice).remote_reqs += 1;
             t + self.noc.record_latency(from_slice, slice, 8)
+        } else {
+            t
         };
         let start = self.llc.claim_port(slice, arrive);
         let mut data_at = start + self.spu_local_latency;
+        let queue0 = self.dram.queue_cycles;
+        let (mut hits, mut misses) = (0u32, 0u32);
+        let mut dram_lines = [0u64; 4];
+        let mut n_dram = 0usize;
         for (k, &line) in lines.iter().enumerate() {
             // A merged access is ONE data-array access with a dual tag
             // match: only the first line counts as the access.
@@ -309,20 +320,32 @@ impl ShardedMem {
                 Some(o) => (o.hit[k], o.wb[k]),
             };
             if !hit {
+                misses += 1;
                 let done = self.dram.access(line, false, start);
                 self.llc.bank_mut(slice).dram_reads += 1;
+                dram_lines[n_dram] = line;
+                n_dram += 1;
                 if wb != NO_LINE {
-                    self.dram.access(wb * self.llc_cfg.line_bytes as u64, true, start);
+                    let wb_addr = wb * self.llc_cfg.line_bytes as u64;
+                    self.dram.access(wb_addr, true, start);
                     self.llc.bank_mut(slice).dram_writes += 1;
+                    dram_lines[n_dram] = wb_addr;
+                    n_dram += 1;
                 }
                 data_at = data_at.max(done);
+            } else {
+                hits += 1;
             }
         }
+        if let Some(tr) = self.trace.as_deref_mut() {
+            let dq = self.dram.queue_cycles - queue0;
+            tr.slice_request(slice, start, hits, misses, &dram_lines[..n_dram], dq, remote);
+        }
         // Response traversal back.
-        if slice == from_slice {
-            data_at
-        } else {
+        if remote {
             data_at + self.noc.record_latency(slice, from_slice, 64)
+        } else {
+            data_at
         }
     }
 
@@ -337,11 +360,12 @@ impl ShardedMem {
         t: u64,
         pre: Option<&TagOut>,
     ) -> u64 {
-        let arrive = if slice == from_slice {
-            t
-        } else {
+        let remote = slice != from_slice;
+        let arrive = if remote {
             self.llc.bank_mut(slice).remote_reqs += 1;
             t + self.noc.record_latency(from_slice, slice, 64)
+        } else {
+            t
         };
         let start = self.llc.claim_port(slice, arrive);
         let (hit, wb) = match pre {
@@ -352,16 +376,29 @@ impl ShardedMem {
             }
             Some(o) => (o.hit[0], o.wb[0]),
         };
+        let queue0 = self.dram.queue_cycles;
+        let mut dram_lines = [0u64; 4];
+        let mut n_dram = 0usize;
         let mut done = start + self.spu_local_latency;
         if !hit {
             // Write-allocate fill from DRAM (or lower): coherence §4.3 —
             // the LLC obtains the line in writable state.
             done = done.max(self.dram.access(addr, false, start));
             self.llc.bank_mut(slice).dram_reads += 1;
+            dram_lines[n_dram] = addr;
+            n_dram += 1;
         }
         if wb != NO_LINE {
-            self.dram.access(wb * self.llc_cfg.line_bytes as u64, true, start);
+            let wb_addr = wb * self.llc_cfg.line_bytes as u64;
+            self.dram.access(wb_addr, true, start);
             self.llc.bank_mut(slice).dram_writes += 1;
+            dram_lines[n_dram] = wb_addr;
+            n_dram += 1;
+        }
+        if let Some(tr) = self.trace.as_deref_mut() {
+            let dq = self.dram.queue_cycles - queue0;
+            let (h, m) = if hit { (1, 0) } else { (0, 1) };
+            tr.slice_request(slice, start, h, m, &dram_lines[..n_dram], dq, remote);
         }
         done
     }
@@ -426,6 +463,25 @@ mod tests {
         let replayed = b.load_slice_request(0, 3, &lines, 100, Some(&pre));
         assert_eq!(direct, replayed);
         assert_eq!(b.noc.messages, 2, "remote request + response recorded");
+    }
+
+    #[test]
+    fn tracing_does_not_change_request_timing() {
+        let cfg = SimConfig::default();
+        let mut plain = ShardedMem::new(&cfg, MappingPolicy::StencilSegment);
+        let mut traced = ShardedMem::new(&cfg, MappingPolicy::StencilSegment);
+        traced.trace = Some(Box::new(Tracer::new(&cfg, 64)));
+        let lines = [0x1000_0000u64, 0x1000_0040];
+        assert_eq!(
+            plain.load_slice_request(0, 3, &lines, 100, None),
+            traced.load_slice_request(0, 3, &lines, 100, None)
+        );
+        assert_eq!(
+            plain.store_request(2, 2, 0x1000_2000, 50, None),
+            traced.store_request(2, 2, 0x1000_2000, 50, None)
+        );
+        let tr = traced.trace.take().unwrap();
+        assert!(tr.samples() > 0, "hooks recorded the requests");
     }
 
     #[test]

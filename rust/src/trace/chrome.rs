@@ -1,0 +1,435 @@
+//! Chrome-trace-event JSON emission (loadable in `chrome://tracing` and
+//! Perfetto), plus the minimal JSON validator the tests and CI lean on.
+//!
+//! Layout of the emitted trace:
+//!
+//! - **pid 1 — "casper (cycle domain)"**: timestamps are *simulated
+//!   cycles*, not microseconds (load the trace knowing 1 "µs" = 1 cycle).
+//!   - tid 1: one `X` span per accelerator pass per step;
+//!   - tid 100+i: one `X` span per SPU *i* per step × pass (its busy
+//!     interval);
+//!   - `C` counter samples per bucket: per-slice LLC bandwidth (each
+//!     series scaled so the stacked sum reads as % of the aggregate port
+//!     peak), LLC hit rate, per-channel DRAM bytes, DRAM queue-wait
+//!     cycles, NoC messages + contention.
+//! - **pid 2 — "casper host (wall clock)"**: real-microsecond spans for
+//!   the epoch engine's three phases (functional / reconcile / replay),
+//!   one triple per epoch. Absent under the serial engine.
+
+use super::{Span, Tracer};
+use std::io::{self, Write};
+
+/// Escape a string for inclusion in a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Incremental `traceEvents` array writer: tracks the comma state so each
+/// event is emitted as one self-contained JSON object per line (which
+/// keeps the file `jq`-friendly).
+struct Events<'a, W: Write> {
+    w: &'a mut W,
+    first: bool,
+}
+
+impl<W: Write> Events<'_, W> {
+    fn emit(&mut self, body: &str) -> io::Result<()> {
+        if self.first {
+            self.first = false;
+            writeln!(self.w)?;
+        } else {
+            writeln!(self.w, ",")?;
+        }
+        write!(self.w, "{{{body}}}")
+    }
+}
+
+fn meta_process(ev: &mut Events<impl Write>, pid: u32, name: &str) -> io::Result<()> {
+    ev.emit(&format!(
+        "\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{{\"name\":\"{}\"}}",
+        escape(name)
+    ))
+}
+
+fn meta_thread(ev: &mut Events<impl Write>, pid: u32, tid: u32, name: &str) -> io::Result<()> {
+    ev.emit(&format!(
+        "\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+         \"args\":{{\"name\":\"{}\"}}",
+        escape(name)
+    ))
+}
+
+fn span_event(
+    ev: &mut Events<impl Write>,
+    pid: u32,
+    tid: u32,
+    cat: &str,
+    name: &str,
+    start: u64,
+    end: u64,
+) -> io::Result<()> {
+    ev.emit(&format!(
+        "\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"ts\":{start},\"dur\":{},\
+         \"cat\":\"{cat}\",\"name\":\"{}\"",
+        end.saturating_sub(start),
+        escape(name)
+    ))
+}
+
+fn counter_event(
+    ev: &mut Events<impl Write>,
+    name: &str,
+    ts: u64,
+    series: &[(String, String)],
+) -> io::Result<()> {
+    let args: Vec<String> = series.iter().map(|(k, v)| format!("\"{k}\":{v}")).collect();
+    ev.emit(&format!(
+        "\"ph\":\"C\",\"pid\":1,\"tid\":0,\"ts\":{ts},\"name\":\"{}\",\"args\":{{{}}}",
+        escape(name),
+        args.join(",")
+    ))
+}
+
+fn pct(num: f64, den: f64) -> String {
+    if den > 0.0 {
+        format!("{:.3}", 100.0 * num / den)
+    } else {
+        "0".to_string()
+    }
+}
+
+impl Tracer {
+    /// Serialize the recorded trace as Chrome-trace-event JSON.
+    pub fn write_chrome<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        write!(w, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+        let mut ev = Events { w, first: true };
+
+        meta_process(&mut ev, 1, "casper (cycle domain)")?;
+        meta_process(&mut ev, 2, "casper host (wall clock)")?;
+        meta_thread(&mut ev, 1, 1, "passes")?;
+        let mut spus: Vec<usize> = self.spu_spans().iter().map(|&(s, _)| s).collect();
+        spus.sort_unstable();
+        spus.dedup();
+        for spu in spus {
+            meta_thread(&mut ev, 1, 100 + spu as u32, &format!("spu {spu}"))?;
+        }
+        if !self.epochs().is_empty() {
+            meta_thread(&mut ev, 2, 0, "epoch phases")?;
+        }
+
+        for &Span { step, pass, start, end } in self.pass_spans() {
+            span_event(&mut ev, 1, 1, "pass", &format!("step {step} pass {pass}"), start, end)?;
+        }
+        for &(spu, Span { step, pass, start, end }) in self.spu_spans() {
+            let name = format!("s{step}p{pass}");
+            span_event(&mut ev, 1, 100 + spu as u32, "spu", &name, start, end)?;
+        }
+        for (i, ep) in self.epochs().iter().enumerate() {
+            for (name, ph) in ["functional", "reconcile", "replay"].iter().zip(ep.phases.iter()) {
+                span_event(&mut ev, 2, 0, "epoch", &format!("{name} (epoch {i})"), ph[0], ph[1])?;
+            }
+        }
+
+        let interval = self.interval();
+        let slice_peak = interval as f64 * self.slice_peak_bytes_per_cycle();
+        let agg_peak = slice_peak * self.slice_count() as f64;
+        for (i, b) in self.buckets().iter().enumerate() {
+            let ts = i as u64 * interval;
+            // Per-slice bandwidth, each series as % of the *aggregate*
+            // peak so the stacked counter sums to total utilization.
+            let bw: Vec<(String, String)> = (0..self.slice_count())
+                .map(|s| (format!("s{s}"), pct(b.slice_bytes[s] as f64, agg_peak)))
+                .collect();
+            counter_event(&mut ev, "llc bw (% of peak)", ts, &bw)?;
+
+            let probes = b.slice_hits.iter().sum::<u64>() + b.slice_misses.iter().sum::<u64>();
+            if probes > 0 {
+                let hits = b.slice_hits.iter().sum::<u64>() as f64;
+                counter_event(
+                    &mut ev,
+                    "llc hit rate (%)",
+                    ts,
+                    &[("hit".to_string(), pct(hits, probes as f64))],
+                )?;
+            }
+
+            let dram: Vec<(String, String)> = (0..self.channel_count())
+                .map(|c| (format!("d{c}"), b.chan_bytes[c].to_string()))
+                .collect();
+            counter_event(&mut ev, "dram bytes", ts, &dram)?;
+            counter_event(
+                &mut ev,
+                "dram queue wait (cycles)",
+                ts,
+                &[("wait".to_string(), b.dram_queue_cycles.to_string())],
+            )?;
+            counter_event(
+                &mut ev,
+                "noc",
+                ts,
+                &[
+                    ("messages".to_string(), b.noc_messages.to_string()),
+                    ("contention".to_string(), b.noc_contention_cycles.to_string()),
+                ],
+            )?;
+        }
+
+        writeln!(ev.w)?;
+        write!(
+            ev.w,
+            "],\"otherData\":{{\"interval_cycles\":{},\"samples\":{},\"clipped\":{}}}}}",
+            interval,
+            self.samples(),
+            self.clipped()
+        )?;
+        writeln!(ev.w)
+    }
+
+    /// Convenience for tests: the Chrome trace as a `String`.
+    pub fn to_chrome_string(&self) -> String {
+        let mut buf = Vec::new();
+        self.write_chrome(&mut buf).expect("write to Vec cannot fail");
+        String::from_utf8(buf).expect("trace JSON is UTF-8")
+    }
+}
+
+/// Validate that `s` is exactly one well-formed JSON value (minimal
+/// recursive-descent check — structure only, no number-range pedantry).
+/// Used by the trace/events tests; CI re-checks the real files with
+/// `python3 -m json.tool` and `jq`.
+pub fn validate_json(s: &str) -> Result<(), String> {
+    let b = s.as_bytes();
+    let mut pos = 0usize;
+    skip_ws(b, &mut pos);
+    value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing garbage at byte {pos}"));
+    }
+    Ok(())
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn value(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    match b.get(*pos) {
+        Some(b'{') => object(b, pos),
+        Some(b'[') => array(b, pos),
+        Some(b'"') => string(b, pos),
+        Some(b't') => literal(b, pos, b"true"),
+        Some(b'f') => literal(b, pos, b"false"),
+        Some(b'n') => literal(b, pos, b"null"),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => number(b, pos),
+        Some(c) => Err(format!("unexpected byte '{}' at {pos:?}", *c as char)),
+        None => Err("unexpected end of input".to_string()),
+    }
+}
+
+fn literal(b: &[u8], pos: &mut usize, lit: &[u8]) -> Result<(), String> {
+    if b.len() >= *pos + lit.len() && &b[*pos..*pos + lit.len()] == lit {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        Err(format!("bad literal at byte {pos:?}"))
+    }
+}
+
+fn number(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let digits = |b: &[u8], pos: &mut usize| {
+        let s = *pos;
+        while *pos < b.len() && b[*pos].is_ascii_digit() {
+            *pos += 1;
+        }
+        *pos > s
+    };
+    if !digits(b, pos) {
+        return Err(format!("bad number at byte {start}"));
+    }
+    if b.get(*pos) == Some(&b'.') {
+        *pos += 1;
+        if !digits(b, pos) {
+            return Err(format!("bad fraction at byte {start}"));
+        }
+    }
+    if matches!(b.get(*pos), Some(b'e') | Some(b'E')) {
+        *pos += 1;
+        if matches!(b.get(*pos), Some(b'+') | Some(b'-')) {
+            *pos += 1;
+        }
+        if !digits(b, pos) {
+            return Err(format!("bad exponent at byte {start}"));
+        }
+    }
+    Ok(())
+}
+
+fn string(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'"' => {
+                *pos += 1;
+                return Ok(());
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => *pos += 1,
+                    Some(b'u') => {
+                        let hex = b.get(*pos + 1..*pos + 5);
+                        if !hex.is_some_and(|h| h.iter().all(u8::is_ascii_hexdigit)) {
+                            return Err(format!("bad \\u escape at byte {pos:?}"));
+                        }
+                        *pos += 5;
+                    }
+                    _ => return Err(format!("bad escape at byte {pos:?}")),
+                }
+            }
+            c if c < 0x20 => return Err(format!("raw control byte in string at {pos:?}")),
+            _ => *pos += 1,
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn object(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    *pos += 1; // '{'
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(());
+    }
+    loop {
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b'"') {
+            return Err(format!("expected object key at byte {pos:?}"));
+        }
+        string(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            return Err(format!("expected ':' at byte {pos:?}"));
+        }
+        *pos += 1;
+        skip_ws(b, pos);
+        value(b, pos)?;
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(());
+            }
+            _ => return Err(format!("expected ',' or '}}' at byte {pos:?}")),
+        }
+    }
+}
+
+fn array(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    *pos += 1; // '['
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(());
+    }
+    loop {
+        skip_ws(b, pos);
+        value(b, pos)?;
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(());
+            }
+            _ => return Err(format!("expected ',' or ']' at byte {pos:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{EpochPhases, TraceSink, Tracer};
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn validator_accepts_and_rejects() {
+        for ok in [
+            "{}",
+            "[]",
+            "null",
+            "-1.5e-3",
+            "\"a\\nb\\u00ff\"",
+            "{\"a\":[1,2,{\"b\":true}],\"c\":null}",
+            " [ 1 , 2 ] ",
+        ] {
+            assert!(validate_json(ok).is_ok(), "{ok}");
+        }
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "{'a':1}",
+            "NaN",
+            "1 2",
+            "{\"a\":1,}",
+            "\"unterminated",
+        ] {
+            assert!(validate_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert!(validate_json(&format!("\"{}\"", escape("x\u{1}\ty"))).is_ok());
+    }
+
+    #[test]
+    fn emitted_trace_is_valid_json_with_expected_tracks() {
+        let mut t = Tracer::new(&SimConfig::default(), 64);
+        t.slice_request(0, 10, 3, 1, &[64, 4096], 12, false);
+        t.slice_request(15, 70, 0, 1, &[128], 0, true);
+        t.pass_span(0, 0, 0, 120);
+        t.spu_span(0, 0, 0, 5, 90);
+        t.spu_span(15, 0, 0, 8, 110);
+        t.epoch_phases(EpochPhases { phases: [[0, 40], [40, 55], [55, 200]] });
+        let json = t.to_chrome_string();
+        validate_json(&json).unwrap();
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("spu 15"));
+        assert!(json.contains("step 0 pass 0"));
+        assert!(json.contains("llc bw (% of peak)"));
+        assert!(json.contains("functional (epoch 0)"));
+        assert!(json.contains("\"interval_cycles\":64"));
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid_json() {
+        let t = Tracer::new(&SimConfig::default(), 1024);
+        validate_json(&t.to_chrome_string()).unwrap();
+    }
+}

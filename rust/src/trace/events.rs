@@ -1,0 +1,149 @@
+//! JSONL sweep-telemetry sink (`casper experiments --events FILE`).
+//!
+//! One self-contained JSON object per line, in completion order: cell
+//! lifecycle events (`scheduled` / `cached` / `started` / `retried` /
+//! `timed-out` / `failed` / `finished` / `result`) stamped with
+//! wall-clock milliseconds since the sink was opened. This is the
+//! admission/monitoring stream the `casper serve` daemon (ROADMAP) will
+//! forward to clients.
+//!
+//! Telemetry must never take a sweep down: write errors are swallowed
+//! (the supervisor's own journal — `harness/journal.rs` — remains the
+//! durable record). Lines are flushed per event so a crashed sweep keeps
+//! every event it got to.
+
+use super::chrome::escape;
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Debug)]
+struct EventLog {
+    file: File,
+    start: Instant,
+}
+
+/// Shared handle to an append-only JSONL event log. Cheap to clone (an
+/// `Arc`), so it rides inside
+/// [`SupervisorPolicy`](crate::harness::SupervisorPolicy) without
+/// disturbing its `Clone`/`Debug` derives; writers serialize on an
+/// internal mutex so concurrent sweep workers never interleave lines.
+#[derive(Debug, Clone)]
+pub struct EventSink {
+    inner: Arc<Mutex<EventLog>>,
+}
+
+impl EventSink {
+    /// Create (truncate) the event log at `path`.
+    pub fn create(path: &Path) -> std::io::Result<EventSink> {
+        let file = File::create(path)?;
+        let log = EventLog { file, start: Instant::now() };
+        Ok(EventSink { inner: Arc::new(Mutex::new(log)) })
+    }
+
+    /// Append one event line. `fields` were built by [`Event`]; the sink
+    /// adds the leading timestamp.
+    pub fn emit(&self, event: Event) {
+        let mut log = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let ms = log.start.elapsed().as_secs_f64() * 1e3;
+        let mut line = format!("{{\"ts_ms\":{ms:.3},\"event\":\"{}\"", escape(&event.kind));
+        for part in &event.parts {
+            line.push(',');
+            line.push_str(part);
+        }
+        line.push('}');
+        let _ = writeln!(log.file, "{line}");
+        let _ = log.file.flush();
+    }
+}
+
+/// Builder for one event line: a kind plus typed key/value fields.
+#[derive(Debug)]
+pub struct Event {
+    kind: String,
+    parts: Vec<String>,
+}
+
+impl Event {
+    pub fn new(kind: &str) -> Event {
+        Event { kind: kind.to_string(), parts: Vec::new() }
+    }
+
+    pub fn num(mut self, key: &str, v: u64) -> Event {
+        self.parts.push(format!("\"{}\":{v}", escape(key)));
+        self
+    }
+
+    /// Milliseconds (or any finite float) field; non-finite values are
+    /// dropped rather than emitting invalid JSON.
+    pub fn float(mut self, key: &str, v: f64) -> Event {
+        if v.is_finite() {
+            self.parts.push(format!("\"{}\":{v:.3}", escape(key)));
+        }
+        self
+    }
+
+    pub fn str(mut self, key: &str, v: &str) -> Event {
+        self.parts.push(format!("\"{}\":\"{}\"", escape(key), escape(v)));
+        self
+    }
+
+    /// A 16-hex-digit digest field (kept as a string: JSON numbers lose
+    /// u64 precision past 2^53).
+    pub fn digest(self, key: &str, v: u64) -> Event {
+        let hex = format!("{v:016x}");
+        self.str(key, &hex)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::chrome::validate_json;
+    use super::*;
+
+    #[test]
+    fn events_are_one_valid_json_object_per_line() {
+        let dir = std::env::temp_dir().join(format!("casper-events-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let sink = EventSink::create(&path).unwrap();
+        sink.emit(Event::new("scheduled").num("cell", 3).str("kernel", "jacobi2d"));
+        sink.emit(
+            Event::new("finished")
+                .num("cell", 3)
+                .float("wall_ms", 12.5)
+                .float("bogus", f64::NAN)
+                .digest("digest", 0xdead_beef),
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            validate_json(line).unwrap();
+        }
+        assert!(lines[0].contains("\"event\":\"scheduled\""));
+        assert!(lines[0].contains("\"kernel\":\"jacobi2d\""));
+        assert!(lines[1].contains("\"digest\":\"00000000deadbeef\""));
+        assert!(!lines[1].contains("bogus"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn clones_share_one_log() {
+        let dir = std::env::temp_dir().join(format!("casper-events2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let sink = EventSink::create(&path).unwrap();
+        let clone = sink.clone();
+        sink.emit(Event::new("a"));
+        clone.emit(Event::new("b"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,418 @@
+//! Cycle-domain tracing and interval-sampled telemetry.
+//!
+//! The simulator's headline claim — stencils running "at the peak bandwidth
+//! of the LLC" — was previously visible only as end-of-run aggregates in
+//! [`RunStats`](crate::coordinator::RunStats). This module renders it as
+//! data over *time*: a [`Tracer`] threaded through the memory system
+//! ([`ShardedMem`](crate::spu::ShardedMem)) and both engines records
+//!
+//! - **interval-sampled time series** (bucketed counters every
+//!   `--trace-interval` cycles): per-slice LLC bandwidth utilization, LLC
+//!   hit rate, per-channel DRAM bytes, DRAM queue waiting, NoC traffic and
+//!   contention;
+//! - **spans**: one track per SPU (busy interval per step × pass), a pass
+//!   track (multi-pass kernels from PR 5 show their per-pass timing), and
+//!   wall-clock spans for the epoch engine's three phases;
+//!
+//! and emits them as Chrome-trace-event JSON ([`chrome`]) loadable in
+//! `chrome://tracing` / Perfetto.
+//!
+//! # Sampling model: bucket attribution
+//!
+//! The simulator is timestamp-driven — there is no global cycle loop to
+//! sample from, and request timestamps are *not* monotonic across SPUs. So
+//! the tracer never "samples at cycle T"; instead every observed request
+//! adds its contribution to the bucket `t / interval` of its port-claim
+//! cycle. Addition commutes, and both engines issue the identical request
+//! set at identical cycles, so the bucket contents are engine-identical by
+//! construction. Buckets are capped at [`MAX_BUCKETS`]; anything beyond
+//! folds into the last bucket (and the trace records that it clipped).
+//!
+//! # Zero cost when off
+//!
+//! The tracer lives as an `Option<Box<Tracer>>` on `ShardedMem`; every
+//! hook site is a single `if let Some(..)` on that option after the
+//! request's normal accounting, and **no hook ever feeds back into
+//! timing** — tracing on or off, `RunStats::digest` is byte-identical
+//! (pinned by tests in `coordinator/engine.rs` and by CI).
+
+pub mod chrome;
+pub mod events;
+
+pub use events::{Event, EventSink};
+
+use crate::config::SimConfig;
+use std::time::Instant;
+
+/// Hard cap on the number of sample buckets a trace will hold (2^16).
+/// With the default `--trace-interval 1024` this covers runs of 67M
+/// cycles; longer tails fold into the final bucket rather than growing
+/// without bound.
+pub const MAX_BUCKETS: usize = 1 << 16;
+
+/// Cap on recorded span counts (per span kind) — bounds trace size on
+/// pathological step counts without perturbing the simulation.
+const MAX_SPANS: usize = 1 << 16;
+
+/// One sampling interval's worth of accumulated counters.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    /// Data bytes granted by each slice's LLC port (64 B per grant).
+    pub slice_bytes: Vec<u64>,
+    /// Tag-probe hits per slice.
+    pub slice_hits: Vec<u64>,
+    /// Tag-probe misses per slice.
+    pub slice_misses: Vec<u64>,
+    /// Bytes moved per DRAM channel (miss fills + dirty writebacks).
+    pub chan_bytes: Vec<u64>,
+    /// DRAM channel-queue waiting cycles accrued by requests in this bucket.
+    pub dram_queue_cycles: u64,
+    /// NoC messages injected (remote request/response pairs + leader hops).
+    pub noc_messages: u64,
+    /// NoC contention cycles accrued by leader aggregation in this bucket.
+    pub noc_contention_cycles: u64,
+}
+
+impl Bucket {
+    fn new(slices: usize, channels: usize) -> Bucket {
+        Bucket {
+            slice_bytes: vec![0; slices],
+            slice_hits: vec![0; slices],
+            slice_misses: vec![0; slices],
+            chan_bytes: vec![0; channels],
+            dram_queue_cycles: 0,
+            noc_messages: 0,
+            noc_contention_cycles: 0,
+        }
+    }
+}
+
+/// A closed cycle-domain interval attributed to a pass or an SPU.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub step: usize,
+    pub pass: usize,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Wall-clock timing of one epoch of the parallel engine: `[start_us,
+/// end_us]` offsets from the trace origin for each of the three phases
+/// (functional fan-out, tag reconciliation, timing replay).
+#[derive(Debug, Clone, Copy)]
+pub struct EpochPhases {
+    pub phases: [[u64; 2]; 3],
+}
+
+/// Observation hooks the memory system and engines call while tracing.
+///
+/// The trait exists to document the observation surface in one place:
+/// every method is *write-only* from the simulator's point of view — a
+/// sink never returns data into the caller, so it cannot perturb timing.
+/// [`Tracer`] is the one in-tree implementation.
+pub trait TraceSink {
+    /// One LLC slice request (load or store), observed at its port-claim
+    /// cycle `start`: `hits`/`misses` tag probes, up to four DRAM line
+    /// transfers in `dram_lines`, `queue_delta` DRAM queue-wait cycles,
+    /// and whether the request arrived over the NoC (`remote`).
+    fn slice_request(
+        &mut self,
+        slice: usize,
+        start: u64,
+        hits: u32,
+        misses: u32,
+        dram_lines: &[u64],
+        queue_delta: u64,
+        remote: bool,
+    );
+
+    /// Leader-aggregation NoC traffic at cycle `at`: `messages` sends and
+    /// `contention_delta` link-contention cycles.
+    fn noc_leader(&mut self, at: u64, messages: u64, contention_delta: u64);
+
+    /// One completed accelerator pass of one time step, in cycles.
+    fn pass_span(&mut self, step: usize, pass: usize, start: u64, end: u64);
+
+    /// One SPU's busy interval for one step × pass, in cycles.
+    fn spu_span(&mut self, spu: usize, step: usize, pass: usize, start: u64, end: u64);
+
+    /// Wall-clock phase timing of one epoch (parallel engine only).
+    fn epoch_phases(&mut self, phases: EpochPhases);
+}
+
+/// The concrete trace recorder. Constructed by the CLI (`--trace`),
+/// installed into `ShardedMem` by
+/// [`run_casper_spec_traced`](crate::coordinator::run_casper_spec_traced)
+/// after warm-up, and returned to the caller for serialization.
+///
+/// Contains only plain owned data (`Vec`s, integers, an `Instant`), so a
+/// `ShardedMem` holding one stays `Send + Sync` for the epoch engine's
+/// scoped-thread fan-out (which only ever reads `&ShardedMem`).
+#[derive(Debug)]
+pub struct Tracer {
+    interval: u64,
+    slices: usize,
+    channels: usize,
+    line_bytes: u64,
+    buckets: Vec<Bucket>,
+    pass_spans: Vec<Span>,
+    spu_spans: Vec<(usize, Span)>,
+    epochs: Vec<EpochPhases>,
+    origin: Instant,
+    clipped: bool,
+}
+
+impl Tracer {
+    /// Create a tracer sampling every `interval` cycles (clamped to ≥ 1 —
+    /// the CLI accepts `--trace-interval 0` and we refuse to divide by it).
+    pub fn new(cfg: &SimConfig, interval: u64) -> Tracer {
+        Tracer {
+            interval: interval.max(1),
+            slices: cfg.llc.slices,
+            channels: cfg.dram.channels,
+            line_bytes: cfg.llc.line_bytes as u64,
+            buckets: Vec::new(),
+            pass_spans: Vec::new(),
+            spu_spans: Vec::new(),
+            epochs: Vec::new(),
+            origin: Instant::now(),
+            clipped: false,
+        }
+    }
+
+    /// The sampling interval in cycles (post-clamp).
+    pub fn interval(&self) -> u64 {
+        self.interval
+    }
+
+    /// Wall-clock origin of this trace; epoch-phase offsets are measured
+    /// from it.
+    pub fn origin(&self) -> Instant {
+        self.origin
+    }
+
+    /// Number of sample buckets recorded so far.
+    pub fn samples(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Whether the run outran [`MAX_BUCKETS`] and folded its tail.
+    pub fn clipped(&self) -> bool {
+        self.clipped
+    }
+
+    pub(crate) fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    pub(crate) fn pass_spans(&self) -> &[Span] {
+        &self.pass_spans
+    }
+
+    pub(crate) fn spu_spans(&self) -> &[(usize, Span)] {
+        &self.spu_spans
+    }
+
+    pub(crate) fn epochs(&self) -> &[EpochPhases] {
+        &self.epochs
+    }
+
+    pub(crate) fn slice_count(&self) -> usize {
+        self.slices
+    }
+
+    pub(crate) fn channel_count(&self) -> usize {
+        self.channels
+    }
+
+    /// Peak data bandwidth of one slice port in bytes/cycle: one grant
+    /// per cycle, one line per grant.
+    pub fn slice_peak_bytes_per_cycle(&self) -> f64 {
+        self.line_bytes as f64
+    }
+
+    /// Which DRAM channel serves `addr` — mirrors
+    /// `DramModel::channel_of` (line-interleaved across channels).
+    fn channel_of(&self, addr: u64) -> usize {
+        ((addr / self.line_bytes) % self.channels as u64) as usize
+    }
+
+    fn bucket_at(&mut self, t: u64) -> &mut Bucket {
+        let mut idx = (t / self.interval) as usize;
+        if idx >= MAX_BUCKETS {
+            idx = MAX_BUCKETS - 1;
+            self.clipped = true;
+        }
+        if idx >= self.buckets.len() {
+            let template = Bucket::new(self.slices, self.channels);
+            self.buckets.resize(idx + 1, template);
+        }
+        &mut self.buckets[idx]
+    }
+
+    /// Aggregate LLC bandwidth utilization per bucket, as a fraction of
+    /// the aggregate port peak (`slices × line_bytes` bytes/cycle). The
+    /// final bucket may cover fewer than `interval` live cycles and
+    /// therefore undercounts — callers that report a mean should know.
+    pub fn llc_utilization(&self) -> Vec<f64> {
+        let peak = self.interval as f64 * self.slices as f64 * self.line_bytes as f64;
+        self.buckets
+            .iter()
+            .map(|b| b.slice_bytes.iter().sum::<u64>() as f64 / peak)
+            .collect()
+    }
+
+    /// `(peak, mean)` aggregate LLC bandwidth utilization over all
+    /// buckets, or `None` if nothing was recorded.
+    pub fn llc_utilization_peak_mean(&self) -> Option<(f64, f64)> {
+        let u = self.llc_utilization();
+        if u.is_empty() {
+            return None;
+        }
+        let peak = u.iter().cloned().fold(0.0f64, f64::max);
+        let mean = u.iter().sum::<f64>() / u.len() as f64;
+        Some((peak, mean))
+    }
+
+    /// Index of the busiest bucket (by aggregate LLC bytes), if any.
+    pub fn peak_bucket(&self) -> Option<usize> {
+        (0..self.buckets.len()).max_by_key(|&i| self.buckets[i].slice_bytes.iter().sum::<u64>())
+    }
+}
+
+impl TraceSink for Tracer {
+    fn slice_request(
+        &mut self,
+        slice: usize,
+        start: u64,
+        hits: u32,
+        misses: u32,
+        dram_lines: &[u64],
+        queue_delta: u64,
+        remote: bool,
+    ) {
+        // Resolve channels before borrowing the bucket mutably.
+        let mut chans = [0usize; 4];
+        let n = dram_lines.len().min(4);
+        for (c, &line) in chans.iter_mut().zip(dram_lines.iter()) {
+            *c = self.channel_of(line);
+        }
+        let line_bytes = self.line_bytes;
+        let b = self.bucket_at(start);
+        b.slice_bytes[slice] += line_bytes;
+        b.slice_hits[slice] += hits as u64;
+        b.slice_misses[slice] += misses as u64;
+        for &c in &chans[..n] {
+            b.chan_bytes[c] += line_bytes;
+        }
+        b.dram_queue_cycles += queue_delta;
+        if remote {
+            // Request + response message pair over the mesh.
+            b.noc_messages += 2;
+        }
+    }
+
+    fn noc_leader(&mut self, at: u64, messages: u64, contention_delta: u64) {
+        let b = self.bucket_at(at);
+        b.noc_messages += messages;
+        b.noc_contention_cycles += contention_delta;
+    }
+
+    fn pass_span(&mut self, step: usize, pass: usize, start: u64, end: u64) {
+        if self.pass_spans.len() < MAX_SPANS {
+            self.pass_spans.push(Span { step, pass, start, end });
+        }
+    }
+
+    fn spu_span(&mut self, spu: usize, step: usize, pass: usize, start: u64, end: u64) {
+        if self.spu_spans.len() < MAX_SPANS {
+            self.spu_spans.push((spu, Span { step, pass, start, end }));
+        }
+    }
+
+    fn epoch_phases(&mut self, phases: EpochPhases) {
+        if self.epochs.len() < MAX_SPANS {
+            self.epochs.push(phases);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer(interval: u64) -> Tracer {
+        Tracer::new(&SimConfig::default(), interval)
+    }
+
+    #[test]
+    fn interval_is_clamped_to_one() {
+        assert_eq!(tracer(0).interval(), 1);
+        assert_eq!(tracer(1024).interval(), 1024);
+    }
+
+    #[test]
+    fn requests_land_in_their_cycle_bucket() {
+        let mut t = tracer(100);
+        t.slice_request(3, 0, 2, 1, &[64], 5, false);
+        t.slice_request(3, 99, 1, 0, &[], 0, true);
+        t.slice_request(7, 100, 0, 1, &[128, 192], 7, false);
+        assert_eq!(t.samples(), 2);
+        let b0 = &t.buckets()[0];
+        assert_eq!(b0.slice_bytes[3], 128); // two 64 B grants
+        assert_eq!(b0.slice_hits[3], 3);
+        assert_eq!(b0.slice_misses[3], 1);
+        assert_eq!(b0.dram_queue_cycles, 5);
+        assert_eq!(b0.noc_messages, 2); // one remote request
+        let b1 = &t.buckets()[1];
+        assert_eq!(b1.slice_bytes[7], 64);
+        assert_eq!(b1.chan_bytes.iter().sum::<u64>(), 128);
+        assert!(!t.clipped());
+    }
+
+    #[test]
+    fn channel_attribution_is_line_interleaved() {
+        let mut t = tracer(10);
+        // Lines 0..4 hit channels 0..4 in order (64 B lines, 4 channels).
+        t.slice_request(0, 0, 0, 4, &[0, 64, 128, 192], 0, false);
+        let b = &t.buckets()[0];
+        assert_eq!(b.chan_bytes, vec![64, 64, 64, 64]);
+    }
+
+    #[test]
+    fn tail_folds_into_last_bucket() {
+        let mut t = tracer(1);
+        t.slice_request(0, (MAX_BUCKETS as u64) + 5, 1, 0, &[], 0, false);
+        assert!(t.clipped());
+        assert_eq!(t.samples(), MAX_BUCKETS);
+        assert_eq!(t.buckets()[MAX_BUCKETS - 1].slice_bytes[0], 64);
+    }
+
+    #[test]
+    fn utilization_reflects_port_peak() {
+        let mut t = tracer(2);
+        // Two grants on one slice in a 2-cycle bucket = that slice fully
+        // busy = 1/16 of aggregate peak.
+        t.slice_request(5, 0, 1, 0, &[], 0, false);
+        t.slice_request(5, 1, 1, 0, &[], 0, false);
+        let u = t.llc_utilization();
+        assert_eq!(u.len(), 1);
+        assert!((u[0] - 1.0 / 16.0).abs() < 1e-12);
+        let (peak, mean) = t.llc_utilization_peak_mean().unwrap();
+        assert_eq!(peak, mean);
+        assert_eq!(t.peak_bucket(), Some(0));
+    }
+
+    #[test]
+    fn spans_are_recorded_in_order() {
+        let mut t = tracer(1024);
+        t.pass_span(0, 0, 0, 500);
+        t.pass_span(0, 1, 500, 900);
+        t.spu_span(4, 0, 0, 10, 480);
+        t.epoch_phases(EpochPhases { phases: [[0, 5], [5, 9], [9, 30]] });
+        assert_eq!(t.pass_spans().len(), 2);
+        assert_eq!(t.pass_spans()[1].pass, 1);
+        assert_eq!(t.spu_spans()[0].0, 4);
+        assert_eq!(t.epochs()[0].phases[2], [9, 30]);
+    }
+}

@@ -14,6 +14,8 @@ use casper::harness::{
     FaultKind, FaultPlan, Journal, Report, SupervisorConfig, SupervisorPolicy, SweepCache,
     SweepOptions,
 };
+use casper::trace::chrome::validate_json;
+use casper::trace::EventSink;
 
 fn quick_opts(jobs: usize) -> SweepOptions {
     SweepOptions { quick: true, steps: 1, jobs, spu_threads: 1 }
@@ -185,6 +187,80 @@ fn checkpoint_resume_reruns_only_the_missing_cells() {
     assert_eq!(cache.executed_cells(), 0, "every cell must come from the journal");
     assert_eq!(resumed.to_markdown(), clean_report(&which, 1).to_markdown());
     let _ = std::fs::remove_file(&path);
+}
+
+/// The string value of `key` in a single-line JSON event, without a
+/// JSON parser: events put every field on one line with unescaped keys.
+fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let tag = format!("\"{key}\":\"");
+    let start = line.find(&tag)? + tag.len();
+    let rest = &line[start..];
+    rest.find('"').map(|end| &rest[..end])
+}
+
+fn count(text: &str, kind: &str) -> usize {
+    let tag = format!("\"event\":\"{kind}\"");
+    text.lines().filter(|l| l.contains(&tag)).count()
+}
+
+/// The `(engine, kernel, class)` identity set of every `kind` event.
+fn cells_of(text: &str, kind: &str) -> std::collections::BTreeSet<String> {
+    let tag = format!("\"event\":\"{kind}\"");
+    text.lines()
+        .filter(|l| l.contains(&tag))
+        .map(|l| {
+            ["engine", "kernel", "class"]
+                .iter()
+                .map(|k| field(l, k).expect("cell events carry engine/kernel/class"))
+                .collect::<Vec<_>>()
+                .join("/")
+        })
+        .collect()
+}
+
+#[test]
+fn events_log_replays_the_journal_cell_set_on_resume() {
+    // Satellite acceptance: the JSONL event log is well-formed, and after
+    // a `--resume` the replayed (journal-loaded) cell set seen in the new
+    // event log is exactly the cell set the first sweep executed.
+    let cfg = SimConfig::default();
+    let which = [Experiment::Fig10];
+    let kernels = paper_kernels();
+    let journal = temp_journal("events");
+    let pid = std::process::id();
+    let ev1 = std::env::temp_dir().join(format!("casper_sup_ev1_{pid}.jsonl"));
+    let ev2 = std::env::temp_dir().join(format!("casper_sup_ev2_{pid}.jsonl"));
+
+    let sup_with = |events: &PathBuf| SupervisorConfig {
+        policy: SupervisorPolicy {
+            events: Some(EventSink::create(events).unwrap()),
+            ..test_policy()
+        },
+        journal: Some(journal.clone()),
+    };
+    let opts = quick_opts(2);
+    let sup1 = sup_with(&ev1);
+    let first = run_experiments_supervised(&cfg, &which, opts, &kernels, &sup1).unwrap();
+    let sup2 = sup_with(&ev2);
+    let resumed = run_experiments_supervised(&cfg, &which, opts, &kernels, &sup2).unwrap();
+    assert_eq!(first.to_markdown(), resumed.to_markdown());
+
+    let t1 = std::fs::read_to_string(&ev1).unwrap();
+    let t2 = std::fs::read_to_string(&ev2).unwrap();
+    for line in t1.lines().chain(t2.lines()) {
+        validate_json(line).unwrap_or_else(|e| panic!("bad event line: {e}\n{line}"));
+    }
+    // Run 1 scheduled and executed every cell; the resumed run loaded all
+    // of them from the journal, so its log is pure `cached` identities.
+    assert_eq!(count(&t1, "scheduled"), FIG10_CELLS, "{t1}");
+    assert_eq!(count(&t1, "result"), FIG10_CELLS, "{t1}");
+    assert_eq!(count(&t2, "cached"), FIG10_CELLS, "{t2}");
+    assert_eq!(count(&t2, "started"), 0, "{t2}");
+    assert_eq!(cells_of(&t1, "result"), cells_of(&t2, "cached"));
+
+    for p in [&journal, &ev1, &ev2] {
+        let _ = std::fs::remove_file(p);
+    }
 }
 
 #[test]
