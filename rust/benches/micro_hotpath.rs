@@ -15,7 +15,7 @@ use bench_common::{
     bench_json_path, measure_stat, print_baseline_delta, write_bench_json, BenchStat,
 };
 use casper::config::{MappingPolicy, SimConfig, SizeClass};
-use casper::coordinator::{run_casper, run_casper_with, CasperOptions};
+use casper::coordinator::{run_casper, run_casper_spec, run_casper_with, CasperOptions};
 use casper::cpu::run_cpu;
 use casper::isa::ProgramBuilder;
 use casper::mapping::{SliceMapper, StencilSegment};
@@ -133,6 +133,70 @@ fn main() {
         serial_stats.digest(),
         mt_stats.digest(),
         "serial and epoch-parallel DRAM cells must be byte-identical"
+    );
+
+    // --- temporal blocking: 4-step L2-class Jacobi2D, per-step chaining
+    // vs a T=4 block. Same grid bitwise (asserted via the T-invariant
+    // grid digest); the blocked run serves inner-step tags from wavefront
+    // residency instead of LLC probes.
+    let (t1_stats, st) = measure_stat("engine_jacobi2d_l2_4steps_t1", n3, || {
+        run_casper_with(
+            &cfg,
+            StencilKind::Jacobi2D,
+            &d2,
+            4,
+            CasperOptions { spu_threads: 1, ..Default::default() },
+        )
+        .expect("per-step chained run")
+    });
+    records.push(st);
+    let (tb_stats, st) = measure_stat("engine_jacobi2d_l2_4steps_tb4", n3, || {
+        run_casper_with(
+            &cfg,
+            StencilKind::Jacobi2D,
+            &d2,
+            4,
+            CasperOptions { spu_threads: 1, temporal_block: 4, ..Default::default() },
+        )
+        .expect("temporally blocked run")
+    });
+    records.push(st);
+    assert_eq!(
+        t1_stats.grid_digest(),
+        tb_stats.grid_digest(),
+        "temporal blocking must not move the functional result"
+    );
+    assert!(tb_stats.avoided_fills() > 0, "T=4 must avoid LLC line fills");
+
+    // --- fused stencil+reduce (one pass per step) vs the golden two-pass
+    // reference (stencil sweep, then a second traversal for the reduce).
+    let res_spec = casper::stencil::extended_presets()
+        .into_iter()
+        .find(|s| s.id.as_str() == "jacobi2d_res")
+        .expect("jacobi2d_res preset");
+    let dr = res_spec.domain(SizeClass::L2);
+    let seed = CasperOptions::default().seed;
+    let (fused_stats, st) = measure_stat("engine_fused_reduce_jacobi2d", n3, || {
+        run_casper_spec(
+            &cfg,
+            &res_spec,
+            &dr,
+            4,
+            CasperOptions { spu_threads: 1, ..Default::default() },
+        )
+        .expect("fused reduction run")
+    });
+    records.push(st);
+    let input = dr.alloc_random(seed);
+    let (golden_vals, st) = measure_stat("golden_two_pass_reduce_jacobi2d", n3, || {
+        golden::run_reduced(&res_spec, &input, 4).1
+    });
+    records.push(st);
+    let fused = fused_stats.reduction.as_ref().expect("reduction result");
+    assert_eq!(fused_stats.passes, 1, "fused reduce must not add a pass");
+    assert_eq!(
+        fused.values, golden_vals,
+        "fused reduction must match the two-pass golden reference bitwise"
     );
 
     let path = bench_json_path("BENCH_micro.json");

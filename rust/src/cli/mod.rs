@@ -2,14 +2,16 @@
 //!
 //! ```text
 //! casper experiments [--only fig10,table5] [--quick] [--steps N]
-//!                    [--jobs N] [--out-dir DIR] [--config FILE]
+//!                    [--jobs N] [--temporal-block T] [--out-dir DIR]
+//!                    [--config FILE]
 //!                    [--kernel-file FILE]... [--extended-kernels]
 //!                    [--kernels id1,id2] [--keep-going | --fail-fast]
 //!                    [--cell-timeout SECS] [--retries N] [--backoff-ms N]
 //!                    [--resume FILE] [--inject-faults SPEC]
 //!                    [--events FILE] [--metrics-out FILE] [--progress]
 //! casper run --kernel jacobi2d --level llc [--steps N] [--config FILE]
-//!            [--kernel-file FILE]... [--trace FILE] [--trace-interval N]
+//!            [--temporal-block T] [--kernel-file FILE]...
+//!            [--trace FILE] [--trace-interval N]
 //! casper kernels list [--kernel-file FILE]...
 //! casper kernels show ID [--kernel-file FILE]...
 //! casper validate [--artifacts DIR]
@@ -140,6 +142,9 @@ pub enum Command {
         metrics_out: Option<PathBuf>,
         /// Live progress line on stderr.
         progress: bool,
+        /// Temporal block depth for every Casper cell (default 1 =
+        /// plain chaining, the byte-stable paper report).
+        temporal_block: usize,
     },
     Run {
         /// Kernel id (preset or file-defined), resolved against the
@@ -156,6 +161,9 @@ pub enum Command {
         trace: Option<PathBuf>,
         /// Counter-sampling bucket width in cycles (`--trace-interval`).
         trace_interval: u64,
+        /// Temporal block depth: T wavefronts stay resident per LLC
+        /// slice, halos recomputed instead of re-fetched (default 1).
+        temporal_block: usize,
     },
     Kernels {
         action: KernelsAction,
@@ -181,19 +189,25 @@ casper — near-cache stencil acceleration (full-system reproduction)
 
 USAGE:
   casper experiments [--only IDs] [--quick] [--steps N] [--jobs N]
-                     [--spu-threads N] [--out-dir DIR] [--config FILE]
+                     [--spu-threads N] [--temporal-block T]
+                     [--out-dir DIR] [--config FILE]
                      [--kernel-file FILE]... [--extended-kernels]
                      [--kernels id1,id2] [--keep-going | --fail-fast]
                      [--cell-timeout SECS] [--retries N] [--backoff-ms N]
                      [--resume FILE] [--inject-faults SPEC]
                      [--events FILE] [--metrics-out FILE] [--progress]
       Regenerate the paper's tables/figures. IDs: fig1 fig10 fig11 fig12
-      fig13 fig14 table4 table5 table6 slices (comma-separated; default:
-      the paper's nine). --jobs N runs the sweep on N worker threads
-      (default: all hardware threads; 1 = serial). --spu-threads N
+      fig13 fig14 table4 table5 table6 slices blocked (comma-separated;
+      default: the paper's nine). --jobs N runs the sweep on N worker
+      threads (default: all hardware threads; 1 = serial). --spu-threads N
       additionally parallelizes INSIDE each Casper cell (default 1 here —
       the sweep already fans out across cells). Reports are byte-identical
-      at any combination. The kernel set defaults to the paper's six;
+      at any combination. --temporal-block T runs every Casper cell
+      temporally blocked (T wavefronts resident per LLC slice, halos
+      recomputed instead of re-fetched; grids are bitwise identical to
+      T=1, traffic counters drop); fig1 gains blocked companion points
+      and `--only blocked` tabulates the avoided traffic per cell. The
+      kernel set defaults to the paper's six;
       --extended-kernels adds the built-in extras, --kernel-file adds
       TOML-defined kernels, --kernels selects an exact id list.
       Supervision: every cell runs panic-isolated with --retries N
@@ -213,12 +227,17 @@ USAGE:
       machine-readable sweep summary; --progress keeps a live
       done/failed/ETA line on stderr.
   casper run --kernel ID --level {l2|llc|dram} [--steps N]
-             [--spu-threads N] [--config FILE] [--kernel-file FILE]...
-             [--trace FILE] [--trace-interval N]
+             [--spu-threads N] [--temporal-block T] [--config FILE]
+             [--kernel-file FILE]... [--trace FILE] [--trace-interval N]
       Run one stencil on Casper + all baselines and print the comparison.
       ID may be any registry kernel: preset, extended, or file-defined.
       --spu-threads N runs the 16 SPUs epoch-parallel on N workers
       (default: one per SPU; 1 = the serial engine; identical results).
+      --temporal-block T keeps T wavefronts resident per LLC slice:
+      the final grid (and its digest) is bitwise identical to T=1 while
+      avoided line fills and halo-recompute counters are reported (and
+      attributed in the --trace output). Kernels with a `reduction` spec
+      print the fused per-step reduction values in either mode.
       --trace FILE writes a Chrome-trace JSON (load in chrome://tracing
       or https://ui.perfetto.dev): per-SPU and pass spans plus per-slice
       LLC bandwidth / hit-rate / DRAM / NoC counter samples every
@@ -329,6 +348,7 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 "steps",
                 "jobs",
                 "spu-threads",
+                "temporal-block",
                 "out-dir",
                 "config",
                 "kernel-file",
@@ -386,6 +406,7 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 events: rest.get("events").map(PathBuf::from),
                 metrics_out: rest.get("metrics-out").map(PathBuf::from),
                 progress: rest.has("progress"),
+                temporal_block: parse_temporal_block(&rest)?,
             })
         }
         "run" => {
@@ -394,6 +415,7 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 "level",
                 "steps",
                 "spu-threads",
+                "temporal-block",
                 "config",
                 "kernel-file",
                 "trace",
@@ -416,6 +438,7 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 kernel_files: kernel_file_flags(&rest),
                 trace: rest.get("trace").map(PathBuf::from),
                 trace_interval: parse_trace_interval(&rest)?,
+                temporal_block: parse_temporal_block(&rest)?,
             })
         }
         "kernels" => {
@@ -490,6 +513,23 @@ fn parse_spu_threads(args: &Args) -> Result<Option<usize>, CliError> {
                 flag: "spu-threads",
                 value: s.to_string(),
                 must: "must be an integer >= 1",
+            }),
+        },
+    }
+}
+
+/// `--temporal-block T`: wavefronts kept resident per LLC slice
+/// (default 1 = plain chaining). Halo-vs-domain validation happens at
+/// dispatch time, where the kernel and level are known.
+fn parse_temporal_block(args: &Args) -> Result<usize, CliError> {
+    match args.get("temporal-block") {
+        None => Ok(1),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(CliError::BadNumber {
+                flag: "temporal-block",
+                value: s.to_string(),
+                must: "must be an integer >= 1 (wavefronts per block)",
             }),
         },
     }
@@ -721,8 +761,35 @@ mod tests {
                 kernel_files: Vec::new(),
                 trace: None,
                 trace_interval: 1024,
+                temporal_block: 1,
             }
         );
+    }
+
+    #[test]
+    fn parses_temporal_block_flag() {
+        match parse(&argv("run --kernel jacobi2d --level llc --temporal-block 4")).unwrap() {
+            Command::Run { temporal_block, .. } => assert_eq!(temporal_block, 4),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("experiments --temporal-block 2 --only blocked")).unwrap() {
+            Command::Experiments { temporal_block, only, .. } => {
+                assert_eq!(temporal_block, 2);
+                assert_eq!(only, vec![Experiment::Blocked]);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Default is 1 on both commands.
+        match parse(&argv("experiments")).unwrap() {
+            Command::Experiments { temporal_block, .. } => assert_eq!(temporal_block, 1),
+            other => panic!("{other:?}"),
+        }
+        let err =
+            parse(&argv("run --kernel jacobi2d --level llc --temporal-block 0")).unwrap_err();
+        assert_eq!(err.name(), "bad-number");
+        assert!(parse(&argv("experiments --temporal-block x")).is_err());
+        // The flag belongs to run/experiments only.
+        assert!(parse(&argv("kernels --temporal-block 2")).is_err());
     }
 
     #[test]

@@ -46,6 +46,13 @@ pub struct CasperOptions {
     /// Rounds per epoch in the parallel engine (bounds trace memory;
     /// results are independent of the value).
     pub epoch_rounds: usize,
+    /// Temporal block depth `T` (`--temporal-block`): the sweep keeps `T`
+    /// wavefronts resident per slice, so only every `T`-th step probes
+    /// the LLC tags / DRAM — intermediate steps recompute halos instead
+    /// of re-fetching them. `1` (the default) is plain chaining. The
+    /// functional step sequence is unchanged, so the final grid is
+    /// bitwise identical for every `T` (pinned by test).
+    pub temporal_block: usize,
 }
 
 impl Default for CasperOptions {
@@ -56,6 +63,7 @@ impl Default for CasperOptions {
             seed: 0xCA5_9E12,
             spu_threads: default_spu_threads(),
             epoch_rounds: epoch::DEFAULT_EPOCH_ROUNDS,
+            temporal_block: 1,
         }
     }
 }
@@ -171,6 +179,13 @@ pub fn run_casper_spec_traced(
     // identical to the historical single `build` — same program, same
     // execution path, byte-identical results.
     let passes = ProgramBuilder::build_passes(desc)?;
+    // Temporal blocking grows the effective halo to radius·T per axis;
+    // reject blocks the domain cannot host before allocating anything.
+    let t_block = opts.temporal_block;
+    anyhow::ensure!(t_block >= 1, "temporal block must be >= 1 (got {t_block})");
+    if t_block > 1 {
+        desc.validate_blocked(domain, t_block)?;
+    }
     let mut rt = CasperRuntime::new(cfg);
     rt.mem.unaligned_hw = opts.unaligned_hw;
 
@@ -213,6 +228,15 @@ pub fn run_casper_spec_traced(
     let runs = interior_runs(desc, domain);
 
     let mut cycles_done = 0u64;
+    // Temporal-block bookkeeping: the linear-element dependency radius
+    // (for the analytic halo-recompute counter) and the per-step fused
+    // reduction values.
+    let [rrx, rry, rrz] = desc.radius();
+    let r_lin = rrx as u64
+        + rry as u64 * domain.nx as u64
+        + rrz as u64 * (domain.nx * domain.ny) as u64;
+    let mut halo_recompute_cells = 0u64;
+    let mut reduction_values: Vec<f64> = Vec::new();
     // The work partition depends only on the A/B layout parity (the block
     // decomposition of B repeats every two steps as the arrays ping-pong),
     // so compute it at most twice and reuse across all time steps —
@@ -221,6 +245,23 @@ pub fn run_casper_spec_traced(
     for step in 0..steps {
         let parts: &Vec<Vec<Chunk>> = parts_cache[step & 1]
             .get_or_insert_with(|| partition(&runs, &layout, &rt.mem.mapper, cfg.spu.count));
+
+        // Wavefront residency (temporal blocking): the first step of each
+        // block streams through the LLC normally; the following T−1 steps
+        // operate on wavefronts already held in the slices, so every tag
+        // probe is served without a fill — both engines resolve probes
+        // through the same `SliceState` seam, so the avoided-fill
+        // accounting is engine-identical by construction.
+        let resident = t_block > 1 && step % t_block != 0;
+        rt.mem.llc.set_wavefront_resident(resident);
+        if resident {
+            // Halo recompute (analytic): each SPU-chunk cut recomputes
+            // `2 · r_lin` extra cells per step of depth into the block
+            // instead of exchanging them.
+            let total_chunks: u64 = parts.iter().map(|p| p.len() as u64).sum();
+            let n_cuts = total_chunks.saturating_sub(runs.len() as u64);
+            halo_recompute_cells += 2 * r_lin * n_cuts * (step % t_block) as u64;
+        }
 
         // The passes of the plan run back-to-back within the step: pass 0
         // writes partial sums into B, each later pass re-reads its own
@@ -285,8 +326,11 @@ pub fn run_casper_spec_traced(
             let mut done = cycles_done;
             let finishes: Vec<(usize, u64)> =
                 rt.spus.iter().map(|s| (s.slice, s.finish_time())).collect();
+            // A fused-reduction pass carries the SPU's partial scalar in
+            // its completion message, doubling the payload (8 → 16 B).
+            let payload: u64 = if pass.reduce.is_some() { 16 } else { 8 };
             for &(slice, t) in &finishes {
-                done = done.max(rt.mem.noc.send(slice, 0, 8, t));
+                done = done.max(rt.mem.noc.send(slice, 0, payload, t));
             }
             cycles_done = done;
 
@@ -313,6 +357,18 @@ pub fn run_casper_spec_traced(
         // accelerator's critical path — see DESIGN.md §5).
         patch_boundary(&mut rt, desc, domain, &layout);
 
+        // Fused reduction (ISA bit 15): the leader combines the per-SPU
+        // partials in deterministic `(round, spu, seq)` order, which is
+        // architected to equal a linear element-order fold over the full
+        // output array — the same fold the golden two-pass reference uses,
+        // so fused and two-pass values are bitwise identical.
+        if let Some(r) = desc.reduction {
+            let n = domain.points();
+            let out = rt.mem.store.read_slice(layout.b_addr(0), n);
+            let inp = rt.mem.store.read_slice(layout.a_addr(0), n);
+            reduction_values.push(crate::stencil::golden::reduce_arrays(r.op, inp, out));
+        }
+
         layout = layout.swapped();
     }
 
@@ -336,6 +392,7 @@ pub fn run_casper_spec_traced(
     let mut slice_dram_reads = Vec::with_capacity(cfg.llc.slices);
     let mut slice_dram_writes = Vec::with_capacity(cfg.llc.slices);
     let mut slice_port_grants = Vec::with_capacity(cfg.llc.slices);
+    let mut slice_avoided_fills = Vec::with_capacity(cfg.llc.slices);
     for s in 0..cfg.llc.slices {
         let bank = rt.mem.llc.bank(s);
         slice_remote_reqs.push(bank.remote_reqs);
@@ -344,6 +401,7 @@ pub fn run_casper_spec_traced(
         // Warm-up touches tags only, never ports, so the grant count is
         // exactly the measured region's data-array accesses.
         slice_port_grants.push(bank.port.grants);
+        slice_avoided_fills.push(bank.avoided_fills);
     }
     let trace = rt.mem.trace.take();
     let stats = RunStats {
@@ -361,6 +419,12 @@ pub fn run_casper_spec_traced(
         slice_dram_reads,
         slice_dram_writes,
         slice_port_grants,
+        temporal_block: t_block,
+        slice_avoided_fills,
+        halo_recompute_cells,
+        reduction: desc
+            .reduction
+            .map(|r| super::metrics::ReductionResult { op: r.op, values: reduction_values }),
         output,
     };
     Ok((stats, trace))
@@ -814,6 +878,7 @@ mod tests {
                 flat.extend_from_slice(&b.slice_hits);
                 flat.extend_from_slice(&b.slice_misses);
                 flat.extend_from_slice(&b.chan_bytes);
+                flat.extend_from_slice(&b.slice_avoided);
                 flat.push(b.dram_queue_cycles);
                 flat.push(b.noc_messages);
                 flat.push(b.noc_contention_cycles);
@@ -821,6 +886,215 @@ mod tests {
             per_engine.push(flat);
         }
         assert_eq!(per_engine[0], per_engine[1], "bucketed telemetry diverged across engines");
+    }
+
+    #[test]
+    fn temporal_blocking_keeps_the_grid_bitwise_and_avoids_fills() {
+        // The temporal-block contract: the functional step sequence is
+        // unchanged, so the final grid is bitwise identical for every T —
+        // on both engines — while the wavefront-residency model records
+        // avoided LLC fills on every non-leading step of a block.
+        let cfg = SimConfig::default();
+        for kind in [StencilKind::Jacobi1D, StencilKind::Jacobi2D, StencilKind::Heat3D] {
+            let d = Domain::tiny(kind);
+            let base = run_casper_with(
+                &cfg,
+                kind,
+                &d,
+                4,
+                CasperOptions { spu_threads: 1, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(base.temporal_block, 1);
+            assert_eq!(base.avoided_fills(), 0, "{kind}: T=1 must avoid nothing");
+            assert_eq!(base.halo_recompute_cells, 0, "{kind}");
+            for t in [2usize, 3] {
+                let serial = run_casper_with(
+                    &cfg,
+                    kind,
+                    &d,
+                    4,
+                    CasperOptions { spu_threads: 1, temporal_block: t, ..Default::default() },
+                )
+                .unwrap();
+                let tag = format!("{kind} T={t}");
+                assert_eq!(serial.temporal_block, t, "{tag}");
+                assert!(
+                    serial.output.data.iter().zip(&base.output.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{tag}: blocked grid diverged bitwise from T=1 chaining"
+                );
+                assert!(serial.avoided_fills() > 0, "{tag}: resident steps must avoid fills");
+                // Both engines agree on every blocked counter too.
+                let par = run_casper_with(
+                    &cfg,
+                    kind,
+                    &d,
+                    4,
+                    CasperOptions { spu_threads: 16, temporal_block: t, ..Default::default() },
+                )
+                .unwrap();
+                assert_eq!(serial, par, "{tag}: full RunStats identity across engines");
+                assert_eq!(serial.digest(), par.digest(), "{tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_run_recomputes_halos_at_chunk_cuts() {
+        // An L2-sized 1D sweep spans 8 output blocks, so the single
+        // interior run is cut 7 ways — every resident step charges
+        // 2·r_lin cells per cut to the halo-recompute counter.
+        let cfg = SimConfig::default();
+        let kind = StencilKind::Jacobi1D;
+        let d = Domain::for_level(kind, SizeClass::L2);
+        let blocked = run_casper_with(
+            &cfg,
+            kind,
+            &d,
+            4,
+            CasperOptions { temporal_block: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert!(blocked.halo_recompute_cells > 0, "chunk cuts must recompute halo cells");
+        let plain =
+            run_casper_with(&cfg, kind, &d, 4, CasperOptions::default()).unwrap();
+        assert_eq!(plain.halo_recompute_cells, 0);
+        assert!(
+            blocked.output.data.iter().zip(&plain.output.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "blocked grid diverged bitwise from chaining"
+        );
+        // And the engine's grid matches the banded golden oracle bitwise
+        // (Jacobi 1D taps are in program order).
+        let input = d.alloc_random(CasperOptions::default().seed);
+        let want = golden::run_blocked(&kind.descriptor(), &input, 4, 4, 3);
+        assert!(
+            blocked.output.data.iter().zip(&want.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "engine diverged bitwise from golden::run_blocked"
+        );
+    }
+
+    #[test]
+    fn temporal_blocking_cuts_dram_line_fills_at_least_2x() {
+        // The acceptance criterion: a bandwidth-bound sweep (working set
+        // 2× the LLC) at --temporal-block 4 must cut traced DRAM line
+        // fills ≥ 2× vs --temporal-block 1, with bitwise-identical grids.
+        let mut cfg = SimConfig::default();
+        cfg.llc.slice_bytes = 8 * 1024; // 16 slices × 8 kB = 128 kB LLC
+        let kind = StencilKind::Jacobi2D;
+        let d = Domain::new(256, 64, 1); // two 128 kB arrays = 2× the LLC
+        let mut fills = Vec::new();
+        let mut reads = Vec::new();
+        let mut outs = Vec::new();
+        for t in [1usize, 4] {
+            let opts = CasperOptions { temporal_block: t, ..Default::default() };
+            let tracer = Box::new(Tracer::new(&cfg, 4096));
+            let (stats, tr) =
+                run_casper_spec_traced(&cfg, &kind.spec(), &d, 4, opts, Some(tracer)).unwrap();
+            let tr = tr.expect("tracer handed back");
+            fills.push(tr.dram_lines_total());
+            reads.push(stats.slice_dram_reads.iter().sum::<u64>());
+            if t > 1 {
+                assert!(stats.avoided_fills() > 0, "T={t}: no avoided fills recorded");
+                assert_eq!(tr.avoided_total(), stats.avoided_fills(), "T={t}");
+            }
+            outs.push(stats.output);
+        }
+        assert!(fills[0] > 0, "T=1 must hit DRAM on a 2x-LLC working set");
+        assert!(
+            fills[1] * 2 <= fills[0],
+            "traced DRAM line fills must drop >= 2x: T=1 {} vs T=4 {}",
+            fills[0],
+            fills[1]
+        );
+        assert!(
+            reads[1] * 2 <= reads[0],
+            "slice DRAM read shares must drop >= 2x: T=1 {} vs T=4 {}",
+            reads[0],
+            reads[1]
+        );
+        assert!(
+            outs[0].data.iter().zip(&outs[1].data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "blocked grid diverged bitwise from chaining"
+        );
+    }
+
+    #[test]
+    fn fused_reduction_matches_golden_two_pass_bitwise() {
+        // A Jacobi-style residual kernel runs as ONE fused pass per step
+        // (no extra reduction pass), and its per-step values are bitwise
+        // the golden two-pass reference's — on both engines.
+        let cfg = SimConfig::default();
+        let res = crate::stencil::extended_presets()
+            .into_iter()
+            .find(|s| s.id.as_str() == "jacobi2d_res")
+            .expect("jacobi2d_res preset");
+        let d = res.tiny_domain();
+        let opts = CasperOptions::default();
+        let stats = run_casper_spec(&cfg, &res, &d, 3, opts).unwrap();
+        assert_eq!(stats.passes, 1, "fused reduction must not add a pass");
+        let r = stats.reduction.as_ref().expect("reduction result");
+        assert_eq!(r.op, crate::isa::ReduceOp::AbsDiff);
+        assert_eq!(r.values.len(), 3, "one value per step");
+        let input = d.alloc_random(opts.seed);
+        let (want_grid, want_vals) = golden::run_reduced(&res, &input, 3);
+        assert!(
+            r.values.iter().zip(&want_vals).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "fused values diverged bitwise from the two-pass reference: {:?} vs {want_vals:?}",
+            r.values
+        );
+        assert!(
+            stats.output.data.iter().zip(&want_grid.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "residual kernel grid diverged bitwise from golden"
+        );
+        // Engine identity holds with the 16-byte reduce completion
+        // messages in play.
+        let par = run_casper_spec(
+            &cfg,
+            &res,
+            &d,
+            3,
+            CasperOptions { spu_threads: 16, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(stats, par, "full RunStats identity across engines");
+        // The reduce payload is architecturally visible: a plain Jacobi 2D
+        // run of the same shape moves fewer NoC payload bytes, yet the
+        // residual grid is bitwise the plain kernel's.
+        let plain =
+            run_casper_spec(&cfg, &StencilKind::Jacobi2D.spec(), &d, 3, opts).unwrap();
+        assert!(plain.reduction.is_none());
+        assert!(
+            stats.output.data.iter().zip(&plain.output.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "the residual kernel must compute exactly Jacobi 2D"
+        );
+    }
+
+    #[test]
+    fn blocked_halo_too_big_for_domain_is_rejected() {
+        let cfg = SimConfig::default();
+        let kind = StencilKind::Jacobi2D;
+        let d = Domain::tiny(kind); // 32×16: T=8 grows the y-halo past ny
+        let err = run_casper_with(
+            &cfg,
+            kind,
+            &d,
+            1,
+            CasperOptions { temporal_block: 8, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("temporally blocked halo"),
+            "unexpected error: {err:#}"
+        );
+        let err0 = run_casper_with(
+            &cfg,
+            kind,
+            &d,
+            1,
+            CasperOptions { temporal_block: 0, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err0.to_string().contains("temporal block must be >= 1"), "{err0:#}");
     }
 
     #[test]

@@ -293,16 +293,19 @@ pub(crate) fn drain_slice_requests(
 }
 
 /// Apply one message to the bank — the same access sequence the serial
-/// path runs inline.
+/// path runs inline. Routed through [`SliceState::tag_access`] /
+/// [`SliceState::tag_access_second`] so temporal-block wavefront
+/// residency (and its avoided-fill accounting) applies identically in
+/// both engines.
 fn apply_tag_req(bank: &mut SliceState, r: &TagReq, way_limit: usize) -> TagOut {
     if r.line1 != NO_LINE {
         // §4.1 merged dual-tag access: first line is the data access, the
         // second a tag-only match.
-        let o0 = bank.cache.access_ways(r.line0, false, way_limit);
-        let o1 = bank.cache.access_second_tag(r.line1, way_limit);
+        let o0 = bank.tag_access(r.line0, false, way_limit);
+        let o1 = bank.tag_access_second(r.line1, way_limit);
         TagOut::pair(o0, o1)
     } else {
-        TagOut::single(bank.cache.access_ways(r.line0, r.write, way_limit))
+        TagOut::single(bank.tag_access(r.line0, r.write, way_limit))
     }
 }
 
@@ -360,6 +363,25 @@ mod tests {
         let outs = drain_slice_requests(&mut bank, &reqs, 16);
         assert!(!outs[0][0].hit[0] && !outs[0][0].hit[1], "both lines cold-missed");
         assert!(outs[0][1].hit[0], "second tag line was installed");
+    }
+
+    #[test]
+    fn resident_bank_avoids_fills_and_installs_nothing() {
+        // Temporal blocking: a wavefront-resident bank serves every
+        // message as an avoided fill — no tag install, no writeback —
+        // through the same drain path the live engine uses.
+        let mut bank = SliceState::new(128, 2, 64);
+        bank.wavefront_resident = true;
+        let reqs = vec![vec![
+            req(0, 0x40),
+            TagReq { round: 1, line0: 0x80, line1: 0xC0, write: false },
+        ]];
+        let outs = drain_slice_requests(&mut bank, &reqs, 2);
+        assert!(outs[0][0].hit[0] && outs[0][0].avoided[0]);
+        assert!(outs[0][1].avoided[0] && outs[0][1].avoided[1]);
+        assert_eq!(outs[0][1].wb, [NO_LINE, NO_LINE]);
+        assert_eq!(bank.avoided_fills, 3);
+        assert!(!bank.cache.probe(0x40), "resident drain must not install tags");
     }
 
     #[test]

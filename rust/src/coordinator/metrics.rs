@@ -1,8 +1,17 @@
 //! Run statistics shared by the Casper and baseline models.
 
+use crate::isa::ReduceOp;
 use crate::mem::cache::CacheStats;
 use crate::spu::SpuStats;
 use crate::stencil::Grid;
+
+/// Per-step scalars produced by a kernel's fused reduction (one value per
+/// time step, in step order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReductionResult {
+    pub op: ReduceOp,
+    pub values: Vec<f64>,
+}
 
 /// Result of a full Casper run (all time steps).
 #[derive(Debug, Clone, PartialEq)]
@@ -35,6 +44,17 @@ pub struct RunStats {
     /// one line per grant, `grants × line_bytes` is the slice's data
     /// bandwidth — the counter behind the peak-LLC-bandwidth claim).
     pub slice_port_grants: Vec<u64>,
+    /// Temporal block depth the run executed with (1 = plain chaining).
+    pub temporal_block: usize,
+    /// Per-slice LLC line fills avoided by temporal-block wavefront
+    /// residency (slice order; all zero at `temporal_block == 1`).
+    pub slice_avoided_fills: Vec<u64>,
+    /// Analytic count of halo cells a blocked sweep recomputes at chunk
+    /// cuts instead of re-fetching (0 at `temporal_block == 1`).
+    pub halo_recompute_cells: u64,
+    /// Per-step fused-reduction values, when the kernel carries a
+    /// `[reduction]` section.
+    pub reduction: Option<ReductionResult>,
     /// Functional result grid.
     pub output: Grid,
 }
@@ -85,6 +105,26 @@ impl RunStats {
         imbalance(&self.slice_port_grants)
     }
 
+    /// Total LLC line fills avoided by temporal-block wavefront residency.
+    pub fn avoided_fills(&self) -> u64 {
+        self.slice_avoided_fills.iter().sum()
+    }
+
+    /// FNV-1a digest of the functional result alone (dims + every output
+    /// bit). Unlike [`RunStats::digest`] this is invariant across
+    /// `--temporal-block` depths — blocking moves traffic counters but
+    /// never the grid — so CI compares these across T values.
+    pub fn grid_digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.mix(self.output.nx as u64);
+        h.mix(self.output.ny as u64);
+        h.mix(self.output.nz as u64);
+        for &v in &self.output.data {
+            h.mix(v.to_bits());
+        }
+        h.0
+    }
+
     /// Order-stable FNV-1a digest of every counter and every output bit.
     /// The determinism tests compare these across `--spu-threads` values:
     /// serial and epoch-parallel runs must produce identical digests.
@@ -130,10 +170,23 @@ impl RunStats {
             &self.slice_dram_reads,
             &self.slice_dram_writes,
             &self.slice_port_grants,
+            &self.slice_avoided_fills,
         ] {
             h.mix(v.len() as u64);
             for &x in v.iter() {
                 h.mix(x);
+            }
+        }
+        h.mix(self.temporal_block as u64);
+        h.mix(self.halo_recompute_cells);
+        match &self.reduction {
+            None => h.mix(0),
+            Some(r) => {
+                h.mix(r.op.discriminant());
+                h.mix(r.values.len() as u64);
+                for &v in &r.values {
+                    h.mix(v.to_bits());
+                }
             }
         }
         h.mix(self.output.nx as u64);
@@ -183,6 +236,10 @@ mod tests {
             slice_dram_reads: vec![1, 1, 1, 1],
             slice_dram_writes: vec![0, 0, 0, 0],
             slice_port_grants: vec![8, 8, 8, 16],
+            temporal_block: 1,
+            slice_avoided_fills: vec![0, 0, 0, 0],
+            halo_recompute_cells: 0,
+            reduction: None,
             output: Grid::random(8, 4, 1, 7),
         }
     }
@@ -203,6 +260,31 @@ mod tests {
         let mut e = stats();
         e.slice_port_grants[0] += 1;
         assert_ne!(a.digest(), e.digest(), "port-grant change must move the digest");
+        let mut f = stats();
+        f.temporal_block = 4;
+        assert_ne!(a.digest(), f.digest(), "temporal block must move the digest");
+        assert_eq!(
+            a.grid_digest(),
+            f.grid_digest(),
+            "grid digest ignores counters: it must be invariant across T"
+        );
+        let mut f2 = stats();
+        f2.output.data[0] += 1e-15;
+        assert_ne!(a.grid_digest(), f2.grid_digest(), "but it tracks every output ULP");
+        let mut g = stats();
+        g.slice_avoided_fills[2] += 1;
+        assert_ne!(a.digest(), g.digest(), "avoided-fill change must move the digest");
+        let mut h = stats();
+        h.halo_recompute_cells = 7;
+        assert_ne!(a.digest(), h.digest(), "halo recompute must move the digest");
+        let mut r = stats();
+        r.reduction = Some(ReductionResult { op: ReduceOp::AbsDiff, values: vec![0.5, 0.25] });
+        assert_ne!(a.digest(), r.digest(), "reduction values must move the digest");
+        let mut r2 = stats();
+        r2.reduction = Some(ReductionResult { op: ReduceOp::Sum, values: vec![0.5, 0.25] });
+        assert_ne!(r.digest(), r2.digest(), "reduction op must move the digest");
+        assert_eq!(r.avoided_fills(), 0);
+        assert_eq!(g.avoided_fills(), 1);
     }
 
     #[test]

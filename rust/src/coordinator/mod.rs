@@ -23,4 +23,4 @@ pub use engine::{
     CasperOptions,
 };
 pub use layout::SegmentLayout;
-pub use metrics::{imbalance, RunStats};
+pub use metrics::{imbalance, ReductionResult, RunStats};

@@ -148,6 +148,19 @@ fn body_of(r: &Record) -> String {
             push_vec(&mut s, &stats.slice_dram_reads);
             push_vec(&mut s, &stats.slice_dram_writes);
             push_vec(&mut s, &stats.slice_port_grants);
+            push_u64s(&mut s, &[stats.temporal_block as u64, stats.halo_recompute_cells]);
+            push_vec(&mut s, &stats.slice_avoided_fills);
+            // Reduction: op discriminant (0 = none), then the per-step
+            // values as raw f64 bits — exact, so the recomputed digest on
+            // resume matches the recorded one.
+            match &stats.reduction {
+                None => push_u64s(&mut s, &[0]),
+                Some(r) => {
+                    push_u64s(&mut s, &[r.op.discriminant()]);
+                    let bits: Vec<u64> = r.values.iter().map(|v| v.to_bits()).collect();
+                    push_vec(&mut s, &bits);
+                }
+            }
             push_u64s(
                 &mut s,
                 &[stats.output.nx as u64, stats.output.ny as u64, stats.output.nz as u64],
@@ -247,6 +260,18 @@ fn decode_body(body: &str) -> Option<Record> {
             let slice_dram_reads = next_vec(&mut it)?;
             let slice_dram_writes = next_vec(&mut it)?;
             let slice_port_grants = next_vec(&mut it)?;
+            let temporal_block = next_usize(&mut it)?;
+            let halo_recompute_cells = next_u64(&mut it)?;
+            let slice_avoided_fills = next_vec(&mut it)?;
+            let reduction = match next_u64(&mut it)? {
+                0 => None,
+                d => {
+                    let op = crate::isa::ReduceOp::from_discriminant(d)?;
+                    let values: Vec<f64> =
+                        next_vec(&mut it)?.into_iter().map(f64::from_bits).collect();
+                    Some(crate::coordinator::ReductionResult { op, values })
+                }
+            };
             let nx = next_usize(&mut it)?;
             let ny = next_usize(&mut it)?;
             let nz = next_usize(&mut it)?;
@@ -272,6 +297,10 @@ fn decode_body(body: &str) -> Option<Record> {
                     slice_dram_reads,
                     slice_dram_writes,
                     slice_port_grants,
+                    temporal_block,
+                    slice_avoided_fills,
+                    halo_recompute_cells,
+                    reduction,
                     // The grid data is not persisted (no builder reads
                     // it); the recorded digest carries the run identity.
                     output: Grid::zeros(nx, ny, nz),
@@ -431,11 +460,30 @@ mod tests {
             slice_dram_reads: vec![4, 5, 6],
             slice_dram_writes: vec![7, 8, 9],
             slice_port_grants: vec![10, 11, 12],
+            temporal_block: 1,
+            slice_avoided_fills: vec![0, 0, 0],
+            halo_recompute_cells: 0,
+            reduction: None,
             output: Grid::zeros(4, 3, 2),
         };
         stats.spu.local_loads = 10;
         let digest = stats.digest();
         Record::Casper { id: "jacobi2d".into(), level: SizeClass::Llc, digest, stats }
+    }
+
+    fn sample_blocked_reduced() -> Record {
+        let Record::Casper { id, level, mut stats, .. } = sample_casper() else {
+            unreachable!()
+        };
+        stats.temporal_block = 4;
+        stats.slice_avoided_fills = vec![13, 14, 15];
+        stats.halo_recompute_cells = 96;
+        stats.reduction = Some(crate::coordinator::ReductionResult {
+            op: crate::isa::ReduceOp::AbsDiff,
+            values: vec![0.5, 0.25, 1.0 / 3.0],
+        });
+        let digest = stats.digest();
+        Record::Casper { id, level, digest, stats }
     }
 
     fn sample_cpu() -> Record {
@@ -479,6 +527,35 @@ mod tests {
         assert_roundtrips(&sample_casper());
         assert_roundtrips(&sample_cpu());
         assert_roundtrips(&sample_ablation());
+        assert_roundtrips(&sample_blocked_reduced());
+    }
+
+    #[test]
+    fn blocked_and_reduced_counters_survive_exactly() {
+        // The f64 reduction values persist as raw bits, so the digest
+        // recomputed from a resumed record matches the recorded one.
+        let r = sample_blocked_reduced();
+        let line = encode_record(&r);
+        let Record::Casper { digest: d0, stats: s0, .. } = r else {
+            panic!("expected a Casper record");
+        };
+        let Some(Record::Casper { digest, stats, .. }) = decode_line(&line) else {
+            panic!("line should decode to a Casper record");
+        };
+        assert_eq!(digest, d0);
+        assert_eq!(stats.temporal_block, s0.temporal_block);
+        assert_eq!(stats.slice_avoided_fills, s0.slice_avoided_fills);
+        assert_eq!(stats.halo_recompute_cells, s0.halo_recompute_cells);
+        assert_eq!(stats.reduction, s0.reduction, "reduction values must be bit-exact");
+        // A corrupt reduction op discriminant drops the record body even
+        // if someone re-checksummed it.
+        let body = line.rsplit_once(" ;").unwrap().0;
+        let mut toks: Vec<&str> = body.split_whitespace().collect();
+        // 4 head + 4 scalars + 9 spu + 8 llc + 4 noc/dram + 4×(1+3) vecs
+        // + 2 blocked scalars + (1+3) avoided vec = token 51 is the op.
+        assert_eq!(toks[51], "2", "op discriminant field moved — update the index");
+        toks[51] = "9";
+        assert!(super::decode_body(&toks.join(" ")).is_none());
     }
 
     #[test]

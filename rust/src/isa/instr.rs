@@ -1,6 +1,66 @@
-//! 15-bit Casper instruction: encoding, decoding, and field semantics.
+//! 15-bit Casper instruction: encoding, decoding, and field semantics —
+//! plus the bit-15 *reduce* extension flag (fused stencil–reduction).
 
 use anyhow::{bail, Result};
+
+/// Reduction operator of a fused stencil–reduction pass: the per-SPU
+/// accumulator folds every output element it streams, and the leader
+/// combines the partials in deterministic `(round, spu, seq)` order —
+/// architecturally equal to a fold over the output array in ascending
+/// linear element order, which is exactly how the coordinator (and the
+/// golden two-pass oracle) computes it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Σ out[i] — plain sum of the streamed output.
+    Sum = 1,
+    /// Σ |out[i] − in[i]| — the Jacobi residual norm (L1) between the
+    /// pass's output and its center input.
+    AbsDiff = 2,
+    /// max out[i] — running maximum of the streamed output.
+    Max = 3,
+}
+
+impl ReduceOp {
+    pub const ALL: [ReduceOp; 3] = [ReduceOp::Sum, ReduceOp::AbsDiff, ReduceOp::Max];
+
+    /// TOML / CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::AbsDiff => "abs_diff",
+            ReduceOp::Max => "max",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ReduceOp> {
+        match s {
+            "sum" => Some(ReduceOp::Sum),
+            "abs_diff" => Some(ReduceOp::AbsDiff),
+            "max" => Some(ReduceOp::Max),
+            _ => None,
+        }
+    }
+
+    /// Stable wire/journal discriminant (1-based; 0 is "no reduction").
+    pub fn discriminant(self) -> u64 {
+        self as u64
+    }
+
+    pub fn from_discriminant(d: u64) -> Option<ReduceOp> {
+        match d {
+            1 => Some(ReduceOp::Sum),
+            2 => Some(ReduceOp::AbsDiff),
+            3 => Some(ReduceOp::Max),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ReduceOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Shift direction for unaligned stream accesses (Fig 7 / Fig 9).
 ///
@@ -32,10 +92,16 @@ pub struct CasperInstr {
     pub enable_output: bool,
     /// Control: advance this instruction's stream pointer afterwards.
     pub advance_stream: bool,
+    /// Extension (bit 15, previously reserved): fold the output element
+    /// into the SPU's reduction accumulator as it is stored. Only legal on
+    /// an `enable_output` instruction of a program carrying a
+    /// [`ReduceOp`]; the base 15-bit ISA is unchanged when clear.
+    pub reduce: bool,
 }
 
 impl CasperInstr {
-    /// Width of the wire encoding in bits.
+    /// Width of the base wire encoding in bits (the `reduce` extension
+    /// flag occupies the previously reserved bit 15).
     pub const BITS: u32 = 15;
 
     /// Element offset within the stream's row: `+amount` for left shifts,
@@ -60,16 +126,20 @@ impl CasperInstr {
             clear_acc: false,
             enable_output: false,
             advance_stream: false,
+            reduce: false,
         })
     }
 
-    /// Encode to the 15-bit wire format (packed into a `u16`, MSB unused).
+    /// Encode to the wire format: the base 15 bits, plus bit 15 for the
+    /// `reduce` extension flag (clear for every pre-extension program, so
+    /// legacy encodings are unchanged).
     ///
-    /// Layout (bit 14 down to bit 0):
-    /// `[const:4][stream:4][dir:1][amount:3][clear:1][output:1][advance:1]`
+    /// Layout (bit 15 down to bit 0):
+    /// `[reduce:1][const:4][stream:4][dir:1][amount:3][clear:1][output:1][advance:1]`
     pub fn encode(&self) -> u16 {
         debug_assert!(self.const_idx < 16 && self.stream_idx < 16 && self.shift_amount < 8);
-        ((self.const_idx as u16) << 11)
+        ((self.reduce as u16) << 15)
+            | ((self.const_idx as u16) << 11)
             | ((self.stream_idx as u16) << 7)
             | ((self.shift_dir as u16) << 6)
             | ((self.shift_amount as u16) << 3)
@@ -78,10 +148,16 @@ impl CasperInstr {
             | (self.advance_stream as u16)
     }
 
-    /// Decode from the wire format. Errors if the unused MSB is set.
+    /// Decode from the wire format. Bit 15 (`reduce`) is only legal on an
+    /// `enable_output` instruction — any other bit-15 word stays an error,
+    /// exactly as when the bit was reserved.
     pub fn decode(word: u16) -> Result<CasperInstr> {
-        if word & 0x8000 != 0 {
-            bail!("bit 15 set in Casper instruction word {word:#06x}");
+        let reduce = word & 0x8000 != 0;
+        let enable_output = (word >> 1) & 1 == 1;
+        if reduce && !enable_output {
+            bail!(
+                "bit 15 (reduce) set without enable_output in Casper instruction word {word:#06x}"
+            );
         }
         Ok(CasperInstr {
             const_idx: ((word >> 11) & 0xF) as u8,
@@ -89,14 +165,16 @@ impl CasperInstr {
             shift_dir: if (word >> 6) & 1 == 1 { ShiftDir::Right } else { ShiftDir::Left },
             shift_amount: ((word >> 3) & 0x7) as u8,
             clear_acc: (word >> 2) & 1 == 1,
-            enable_output: (word >> 1) & 1 == 1,
+            enable_output,
             advance_stream: word & 1 == 1,
+            reduce,
         })
     }
 
-    /// Fig 9-style disassembly: `c0, s2, 1, 1, 0, 0, 0`.
+    /// Fig 9-style disassembly: `c0, s2, 1, 1, 0, 0, 0` (reduce-flagged
+    /// instructions append `, R`).
     pub fn disasm(&self) -> String {
-        format!(
+        let base = format!(
             "c{}, s{}, {}, {}, {}, {}, {}",
             self.const_idx,
             self.stream_idx,
@@ -105,7 +183,12 @@ impl CasperInstr {
             self.clear_acc as u8,
             self.enable_output as u8,
             self.advance_stream as u8
-        )
+        );
+        if self.reduce {
+            format!("{base}, R")
+        } else {
+            base
+        }
     }
 }
 
@@ -116,14 +199,17 @@ mod tests {
     use crate::util::SplitMix64;
 
     fn arbitrary(r: &mut SplitMix64) -> CasperInstr {
+        let enable_output = r.chance(0.5);
         CasperInstr {
             const_idx: (r.next_u64() & 0xF) as u8,
             stream_idx: (r.next_u64() & 0xF) as u8,
             shift_dir: if r.chance(0.5) { ShiftDir::Right } else { ShiftDir::Left },
             shift_amount: (r.next_u64() % 8) as u8,
             clear_acc: r.chance(0.5),
-            enable_output: r.chance(0.5),
+            enable_output,
             advance_stream: r.chance(0.5),
+            // The reduce flag is only encodable with enable_output.
+            reduce: enable_output && r.chance(0.5),
         }
     }
 
@@ -136,7 +222,21 @@ mod tests {
 
     #[test]
     fn encoding_fits_15_bits() {
-        testutil::check("15-bit", 2048, arbitrary, |i| i.encode() < (1 << 15));
+        // The base encoding stays 15-bit; only the reduce extension flag
+        // occupies bit 15.
+        testutil::check("15-bit", 2048, arbitrary, |i| {
+            (i.encode() < (1 << 15)) == !i.reduce
+        });
+    }
+
+    #[test]
+    fn reduce_flag_roundtrips_and_marks_disasm() {
+        let mut i = CasperInstr::with_dx(0, 0, 0).unwrap();
+        i.enable_output = true;
+        i.reduce = true;
+        let d = CasperInstr::decode(i.encode()).unwrap();
+        assert_eq!(d, i);
+        assert!(d.disasm().ends_with(", R"));
     }
 
     #[test]
@@ -151,6 +251,7 @@ mod tests {
             clear_acc: true,
             enable_output: false,
             advance_stream: true,
+            reduce: false,
         };
         assert_eq!(i.disasm(), "c0, s1, 0, 0, 1, 0, 1");
         assert_eq!(i.dx(), 0);

@@ -19,5 +19,5 @@
 pub mod instr;
 pub mod program;
 
-pub use instr::{CasperInstr, ShiftDir};
+pub use instr::{CasperInstr, ReduceOp, ShiftDir};
 pub use program::{CasperProgram, PassPlan, ProgramBuilder, StreamSpec};

@@ -23,7 +23,7 @@ use std::ops::Range;
 
 use anyhow::{bail, ensure, Result};
 
-use super::instr::CasperInstr;
+use super::instr::{CasperInstr, ReduceOp};
 use crate::stencil::{RowGroup, StencilDesc};
 
 /// Instruction-buffer capacity of the SPU front-end (Table 2 / §3.3).
@@ -70,6 +70,12 @@ pub struct CasperProgram {
     pub constants: Vec<f64>,
     /// Stream table; index = stream id. Stream 0 is always the output.
     pub streams: Vec<StreamSpec>,
+    /// Fused reduction carried by this pass, if any: the output
+    /// instruction's bit-15 `reduce` flag folds each stored element into
+    /// the SPU's reduction accumulator, and the leader combines the
+    /// partials in `(round, spu, seq)` order. Only the *final* pass of a
+    /// multi-pass plan may carry one (it sees the completed sums).
+    pub reduce: Option<ReduceOp>,
 }
 
 impl CasperProgram {
@@ -175,6 +181,26 @@ impl CasperProgram {
                 .collect();
             if advances.len() != 1 || advances[0] != *consumers.last().unwrap() {
                 bail!("stream s{sid} must be advanced exactly once, by its last consumer");
+            }
+        }
+        // Fused-reduction rules: the bit-15 reduce flag lives exactly on
+        // the output instruction of a program that carries a [`ReduceOp`]
+        // — nowhere else, and never without one.
+        for (n, i) in self.instrs.iter().enumerate() {
+            if i.reduce && !i.enable_output {
+                bail!("instr {n}: reduce flag set without enable_output");
+            }
+        }
+        match self.reduce {
+            Some(op) => {
+                if !self.instrs.last().unwrap().reduce {
+                    bail!("program carries reduction '{op}' but its output instruction lacks the reduce flag");
+                }
+            }
+            None => {
+                if self.instrs.iter().any(|i| i.reduce) {
+                    bail!("reduce-flagged instruction in a program without a reduction op");
+                }
             }
         }
         Ok(())
@@ -355,7 +381,11 @@ impl ProgramBuilder {
                 groups.len() + 1
             );
         }
-        self.emit_pass(&groups, false)
+        let prog = self.emit_pass(&groups, false)?;
+        match desc.reduction {
+            Some(r) => Self::attach_reduction(prog, r.op),
+            None => Ok(prog),
+        }
     }
 
     /// Compile a stencil of any width into its ordered multi-pass plan:
@@ -370,11 +400,30 @@ impl ProgramBuilder {
     pub fn build_passes(desc: &StencilDesc) -> Result<Vec<CasperProgram>> {
         let groups = desc.row_groups();
         let plan = PassPlan::for_groups(&groups)?;
-        plan.passes()
+        let mut progs: Vec<CasperProgram> = plan
+            .passes()
             .iter()
             .enumerate()
             .map(|(pi, r)| ProgramBuilder::new().emit_pass(&groups[r.clone()], pi > 0))
-            .collect()
+            .collect::<Result<_>>()?;
+        if let Some(r) = desc.reduction {
+            // Only the final pass sees the completed sums, so the fused
+            // reduction rides on it — earlier passes stream partials.
+            let last = progs.pop().expect("PassPlan yields at least one pass");
+            progs.push(Self::attach_reduction(last, r.op)?);
+        }
+        Ok(progs)
+    }
+
+    /// Fuse a reduction onto a compiled pass: flag its output instruction
+    /// and record the op. Shared by [`Self::build`] and
+    /// [`Self::build_passes`] so single- and multi-pass plans fuse
+    /// identically.
+    fn attach_reduction(mut prog: CasperProgram, op: ReduceOp) -> Result<CasperProgram> {
+        prog.reduce = Some(op);
+        prog.instrs.last_mut().expect("validated pass is non-empty").reduce = true;
+        prog.validate()?;
+        Ok(prog)
     }
 
     /// Emit one pass over `groups`. `accumulate` prepends the accumulator
@@ -417,7 +466,7 @@ impl ProgramBuilder {
         instrs.first_mut().unwrap().clear_acc = true;
         instrs.last_mut().unwrap().enable_output = true;
 
-        let prog = CasperProgram { instrs, constants: self.constants, streams };
+        let prog = CasperProgram { instrs, constants: self.constants, streams, reduce: None };
         prog.validate()?;
         Ok(prog)
     }
@@ -653,6 +702,72 @@ mod tests {
         // Together the passes cover every tap exactly once (plus 1 accum).
         let taps: usize = passes.iter().map(|p| p.instrs.len()).sum();
         assert_eq!(taps, star.num_points() + 1);
+    }
+
+    #[test]
+    fn reduction_fuses_onto_the_final_pass_only() {
+        // The Jacobi residual preset: same taps as Jacobi2D plus a fused
+        // abs-diff reduction — still ONE pass per step (the acceptance
+        // criterion), with the reduce flag on exactly the output instr.
+        let res = extended_presets()
+            .into_iter()
+            .find(|s| s.id.as_str() == "jacobi2d_res")
+            .expect("jacobi2d_res preset");
+        let passes = ProgramBuilder::build_passes(&res).unwrap();
+        assert_eq!(passes.len(), 1, "fused reduction must not add a pass");
+        let p = &passes[0];
+        assert_eq!(p.reduce, Some(ReduceOp::AbsDiff));
+        assert_eq!(p.instrs.iter().filter(|i| i.reduce).count(), 1);
+        assert!(p.instrs.last().unwrap().reduce);
+        assert_eq!(p, &ProgramBuilder::new().build(&res).unwrap());
+
+        // A wide reduced kernel: only the last of its passes reduces.
+        let mut points = Vec::new();
+        for dy in -20i64..20 {
+            points.push(StencilPoint::new(0, dy, 0, 0.025));
+        }
+        let mut spec = crate::stencil::KernelSpec::new(
+            "wide40r",
+            "wide 40-row reduced",
+            2,
+            points,
+            crate::stencil::KernelOrigin::File,
+        );
+        spec.reduction = Some(crate::stencil::ReductionSpec { op: ReduceOp::Sum });
+        let passes = ProgramBuilder::build_passes(&spec).unwrap();
+        assert_eq!(passes.len(), 3);
+        assert!(passes[..2].iter().all(|p| p.reduce.is_none()));
+        assert_eq!(passes[2].reduce, Some(ReduceOp::Sum));
+        for p in &passes {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_rejects_mismatched_reduce_flags() {
+        let base = ProgramBuilder::new()
+            .build(&StencilKind::Jacobi2D.descriptor())
+            .unwrap();
+
+        // Op recorded but output instruction not flagged.
+        let mut unflagged = base.clone();
+        unflagged.reduce = Some(ReduceOp::Sum);
+        let err = unflagged.validate().unwrap_err().to_string();
+        assert!(err.contains("lacks the reduce flag"), "{err}");
+
+        // Flag set without a recorded op.
+        let mut orphan = base.clone();
+        orphan.instrs.last_mut().unwrap().reduce = true;
+        let err = orphan.validate().unwrap_err().to_string();
+        assert!(err.contains("without a reduction op"), "{err}");
+
+        // Flag on a non-output instruction.
+        let mut misplaced = base.clone();
+        misplaced.reduce = Some(ReduceOp::Max);
+        misplaced.instrs.last_mut().unwrap().reduce = true;
+        misplaced.instrs[0].reduce = true;
+        let err = misplaced.validate().unwrap_err().to_string();
+        assert!(err.contains("without enable_output"), "{err}");
     }
 
     #[test]

@@ -124,6 +124,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             kernel_files,
             trace,
             trace_interval,
+            temporal_block,
         } => {
             let cfg = cli::load_config(config.as_ref())?;
             let reg = cli::build_registry(&kernel_files)?;
@@ -132,7 +133,16 @@ fn dispatch(cmd: Command) -> Result<()> {
             })?;
             // Default: one worker per SPU (the epoch-parallel engine).
             let spu_threads = spu_threads.unwrap_or(cfg.spu.count);
-            run_one(&cfg, &spec, level, steps, spu_threads, trace.as_deref(), trace_interval)
+            run_one(
+                &cfg,
+                &spec,
+                level,
+                steps,
+                spu_threads,
+                temporal_block,
+                trace.as_deref(),
+                trace_interval,
+            )
         }
         Command::Experiments {
             only,
@@ -154,6 +164,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             events,
             metrics_out,
             progress,
+            temporal_block,
         } => {
             let cfg = cli::load_config(config.as_ref())?;
             let registry = cli::build_registry(&kernel_files)?;
@@ -180,14 +191,15 @@ fn dispatch(cmd: Command) -> Result<()> {
             // CASPER_SPU_THREADS can override for CI matrices).
             let spu_threads =
                 spu_threads.unwrap_or_else(casper::coordinator::default_spu_threads);
-            let opts = SweepOptions { quick, steps, jobs, spu_threads };
+            let opts = SweepOptions { quick, steps, jobs, spu_threads, temporal_block };
             eprintln!(
-                "running {} experiment(s) over {} kernel(s), classes: {:?}, jobs: {}, spu-threads: {} ...",
+                "running {} experiment(s) over {} kernel(s), classes: {:?}, jobs: {}, spu-threads: {}, temporal-block: {} ...",
                 only.len(),
                 selected.len(),
                 opts.classes(),
                 opts.jobs,
-                opts.spu_threads
+                opts.spu_threads,
+                opts.temporal_block
             );
             // --inject-faults wins over the CASPER_FAULTS env (the CI
             // matrix sets the env; explicit flags are for local testing).
@@ -346,20 +358,23 @@ fn run_one(
     level: SizeClass,
     steps: usize,
     spu_threads: usize,
+    temporal_block: usize,
     trace: Option<&Path>,
     trace_interval: u64,
 ) -> Result<()> {
     let domain = spec.domain(level);
     println!(
-        "{} @ {} ({} points, {} steps, {} SPU worker thread(s))\n",
+        "{} @ {} ({} points, {} steps, {} SPU worker thread(s), temporal block {})\n",
         spec.name,
         domain,
         domain.points(),
         steps,
-        spu_threads
+        spu_threads,
+        temporal_block
     );
 
-    let casper_opts = casper::coordinator::CasperOptions { spu_threads, ..Default::default() };
+    let casper_opts =
+        casper::coordinator::CasperOptions { spu_threads, temporal_block, ..Default::default() };
     let tracer = trace.map(|_| Box::new(Tracer::new(cfg, trace_interval)));
     let (casper_stats, tracer) =
         run_casper_spec_traced(cfg, spec, &domain, steps, casper_opts, tracer)?;
@@ -380,14 +395,33 @@ fn run_one(
         casper_stats.cycles as f64 / gpu as f64,
     );
     println!(
-        "run digest {:016x} | {} accelerator pass(es) per step",
+        "run digest {:016x} | grid digest {:016x} | {} accelerator pass(es) per step",
         casper_stats.digest(),
+        casper_stats.grid_digest(),
         casper_stats.passes
     );
     if casper_stats.passes > 1 {
         println!(
             "multi-pass plan: {} accelerator passes per step (kernel wider than one program's envelope)",
             casper_stats.passes
+        );
+    }
+    // Temporal-blocking traffic accounting (all zero at T=1); the grid
+    // digest above is T-invariant, which is exactly what CI asserts.
+    if casper_stats.temporal_block > 1 {
+        println!(
+            "temporal block {}: {} LLC line fills avoided | {} halo cells recomputed at chunk cuts",
+            casper_stats.temporal_block,
+            casper_stats.avoided_fills(),
+            casper_stats.halo_recompute_cells,
+        );
+    }
+    if let Some(r) = &casper_stats.reduction {
+        let vals: Vec<String> = r.values.iter().map(|v| format!("{v:.6e}")).collect();
+        println!(
+            "fused reduction ({}, no extra pass): per-step values [{}]",
+            r.op.name(),
+            vals.join(", ")
         );
     }
     let ce = casper_energy(cfg, &casper_stats);
@@ -443,6 +477,13 @@ fn run_one(
             tr.samples(),
             tr.interval(),
             path.display()
+        );
+        // The CI temporal-blocking leg greps these: blocked line fills
+        // must be <= the unblocked run's at an identical grid digest.
+        print!(
+            "\ntrace: DRAM line fills {} | avoided fills {}",
+            tr.dram_lines_total(),
+            tr.avoided_total()
         );
         if let Some((peak, mean)) = tr.llc_utilization_peak_mean() {
             let at = tr.peak_bucket().unwrap_or(0) as u64 * tr.interval();

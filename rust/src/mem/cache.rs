@@ -55,6 +55,11 @@ pub struct AccessOutcome {
     /// The hit consumed a line a prefetcher installed (first demand touch
     /// of a prefetched line — it still cost a fill into this level).
     pub prefetch_hit: bool,
+    /// The access was served by temporal-block wavefront residency
+    /// (see `SliceState::wavefront_resident`): no tag probe, no possible
+    /// line fill. Always a hit; the tracer attributes these separately so
+    /// avoided DRAM fills stay visible in the cycle-domain trace.
+    pub avoided: bool,
 }
 
 /// Per-way metadata flag bits (see [`Cache::flags`]).
@@ -184,7 +189,7 @@ impl Cache {
                 self.stats.read_hits += 1;
             }
             self.flags[idx] = fl;
-            return AccessOutcome { hit: true, writeback: None, prefetch_hit };
+            return AccessOutcome { hit: true, writeback: None, prefetch_hit, avoided: false };
         }
 
         // Miss: allocate (write-allocate policy) in the LRU way within the
@@ -195,7 +200,7 @@ impl Cache {
             self.stats.read_misses += 1;
         }
         let writeback = self.fill_way(base + victim, line, write, false);
-        AccessOutcome { hit: false, writeback, prefetch_hit: false }
+        AccessOutcome { hit: false, writeback, prefetch_hit: false, avoided: false }
     }
 
     /// State-updating access that does NOT count a hit — used for the
@@ -245,11 +250,11 @@ impl Cache {
             self.stamps[idx] = self.clock;
             let prefetch_hit = self.flags[idx] & FLAG_PREFETCHED != 0;
             self.flags[idx] &= !FLAG_PREFETCHED;
-            return AccessOutcome { hit: true, writeback: None, prefetch_hit };
+            return AccessOutcome { hit: true, writeback: None, prefetch_hit, avoided: false };
         }
         self.stats.read_misses += 1;
         let writeback = self.fill_way(base + victim, line, false, false);
-        AccessOutcome { hit: false, writeback, prefetch_hit: false }
+        AccessOutcome { hit: false, writeback, prefetch_hit: false, avoided: false }
     }
 
     /// Fill a line without a demand access (prefetch). Never counted as a

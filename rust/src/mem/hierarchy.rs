@@ -114,9 +114,12 @@ impl SlicedLlc {
 
     /// Tag access on a slice (no port accounting — callers that model
     /// bandwidth call [`claim_port`](Self::claim_port) themselves).
+    /// Routed through [`SliceState::tag_access`] so temporal-block
+    /// wavefront residency applies identically in both engines.
     #[inline]
     pub fn access(&mut self, slice: usize, addr: u64, write: bool) -> super::cache::AccessOutcome {
-        self.banks[slice].cache.access_ways(addr, write, self.way_limit)
+        let way_limit = self.way_limit;
+        self.banks[slice].tag_access(addr, write, way_limit)
     }
 
     pub fn probe(&self, slice: usize, addr: u64) -> bool {
@@ -126,7 +129,24 @@ impl SlicedLlc {
     /// Second tag match of a merged unaligned access (§4.1) — state
     /// updates and real misses, but no double-counted hit.
     pub fn access_second_tag(&mut self, slice: usize, addr: u64) -> super::cache::AccessOutcome {
-        self.banks[slice].cache.access_second_tag(addr, self.way_limit)
+        let way_limit = self.way_limit;
+        self.banks[slice].tag_access_second(addr, way_limit)
+    }
+
+    /// Raise/clear the temporal-block residency flag on every slice (see
+    /// [`SliceState::wavefront_resident`]). Called by the coordinator at
+    /// step boundaries; the flag travels with the banks through
+    /// [`take_banks`](Self::take_banks), so the epoch-parallel engine sees
+    /// the same state.
+    pub fn set_wavefront_resident(&mut self, resident: bool) {
+        for b in &mut self.banks {
+            b.wavefront_resident = resident;
+        }
+    }
+
+    /// Tag probes served by wavefront residency, per slice.
+    pub fn avoided_fills(&self) -> Vec<u64> {
+        self.banks.iter().map(|b| b.avoided_fills).collect()
     }
 
     pub fn prefetch_fill(&mut self, slice: usize, addr: u64) -> Option<u64> {

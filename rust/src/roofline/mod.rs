@@ -87,6 +87,31 @@ pub fn roofline_specs(
         .collect()
 }
 
+/// Arithmetic intensity with temporal blocking folded in: a block of `t`
+/// steps moves each grid byte across DRAM once but computes `t` sweeps
+/// over it, so the operating point slides right by a factor of `t`. (Halo
+/// recomputation at block edges only *adds* FLOPs at the same traffic —
+/// this first-order fold ignores it, understating the blocked AI.)
+pub fn blocked_ai(ai: f64, t: usize) -> f64 {
+    ai * t.max(1) as f64
+}
+
+/// A kernel's blocked operating point on the same machine roofs: AI × T,
+/// labelled `"<name> (T=<t>)"` — the Fig 1 companion point for a
+/// `--temporal-block` sweep. No measured value attaches (the CPU baseline
+/// does not run blocked).
+pub fn blocked_point(cfg: &SimConfig, spec: &KernelSpec, t: usize) -> RooflinePoint {
+    let m = Machine::of(cfg);
+    let ai = blocked_ai(spec.arithmetic_intensity(), t);
+    RooflinePoint {
+        name: format!("{} (T={t})", spec.name),
+        ai,
+        dram_bound: m.attainable(ai, m.dram_bw),
+        llc_bound: m.attainable(ai, m.llc_bw),
+        measured: None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +152,22 @@ mod tests {
         let cfg = SimConfig::default();
         let pts = roofline(&cfg, Some(&[10.0, 20.0, 30.0, 40.0, 50.0, 60.0]));
         assert_eq!(pts[2].measured, Some(30.0e9));
+    }
+
+    #[test]
+    fn blocked_point_moves_right_along_the_dram_roof() {
+        // Temporal blocking multiplies AI by T; left of the DRAM knee the
+        // attainable FLOP/s scale with it, and at T=1 nothing moves.
+        let cfg = SimConfig::default();
+        let spec = StencilKind::Jacobi2D.descriptor();
+        let base = blocked_point(&cfg, &spec, 1);
+        assert!((base.ai - spec.arithmetic_intensity()).abs() < 1e-12);
+        let b4 = blocked_point(&cfg, &spec, 4);
+        assert!((b4.ai - 4.0 * base.ai).abs() < 1e-12);
+        assert!(b4.name.ends_with("(T=4)"), "{}", b4.name);
+        assert!(b4.ai < Machine::of(&cfg).dram_knee(), "stays bandwidth-bound");
+        assert!((b4.dram_bound - 4.0 * base.dram_bound).abs() < 1.0);
+        assert_eq!(blocked_ai(0.125, 0), 0.125, "T=0 clamps to 1");
+        assert!(b4.measured.is_none());
     }
 }

@@ -113,17 +113,26 @@ pub const NO_LINE: u64 = u64::MAX;
 pub struct TagOut {
     pub hit: [bool; 2],
     pub wb: [u64; 2],
+    /// Served by temporal-block wavefront residency (an avoided fill) —
+    /// carried so the epoch replay attributes it exactly as the serial
+    /// path does.
+    pub avoided: [bool; 2],
 }
 
 impl TagOut {
     pub fn single(o: AccessOutcome) -> TagOut {
-        TagOut { hit: [o.hit, true], wb: [o.writeback.unwrap_or(NO_LINE), NO_LINE] }
+        TagOut {
+            hit: [o.hit, true],
+            wb: [o.writeback.unwrap_or(NO_LINE), NO_LINE],
+            avoided: [o.avoided, false],
+        }
     }
 
     pub fn pair(o0: AccessOutcome, o1: AccessOutcome) -> TagOut {
         TagOut {
             hit: [o0.hit, o1.hit],
             wb: [o0.writeback.unwrap_or(NO_LINE), o1.writeback.unwrap_or(NO_LINE)],
+            avoided: [o0.avoided, o1.avoided],
         }
     }
 }
@@ -302,22 +311,22 @@ impl ShardedMem {
         let start = self.llc.claim_port(slice, arrive);
         let mut data_at = start + self.spu_local_latency;
         let queue0 = self.dram.queue_cycles;
-        let (mut hits, mut misses) = (0u32, 0u32);
+        let (mut hits, mut misses, mut avoided) = (0u32, 0u32, 0u32);
         let mut dram_lines = [0u64; 4];
         let mut n_dram = 0usize;
         for (k, &line) in lines.iter().enumerate() {
             // A merged access is ONE data-array access with a dual tag
             // match: only the first line counts as the access.
-            let (hit, wb) = match pre {
+            let (hit, wb, avd) = match pre {
                 None => {
                     let out = if k == 0 {
                         self.llc.access(slice, line, false)
                     } else {
                         self.llc.access_second_tag(slice, line)
                     };
-                    (out.hit, out.writeback.unwrap_or(NO_LINE))
+                    (out.hit, out.writeback.unwrap_or(NO_LINE), out.avoided)
                 }
-                Some(o) => (o.hit[k], o.wb[k]),
+                Some(o) => (o.hit[k], o.wb[k], o.avoided[k]),
             };
             if !hit {
                 misses += 1;
@@ -333,13 +342,15 @@ impl ShardedMem {
                     n_dram += 1;
                 }
                 data_at = data_at.max(done);
+            } else if avd {
+                avoided += 1;
             } else {
                 hits += 1;
             }
         }
         if let Some(tr) = self.trace.as_deref_mut() {
             let dq = self.dram.queue_cycles - queue0;
-            tr.slice_request(slice, start, hits, misses, &dram_lines[..n_dram], dq, remote);
+            tr.slice_request(slice, start, hits, misses, avoided, &dram_lines[..n_dram], dq, remote);
         }
         // Response traversal back.
         if remote {
@@ -368,13 +379,13 @@ impl ShardedMem {
             t
         };
         let start = self.llc.claim_port(slice, arrive);
-        let (hit, wb) = match pre {
+        let (hit, wb, avd) = match pre {
             None => {
                 let line = addr & !(self.llc_cfg.line_bytes as u64 - 1);
                 let out = self.llc.access(slice, line, true);
-                (out.hit, out.writeback.unwrap_or(NO_LINE))
+                (out.hit, out.writeback.unwrap_or(NO_LINE), out.avoided)
             }
-            Some(o) => (o.hit[0], o.wb[0]),
+            Some(o) => (o.hit[0], o.wb[0], o.avoided[0]),
         };
         let queue0 = self.dram.queue_cycles;
         let mut dram_lines = [0u64; 4];
@@ -397,8 +408,8 @@ impl ShardedMem {
         }
         if let Some(tr) = self.trace.as_deref_mut() {
             let dq = self.dram.queue_cycles - queue0;
-            let (h, m) = if hit { (1, 0) } else { (0, 1) };
-            tr.slice_request(slice, start, h, m, &dram_lines[..n_dram], dq, remote);
+            let (h, m, a) = if avd { (0, 0, 1) } else if hit { (1, 0, 0) } else { (0, 1, 0) };
+            tr.slice_request(slice, start, h, m, a, &dram_lines[..n_dram], dq, remote);
         }
         done
     }
@@ -482,6 +493,35 @@ mod tests {
         );
         let tr = traced.trace.take().unwrap();
         assert!(tr.samples() > 0, "hooks recorded the requests");
+    }
+
+    #[test]
+    fn resident_requests_avoid_dram_and_stay_injectable() {
+        // Temporal blocking: with the wavefront flag raised, a cold pair
+        // of lines is served without DRAM traffic, the avoided fills are
+        // counted, and injected replay matches direct resolution cycle
+        // for cycle (the engine-identity contract).
+        let cfg = SimConfig::default();
+        let mut a = ShardedMem::new(&cfg, MappingPolicy::StencilSegment);
+        a.llc.set_wavefront_resident(true);
+        let lines = [0x1000_0000u64, 0x1000_0040];
+        let o0 = a.llc.access(3, lines[0], false);
+        let o1 = a.llc.access_second_tag(3, lines[1]);
+        assert!(o0.avoided && o1.avoided && o0.hit && o1.hit);
+        let pre = TagOut::pair(o0, o1);
+        let direct = {
+            let mut c = ShardedMem::new(&cfg, MappingPolicy::StencilSegment);
+            c.llc.set_wavefront_resident(true);
+            c.load_slice_request(0, 3, &lines, 100, None)
+        };
+        let mut b = ShardedMem::new(&cfg, MappingPolicy::StencilSegment);
+        let replayed = b.load_slice_request(0, 3, &lines, 100, Some(&pre));
+        assert_eq!(direct, replayed);
+        let mut c2 = ShardedMem::new(&cfg, MappingPolicy::StencilSegment);
+        c2.llc.set_wavefront_resident(true);
+        c2.load_slice_request(0, 3, &lines, 100, None);
+        assert_eq!(c2.llc.bank(3).dram_reads, 0, "resident request must not fill");
+        assert_eq!(c2.llc.bank(3).avoided_fills, 2);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! [`SlicedLlc`](crate::mem::hierarchy::SlicedLlc) facade, which keeps the
 //! two execution modes byte-identical.
 
-use crate::mem::cache::Cache;
+use crate::mem::cache::{AccessOutcome, Cache};
 use crate::mem::ratelimit::RateLimiter;
 
 /// One LLC slice's private state: tag/data bank, the single-ported bank
@@ -27,6 +27,16 @@ pub struct SliceState {
     pub dram_reads: u64,
     /// DRAM-queue share: dirty writebacks this slice issued.
     pub dram_writes: u64,
+    /// Temporal blocking (§temporal-block): the wavefront the SPUs are
+    /// consuming this step was produced into this slice on the previous
+    /// inner step and is guaranteed resident, so tag probes are bypassed
+    /// and no line fill can occur. The coordinator raises the flag on
+    /// every inner step of a block (`step % T != 0`) and clears it on
+    /// block boundaries.
+    pub wavefront_resident: bool,
+    /// Tag probes served by wavefront residency — each one a potential
+    /// DRAM line fill the blocked schedule avoided.
+    pub avoided_fills: u64,
 }
 
 impl SliceState {
@@ -37,7 +47,50 @@ impl SliceState {
             remote_reqs: 0,
             dram_reads: 0,
             dram_writes: 0,
+            wavefront_resident: false,
+            avoided_fills: 0,
         }
+    }
+
+    /// Demand tag access through the residency filter: the single seam
+    /// both engines resolve LLC tags through (the serial path via
+    /// [`SlicedLlc`](crate::mem::hierarchy::SlicedLlc), the epoch-parallel
+    /// path via its per-slice reconciliation), so temporal blocking is
+    /// byte-identical across engines by construction.
+    pub fn tag_access(&mut self, addr: u64, write: bool, way_limit: usize) -> AccessOutcome {
+        if self.wavefront_resident {
+            self.avoided_fills += 1;
+            // Stats see a hit (the data is served from the slice); the
+            // `avoided` bit lets the tracer attribute it separately.
+            if write {
+                self.cache.stats.write_hits += 1;
+            } else {
+                self.cache.stats.read_hits += 1;
+            }
+            return AccessOutcome {
+                hit: true,
+                writeback: None,
+                prefetch_hit: false,
+                avoided: true,
+            };
+        }
+        self.cache.access_ways(addr, write, way_limit)
+    }
+
+    /// Second-tag access (merged unaligned pair) through the residency
+    /// filter. Mirrors [`Cache::access_second_tag`]: no hit is counted —
+    /// the merged access's first line carried the access.
+    pub fn tag_access_second(&mut self, addr: u64, way_limit: usize) -> AccessOutcome {
+        if self.wavefront_resident {
+            self.avoided_fills += 1;
+            return AccessOutcome {
+                hit: true,
+                writeback: None,
+                prefetch_hit: false,
+                avoided: true,
+            };
+        }
+        self.cache.access_second_tag(addr, way_limit)
     }
 
     /// Reset tags, port clock, and counters (new run).
@@ -47,6 +100,8 @@ impl SliceState {
         self.remote_reqs = 0;
         self.dram_reads = 0;
         self.dram_writes = 0;
+        self.wavefront_resident = false;
+        self.avoided_fills = 0;
     }
 }
 
@@ -59,6 +114,8 @@ mod tests {
         let s = SliceState::new(2 * 1024 * 1024, 16, 64);
         assert_eq!(s.cache.stats.accesses(), 0);
         assert_eq!((s.remote_reqs, s.dram_reads, s.dram_writes), (0, 0, 0));
+        assert!(!s.wavefront_resident);
+        assert_eq!(s.avoided_fills, 0);
     }
 
     #[test]
@@ -69,9 +126,35 @@ mod tests {
         s.remote_reqs = 3;
         s.dram_reads = 2;
         s.dram_writes = 1;
+        s.wavefront_resident = true;
+        s.avoided_fills = 7;
         s.reset();
         assert!(!s.cache.probe(0x40));
         assert_eq!((s.remote_reqs, s.dram_reads, s.dram_writes), (0, 0, 0));
         assert_eq!(s.port.grants, 0);
+        assert!(!s.wavefront_resident);
+        assert_eq!(s.avoided_fills, 0);
+    }
+
+    #[test]
+    fn resident_access_bypasses_tags_and_counts_avoided() {
+        let mut s = SliceState::new(256, 2, 64);
+        // Normal path: a cold access misses and installs the tag.
+        let o = s.tag_access(0x40, false, 2);
+        assert!(!o.hit && !o.avoided);
+        // Residency: an address never touched hits, counts an avoided
+        // fill, and installs nothing.
+        s.wavefront_resident = true;
+        let o = s.tag_access(0x1000, false, 2);
+        assert!(o.hit && o.avoided && o.writeback.is_none());
+        let o2 = s.tag_access_second(0x2000, 2);
+        assert!(o2.hit && o2.avoided);
+        assert_eq!(s.avoided_fills, 2);
+        assert!(!s.cache.probe(0x1000), "resident access must not install tags");
+        // First access counted a hit in stats; second-tag counted none.
+        assert_eq!(s.cache.stats.read_hits, 1);
+        // Flag off: the same address misses for real again.
+        s.wavefront_resident = false;
+        assert!(!s.tag_access(0x1000, false, 2).hit);
     }
 }

@@ -24,6 +24,7 @@
 //! SPU model's `acc += c * v`.)
 
 use super::{Domain, Grid, KernelSpec, StencilDesc, StencilKind};
+use crate::isa::ReduceOp;
 use crate::util::auto_threads;
 
 /// Apply one stencil step: read `src`, write `dst` (disjoint arrays,
@@ -222,6 +223,130 @@ pub fn run_multipass(desc: &StencilDesc, initial: &Grid, steps: usize) -> Grid {
     a
 }
 
+/// One stencil step restricted to the flattened `(z, y)` row range
+/// `[row_lo, row_hi)` — the building block of the temporal-blocking
+/// oracle [`run_blocked`]. Everything outside the range (and every
+/// boundary point inside it) copies through from `src`, exactly like the
+/// full-step oracles; interior rows inside the range accumulate taps in
+/// the same order as [`step_serial`], so a computed element is bitwise
+/// what the full step would have produced.
+pub fn step_blocked(desc: &StencilDesc, src: &Grid, dst: &mut Grid, row_lo: usize, row_hi: usize) {
+    assert_eq!((src.nx, src.ny, src.nz), (dst.nx, dst.ny, dst.nz), "shape mismatch");
+    let [rx, ry, rz] = desc.radius();
+    let (nx, ny, nz) = (src.nx, src.ny, src.nz);
+    assert!(nx > 2 * rx && ny > 2 * ry && nz > 2 * rz, "domain smaller than halo");
+
+    dst.data.copy_from_slice(&src.data);
+
+    let offs: Vec<(isize, f64)> = desc
+        .points
+        .iter()
+        .map(|p| (src.tap_offset(p.dx, p.dy, p.dz) as isize, p.coef))
+        .collect();
+
+    for row in row_lo..row_hi.min(ny * nz) {
+        let (z, y) = (row / ny, row % ny);
+        if z < rz || z >= nz - rz || y < ry || y >= ny - ry {
+            continue;
+        }
+        let base = row * nx;
+        for x in rx..nx - rx {
+            let i = base + x;
+            let mut acc = 0.0f64;
+            for &(o, c) in &offs {
+                acc += c * src.data[(i as isize + o) as usize];
+            }
+            dst.data[i] = acc;
+        }
+    }
+}
+
+/// The temporal-blocking oracle: `steps` iterations processed in time
+/// blocks of up to `t` steps over `bands` row bands. Within a block each
+/// band advances its own rows `t_blk` steps on private scratch grids,
+/// *recomputing* a halo of `r_row · (t_blk − 1 − s)` extra rows at inner
+/// step `s` instead of exchanging them (`r_row = rz·ny + ry`, the
+/// dependency footprint in flattened row space) — the trapezoid scheme
+/// the Casper engine's `--temporal-block` mode models. The shrinking row
+/// ranges guarantee every element a band keeps is computed from exactly
+/// the values plain chaining would have used, so the result is **bitwise
+/// identical** to [`run`] for every `t` and `bands` (pinned by test).
+pub fn run_blocked(desc: &StencilDesc, initial: &Grid, steps: usize, t: usize, bands: usize) -> Grid {
+    assert!(t >= 1, "temporal block must be >= 1");
+    let (nx, ny, nz) = (initial.nx, initial.ny, initial.nz);
+    let n_rows = ny * nz;
+    let [_, ry, rz] = desc.radius();
+    let r_row = rz * ny + ry;
+    let bands = bands.max(1).min(n_rows);
+    let rows_per_band = n_rows.div_ceil(bands);
+
+    let mut cur = initial.clone();
+    let mut out = initial.clone();
+    let mut done = 0usize;
+    while done < steps {
+        let t_blk = t.min(steps - done);
+        for band in 0..bands {
+            let lo = band * rows_per_band;
+            if lo >= n_rows {
+                break;
+            }
+            let hi = (lo + rows_per_band).min(n_rows);
+            // Private ping-pong scratch seeded from the block input: the
+            // halo rows are *recomputed* here rather than fetched from
+            // neighbouring bands mid-block.
+            let mut a = cur.clone();
+            let mut b = cur.clone();
+            for s in 0..t_blk {
+                let grow = r_row * (t_blk - 1 - s);
+                step_blocked(desc, &a, &mut b, lo.saturating_sub(grow), hi + grow);
+                std::mem::swap(&mut a, &mut b);
+            }
+            out.data[lo * nx..hi * nx].copy_from_slice(&a.data[lo * nx..hi * nx]);
+        }
+        std::mem::swap(&mut cur, &mut out);
+        done += t_blk;
+    }
+    cur
+}
+
+/// Fold an output array (and, for `abs_diff`, its input) into one scalar
+/// in ascending linear element order — the architected semantics of a
+/// fused reduction (the leader's deterministic `(round, spu, seq)`
+/// combining order is exactly this order). Shared by the golden two-pass
+/// reference and the engine, so "bitwise equal" is by construction.
+pub fn reduce_arrays(op: ReduceOp, input: &[f64], output: &[f64]) -> f64 {
+    assert_eq!(input.len(), output.len(), "shape mismatch");
+    match op {
+        ReduceOp::Sum => output.iter().fold(0.0f64, |acc, &v| acc + v),
+        ReduceOp::AbsDiff => output
+            .iter()
+            .zip(input)
+            .fold(0.0f64, |acc, (&o, &i)| acc + (o - i).abs()),
+        ReduceOp::Max => output.iter().fold(f64::NEG_INFINITY, |acc, &v| acc.max(v)),
+    }
+}
+
+/// The two-pass reduction reference: run `steps` iterations, computing
+/// each step's reduction as a *separate* pass over the arrays after the
+/// stencil pass — the unfused baseline the fused engine is pinned
+/// against. Returns the final grid and the per-step reduction values.
+/// `desc` must carry a [`reduction`](KernelSpec::reduction) section.
+pub fn run_reduced(desc: &StencilDesc, initial: &Grid, steps: usize) -> (Grid, Vec<f64>) {
+    let op = desc
+        .reduction
+        .expect("run_reduced needs a kernel with a [reduction] section")
+        .op;
+    let mut a = initial.clone();
+    let mut b = initial.clone();
+    let mut values = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        step(desc, &a, &mut b);
+        values.push(reduce_arrays(op, &a.data, &b.data));
+        std::mem::swap(&mut a, &mut b);
+    }
+    (a, values)
+}
+
 /// Run `steps` Jacobi iterations with array swapping. Returns the final
 /// grid (which is `a` after an even number of steps, `b` after odd).
 pub fn run(desc: &StencilDesc, initial: &Grid, steps: usize) -> Grid {
@@ -348,6 +473,73 @@ mod tests {
             "multi-step pass-split run diverged"
         );
         assert_eq!(run_multipass(&spec, &g, 0), g);
+    }
+
+    #[test]
+    fn blocked_run_is_bitwise_identical_to_chaining() {
+        // The temporal-blocking contract: for every kernel, block depth,
+        // band count, and step count (including steps not divisible by
+        // T), the blocked oracle must equal plain chaining BIT FOR BIT —
+        // halo recomputation is traffic restructuring, not a numerical
+        // scheme change.
+        for k in [StencilKind::Jacobi1D, StencilKind::Jacobi2D, StencilKind::Heat3D] {
+            let desc = k.descriptor();
+            let d = Domain::tiny(k);
+            let g = d.alloc_random(0xB10C);
+            for steps in [1usize, 4, 5] {
+                let want = run(&desc, &g, steps);
+                for t in 1..=4usize {
+                    for bands in [1usize, 3] {
+                        let got = run_blocked(&desc, &g, steps, t, bands);
+                        assert!(
+                            got.data.iter().zip(&want.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "{k}: steps={steps} T={t} bands={bands} diverged bitwise"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduced_run_matches_manual_two_pass() {
+        // The fused-reduction reference: run_reduced's per-step values
+        // must equal a hand-rolled step-then-fold loop bitwise, and the
+        // grid evolution must be untouched by the reduction (jacobi2d_res
+        // shares jacobi2d's taps verbatim).
+        let res = crate::stencil::extended_presets()
+            .into_iter()
+            .find(|s| s.id.as_str() == "jacobi2d_res")
+            .unwrap();
+        let d = res.tiny_domain();
+        let g = d.alloc_random(0x2ED5);
+        let steps = 3;
+        let (grid, values) = run_reduced(&res, &g, steps);
+        assert_eq!(values.len(), steps);
+        assert!(values.iter().all(|v| *v > 0.0), "residual of a random grid is positive");
+        // Residuals shrink as Jacobi smooths.
+        assert!(values[steps - 1] < values[0]);
+        let plain = run(&StencilKind::Jacobi2D.descriptor(), &g, steps);
+        assert_eq!(grid.data, plain.data, "reduction must not perturb the grid");
+        let mut a = g.clone();
+        let mut b = g.clone();
+        for (s, &v) in values.iter().enumerate() {
+            step(&res, &a, &mut b);
+            let want: f64 =
+                a.data.iter().zip(&b.data).fold(0.0, |acc, (&x, &y)| acc + (y - x).abs());
+            assert_eq!(v.to_bits(), want.to_bits(), "step {s}");
+            std::mem::swap(&mut a, &mut b);
+        }
+    }
+
+    #[test]
+    fn reduce_array_ops() {
+        let input = [1.0f64, 2.0, 3.0];
+        let output = [4.0f64, 1.0, 5.0];
+        assert_eq!(reduce_arrays(ReduceOp::Sum, &input, &output), 10.0);
+        assert_eq!(reduce_arrays(ReduceOp::AbsDiff, &input, &output), 3.0 + 1.0 + 2.0);
+        assert_eq!(reduce_arrays(ReduceOp::Max, &input, &output), 5.0);
+        assert_eq!(reduce_arrays(ReduceOp::Max, &[], &[]), f64::NEG_INFINITY);
     }
 
     #[test]

@@ -23,10 +23,11 @@
 //!
 //! Beyond the paper, [`spec::extended_presets`] ships `hdiff` (NERO-style
 //! horizontal diffusion), `star25_3d` (25-point high-order anisotropic 3D
-//! star), and `star17_3d` (the isotropic radius-4 star whose 17 rows
+//! star), `star17_3d` (the isotropic radius-4 star whose 17 rows
 //! exceed the stream buffer — it compiles as a 2-pass plan, see
-//! `docs/KERNELS.md`), and user kernels load from TOML files — see
-//! DESIGN.md, "Kernel registry".
+//! `docs/KERNELS.md`), and `jacobi2d_res` (Jacobi 2D with a fused
+//! `abs_diff` residual reduction), and user kernels load from TOML
+//! files — see DESIGN.md, "Kernel registry".
 
 pub mod domain;
 pub mod golden;
@@ -38,7 +39,8 @@ use std::sync::{Arc, OnceLock};
 pub use domain::Domain;
 pub use grid::Grid;
 pub use spec::{
-    extended_presets, KernelId, KernelOrigin, KernelRegistry, KernelSpec, RowGroup, StencilPoint,
+    extended_presets, KernelId, KernelOrigin, KernelRegistry, KernelSpec, ReductionSpec, RowGroup,
+    StencilPoint,
 };
 
 /// Historical name for a kernel's compute pattern; the spec now carries

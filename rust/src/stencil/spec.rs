@@ -30,6 +30,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::config::toml_mini::TomlDoc;
 use crate::config::SizeClass;
+use crate::isa::instr::ReduceOp;
 use crate::isa::program::{PassPlan, MAX_SHIFT};
 
 use super::domain::table3;
@@ -93,6 +94,16 @@ impl StencilPoint {
     }
 }
 
+/// Fused reduction attached to a kernel: after each step the kernel also
+/// yields one scalar ([`ReduceOp`] over the output grid), folded by the
+/// SPUs as they stream the output and combined by the leader in
+/// deterministic `(round, spu, seq)` order — no extra pass, no extra
+/// DRAM traffic (see `docs/KERNELS.md`, "Fused reductions").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReductionSpec {
+    pub op: ReduceOp,
+}
+
 /// Taps sharing one row (same `dy`,`dz`): a single Casper stream.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RowGroup {
@@ -115,6 +126,9 @@ pub struct KernelSpec {
     /// Domains in `[L2, LLC, DRAM]` order (see [`SizeClass::index`]).
     pub domains: [Domain; 3],
     pub origin: KernelOrigin,
+    /// Optional fused reduction: the final compiled pass of every step
+    /// also folds the output grid into one scalar (`[reduction]` in TOML).
+    pub reduction: Option<ReductionSpec>,
 }
 
 impl KernelSpec {
@@ -134,6 +148,7 @@ impl KernelSpec {
             points,
             domains: default_domains(dims),
             origin,
+            reduction: None,
         }
     }
 
@@ -345,6 +360,23 @@ impl KernelSpec {
         Ok(())
     }
 
+    /// Validate a temporal block of `t` steps against `domain`: blocking
+    /// recomputes halos instead of re-fetching them, so the *effective*
+    /// halo a sweep needs grows to `radius · t` per axis — the boundary
+    /// copy-through still needs a non-empty interior beyond it.
+    pub fn validate_blocked(&self, domain: &Domain, t: usize) -> Result<()> {
+        let id = self.id.as_str();
+        ensure!(t >= 1, "kernel '{id}': temporal block must be >= 1 (got {t})");
+        let [rx, ry, rz] = self.radius();
+        let grown = |r: usize| 2usize.saturating_mul(r).saturating_mul(t);
+        ensure!(
+            domain.nx > grown(rx) && domain.ny > grown(ry) && domain.nz > grown(rz),
+            "kernel '{id}': domain {domain} smaller than the temporally blocked halo \
+             (radius [{rx},{ry},{rz}] x T={t})"
+        );
+        Ok(())
+    }
+
     /// Parse a spec from a TOML-subset file (see `to_toml_string` for the
     /// format, and `examples/kernels/hdiff9.toml` for a worked example).
     pub fn from_file(path: &Path) -> Result<KernelSpec> {
@@ -371,6 +403,9 @@ impl KernelSpec {
     /// dx = 0                 # omitted offsets default to 0
     /// dy = 0
     /// coef = 0.2
+    ///
+    /// [reduction]            # optional: fused per-step reduction
+    /// op = "abs_diff"        # sum | abs_diff | max
     /// ```
     pub fn from_toml_str(text: &str) -> Result<KernelSpec> {
         let doc = TomlDoc::parse(text)?;
@@ -418,6 +453,11 @@ impl KernelSpec {
                     parse_domain(&s).with_context(|| format!("bad {key}"))?;
             }
         }
+        if let Some(op) = doc.get_str("reduction.op")? {
+            let op = ReduceOp::parse(&op)
+                .with_context(|| format!("bad reduction.op '{op}' (use sum | abs_diff | max)"))?;
+            spec.reduction = Some(ReductionSpec { op });
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -437,6 +477,10 @@ impl KernelSpec {
         let _ = writeln!(out, "l2 = \"{}\"", self.domains[0]);
         let _ = writeln!(out, "llc = \"{}\"", self.domains[1]);
         let _ = writeln!(out, "dram = \"{}\"", self.domains[2]);
+        if let Some(r) = &self.reduction {
+            let _ = writeln!(out, "\n[reduction]");
+            let _ = writeln!(out, "op = \"{}\"", r.op);
+        }
         for (i, p) in self.points.iter().enumerate() {
             let _ = writeln!(out, "\n[tap-{i}]");
             let _ = writeln!(out, "dx = {}", p.dx);
@@ -594,8 +638,12 @@ pub(super) fn paper_preset(kind: StencilKind) -> KernelSpec {
 ///   express it — it compiles as a 2-pass plan
 ///   ([`KernelSpec::pass_plan`]), the kernel class multi-pass compilation
 ///   exists for.
+/// - `jacobi2d_res`: the paper's Jacobi 2D with a fused `abs_diff`
+///   reduction — the L1 residual a convergence loop tests — computed in
+///   the same single pass (the kernel class fused stencil–reduction
+///   pipelines exist for).
 pub fn extended_presets() -> Vec<KernelSpec> {
-    vec![hdiff_preset(), star25_preset(), star17_preset()]
+    vec![hdiff_preset(), star25_preset(), star17_preset(), jacobi2d_res_preset()]
 }
 
 fn hdiff_preset() -> KernelSpec {
@@ -659,6 +707,19 @@ fn star17_preset() -> KernelSpec {
         pts.push(StencilPoint::new(0, 0, dz, arm(dz)));
     }
     KernelSpec::new("star17_3d", "17-row 3D star", 3, pts, KernelOrigin::Extended)
+}
+
+fn jacobi2d_res_preset() -> KernelSpec {
+    // The paper's Jacobi 2D taps, verbatim, plus a fused L1-residual
+    // reduction (Σ|out − in|): the convergence-test iteration pattern.
+    // Same taps → same compiled MAC sequence → the grid evolution is
+    // bit-identical to `jacobi2d`; only the reduction rides along.
+    let mut spec = paper_preset(StencilKind::Jacobi2D);
+    spec.id = KernelId::new("jacobi2d_res");
+    spec.name = "Jacobi 2D residual".to_string();
+    spec.origin = KernelOrigin::Extended;
+    spec.reduction = Some(ReductionSpec { op: ReduceOp::AbsDiff });
+    spec
 }
 
 /// The open kernel registry: presets plus user-loaded TOML specs, looked
@@ -776,6 +837,12 @@ mod tests {
         let plan = iso.pass_plan().unwrap();
         assert!(plan.is_multi_pass());
         assert_eq!(plan.num_passes(), 2);
+        // The residual preset: Jacobi 2D taps verbatim + fused abs-diff.
+        let res = &ext[3];
+        assert_eq!(res.id.as_str(), "jacobi2d_res");
+        assert_eq!(res.points, StencilKind::Jacobi2D.descriptor().points);
+        assert_eq!(res.reduction, Some(ReductionSpec { op: ReduceOp::AbsDiff }));
+        assert_eq!(res.pass_plan().unwrap().num_passes(), 1);
     }
 
     #[test]
@@ -897,7 +964,42 @@ mod tests {
             assert_eq!(parsed.points, spec.points, "{k}");
             assert_eq!(parsed.domains, spec.domains, "{k}");
             assert_eq!(parsed.origin, KernelOrigin::File);
+            assert_eq!(parsed.reduction, None, "{k}");
+            assert!(!spec.to_toml_string().contains("[reduction]"), "{k}");
         }
+    }
+
+    #[test]
+    fn toml_roundtrip_reduction() {
+        let res = extended_presets()
+            .into_iter()
+            .find(|s| s.id.as_str() == "jacobi2d_res")
+            .unwrap();
+        let text = res.to_toml_string();
+        assert!(text.contains("[reduction]"), "{text}");
+        assert!(text.contains("op = \"abs_diff\""), "{text}");
+        let parsed = KernelSpec::from_toml_str(&text).unwrap();
+        assert_eq!(parsed.reduction, res.reduction);
+        assert_eq!(parsed.points, res.points);
+        // An unknown op spelling is rejected with the valid spellings.
+        let bad = text.replace("abs_diff", "l2norm");
+        let err = format!("{:#}", KernelSpec::from_toml_str(&bad).unwrap_err());
+        assert!(err.contains("sum | abs_diff | max"), "{err}");
+    }
+
+    #[test]
+    fn blocked_halo_validation() {
+        let spec = StencilKind::Jacobi2D.descriptor();
+        let d = Domain::new(16, 16, 1);
+        spec.validate_blocked(&d, 1).unwrap();
+        spec.validate_blocked(&d, 7).unwrap(); // effective halo 2·1·7 = 14 < 16
+        let err = spec.validate_blocked(&d, 8).unwrap_err().to_string();
+        assert!(err.contains("temporally blocked halo"), "{err}");
+        assert!(spec.validate_blocked(&d, 0).is_err());
+        // 1D kernels are unconstrained along y/z no matter how big T is.
+        let j1 = StencilKind::Jacobi1D.descriptor();
+        j1.validate_blocked(&Domain::new(256, 1, 1), 100).unwrap();
+        assert!(j1.validate_blocked(&Domain::new(256, 1, 1), 128).is_err());
     }
 
     #[test]
@@ -926,7 +1028,7 @@ mod tests {
     #[test]
     fn registry_lookup_and_duplicates() {
         let mut reg = KernelRegistry::builtin();
-        assert_eq!(reg.specs().len(), 9);
+        assert_eq!(reg.specs().len(), 10);
         assert_eq!(reg.get("jacobi2d").unwrap().name, "Jacobi 2D");
         assert_eq!(reg.resolve("Jacobi 2D").unwrap().id.as_str(), "jacobi2d");
         assert_eq!(reg.resolve("jacobi-2d").unwrap().id.as_str(), "jacobi2d");

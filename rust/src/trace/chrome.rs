@@ -166,6 +166,19 @@ impl Tracer {
                 )?;
             }
 
+            // Temporal blocking: probes served by wavefront residency
+            // (avoided DRAM fills). Only emitted when present, so T=1
+            // traces keep their historical track set.
+            let avoided = b.slice_avoided.iter().sum::<u64>();
+            if avoided > 0 {
+                counter_event(
+                    &mut ev,
+                    "llc avoided fills",
+                    ts,
+                    &[("avoided".to_string(), avoided.to_string())],
+                )?;
+            }
+
             let dram: Vec<(String, String)> = (0..self.channel_count())
                 .map(|c| (format!("d{c}"), b.chan_bytes[c].to_string()))
                 .collect();
@@ -411,8 +424,8 @@ mod tests {
     #[test]
     fn emitted_trace_is_valid_json_with_expected_tracks() {
         let mut t = Tracer::new(&SimConfig::default(), 64);
-        t.slice_request(0, 10, 3, 1, &[64, 4096], 12, false);
-        t.slice_request(15, 70, 0, 1, &[128], 0, true);
+        t.slice_request(0, 10, 3, 1, 0, &[64, 4096], 12, false);
+        t.slice_request(15, 70, 0, 1, 2, &[128], 0, true);
         t.pass_span(0, 0, 0, 120);
         t.spu_span(0, 0, 0, 5, 90);
         t.spu_span(15, 0, 0, 8, 110);
@@ -423,6 +436,7 @@ mod tests {
         assert!(json.contains("spu 15"));
         assert!(json.contains("step 0 pass 0"));
         assert!(json.contains("llc bw (% of peak)"));
+        assert!(json.contains("llc avoided fills"));
         assert!(json.contains("functional (epoch 0)"));
         assert!(json.contains("\"interval_cycles\":64"));
     }

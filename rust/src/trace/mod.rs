@@ -63,6 +63,9 @@ pub struct Bucket {
     pub slice_hits: Vec<u64>,
     /// Tag-probe misses per slice.
     pub slice_misses: Vec<u64>,
+    /// Tag probes served by temporal-block wavefront residency — each one
+    /// a potential DRAM line fill the blocked schedule avoided.
+    pub slice_avoided: Vec<u64>,
     /// Bytes moved per DRAM channel (miss fills + dirty writebacks).
     pub chan_bytes: Vec<u64>,
     /// DRAM channel-queue waiting cycles accrued by requests in this bucket.
@@ -79,6 +82,7 @@ impl Bucket {
             slice_bytes: vec![0; slices],
             slice_hits: vec![0; slices],
             slice_misses: vec![0; slices],
+            slice_avoided: vec![0; slices],
             chan_bytes: vec![0; channels],
             dram_queue_cycles: 0,
             noc_messages: 0,
@@ -112,15 +116,17 @@ pub struct EpochPhases {
 /// [`Tracer`] is the one in-tree implementation.
 pub trait TraceSink {
     /// One LLC slice request (load or store), observed at its port-claim
-    /// cycle `start`: `hits`/`misses` tag probes, up to four DRAM line
-    /// transfers in `dram_lines`, `queue_delta` DRAM queue-wait cycles,
-    /// and whether the request arrived over the NoC (`remote`).
+    /// cycle `start`: `hits`/`misses` tag probes, `avoided` probes served
+    /// by temporal-block wavefront residency (avoided fills), up to four
+    /// DRAM line transfers in `dram_lines`, `queue_delta` DRAM queue-wait
+    /// cycles, and whether the request arrived over the NoC (`remote`).
     fn slice_request(
         &mut self,
         slice: usize,
         start: u64,
         hits: u32,
         misses: u32,
+        avoided: u32,
         dram_lines: &[u64],
         queue_delta: u64,
         remote: bool,
@@ -278,6 +284,21 @@ impl Tracer {
     pub fn peak_bucket(&self) -> Option<usize> {
         (0..self.buckets.len()).max_by_key(|&i| self.buckets[i].slice_bytes.iter().sum::<u64>())
     }
+
+    /// Total DRAM line transfers recorded across all buckets (miss fills
+    /// plus dirty writebacks) — the traffic a `--temporal-block` run
+    /// shrinks; the CI blocked-vs-unblocked assertion compares this.
+    pub fn dram_lines_total(&self) -> u64 {
+        let bytes: u64 =
+            self.buckets.iter().map(|b| b.chan_bytes.iter().sum::<u64>()).sum();
+        bytes / self.line_bytes
+    }
+
+    /// Total tag probes served by wavefront residency (avoided fills)
+    /// across all buckets.
+    pub fn avoided_total(&self) -> u64 {
+        self.buckets.iter().map(|b| b.slice_avoided.iter().sum::<u64>()).sum()
+    }
 }
 
 impl TraceSink for Tracer {
@@ -287,6 +308,7 @@ impl TraceSink for Tracer {
         start: u64,
         hits: u32,
         misses: u32,
+        avoided: u32,
         dram_lines: &[u64],
         queue_delta: u64,
         remote: bool,
@@ -302,6 +324,7 @@ impl TraceSink for Tracer {
         b.slice_bytes[slice] += line_bytes;
         b.slice_hits[slice] += hits as u64;
         b.slice_misses[slice] += misses as u64;
+        b.slice_avoided[slice] += avoided as u64;
         for &c in &chans[..n] {
             b.chan_bytes[c] += line_bytes;
         }
@@ -354,19 +377,22 @@ mod tests {
     #[test]
     fn requests_land_in_their_cycle_bucket() {
         let mut t = tracer(100);
-        t.slice_request(3, 0, 2, 1, &[64], 5, false);
-        t.slice_request(3, 99, 1, 0, &[], 0, true);
-        t.slice_request(7, 100, 0, 1, &[128, 192], 7, false);
+        t.slice_request(3, 0, 2, 1, 0, &[64], 5, false);
+        t.slice_request(3, 99, 1, 0, 1, &[], 0, true);
+        t.slice_request(7, 100, 0, 1, 0, &[128, 192], 7, false);
         assert_eq!(t.samples(), 2);
         let b0 = &t.buckets()[0];
         assert_eq!(b0.slice_bytes[3], 128); // two 64 B grants
         assert_eq!(b0.slice_hits[3], 3);
         assert_eq!(b0.slice_misses[3], 1);
+        assert_eq!(b0.slice_avoided[3], 1);
         assert_eq!(b0.dram_queue_cycles, 5);
         assert_eq!(b0.noc_messages, 2); // one remote request
         let b1 = &t.buckets()[1];
         assert_eq!(b1.slice_bytes[7], 64);
         assert_eq!(b1.chan_bytes.iter().sum::<u64>(), 128);
+        assert_eq!(t.avoided_total(), 1);
+        assert_eq!(t.dram_lines_total(), 3);
         assert!(!t.clipped());
     }
 
@@ -374,7 +400,7 @@ mod tests {
     fn channel_attribution_is_line_interleaved() {
         let mut t = tracer(10);
         // Lines 0..4 hit channels 0..4 in order (64 B lines, 4 channels).
-        t.slice_request(0, 0, 0, 4, &[0, 64, 128, 192], 0, false);
+        t.slice_request(0, 0, 0, 4, 0, &[0, 64, 128, 192], 0, false);
         let b = &t.buckets()[0];
         assert_eq!(b.chan_bytes, vec![64, 64, 64, 64]);
     }
@@ -382,7 +408,7 @@ mod tests {
     #[test]
     fn tail_folds_into_last_bucket() {
         let mut t = tracer(1);
-        t.slice_request(0, (MAX_BUCKETS as u64) + 5, 1, 0, &[], 0, false);
+        t.slice_request(0, (MAX_BUCKETS as u64) + 5, 1, 0, 0, &[], 0, false);
         assert!(t.clipped());
         assert_eq!(t.samples(), MAX_BUCKETS);
         assert_eq!(t.buckets()[MAX_BUCKETS - 1].slice_bytes[0], 64);
@@ -393,8 +419,8 @@ mod tests {
         let mut t = tracer(2);
         // Two grants on one slice in a 2-cycle bucket = that slice fully
         // busy = 1/16 of aggregate peak.
-        t.slice_request(5, 0, 1, 0, &[], 0, false);
-        t.slice_request(5, 1, 1, 0, &[], 0, false);
+        t.slice_request(5, 0, 1, 0, 0, &[], 0, false);
+        t.slice_request(5, 1, 1, 0, 0, &[], 0, false);
         let u = t.llc_utilization();
         assert_eq!(u.len(), 1);
         assert!((u[0] - 1.0 / 16.0).abs() < 1e-12);

@@ -14,7 +14,13 @@ fn quick_report() -> casper::harness::Report {
     run_experiments(
         &cfg,
         &Experiment::ALL,
-        SweepOptions { quick: true, steps: 1, jobs: casper::harness::auto_jobs(), spu_threads: 1 },
+        SweepOptions {
+            quick: true,
+            steps: 1,
+            jobs: casper::harness::auto_jobs(),
+            spu_threads: 1,
+            temporal_block: 1,
+        },
     )
     .unwrap()
 }

@@ -206,7 +206,7 @@ fn file_kernel_appears_in_experiment_report() {
     let spec = reg.load_file(&example_kernel_path()).unwrap();
     let mut kernels = paper_kernels();
     kernels.push(Arc::clone(&spec));
-    let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
+    let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1, temporal_block: 1 };
     let report = run_experiments_with(&cfg, &[Experiment::Fig10], opts, &kernels).unwrap();
     let t = report.get("fig10").unwrap();
     assert_eq!(t.rows.len(), 7);
@@ -345,7 +345,7 @@ fn wide_file_kernel_appears_in_experiment_report() {
     let spec = reg.load_file(&wide_kernel_path()).unwrap();
     let mut kernels = paper_kernels();
     kernels.push(Arc::clone(&spec));
-    let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1 };
+    let opts = SweepOptions { quick: true, steps: 1, jobs: 2, spu_threads: 1, temporal_block: 1 };
     let report = run_experiments_with(&cfg, &[Experiment::Fig10], opts, &kernels).unwrap();
     let t = report.get("fig10").unwrap();
     let row = t

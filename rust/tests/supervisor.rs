@@ -18,7 +18,7 @@ use casper::trace::chrome::validate_json;
 use casper::trace::EventSink;
 
 fn quick_opts(jobs: usize) -> SweepOptions {
-    SweepOptions { quick: true, steps: 1, jobs, spu_threads: 1 }
+    SweepOptions { quick: true, steps: 1, jobs, spu_threads: 1, temporal_block: 1 }
 }
 
 /// Supervisor policy tuned for tests: no retry sleeps.

@@ -1,0 +1,178 @@
+//! Property tests for temporal blocking and fused stencil+reduce passes:
+//! random (spec, domain, T) triples must keep the final grid bitwise
+//! identical to plain T=1 chaining on both engines, fused reductions must
+//! match the golden two-pass reference bitwise, and halos grown past the
+//! domain must be rejected, not silently mis-simulated.
+
+use casper::config::SimConfig;
+use casper::coordinator::{run_casper_spec, CasperOptions, RunStats};
+use casper::isa::ReduceOp;
+use casper::stencil::{golden, Domain, KernelOrigin, KernelSpec, ReductionSpec, StencilPoint};
+
+/// xorshift64* — deterministic case generation without external crates.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// A random axis-star spec with radius <= 2, taps listed in program order
+/// (rows sorted by (dz, dy), in-row taps by dx) so the engine's
+/// accumulation order matches the golden oracle's tap order and every
+/// comparison below can be bitwise, not approximate.
+fn random_spec(rng: &mut Rng, case: usize) -> KernelSpec {
+    let dims = 1 + rng.below(3) as usize;
+    let r = 1 + rng.below(2) as i64; // radius 1 or 2
+    let mut taps: Vec<(i64, i64, i64)> = vec![(0, 0, 0)];
+    for d in 1..=r {
+        taps.push((-d, 0, 0));
+        taps.push((d, 0, 0));
+        if dims >= 2 && rng.below(2) == 0 {
+            taps.push((0, -d, 0));
+            taps.push((0, d, 0));
+        }
+        if dims == 3 && rng.below(2) == 0 {
+            taps.push((0, 0, -d));
+            taps.push((0, 0, d));
+        }
+    }
+    // Program order: rows by (dz, dy), then dx within the row.
+    taps.sort_by_key(|&(dx, dy, dz)| (dz, dy, dx));
+    let n = taps.len() as f64;
+    let points: Vec<StencilPoint> = taps
+        .into_iter()
+        .map(|(dx, dy, dz)| StencilPoint::new(dx, dy, dz, 1.0 / n))
+        .collect();
+    let id = format!("prop_tb_{case}");
+    KernelSpec::new(&id, &id, dims, points, KernelOrigin::File)
+}
+
+/// A random domain comfortably larger than radius-2 x T=3 halos.
+fn random_domain(rng: &mut Rng, dims: usize) -> Domain {
+    match dims {
+        1 => Domain::new(64 + rng.below(64) as usize, 1, 1),
+        2 => Domain::new(24 + rng.below(16) as usize, 16 + rng.below(8) as usize, 1),
+        _ => Domain::new(
+            16 + rng.below(8) as usize,
+            14 + rng.below(4) as usize,
+            13 + rng.below(3) as usize,
+        ),
+    }
+}
+
+fn run(cfg: &SimConfig, spec: &KernelSpec, d: &Domain, t: usize, threads: usize) -> RunStats {
+    let opts = CasperOptions { spu_threads: threads, temporal_block: t, ..Default::default() };
+    run_casper_spec(cfg, spec, d, 4, opts)
+        .unwrap_or_else(|e| panic!("{} T={t} threads={threads}: {e:#}", spec.id))
+}
+
+#[test]
+fn blocked_grids_are_bitwise_identical_to_chaining_on_both_engines() {
+    let cfg = SimConfig::default();
+    let mut rng = Rng(0xB10C_ED00_9E37_79B9);
+    for case in 0..8 {
+        let spec = random_spec(&mut rng, case);
+        spec.validate().expect("generated spec must be valid");
+        let d = random_domain(&mut rng, spec.dims);
+        let base = run(&cfg, &spec, &d, 1, 1);
+        assert_eq!(base.avoided_fills(), 0, "case {case}: T=1 avoids nothing");
+        assert_eq!(base.halo_recompute_cells, 0, "case {case}");
+        for t in 2..4 {
+            let serial = run(&cfg, &spec, &d, t, 1);
+            let parallel = run(&cfg, &spec, &d, t, 16);
+            assert_eq!(
+                serial.grid_digest(),
+                base.grid_digest(),
+                "case {case} ({} @ {d}): blocked T={t} grid must be bitwise T=1's",
+                spec.id
+            );
+            assert_eq!(serial.output, base.output, "case {case} T={t}");
+            assert_eq!(
+                serial, parallel,
+                "case {case} T={t}: serial and epoch-parallel engines must agree exactly"
+            );
+            assert_eq!(serial.temporal_block, t);
+            assert!(
+                serial.avoided_fills() > 0,
+                "case {case} T={t}: inner steps must avoid LLC fills"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_reductions_match_the_golden_two_pass_reference_bitwise() {
+    let cfg = SimConfig::default();
+    let mut rng = Rng(0xFEED_FACE_CAFE_F00D);
+    let ops = [ReduceOp::Sum, ReduceOp::AbsDiff, ReduceOp::Max];
+    for case in 0..6 {
+        let mut spec = random_spec(&mut rng, 100 + case);
+        spec.reduction = Some(ReductionSpec { op: ops[case % ops.len()] });
+        spec.validate().expect("generated spec must be valid");
+        let d = random_domain(&mut rng, spec.dims);
+        let stats = run(&cfg, &spec, &d, 1, 1);
+        let fused = stats.reduction.as_ref().expect("engine must report the fused reduction");
+        let input = d.alloc_random(CasperOptions::default().seed);
+        let (want_grid, want_vals) = golden::run_reduced(&spec, &input, 4);
+        assert_eq!(fused.op, ops[case % ops.len()]);
+        assert_eq!(
+            fused.values, want_vals,
+            "case {case} ({}): fused values must be bitwise the two-pass reference's",
+            spec.id
+        );
+        assert_eq!(stats.output, want_grid, "case {case}: fused pass must not move the grid");
+        // Fusion adds no pass: the plan is identical to the plain kernel's.
+        let mut plain = spec.clone();
+        plain.reduction = None;
+        let plain_stats = run(&cfg, &plain, &d, 1, 1);
+        assert_eq!(stats.passes, plain_stats.passes, "case {case}: no extra pass for the reduce");
+        assert_eq!(stats.output, plain_stats.output, "case {case}");
+        // And the engines agree on the reduction bitwise too.
+        let par = run(&cfg, &spec, &d, 1, 16);
+        assert_eq!(stats, par, "case {case}: engine identity must cover reduction results");
+    }
+}
+
+#[test]
+fn blocked_halos_larger_than_the_domain_are_rejected() {
+    let cfg = SimConfig::default();
+    let mut rng = Rng(0xDEAD_BEEF_0BAD_F00D);
+    for case in 0..4 {
+        let spec = random_spec(&mut rng, 200 + case);
+        let [rx, ry, rz] = spec.radius();
+        let r = rx.max(ry).max(rz);
+        // A domain that fits the plain halo but not the T=3 one: the
+        // largest axis gets exactly 2*r*3 cells, one short of the bound.
+        let squeeze = 2 * r * 3;
+        let d = match spec.dims {
+            1 => Domain::new(squeeze, 1, 1),
+            2 => Domain::new(squeeze.max(2 * r + 1), squeeze, 1),
+            _ => Domain::new(squeeze.max(2 * r + 1), squeeze.max(2 * r + 1), squeeze),
+        };
+        spec.validate_blocked(&d, 1).expect("plain halo must fit");
+        let err = spec.validate_blocked(&d, 3).expect_err("T=3 halo must not fit");
+        assert!(
+            err.to_string().contains("temporally blocked halo"),
+            "case {case}: {err:#}"
+        );
+        let opts = CasperOptions { temporal_block: 3, ..Default::default() };
+        let run_err = run_casper_spec(&cfg, &spec, &d, 2, opts)
+            .expect_err("the engine must refuse the oversized block");
+        assert!(run_err.to_string().contains("temporally blocked halo"), "{run_err:#}");
+        // T=0 is rejected before any halo math.
+        let zero = CasperOptions { temporal_block: 0, ..Default::default() };
+        let zero_err = run_casper_spec(&cfg, &spec, &d, 1, zero).expect_err("T=0 must error");
+        assert!(zero_err.to_string().contains(">= 1"), "{zero_err:#}");
+    }
+}
