@@ -135,6 +135,43 @@ fn main() {
         "serial and epoch-parallel DRAM cells must be byte-identical"
     );
 
+    // --- pipelined epochs: the same DRAM-class cell at the same thread
+    // count, replay inline (phased) vs overlapped with the next epoch's
+    // fan-out on the dedicated replay worker. The pipeline buys wall
+    // time only — all three digests must coincide.
+    let (phased_stats, st) = measure_stat("engine_casper_jacobi1d_dram_mt_phased", n3, || {
+        run_casper_with(
+            &cfg,
+            StencilKind::Jacobi1D,
+            &dd,
+            1,
+            CasperOptions { spu_threads: mt.max(2), pipeline: false, ..Default::default() },
+        )
+        .expect("phased dram cell")
+    });
+    records.push(st);
+    let (piped_stats, st) = measure_stat("engine_casper_jacobi1d_dram_mt_pipelined", n3, || {
+        run_casper_with(
+            &cfg,
+            StencilKind::Jacobi1D,
+            &dd,
+            1,
+            CasperOptions { spu_threads: mt.max(2), pipeline: true, ..Default::default() },
+        )
+        .expect("pipelined dram cell")
+    });
+    records.push(st);
+    assert_eq!(
+        phased_stats.digest(),
+        piped_stats.digest(),
+        "phased and pipelined epoch engines must be byte-identical"
+    );
+    assert_eq!(
+        serial_stats.digest(),
+        piped_stats.digest(),
+        "pipelined engine must match the serial reference digest"
+    );
+
     // --- temporal blocking: 4-step L2-class Jacobi2D, per-step chaining
     // vs a T=4 block. Same grid bitwise (asserted via the T-invariant
     // grid digest); the blocked run serves inner-step tags from wavefront

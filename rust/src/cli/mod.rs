@@ -10,7 +10,7 @@
 //!                    [--resume FILE] [--inject-faults SPEC]
 //!                    [--events FILE] [--metrics-out FILE] [--progress]
 //! casper run --kernel jacobi2d --level llc [--steps N] [--config FILE]
-//!            [--temporal-block T] [--kernel-file FILE]...
+//!            [--temporal-block T] [--epoch-rounds N] [--kernel-file FILE]...
 //!            [--trace FILE] [--trace-interval N]
 //! casper kernels list [--kernel-file FILE]...
 //! casper kernels show ID [--kernel-file FILE]...
@@ -164,6 +164,10 @@ pub enum Command {
         /// Temporal block depth: T wavefronts stay resident per LLC
         /// slice, halos recomputed instead of re-fetched (default 1).
         temporal_block: usize,
+        /// Rounds per epoch for the epoch-parallel engine (`None` =
+        /// engine default: `CASPER_EPOCH_ROUNDS`, else 2048). Results
+        /// are independent of the value.
+        epoch_rounds: Option<usize>,
     },
     Kernels {
         action: KernelsAction,
@@ -227,12 +231,19 @@ USAGE:
       machine-readable sweep summary; --progress keeps a live
       done/failed/ETA line on stderr.
   casper run --kernel ID --level {l2|llc|dram} [--steps N]
-             [--spu-threads N] [--temporal-block T] [--config FILE]
+             [--spu-threads N] [--temporal-block T] [--epoch-rounds N]
+             [--config FILE]
              [--kernel-file FILE]... [--trace FILE] [--trace-interval N]
       Run one stencil on Casper + all baselines and print the comparison.
       ID may be any registry kernel: preset, extended, or file-defined.
       --spu-threads N runs the 16 SPUs epoch-parallel on N workers
       (default: one per SPU; 1 = the serial engine; identical results).
+      With workers > 1 the engine also pipelines epochs — each epoch's
+      serial timing replay overlaps the next epoch's functional fan-out
+      (disable with CASPER_EPOCH_PIPELINE=0; results byte-identical).
+      --epoch-rounds N sets the rounds batched per epoch (default 2048,
+      env CASPER_EPOCH_ROUNDS); it trades hand-off overhead against
+      epoch memory and never changes results.
       --temporal-block T keeps T wavefronts resident per LLC slice:
       the final grid (and its digest) is bitwise identical to T=1 while
       avoided line fills and halo-recompute counters are reported (and
@@ -416,6 +427,7 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 "steps",
                 "spu-threads",
                 "temporal-block",
+                "epoch-rounds",
                 "config",
                 "kernel-file",
                 "trace",
@@ -439,6 +451,7 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 trace: rest.get("trace").map(PathBuf::from),
                 trace_interval: parse_trace_interval(&rest)?,
                 temporal_block: parse_temporal_block(&rest)?,
+                epoch_rounds: parse_epoch_rounds(&rest)?,
             })
         }
         "kernels" => {
@@ -530,6 +543,23 @@ fn parse_temporal_block(args: &Args) -> Result<usize, CliError> {
                 flag: "temporal-block",
                 value: s.to_string(),
                 must: "must be an integer >= 1 (wavefronts per block)",
+            }),
+        },
+    }
+}
+
+/// `--epoch-rounds N`: rounds batched per epoch in the epoch-parallel
+/// engine (`None` = engine default; see `CASPER_EPOCH_ROUNDS`). Results
+/// are independent of the value, so any positive integer is legal.
+fn parse_epoch_rounds(args: &Args) -> Result<Option<usize>, CliError> {
+    match args.get("epoch-rounds") {
+        None => Ok(None),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Some(n)),
+            _ => Err(CliError::BadNumber {
+                flag: "epoch-rounds",
+                value: s.to_string(),
+                must: "must be an integer >= 1 (rounds per epoch)",
             }),
         },
     }
@@ -762,8 +792,27 @@ mod tests {
                 trace: None,
                 trace_interval: 1024,
                 temporal_block: 1,
+                epoch_rounds: None,
             }
         );
+    }
+
+    #[test]
+    fn parses_epoch_rounds_flag() {
+        match parse(&argv("run --kernel jacobi2d --level llc --epoch-rounds 512")).unwrap() {
+            Command::Run { epoch_rounds, .. } => assert_eq!(epoch_rounds, Some(512)),
+            other => panic!("{other:?}"),
+        }
+        // Default: engine decides (env, else 2048).
+        match parse(&argv("run --kernel jacobi2d --level llc")).unwrap() {
+            Command::Run { epoch_rounds, .. } => assert_eq!(epoch_rounds, None),
+            other => panic!("{other:?}"),
+        }
+        let err = parse(&argv("run --kernel jacobi2d --level llc --epoch-rounds 0")).unwrap_err();
+        assert_eq!(err.name(), "bad-number");
+        assert!(parse(&argv("run --kernel jacobi2d --level llc --epoch-rounds x")).is_err());
+        // The flag belongs to `run` only.
+        assert!(parse(&argv("experiments --epoch-rounds 64")).is_err());
     }
 
     #[test]

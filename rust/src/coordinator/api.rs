@@ -225,13 +225,13 @@ mod tests {
         assert!(rt.set_program(prog1.clone()).is_err(), "initStencilcode first");
         rt.init_stencil_code(prog1).unwrap();
         rt.spus[0].stats.instrs = 7;
-        rt.spus[0].now = 42;
+        rt.spus[0].timer.now = 42;
         let prog2 = ProgramBuilder::new()
             .build(&StencilKind::Jacobi2D.descriptor())
             .unwrap();
         rt.set_program(prog2.clone()).unwrap();
         assert_eq!(rt.spus[0].stats.instrs, 7, "counters survive the swap");
-        assert_eq!(rt.spus[0].now, 42, "timing survives the swap");
+        assert_eq!(rt.spus[0].timer.now, 42, "timing survives the swap");
         assert_eq!(rt.spus[0].program(), &prog2);
     }
 

@@ -26,6 +26,26 @@ pub fn default_spu_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Default rounds per epoch: `CASPER_EPOCH_ROUNDS` if set to a positive
+/// integer, else the built-in default (2048). Results are independent
+/// of the value — it only trades hand-off overhead against epoch memory.
+pub fn default_epoch_rounds() -> usize {
+    std::env::var("CASPER_EPOCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(epoch::DEFAULT_EPOCH_ROUNDS)
+}
+
+/// Default for [`CasperOptions::pipeline`]: `CASPER_EPOCH_PIPELINE=0`
+/// disables the epoch pipeline (the CI matrix runs both settings), any
+/// other value — including unset — enables it. The pipeline only engages
+/// when the epoch engine itself does (`spu_threads > 1`), and results are
+/// byte-identical either way.
+pub fn default_epoch_pipeline() -> bool {
+    std::env::var("CASPER_EPOCH_PIPELINE").map_or(true, |s| s != "0")
+}
+
 /// Options for ablation runs (Fig 14 and the unaligned-hardware study)
 /// and for the intra-run execution mode.
 #[derive(Debug, Clone, Copy)]
@@ -46,6 +66,11 @@ pub struct CasperOptions {
     /// Rounds per epoch in the parallel engine (bounds trace memory;
     /// results are independent of the value).
     pub epoch_rounds: usize,
+    /// Pipelined epochs (`spu_threads > 1` only): overlap each epoch's
+    /// serial timing replay with the next epoch's functional fan-out and
+    /// tag reconciliation on a dedicated worker. Byte-identical to the
+    /// phased engine (see `rust/DESIGN-parallel.md`, "Pipelined epochs").
+    pub pipeline: bool,
     /// Temporal block depth `T` (`--temporal-block`): the sweep keeps `T`
     /// wavefronts resident per slice, so only every `T`-th step probes
     /// the LLC tags / DRAM — intermediate steps recompute halos instead
@@ -62,7 +87,8 @@ impl Default for CasperOptions {
             warm_llc: true,
             seed: 0xCA5_9E12,
             spu_threads: default_spu_threads(),
-            epoch_rounds: epoch::DEFAULT_EPOCH_ROUNDS,
+            epoch_rounds: default_epoch_rounds(),
+            pipeline: default_epoch_pipeline(),
             temporal_block: 1,
         }
     }
@@ -286,7 +312,7 @@ pub fn run_casper_spec_traced(
                 // taken for single-pass kernels, whose timing stays
                 // byte-identical to the historical path.)
                 for spu in &mut rt.spus {
-                    spu.now = spu.now.max(cycles_done);
+                    spu.timer.now = spu.timer.now.max(cycles_done);
                 }
             }
 
@@ -313,6 +339,7 @@ pub fn run_casper_spec_traced(
                     nxy,
                     opts.spu_threads,
                     opts.epoch_rounds,
+                    opts.pipeline,
                 )?;
             } else {
                 run_step_serial(&mut rt, parts, &layout, nx, nxy)?;
@@ -383,6 +410,9 @@ pub fn run_casper_spec_traced(
     let mut per_spu_max = 0u64;
     for s in rt.spus() {
         spu_stats.add(&s.stats);
+        // Load-queue stalls accrue on the (detachable) timer; fold them
+        // into the aggregate here, where the digest reads them.
+        spu_stats.lq_stall_cycles += s.timer.lq_stalls();
         per_spu_max = per_spu_max.max(s.stats.instrs);
     }
     // Per-slice NoC/DRAM counters (tracked by `SliceState`; identical on
@@ -401,7 +431,7 @@ pub fn run_casper_spec_traced(
         // Warm-up touches tags only, never ports, so the grant count is
         // exactly the measured region's data-array accesses.
         slice_port_grants.push(bank.port.grants);
-        slice_avoided_fills.push(bank.avoided_fills);
+        slice_avoided_fills.push(bank.tags.avoided_fills);
     }
     let trace = rt.mem.trace.take();
     let stats = RunStats {
@@ -536,10 +566,12 @@ mod tests {
 
     #[test]
     fn epoch_parallel_is_byte_identical_to_serial() {
-        // The centerpiece identity: serial round-robin and epoch-parallel
-        // execution must agree on EVERY counter, cycle count, and output
-        // bit — across thread counts and epoch sizes (including an epoch
-        // of a single round and one far larger than the run).
+        // The centerpiece identity: serial round-robin and the staged
+        // engine (collect → reconcile → replay) must agree on EVERY
+        // counter, cycle count, and output bit — across thread counts,
+        // epoch sizes (including an epoch of a single round and one far
+        // larger than the run), and with the replay stage either inline
+        // (phased) or on the dedicated pipeline worker.
         let cfg = SimConfig::default();
         for kind in [StencilKind::Jacobi1D, StencilKind::Jacobi2D, StencilKind::Heat3D] {
             let d = Domain::tiny(kind);
@@ -553,31 +585,36 @@ mod tests {
             .unwrap();
             for threads in [2usize, 16] {
                 for rounds in [1usize, 3, 1 << 20] {
-                    let par = run_casper_with(
-                        &cfg,
-                        kind,
-                        &d,
-                        3,
-                        CasperOptions {
-                            spu_threads: threads,
-                            epoch_rounds: rounds,
-                            ..Default::default()
-                        },
-                    )
-                    .unwrap();
-                    let tag = format!("{kind} threads={threads} epoch_rounds={rounds}");
-                    assert_eq!(serial.cycles, par.cycles, "{tag}");
-                    assert_eq!(serial.spu, par.spu, "{tag}");
-                    assert_eq!(serial.llc, par.llc, "{tag}");
-                    assert_eq!(serial.dram_accesses, par.dram_accesses, "{tag}");
-                    assert_eq!(serial.noc_messages, par.noc_messages, "{tag}");
-                    assert_eq!(serial.noc_hops, par.noc_hops, "{tag}");
-                    assert_eq!(serial.slice_remote_reqs, par.slice_remote_reqs, "{tag}");
-                    assert_eq!(serial.slice_dram_reads, par.slice_dram_reads, "{tag}");
-                    assert_eq!(serial.slice_dram_writes, par.slice_dram_writes, "{tag}");
-                    assert_eq!(serial.slice_port_grants, par.slice_port_grants, "{tag}");
-                    assert_eq!(serial.output, par.output, "{tag}");
-                    assert_eq!(serial.digest(), par.digest(), "{tag}");
+                    for pipeline in [false, true] {
+                        let par = run_casper_with(
+                            &cfg,
+                            kind,
+                            &d,
+                            3,
+                            CasperOptions {
+                                spu_threads: threads,
+                                epoch_rounds: rounds,
+                                pipeline,
+                                ..Default::default()
+                            },
+                        )
+                        .unwrap();
+                        let tag = format!(
+                            "{kind} threads={threads} epoch_rounds={rounds} pipeline={pipeline}"
+                        );
+                        assert_eq!(serial.cycles, par.cycles, "{tag}");
+                        assert_eq!(serial.spu, par.spu, "{tag}");
+                        assert_eq!(serial.llc, par.llc, "{tag}");
+                        assert_eq!(serial.dram_accesses, par.dram_accesses, "{tag}");
+                        assert_eq!(serial.noc_messages, par.noc_messages, "{tag}");
+                        assert_eq!(serial.noc_hops, par.noc_hops, "{tag}");
+                        assert_eq!(serial.slice_remote_reqs, par.slice_remote_reqs, "{tag}");
+                        assert_eq!(serial.slice_dram_reads, par.slice_dram_reads, "{tag}");
+                        assert_eq!(serial.slice_dram_writes, par.slice_dram_writes, "{tag}");
+                        assert_eq!(serial.slice_port_grants, par.slice_port_grants, "{tag}");
+                        assert_eq!(serial.output, par.output, "{tag}");
+                        assert_eq!(serial.digest(), par.digest(), "{tag}");
+                    }
                 }
             }
         }
@@ -589,6 +626,8 @@ mod tests {
         // consecutive lines across slices, so nearly every load is a
         // cross-slice epoch message; NearL1 adds the private-L1 filter;
         // disabling the §4.1 hardware splits every unaligned load in two.
+        // Both replay placements (inline and pipelined worker) must hold
+        // the identity under every combination.
         let kind = StencilKind::Blur2D;
         let d = Domain::tiny(kind);
         for mapping in [MappingPolicy::Baseline, MappingPolicy::StencilSegment] {
@@ -605,22 +644,28 @@ mod tests {
                         CasperOptions { unaligned_hw, spu_threads: 1, ..Default::default() },
                     )
                     .unwrap();
-                    let par = run_casper_with(
-                        &cfg,
-                        kind,
-                        &d,
-                        2,
-                        CasperOptions {
-                            unaligned_hw,
-                            spu_threads: 8,
-                            epoch_rounds: 5,
-                            ..Default::default()
-                        },
-                    )
-                    .unwrap();
-                    let tag = format!("mapping={mapping:?} placement={placement:?} hw={unaligned_hw}");
-                    assert_eq!(serial.cycles, par.cycles, "{tag}");
-                    assert_eq!(serial.digest(), par.digest(), "{tag}");
+                    for pipeline in [false, true] {
+                        let par = run_casper_with(
+                            &cfg,
+                            kind,
+                            &d,
+                            2,
+                            CasperOptions {
+                                unaligned_hw,
+                                spu_threads: 8,
+                                epoch_rounds: 5,
+                                pipeline,
+                                ..Default::default()
+                            },
+                        )
+                        .unwrap();
+                        let tag = format!(
+                            "mapping={mapping:?} placement={placement:?} hw={unaligned_hw} \
+                             pipeline={pipeline}"
+                        );
+                        assert_eq!(serial.cycles, par.cycles, "{tag}");
+                        assert_eq!(serial.digest(), par.digest(), "{tag}");
+                    }
                 }
             }
         }
@@ -791,9 +836,11 @@ mod tests {
     #[test]
     fn multipass_epoch_parallel_is_byte_identical_to_serial() {
         // The PR-3 identity contract extended to multi-pass plans: serial
-        // and epoch-parallel execution must agree on every counter, cycle
-        // count, and output bit while passes re-broadcast programs
-        // between run_step invocations.
+        // and the staged engine must agree on every counter, cycle count,
+        // and output bit while passes re-broadcast programs between
+        // run_step invocations — with replay inline or pipelined. The
+        // pipelined leg is the interesting one here: each pass detaches
+        // and restores the timer/tag halves around its own scope.
         let cfg = SimConfig::default();
         let star = star17();
         let d = star.tiny_domain();
@@ -807,23 +854,27 @@ mod tests {
         .unwrap();
         for threads in [2usize, 16] {
             for rounds in [1usize, 5] {
-                let par = run_casper_spec(
-                    &cfg,
-                    &star,
-                    &d,
-                    2,
-                    CasperOptions {
-                        spu_threads: threads,
-                        epoch_rounds: rounds,
-                        ..Default::default()
-                    },
-                )
-                .unwrap();
-                let tag = format!("threads={threads} epoch_rounds={rounds}");
-                assert_eq!(serial.cycles, par.cycles, "{tag}");
-                assert_eq!(serial.spu, par.spu, "{tag}");
-                assert_eq!(serial.output, par.output, "{tag}");
-                assert_eq!(serial.digest(), par.digest(), "{tag}");
+                for pipeline in [false, true] {
+                    let par = run_casper_spec(
+                        &cfg,
+                        &star,
+                        &d,
+                        2,
+                        CasperOptions {
+                            spu_threads: threads,
+                            epoch_rounds: rounds,
+                            pipeline,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                    let tag =
+                        format!("threads={threads} epoch_rounds={rounds} pipeline={pipeline}");
+                    assert_eq!(serial.cycles, par.cycles, "{tag}");
+                    assert_eq!(serial.spu, par.spu, "{tag}");
+                    assert_eq!(serial.output, par.output, "{tag}");
+                    assert_eq!(serial.digest(), par.digest(), "{tag}");
+                }
             }
         }
     }
@@ -832,27 +883,33 @@ mod tests {
     fn tracing_on_and_off_are_byte_identical() {
         // The observability acceptance invariant: installing a tracer
         // must not move a single counter, cycle, or output bit — across
-        // both engines and on a multi-pass kernel.
+        // engines and replay placements, on a multi-pass kernel. The
+        // pipelined leg exercises the tracer living on the replay worker
+        // (it rides inside the detached TimingMem half).
         let cfg = SimConfig::default();
         let jacobi: KernelSpec = StencilKind::Jacobi2D.spec().as_ref().clone();
         for spec in [&jacobi, &star17()] {
             let d = spec.tiny_domain();
             for threads in [1usize, 16] {
-                let opts = CasperOptions { spu_threads: threads, ..Default::default() };
-                let plain = run_casper_spec(&cfg, spec, &d, 2, opts).unwrap();
-                let tracer = Box::new(Tracer::new(&cfg, 256));
-                let (traced, tr) =
-                    run_casper_spec_traced(&cfg, spec, &d, 2, opts, Some(tracer)).unwrap();
-                let tr = tr.expect("tracer handed back");
-                let tag = format!("{} threads={threads}", spec.id.as_str());
-                assert_eq!(plain.digest(), traced.digest(), "{tag}");
-                assert_eq!(plain, traced, "{tag}: full RunStats identity");
-                assert!(tr.samples() > 0, "{tag}: no samples recorded");
-                let want_spans = 2 * traced.passes; // steps × passes
-                assert_eq!(tr.pass_spans().len(), want_spans, "{tag}");
-                assert!(!tr.spu_spans().is_empty(), "{tag}");
-                crate::trace::chrome::validate_json(&tr.to_chrome_string())
-                    .unwrap_or_else(|e| panic!("{tag}: invalid trace JSON: {e}"));
+                for pipeline in [false, true] {
+                    let opts =
+                        CasperOptions { spu_threads: threads, pipeline, ..Default::default() };
+                    let plain = run_casper_spec(&cfg, spec, &d, 2, opts).unwrap();
+                    let tracer = Box::new(Tracer::new(&cfg, 256));
+                    let (traced, tr) =
+                        run_casper_spec_traced(&cfg, spec, &d, 2, opts, Some(tracer)).unwrap();
+                    let tr = tr.expect("tracer handed back");
+                    let tag =
+                        format!("{} threads={threads} pipeline={pipeline}", spec.id.as_str());
+                    assert_eq!(plain.digest(), traced.digest(), "{tag}");
+                    assert_eq!(plain, traced, "{tag}: full RunStats identity");
+                    assert!(tr.samples() > 0, "{tag}: no samples recorded");
+                    let want_spans = 2 * traced.passes; // steps × passes
+                    assert_eq!(tr.pass_spans().len(), want_spans, "{tag}");
+                    assert!(!tr.spu_spans().is_empty(), "{tag}");
+                    crate::trace::chrome::validate_json(&tr.to_chrome_string())
+                        .unwrap_or_else(|e| panic!("{tag}: invalid trace JSON: {e}"));
+                }
             }
         }
     }
@@ -924,17 +981,27 @@ mod tests {
                     "{tag}: blocked grid diverged bitwise from T=1 chaining"
                 );
                 assert!(serial.avoided_fills() > 0, "{tag}: resident steps must avoid fills");
-                // Both engines agree on every blocked counter too.
-                let par = run_casper_with(
-                    &cfg,
-                    kind,
-                    &d,
-                    4,
-                    CasperOptions { spu_threads: 16, temporal_block: t, ..Default::default() },
-                )
-                .unwrap();
-                assert_eq!(serial, par, "{tag}: full RunStats identity across engines");
-                assert_eq!(serial.digest(), par.digest(), "{tag}");
+                // Both engines agree on every blocked counter too — with
+                // replay inline and on the pipeline worker (the resident
+                // wavefront flags live in the detached tag banks there).
+                for pipeline in [false, true] {
+                    let par = run_casper_with(
+                        &cfg,
+                        kind,
+                        &d,
+                        4,
+                        CasperOptions {
+                            spu_threads: 16,
+                            temporal_block: t,
+                            pipeline,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                    let tag = format!("{tag} pipeline={pipeline}");
+                    assert_eq!(serial, par, "{tag}: full RunStats identity across engines");
+                    assert_eq!(serial.digest(), par.digest(), "{tag}");
+                }
             }
         }
     }

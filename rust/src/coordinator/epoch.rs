@@ -1,12 +1,13 @@
-//! Epoch-parallel intra-run SPU execution.
+//! Epoch-parallel intra-run SPU execution, phased or pipelined.
 //!
 //! One serial "round" of the engine loop runs one vector group on every
 //! SPU. The epoch engine executes `epoch_rounds` such rounds as one epoch
-//! in three phases (see `rust/DESIGN-parallel.md` for the full protocol
-//! and the determinism argument):
+//! through three explicit stages with owned hand-off state (see
+//! `rust/DESIGN-parallel.md` for the full protocol and the determinism
+//! argument):
 //!
-//! 1. **Functional fan-out** (parallel over SPUs): every SPU runs its
-//!    groups functionally — input loads read the step-immutable input
+//! 1. **Collect** — functional fan-out, parallel over SPUs: every SPU runs
+//!    its groups functionally — input loads read the step-immutable input
 //!    array, output writes are staged per SPU — while queueing each LLC
 //!    tag access as an *epoch message* tagged `(round, spu, seq)` and
 //!    recording the per-instruction request geometry. (Multi-pass
@@ -14,30 +15,45 @@
 //!    elements the reading group itself is about to overwrite — written
 //!    by the previous pass, never within the current `run_step` — so the
 //!    step-immutability argument carries over pass by pass.)
-//! 2. **Tag reconciliation** (parallel over slices): each slice's worker
-//!    owns that slice's [`SliceState`] outright and drains its incoming
-//!    messages in `(round, spu, seq)` order — exactly the order the serial
-//!    round-robin interleaving would have applied them — producing the tag
-//!    outcomes (hit / writeback).
-//! 3. **Timing replay** (serial, cheap): the exact serial timing
+//! 2. **Reconcile** — tag reconciliation, parallel over slices: each
+//!    slice's worker owns that slice's [`TagBank`] outright and drains its
+//!    incoming messages in `(round, spu, seq)` order — exactly the order
+//!    the serial round-robin interleaving would have applied them —
+//!    producing the tag outcomes (hit / writeback).
+//! 3. **Replay** — deterministic serial timing: the exact serial timing
 //!    arithmetic (issue, load queue, slice ports, NoC latencies, DRAM
 //!    channels) replays in global `(round, spu, seq)` order with the
 //!    reconciled outcomes injected — no tag scans left on this path.
 //!
-//! Tag outcomes depend only on per-slice access *order* (never on
-//! timestamps), and timestamps depend only on outcomes plus processing
-//! order — which phase 3 reproduces exactly. Hence serial and
-//! epoch-parallel execution are byte-identical; `coordinator::engine`'s
-//! identity tests enforce this across kernels, mappings, thread counts,
-//! and epoch sizes.
+//! The stages communicate through an owned [`EpochWork`] struct, which is
+//! what enables the **pipelined** mode: the runtime splits into a
+//! functional half (SPU program state, the backing store, the lent-out
+//! [`TagBank`]s) and a timing half (the detached [`SpuTimer`]s plus the
+//! [`TimingMem`] borrow: ports, NoC, DRAM, tracer). A dedicated replay
+//! worker drains epoch *e*'s stage-3 replay while the thread pool collects
+//! and reconciles epoch *e+1*. The hand-off channel is bounded
+//! ([`PIPELINE_DEPTH`]) and drained buffers cycle back for reuse, so
+//! memory stays flat regardless of run length.
+//!
+//! Determinism: tag outcomes depend only on per-slice access *order*
+//! (never on timestamps), and timestamps depend only on outcomes plus
+//! processing order — which stage 3 reproduces exactly, epoch by epoch,
+//! whether it runs inline (phased) or on the worker (pipelined). Hence
+//! serial, phased, and pipelined execution are byte-identical;
+//! `coordinator::engine`'s identity tests enforce this across kernels,
+//! mappings, thread counts, epoch sizes, and both pipeline settings.
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::spu::sharded::{SpuTrace, TagOut, TagOutStream, TagReq, NO_LINE};
-use crate::spu::{SliceState, Spu};
+use crate::spu::sharded::{FunMem, SpuTrace, TagOut, TagOutStream, TagReq, TimingMem, NO_LINE};
+use crate::spu::{SimStore, Spu, SpuTimer, TagBank};
 use crate::trace::{EpochPhases, TraceSink};
 
 use super::api::CasperRuntime;
@@ -45,12 +61,61 @@ use super::engine::{bind_chunk, Chunk};
 use super::layout::SegmentLayout;
 
 /// Rounds per epoch: large enough to amortize worker spawn + phase
-/// hand-off, small enough to bound trace memory (~tens of MB).
+/// hand-off, small enough to bound trace memory (~tens of MB). Tunable
+/// via `--epoch-rounds` / `CASPER_EPOCH_ROUNDS`; results are independent
+/// of the value.
 pub(crate) const DEFAULT_EPOCH_ROUNDS: usize = 2048;
+
+/// In-flight bound of the pipelined engine: at most one epoch queued in
+/// the hand-off channel while one more is being replayed.
+pub const PIPELINE_DEPTH: usize = 2;
+
+/// The bounded hand-off channel between the functional stages and the
+/// replay worker. A one-slot `sync_channel`: the functional side blocks on
+/// `send` once one epoch is queued while another is still replaying, so no
+/// more than [`PIPELINE_DEPTH`] epochs are ever in flight past the collect
+/// stage — epoch memory stays flat no matter how long the run is.
+pub fn pipeline_channel<T>() -> (SyncSender<T>, Receiver<T>) {
+    mpsc::sync_channel(PIPELINE_DEPTH - 1)
+}
+
+/// Owned hand-off between the pipeline stages: everything one epoch
+/// carries from the functional side into the timing replay. Buffers cycle
+/// back through a return lane, so a pipelined run allocates at most
+/// `PIPELINE_DEPTH + 1` of these regardless of length (the phased path
+/// reuses a single one).
+struct EpochWork {
+    /// Per-SPU stage-1 products: instruction records and (emptied during
+    /// reconciliation) per-slice tag-request queues. Staged output writes
+    /// are drained to the store before hand-off.
+    traces: Vec<SpuTrace>,
+    /// `streams[spu][slice]`: reconciled outcome cursors for the replay.
+    streams: Vec<Vec<TagOutStream>>,
+    /// Wall-clock µs spans of this epoch's collect / reconcile stages,
+    /// measured from the tracer origin (zeros when untraced). They ride
+    /// along so the replay worker can emit the complete phase triple.
+    collect_span: [u64; 2],
+    reconcile_span: [u64; 2],
+}
+
+impl EpochWork {
+    fn new(n_spus: usize, n_slices: usize) -> EpochWork {
+        EpochWork {
+            traces: (0..n_spus).map(|_| SpuTrace::new(n_slices)).collect(),
+            streams: (0..n_spus)
+                .map(|_| (0..n_slices).map(|_| TagOutStream::default()).collect())
+                .collect(),
+            collect_span: [0; 2],
+            reconcile_span: [0; 2],
+        }
+    }
+}
 
 /// Run one full time step of the engine loop with `threads` workers,
 /// epoch by epoch, binding chunks from `parts` exactly as the serial
-/// round-robin loop does.
+/// round-robin loop does. `pipeline` overlaps each epoch's serial timing
+/// replay with the next epoch's functional fan-out + reconciliation;
+/// results are byte-identical either way.
 pub(crate) fn run_step(
     rt: &mut CasperRuntime,
     parts: &[Vec<Chunk>],
@@ -59,205 +124,368 @@ pub(crate) fn run_step(
     nxy: i64,
     threads: usize,
     epoch_rounds: usize,
+    pipeline: bool,
 ) -> Result<()> {
-    let n_spus = rt.spus.len();
-    let mut cursors = vec![0usize; n_spus];
-    let epoch_rounds = epoch_rounds.max(1);
-    loop {
-        let pending = rt
-            .spus
-            .iter()
-            .enumerate()
-            .any(|(i, s)| !s.is_done() || cursors[i] < parts[i].len());
-        if !pending {
-            break;
-        }
-        run_epoch(rt, parts, &mut cursors, layout, nx, nxy, threads, epoch_rounds);
-    }
-    Ok(())
-}
-
-/// Execute up to `epoch_rounds` rounds: phase 1 (parallel over SPUs),
-/// phase 2 (parallel over slices), phase 3 (serial replay).
-fn run_epoch(
-    rt: &mut CasperRuntime,
-    parts: &[Vec<Chunk>],
-    cursors: &mut [usize],
-    layout: &SegmentLayout,
-    nx: i64,
-    nxy: i64,
-    threads: usize,
-    epoch_rounds: usize,
-) {
     let n_spus = rt.spus.len();
     let n_slices = rt.cfg.llc.slices;
     let n_instrs = rt.spus[0].program().instrs.len();
+    let way_limit = rt.mem.llc.way_limit();
+    let epoch_rounds = epoch_rounds.max(1);
+    let mut cursors = vec![0usize; n_spus];
 
-    // Wall-clock phase spans (`--trace`): the three phases have no
-    // cycle-domain duration (they are an implementation artifact, not
-    // simulated time), so they are recorded as real-µs offsets from the
-    // tracer's origin. Observation only — `Instant` reads never touch
-    // simulation state. `origin` is `None` without a tracer.
+    // Wall-clock stage spans (`--trace`): the stages have no cycle-domain
+    // duration (they are an implementation artifact, not simulated time),
+    // so they are recorded as real-µs offsets from the tracer's origin.
+    // Observation only — `Instant` reads never touch simulation state.
+    // `origin` is `None` without a tracer.
     let origin = rt.mem.trace.as_deref().map(|t| t.origin());
-    let m0 = origin.map(us_since);
 
-    // ---- Phase 1: parallel functional execution + trace generation ----
-    let slots: Vec<Mutex<Option<SpuTrace>>> = (0..n_spus).map(|_| Mutex::new(None)).collect();
-    {
-        let mem = &rt.mem;
-        let cells: Vec<Mutex<(&mut Spu, usize)>> = rt
-            .spus
-            .iter_mut()
-            .zip(cursors.iter())
-            .map(|(s, &c)| Mutex::new((s, c)))
-            .collect();
-        let cursor = AtomicUsize::new(0);
-        let workers = threads.min(n_spus).max(1);
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n_spus {
-                        break;
-                    }
-                    let mut guard = cells[i].lock().expect("spu cell poisoned");
-                    let cell = &mut *guard;
-                    let spu: &mut Spu = &mut *cell.0;
-                    let cur = &mut cell.1;
-                    let mut trace = SpuTrace::new(n_slices);
-                    trace.instrs.reserve(epoch_rounds.min(8192) * n_instrs);
-                    let mut round: u32 = 0;
-                    while (round as usize) < epoch_rounds {
-                        if spu.is_done() {
-                            if *cur < parts[i].len() {
-                                bind_chunk(spu, layout, parts[i][*cur], nx, nxy)
-                                    .expect("stream binding failed");
-                                *cur += 1;
-                            } else {
-                                break;
-                            }
-                        }
-                        let _ran = spu.run_group_functional(mem, round, &mut trace);
-                        debug_assert!(_ran, "bound chunk must yield a group");
-                        round += 1;
-                    }
-                    *slots[i].lock().expect("trace slot poisoned") = Some(trace);
+    // Split the runtime into the two halves the pipeline stages own: the
+    // functional side keeps the SPUs (minus their timers), the backing
+    // store, and the lent-out tag banks; the timing side gets the detached
+    // timers plus ports/NoC/DRAM/tracer. The split is what lets the replay
+    // worker run without `&mut rt`.
+    let homes: Vec<usize> = rt.spus.iter().map(|s| s.slice).collect();
+    let mut timers: Vec<SpuTimer> = rt.spus.iter_mut().map(|s| s.take_timer()).collect();
+    let mut tags: Vec<TagBank> = rt.mem.llc.take_tag_banks();
+    debug_assert_eq!(tags.len(), n_slices);
+    let spus = &mut rt.spus;
+    let (mut fun, mut tim) = rt.mem.split_halves();
+
+    if !pipeline {
+        // Phased: the same three stages, inline on one reused EpochWork.
+        let mut work = EpochWork::new(n_spus, n_slices);
+        while pending(spus, &cursors, parts) {
+            let m0 = us_mark(origin);
+            collect_epoch(
+                spus, &mut cursors, parts, layout, nx, nxy, fun.view(), threads, epoch_rounds,
+                n_instrs, &mut work.traces,
+            );
+            apply_outs(&mut work.traces, &mut *fun.store);
+            let m1 = us_mark(origin);
+            reconcile_epoch(&mut tags, way_limit, threads, &mut work);
+            let m2 = us_mark(origin);
+            work.collect_span = [m0, m1];
+            work.reconcile_span = [m1, m2];
+            let r0 = us_mark(origin);
+            replay_epoch(&mut timers, &homes, &mut tim, n_instrs, &mut work);
+            let r1 = us_mark(origin);
+            if let Some(tr) = tim.trace.as_deref_mut() {
+                tr.epoch_phases(EpochPhases {
+                    phases: [work.collect_span, work.reconcile_span, [r0, r1]],
                 });
             }
+        }
+    } else {
+        timers = std::thread::scope(|scope| {
+            let (work_tx, work_rx) = pipeline_channel::<EpochWork>();
+            // Unbounded return lane: the worker hands drained buffers back
+            // for reuse; it never holds more than PIPELINE_DEPTH of them.
+            let (buf_tx, buf_rx) = mpsc::channel::<EpochWork>();
+            let homes = &homes;
+            let mut tim = tim;
+            let mut timers = timers;
+            let replay = scope.spawn(move || {
+                for mut work in work_rx.iter() {
+                    let r0 = us_mark(origin);
+                    replay_epoch(&mut timers, homes, &mut tim, n_instrs, &mut work);
+                    let r1 = us_mark(origin);
+                    if let Some(tr) = tim.trace.as_deref_mut() {
+                        tr.epoch_phases(EpochPhases {
+                            phases: [work.collect_span, work.reconcile_span, [r0, r1]],
+                        });
+                    }
+                    // Teardown race only: the functional side may already
+                    // have dropped the return lane.
+                    let _ = buf_tx.send(work);
+                }
+                timers
+            });
+            while pending(spus, &cursors, parts) {
+                // Arena reuse: prefer a buffer the replay worker has
+                // drained; allocate only while the pipeline is filling.
+                let mut work = buf_rx
+                    .try_recv()
+                    .unwrap_or_else(|_| EpochWork::new(n_spus, n_slices));
+                let m0 = us_mark(origin);
+                collect_epoch(
+                    spus, &mut cursors, parts, layout, nx, nxy, fun.view(), threads,
+                    epoch_rounds, n_instrs, &mut work.traces,
+                );
+                apply_outs(&mut work.traces, &mut *fun.store);
+                let m1 = us_mark(origin);
+                reconcile_epoch(&mut tags, way_limit, threads, &mut work);
+                let m2 = us_mark(origin);
+                work.collect_span = [m0, m1];
+                work.reconcile_span = [m1, m2];
+                if work_tx.send(work).is_err() {
+                    // The replay worker died; its panic resurfaces at join.
+                    break;
+                }
+            }
+            // Close the hand-off lane: the worker finishes the queued
+            // epochs and hands the timers back.
+            drop(work_tx);
+            match replay.join() {
+                Ok(timers) => timers,
+                Err(payload) => {
+                    panic!("epoch replay worker panicked: {}", panic_text(payload.as_ref()))
+                }
+            }
         });
-        for (i, cell) in cells.into_iter().enumerate() {
-            cursors[i] = cell.into_inner().expect("spu cell poisoned").1;
+    }
+
+    // Reunite the halves for the serial coordinator work between steps.
+    for (spu, timer) in spus.iter_mut().zip(timers) {
+        spu.restore_timer(timer);
+    }
+    rt.mem.llc.restore_tag_banks(tags);
+    Ok(())
+}
+
+/// More work this step? Purely functional state (SPU bindings + chunk
+/// cursors), which is why the functional side can decide it while the
+/// previous epoch is still replaying.
+fn pending(spus: &[Spu], cursors: &[usize], parts: &[Vec<Chunk>]) -> bool {
+    spus.iter()
+        .enumerate()
+        .any(|(i, s)| !s.is_done() || cursors[i] < parts[i].len())
+}
+
+/// Stage 1: parallel functional execution + trace generation, into the
+/// (reused) per-SPU traces. Worker panics are contained per SPU and
+/// re-raised with context after the scope joins.
+fn collect_epoch(
+    spus: &mut [Spu],
+    cursors: &mut [usize],
+    parts: &[Vec<Chunk>],
+    layout: &SegmentLayout,
+    nx: i64,
+    nxy: i64,
+    fun: FunMem<'_>,
+    threads: usize,
+    epoch_rounds: usize,
+    n_instrs: usize,
+    traces: &mut [SpuTrace],
+) {
+    let n_spus = spus.len();
+    let cells: Vec<Mutex<(&mut Spu, &mut usize, &mut SpuTrace)>> = spus
+        .iter_mut()
+        .zip(cursors.iter_mut())
+        .zip(traces.iter_mut())
+        .map(|((s, c), t)| Mutex::new((s, c, t)))
+        .collect();
+    let cursor = AtomicUsize::new(0);
+    let failures: Mutex<Vec<(usize, Box<dyn Any + Send>)>> = Mutex::new(Vec::new());
+    let workers = threads.min(n_spus).max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n_spus {
+                    break;
+                }
+                let mut guard = lock_clean(&cells[i]);
+                let cell = &mut *guard;
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    run_spu_epoch(
+                        &mut *cell.0, &mut *cell.1, &parts[i], layout, nx, nxy, fun,
+                        epoch_rounds, n_instrs, &mut *cell.2,
+                    );
+                }));
+                if let Err(payload) = r {
+                    lock_clean(&failures).push((i, payload));
+                }
+            });
+        }
+    });
+    raise_failures(failures, "phase-1 functional fan-out", "SPU");
+}
+
+/// One SPU's share of stage 1: up to `epoch_rounds` functional groups,
+/// binding chunks from its queue exactly as the serial loop does.
+fn run_spu_epoch(
+    spu: &mut Spu,
+    cur: &mut usize,
+    chunks: &[Chunk],
+    layout: &SegmentLayout,
+    nx: i64,
+    nxy: i64,
+    fun: FunMem<'_>,
+    epoch_rounds: usize,
+    n_instrs: usize,
+    trace: &mut SpuTrace,
+) {
+    trace.reset();
+    trace.instrs.reserve(epoch_rounds.min(8192) * n_instrs);
+    let mut round: u32 = 0;
+    while (round as usize) < epoch_rounds {
+        if spu.is_done() {
+            if *cur < chunks.len() {
+                bind_chunk(spu, layout, chunks[*cur], nx, nxy).expect("stream binding failed");
+                *cur += 1;
+            } else {
+                break;
+            }
+        }
+        let _ran = spu.run_group_functional(fun, round, trace);
+        debug_assert!(_ran, "bound chunk must yield a group");
+        round += 1;
+    }
+}
+
+/// Apply the staged functional output writes (disjoint across SPUs; never
+/// read back within the pass, so ordering is irrelevant — apply in SPU
+/// order for determinism of the store anyway). Runs on the functional side
+/// of the pipeline: the replay worker never touches the store, which is
+/// what makes applying epoch *e+1*'s writes while epoch *e* still replays
+/// safe.
+fn apply_outs(traces: &mut [SpuTrace], store: &mut SimStore) {
+    for tr in traces {
+        for run in tr.outs.drain(..) {
+            store.write_slice(run.addr, &run.data);
         }
     }
-    let mut traces: Vec<SpuTrace> = slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .expect("trace slot poisoned")
-                .expect("phase-1 worker skipped an SPU")
+}
+
+/// Stage 2: per-slice tag reconciliation (parallel over slices). Gathers
+/// each slice's queues and recycled outcome buffers on the coordinator
+/// thread (O(slices × spus) pointer swaps), hands each worker one
+/// [`TagBank`] plus plain owned data, then scatters the emptied queues
+/// back to the traces (capacity reuse) and the filled outcome vectors
+/// into the replay streams. Worker panics are contained per slice and
+/// re-raised with context after the scope joins.
+fn reconcile_epoch(tags: &mut [TagBank], way_limit: usize, threads: usize, work: &mut EpochWork) {
+    let n_slices = tags.len();
+    let tasks: Vec<Mutex<Option<(&mut TagBank, Vec<Vec<TagReq>>, Vec<Vec<TagOut>>)>>> = tags
+        .iter_mut()
+        .enumerate()
+        .map(|(s, bank)| {
+            let reqs: Vec<Vec<TagReq>> =
+                work.traces.iter_mut().map(|t| std::mem::take(&mut t.tagq[s])).collect();
+            let outs: Vec<Vec<TagOut>> = work
+                .streams
+                .iter_mut()
+                .map(|per| {
+                    let mut v = std::mem::take(&mut per[s].outs);
+                    v.clear();
+                    v
+                })
+                .collect();
+            Mutex::new(Some((bank, reqs, outs)))
         })
         .collect();
-
-    // Apply the staged functional output writes (disjoint across SPUs;
-    // never read back within the step, so ordering is irrelevant — apply
-    // in SPU order for determinism of the store anyway).
-    for tr in &mut traces {
-        for run in tr.outs.drain(..) {
-            rt.mem.store.write_slice(run.addr, &run.data);
-        }
-    }
-    let m1 = origin.map(us_since);
-
-    // ---- Phase 2: per-slice tag reconciliation (parallel over slices) ----
-    let way_limit = rt.mem.llc.way_limit();
-    let banks = rt.mem.llc.take_banks();
-    debug_assert_eq!(banks.len(), n_slices);
-    // per_slice[s][spu] = that SPU's queued messages for slice s.
-    let mut per_slice: Vec<Vec<Vec<TagReq>>> =
-        (0..n_slices).map(|_| Vec::with_capacity(n_spus)).collect();
-    for tr in &mut traces {
-        for (s, q) in tr.tagq.iter_mut().enumerate() {
-            per_slice[s].push(std::mem::take(q));
-        }
-    }
-    let tasks: Vec<Mutex<Option<(SliceState, Vec<Vec<TagReq>>)>>> = banks
-        .into_iter()
-        .zip(per_slice)
-        .map(|(b, q)| Mutex::new(Some((b, q))))
-        .collect();
-    let out_slots: Vec<Mutex<Option<(SliceState, Vec<Vec<TagOut>>)>>> =
+    let done: Vec<Mutex<Option<(Vec<Vec<TagReq>>, Vec<Vec<TagOut>>)>>> =
         (0..n_slices).map(|_| Mutex::new(None)).collect();
-    {
-        let cursor = AtomicUsize::new(0);
-        let workers = threads.min(n_slices).max(1);
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let s = cursor.fetch_add(1, Ordering::Relaxed);
-                    if s >= n_slices {
-                        break;
+    let cursor = AtomicUsize::new(0);
+    let failures: Mutex<Vec<(usize, Box<dyn Any + Send>)>> = Mutex::new(Vec::new());
+    let workers = threads.min(n_slices).max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let s = cursor.fetch_add(1, Ordering::Relaxed);
+                if s >= n_slices {
+                    break;
+                }
+                let (bank, mut reqs, mut outs) =
+                    lock_clean(&tasks[s]).take().expect("slice task claimed twice");
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    drain_slice_requests_into(bank, &reqs, way_limit, &mut outs);
+                }));
+                match r {
+                    Ok(()) => {
+                        for q in &mut reqs {
+                            q.clear();
+                        }
+                        *lock_clean(&done[s]) = Some((reqs, outs));
                     }
-                    let (mut bank, reqs) = tasks[s]
-                        .lock()
-                        .expect("slice task poisoned")
-                        .take()
-                        .expect("slice task claimed twice");
-                    let outs = drain_slice_requests(&mut bank, &reqs, way_limit);
-                    *out_slots[s].lock().expect("slice out slot poisoned") = Some((bank, outs));
-                });
-            }
-        });
-    }
-    let mut restored: Vec<SliceState> = Vec::with_capacity(n_slices);
-    let mut outs_by_slice: Vec<Vec<Vec<TagOut>>> = Vec::with_capacity(n_slices);
-    for slot in out_slots {
-        let (bank, outs) = slot
+                    Err(payload) => lock_clean(&failures).push((s, payload)),
+                }
+            });
+        }
+    });
+    raise_failures(failures, "phase-2 tag reconciliation", "slice");
+    for (s, slot) in done.into_iter().enumerate() {
+        let (reqs, outs) = slot
             .into_inner()
-            .expect("slice out slot poisoned")
+            .unwrap_or_else(|p| p.into_inner())
             .expect("phase-2 worker skipped a slice");
-        restored.push(bank);
-        outs_by_slice.push(outs);
-    }
-    rt.mem.llc.restore_banks(restored);
-
-    // Transpose into per-SPU outcome streams: streams[spu][slice].
-    let mut streams: Vec<Vec<TagOutStream>> =
-        (0..n_spus).map(|_| Vec::with_capacity(n_slices)).collect();
-    for outs in outs_by_slice {
-        for (spu, v) in outs.into_iter().enumerate() {
-            streams[spu].push(TagOutStream::new(v));
+        for (t, q) in work.traces.iter_mut().zip(reqs) {
+            t.tagq[s] = q;
+        }
+        for (per, o) in work.streams.iter_mut().zip(outs) {
+            per[s] = TagOutStream::new(o);
         }
     }
-    let m2 = origin.map(us_since);
+}
 
-    // ---- Phase 3: deterministic serial timing replay ----
-    let groups: Vec<u32> = traces.iter().map(|t| t.groups).collect();
-    let max_rounds = groups.iter().copied().max().unwrap_or(0);
+/// Stage 3: deterministic serial timing replay in global
+/// `(round, spu, seq)` order, against the detached timers and the timing
+/// half of the memory system only — the whole point of the split.
+fn replay_epoch(
+    timers: &mut [SpuTimer],
+    homes: &[usize],
+    tim: &mut TimingMem<'_>,
+    n_instrs: usize,
+    work: &mut EpochWork,
+) {
+    let n_spus = timers.len();
+    let max_rounds = work.traces.iter().map(|t| t.groups).max().unwrap_or(0);
     for round in 0..max_rounds {
         for spu_id in 0..n_spus {
-            if round < groups[spu_id] {
+            if round < work.traces[spu_id].groups {
                 let lo = round as usize * n_instrs;
-                let recs = &traces[spu_id].instrs[lo..lo + n_instrs];
-                let spu = &mut rt.spus[spu_id];
-                spu.replay_group_timing(&mut rt.mem, recs, &mut streams[spu_id]);
+                let recs = &work.traces[spu_id].instrs[lo..lo + n_instrs];
+                timers[spu_id].replay_group(tim, homes[spu_id], recs, &mut work.streams[spu_id]);
             }
         }
     }
     debug_assert!(
-        streams.iter().all(|per| per.iter().all(|s| s.fully_consumed())),
+        work.streams.iter().all(|per| per.iter().all(|s| s.fully_consumed())),
         "replay must consume every reconciled outcome"
     );
+}
 
-    let m3 = origin.map(us_since);
-    if let Some(tr) = rt.mem.trace.as_deref_mut() {
-        let (m0, m1, m2, m3) = (m0.unwrap(), m1.unwrap(), m2.unwrap(), m3.unwrap());
-        tr.epoch_phases(EpochPhases { phases: [[m0, m1], [m1, m2], [m2, m3]] });
+/// Lock that shrugs off poison: a worker panic is contained by
+/// `catch_unwind` and re-raised with context by [`raise_failures`], so a
+/// poisoned slot just means "some worker died" — the data itself is a
+/// claimed-once task or an append-only failure list, both still sound.
+/// Mirrors the harness sweep's supervisor-slot recovery.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Best-effort text of a worker's panic payload (`&str` / `String`
+/// payloads come through verbatim — the common `panic!`/`assert!` cases).
+fn panic_text(payload: &(dyn Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
-/// Microseconds elapsed since `origin` (saturating at u64 — a trace does
-/// not run for half a million years).
-fn us_since(origin: std::time::Instant) -> u64 {
+/// Re-raise the first (lowest-id, for determinism) contained worker panic
+/// with its phase and SPU/slice context attached.
+fn raise_failures(failures: Mutex<Vec<(usize, Box<dyn Any + Send>)>>, phase: &str, unit: &str) {
+    let mut failures = failures.into_inner().unwrap_or_else(|p| p.into_inner());
+    if failures.is_empty() {
+        return;
+    }
+    failures.sort_by_key(|(id, _)| *id);
+    let (id, payload) = failures.swap_remove(0);
+    panic!("{phase} worker panicked on {unit} {id}: {}", panic_text(payload.as_ref()));
+}
+
+/// Microseconds elapsed since the tracer origin (saturating at u64 — a
+/// trace does not run for half a million years); 0 when untraced.
+fn us_mark(origin: Option<Instant>) -> u64 {
+    origin.map(us_since).unwrap_or(0)
+}
+
+fn us_since(origin: Instant) -> u64 {
     origin.elapsed().as_micros() as u64
 }
 
@@ -266,15 +494,32 @@ fn us_since(origin: std::time::Instant) -> u64 {
 /// against the slice's private tag bank. Returns per-SPU outcome streams
 /// in issue order.
 pub(crate) fn drain_slice_requests(
-    bank: &mut SliceState,
+    bank: &mut TagBank,
     reqs: &[Vec<TagReq>],
     way_limit: usize,
 ) -> Vec<Vec<TagOut>> {
+    let mut outs: Vec<Vec<TagOut>> = reqs.iter().map(|_| Vec::new()).collect();
+    drain_slice_requests_into(bank, reqs, way_limit, &mut outs);
+    outs
+}
+
+/// [`drain_slice_requests`] into caller-provided (recycled) outcome
+/// buffers — the allocation-free path the epoch loop runs.
+pub(crate) fn drain_slice_requests_into(
+    bank: &mut TagBank,
+    reqs: &[Vec<TagReq>],
+    way_limit: usize,
+    outs: &mut [Vec<TagOut>],
+) {
+    debug_assert_eq!(reqs.len(), outs.len());
     let n = reqs.len();
+    for (q, o) in reqs.iter().zip(outs.iter_mut()) {
+        debug_assert!(o.is_empty(), "recycled outcome buffer not cleared");
+        o.reserve(q.len());
+    }
     let mut pos = vec![0usize; n];
-    let mut outs: Vec<Vec<TagOut>> = reqs.iter().map(|q| Vec::with_capacity(q.len())).collect();
     let Some(max_round) = reqs.iter().filter_map(|q| q.last().map(|r| r.round)).max() else {
-        return outs;
+        return;
     };
     for round in 0..=max_round {
         for spu in 0..n {
@@ -289,15 +534,13 @@ pub(crate) fn drain_slice_requests(
         pos.iter().zip(reqs).all(|(&p, q)| p == q.len()),
         "per-SPU queues must be sorted by round"
     );
-    outs
 }
 
 /// Apply one message to the bank — the same access sequence the serial
-/// path runs inline. Routed through [`SliceState::tag_access`] /
-/// [`SliceState::tag_access_second`] so temporal-block wavefront
-/// residency (and its avoided-fill accounting) applies identically in
-/// both engines.
-fn apply_tag_req(bank: &mut SliceState, r: &TagReq, way_limit: usize) -> TagOut {
+/// path runs inline. Routed through [`TagBank::tag_access`] /
+/// [`TagBank::tag_access_second`] so temporal-block wavefront residency
+/// (and its avoided-fill accounting) applies identically in all engines.
+fn apply_tag_req(bank: &mut TagBank, r: &TagReq, way_limit: usize) -> TagOut {
     if r.line1 != NO_LINE {
         // §4.1 merged dual-tag access: first line is the data access, the
         // second a tag-only match.
@@ -322,7 +565,7 @@ mod tests {
         // SPU 1 touched the line in round 0; SPU 0 only in round 1. The
         // earlier *round* must apply first even though SPU 0 has the lower
         // id — so SPU 1 takes the cold miss and SPU 0 hits.
-        let mut bank = SliceState::new(128, 2, 64);
+        let mut bank = TagBank::new(128, 2, 64);
         let reqs = vec![vec![req(1, 0x40)], vec![req(0, 0x40)]];
         let outs = drain_slice_requests(&mut bank, &reqs, 2);
         assert!(!outs[1][0].hit[0], "round-0 message is the cold miss");
@@ -333,7 +576,7 @@ mod tests {
     fn reconciliation_same_round_orders_by_spu_then_seq() {
         // Within one round, all of SPU 0's messages (in issue order)
         // precede SPU 1's — SPU 0 fills both ways before SPU 1 hits.
-        let mut bank = SliceState::new(128, 2, 64);
+        let mut bank = TagBank::new(128, 2, 64);
         let reqs = vec![vec![req(0, 0x80), req(0, 0xC0)], vec![req(0, 0x80)]];
         let outs = drain_slice_requests(&mut bank, &reqs, 2);
         assert!(!outs[0][0].hit[0] && !outs[0][1].hit[0]);
@@ -345,7 +588,7 @@ mod tests {
         // 1 set × 2 ways: SPU 0 dirties line 1 (write), SPU 1 then fills
         // two more lines; the second fill evicts the dirty line and must
         // report its writeback.
-        let mut bank = SliceState::new(128, 2, 64);
+        let mut bank = TagBank::new(128, 2, 64);
         let reqs = vec![
             vec![TagReq { round: 0, line0: 0x40, line1: NO_LINE, write: true }],
             vec![req(1, 0x80), req(1, 0xC0)],
@@ -357,7 +600,7 @@ mod tests {
 
     #[test]
     fn merged_requests_apply_both_tags() {
-        let mut bank = SliceState::new(2 * 1024 * 1024, 16, 64);
+        let mut bank = TagBank::new(2 * 1024 * 1024, 16, 64);
         let reqs =
             vec![vec![TagReq { round: 0, line0: 0x0, line1: 0x40, write: false }, req(1, 0x40)]];
         let outs = drain_slice_requests(&mut bank, &reqs, 16);
@@ -370,7 +613,7 @@ mod tests {
         // Temporal blocking: a wavefront-resident bank serves every
         // message as an avoided fill — no tag install, no writeback —
         // through the same drain path the live engine uses.
-        let mut bank = SliceState::new(128, 2, 64);
+        let mut bank = TagBank::new(128, 2, 64);
         bank.wavefront_resident = true;
         let reqs = vec![vec![
             req(0, 0x40),
@@ -386,9 +629,61 @@ mod tests {
 
     #[test]
     fn empty_queues_drain_to_empty_streams() {
-        let mut bank = SliceState::new(128, 2, 64);
+        let mut bank = TagBank::new(128, 2, 64);
         let reqs: Vec<Vec<TagReq>> = vec![Vec::new(), Vec::new()];
         let outs = drain_slice_requests(&mut bank, &reqs, 2);
         assert!(outs.iter().all(|o| o.is_empty()));
+    }
+
+    #[test]
+    fn drain_into_recycled_buffers_matches_fresh_drain() {
+        // The arena path: draining into recycled (cleared) buffers must
+        // produce exactly what the allocating drain produces, against
+        // identically warmed banks.
+        let reqs = vec![
+            vec![req(0, 0x40), req(1, 0x80)],
+            vec![TagReq { round: 0, line0: 0x80, line1: 0xC0, write: true }],
+        ];
+        let mut bank_a = TagBank::new(256, 2, 64);
+        let fresh = drain_slice_requests(&mut bank_a, &reqs, 2);
+        let mut bank_b = TagBank::new(256, 2, 64);
+        // Pre-dirty the recycled buffers with junk capacity, then clear —
+        // exactly what reconcile_epoch hands the drain.
+        let mut reused: Vec<Vec<TagOut>> = (0..2)
+            .map(|_| {
+                let mut v = Vec::with_capacity(8);
+                v.push(TagOut::single(crate::mem::cache::AccessOutcome {
+                    hit: true,
+                    writeback: None,
+                    prefetch_hit: false,
+                    avoided: false,
+                }));
+                v.clear();
+                v
+            })
+            .collect();
+        drain_slice_requests_into(&mut bank_b, &reqs, 2, &mut reused);
+        for (f, r) in fresh.iter().zip(&reused) {
+            assert_eq!(f.len(), r.len());
+            for (a, b) in f.iter().zip(r) {
+                assert_eq!(a.hit, b.hit);
+                assert_eq!(a.wb, b.wb);
+                assert_eq!(a.avoided, b.avoided);
+            }
+        }
+        assert_eq!(bank_a.cache.stats, bank_b.cache.stats, "banks warmed identically");
+    }
+
+    #[test]
+    fn pipeline_channel_bounds_in_flight_epochs() {
+        // One epoch already handed to the worker plus one queued is the
+        // cap: a third in-flight epoch must be refused until the worker
+        // drains one.
+        let (tx, rx) = pipeline_channel::<usize>();
+        tx.try_send(0).expect("first epoch hands off");
+        let _replaying = rx.recv().expect("worker takes epoch 0");
+        tx.try_send(1).expect("second epoch queues behind the replay");
+        assert!(tx.try_send(2).is_err(), "third in-flight epoch exceeds PIPELINE_DEPTH");
+        assert_eq!(PIPELINE_DEPTH, 2);
     }
 }

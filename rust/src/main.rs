@@ -125,6 +125,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             trace,
             trace_interval,
             temporal_block,
+            epoch_rounds,
         } => {
             let cfg = cli::load_config(config.as_ref())?;
             let reg = cli::build_registry(&kernel_files)?;
@@ -133,6 +134,8 @@ fn dispatch(cmd: Command) -> Result<()> {
             })?;
             // Default: one worker per SPU (the epoch-parallel engine).
             let spu_threads = spu_threads.unwrap_or(cfg.spu.count);
+            let epoch_rounds =
+                epoch_rounds.unwrap_or_else(casper::coordinator::default_epoch_rounds);
             run_one(
                 &cfg,
                 &spec,
@@ -140,6 +143,7 @@ fn dispatch(cmd: Command) -> Result<()> {
                 steps,
                 spu_threads,
                 temporal_block,
+                epoch_rounds,
                 trace.as_deref(),
                 trace_interval,
             )
@@ -359,22 +363,32 @@ fn run_one(
     steps: usize,
     spu_threads: usize,
     temporal_block: usize,
+    epoch_rounds: usize,
     trace: Option<&Path>,
     trace_interval: u64,
 ) -> Result<()> {
     let domain = spec.domain(level);
+    let casper_opts = casper::coordinator::CasperOptions {
+        spu_threads,
+        temporal_block,
+        epoch_rounds,
+        ..Default::default()
+    };
+    // The pipeline only engages on the epoch engine (workers > 1).
+    let pipelined = casper_opts.pipeline && spu_threads > 1;
     println!(
-        "{} @ {} ({} points, {} steps, {} SPU worker thread(s), temporal block {})\n",
+        "{} @ {} ({} points, {} steps, {} SPU worker thread(s), temporal block {}, \
+         epoch rounds {}{})\n",
         spec.name,
         domain,
         domain.points(),
         steps,
         spu_threads,
-        temporal_block
+        temporal_block,
+        epoch_rounds,
+        if pipelined { ", pipelined" } else { "" },
     );
 
-    let casper_opts =
-        casper::coordinator::CasperOptions { spu_threads, temporal_block, ..Default::default() };
     let tracer = trace.map(|_| Box::new(Tracer::new(cfg, trace_interval)));
     let (casper_stats, tracer) =
         run_casper_spec_traced(cfg, spec, &domain, steps, casper_opts, tracer)?;

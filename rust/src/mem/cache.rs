@@ -56,7 +56,7 @@ pub struct AccessOutcome {
     /// of a prefetched line — it still cost a fill into this level).
     pub prefetch_hit: bool,
     /// The access was served by temporal-block wavefront residency
-    /// (see `SliceState::wavefront_resident`): no tag probe, no possible
+    /// (see `TagBank::wavefront_resident`): no tag probe, no possible
     /// line fill. Always a hit; the tracer attributes these separately so
     /// avoided DRAM fills stay visible in the cycle-domain trace.
     pub avoided: bool,

@@ -8,7 +8,7 @@
 
 use crate::config::SimConfig;
 use crate::mapping::SliceMapper;
-use crate::spu::SliceState;
+use crate::spu::{SliceState, TagBank};
 
 use super::cache::{Cache, CacheStats};
 use super::dram::DramModel;
@@ -90,6 +90,28 @@ impl SlicedLlc {
         self.banks = banks;
     }
 
+    /// Lend just the tag halves out, leaving the ports/counters in place.
+    /// This is the pipelined engine's split: tag reconciliation (functional
+    /// side) owns the [`TagBank`]s while the timing replay keeps the rest
+    /// of each [`SliceState`] — legal because replay-mode requests never
+    /// probe tags. Pair with
+    /// [`restore_tag_banks`](Self::restore_tag_banks); until then the
+    /// slices hold inert placeholders that must not be accessed.
+    pub fn take_tag_banks(&mut self) -> Vec<TagBank> {
+        self.banks
+            .iter_mut()
+            .map(|b| std::mem::replace(&mut b.tags, TagBank::placeholder()))
+            .collect()
+    }
+
+    /// Put the tag halves back after a pipelined step, in slice order.
+    pub fn restore_tag_banks(&mut self, tags: Vec<TagBank>) {
+        debug_assert_eq!(tags.len(), self.banks.len(), "tag banks restored out of shape");
+        for (b, t) in self.banks.iter_mut().zip(tags) {
+            b.tags = t;
+        }
+    }
+
     /// Restrict allocations to `ways - reserved` ways (§4.4) — used while
     /// the SPUs run with concurrent CPU processes.
     pub fn set_reserved_ways(&mut self, reserved: usize) {
@@ -123,7 +145,7 @@ impl SlicedLlc {
     }
 
     pub fn probe(&self, slice: usize, addr: u64) -> bool {
-        self.banks[slice].cache.probe(addr)
+        self.banks[slice].tags.cache.probe(addr)
     }
 
     /// Second tag match of a merged unaligned access (§4.1) — state
@@ -134,29 +156,30 @@ impl SlicedLlc {
     }
 
     /// Raise/clear the temporal-block residency flag on every slice (see
-    /// [`SliceState::wavefront_resident`]). Called by the coordinator at
+    /// [`TagBank::wavefront_resident`]). Called by the coordinator at
     /// step boundaries; the flag travels with the banks through
-    /// [`take_banks`](Self::take_banks), so the epoch-parallel engine sees
-    /// the same state.
+    /// [`take_banks`](Self::take_banks) /
+    /// [`take_tag_banks`](Self::take_tag_banks), so every engine sees the
+    /// same state.
     pub fn set_wavefront_resident(&mut self, resident: bool) {
         for b in &mut self.banks {
-            b.wavefront_resident = resident;
+            b.tags.wavefront_resident = resident;
         }
     }
 
     /// Tag probes served by wavefront residency, per slice.
     pub fn avoided_fills(&self) -> Vec<u64> {
-        self.banks.iter().map(|b| b.avoided_fills).collect()
+        self.banks.iter().map(|b| b.tags.avoided_fills).collect()
     }
 
     pub fn prefetch_fill(&mut self, slice: usize, addr: u64) -> Option<u64> {
-        self.banks[slice].cache.prefetch_fill(addr, self.way_limit)
+        self.banks[slice].tags.cache.prefetch_fill(addr, self.way_limit)
     }
 
     pub fn stats(&self) -> CacheStats {
         let mut s = CacheStats::default();
         for b in &self.banks {
-            s.add(&b.cache.stats);
+            s.add(&b.tags.cache.stats);
         }
         s
     }
@@ -170,7 +193,7 @@ impl SlicedLlc {
     /// Keep tags, clear counters (post-warm-up).
     pub fn reset_stats(&mut self) {
         for b in &mut self.banks {
-            b.cache.reset_stats();
+            b.tags.cache.reset_stats();
         }
     }
 }

@@ -14,7 +14,7 @@
 //!
 //! - [`Spu::run_group`] — the serial path: one vector group, functional +
 //!   timed, directly against the [`ShardedMem`] facade.
-//! - [`Spu::run_group_functional`] + [`Spu::replay_group_timing`] — the
+//! - `Spu::run_group_functional` + `Spu::replay_group_timing` — the
 //!   epoch-parallel split: phase 1 runs the functional side and queues
 //!   every tag access as an epoch message; phase 3 replays the identical
 //!   timing arithmetic with the reconciled tag outcomes injected.
@@ -24,13 +24,13 @@ pub mod slice_state;
 
 pub use sharded::ShardedMem;
 pub use sharded::SimStore;
-pub use slice_state::SliceState;
+pub use slice_state::{SliceState, TagBank};
 
 use crate::config::SimConfig;
 use crate::isa::{CasperProgram, StreamSpec};
 use crate::mem::cache::Cache;
 
-use sharded::{InstrRec, OutRun, SpuTrace, TagOutStream, TagReq, NO_LINE};
+use sharded::{FunMem, InstrRec, OutRun, SpuTrace, TagOutStream, TagReq, TimingMem, NO_LINE};
 
 /// SIMD lanes of one SPU (512-bit over f64).
 pub const LANES: usize = 8;
@@ -60,7 +60,10 @@ pub struct SpuStats {
     pub merged_unaligned: u64,
     /// Unaligned loads split in two (cross-slice).
     pub split_unaligned: u64,
-    /// Cycles the issue stage stalled on a full load queue.
+    /// Cycles the issue stage stalled on a full load queue. Live
+    /// accounting happens on the detachable [`SpuTimer`]
+    /// ([`SpuTimer::lq_stalls()`]); the engine folds it into this field when
+    /// aggregating run stats, so digests and checkpoints are unchanged.
     pub lq_stall_cycles: u64,
 }
 
@@ -96,6 +99,12 @@ impl LoadQueue {
         LoadQueue { slots: vec![0; capacity].into_boxed_slice(), head: 0, len: 0 }
     }
 
+    /// Zero-capacity stand-in installed while the real timer is lent out
+    /// via [`Spu::take_timer`]. Must never be exercised.
+    fn placeholder() -> LoadQueue {
+        LoadQueue { slots: Box::new([]), head: 0, len: 0 }
+    }
+
     #[inline]
     fn is_full(&self) -> bool {
         self.len == self.slots.len()
@@ -125,6 +134,93 @@ impl LoadQueue {
     }
 }
 
+/// The timing half of one SPU: pipeline clock, retire clock, the load
+/// queue, and the stall accounting — exactly the state the phase-3 replay
+/// mutates and the functional fan-out never touches. The pipelined engine
+/// lends it to the dedicated replay worker via `Spu::take_timer` /
+/// `Spu::restore_timer` while the rest of the SPU keeps fanning out the
+/// next epoch.
+#[derive(Debug, Clone)]
+pub struct SpuTimer {
+    /// Local pipeline time (next issue cycle).
+    pub now: u64,
+    /// Completion time of the latest retired group.
+    pub done: u64,
+    /// Completion times of in-flight loads (bounded by the LQ size).
+    lq: LoadQueue,
+    /// Cycles the issue stage stalled on a full load queue. Folded into
+    /// the aggregated [`SpuStats::lq_stall_cycles`] at run end (the digest
+    /// and checkpoint journal see the same totals as ever).
+    lq_stalls: u64,
+}
+
+impl SpuTimer {
+    fn new(load_queue: usize) -> SpuTimer {
+        SpuTimer { now: 0, done: 0, lq: LoadQueue::new(load_queue), lq_stalls: 0 }
+    }
+
+    /// Load-queue stall cycles accumulated so far (see
+    /// [`SpuStats::lq_stall_cycles`]).
+    pub fn lq_stalls(&self) -> u64 {
+        self.lq_stalls
+    }
+
+    /// Drain: the SPU is finished when its pipeline AND last memory
+    /// operation complete.
+    pub fn finish_time(&self) -> u64 {
+        self.done.max(self.now)
+    }
+
+    /// Epoch phase 3: replay one group's timing (issue, load queue,
+    /// ports, NoC, DRAM) for the SPU homed at `home_slice`, with the
+    /// reconciled tag outcomes injected from `outs[slice]`. Mirrors the
+    /// timing half of [`Spu::run_group`] exactly; lives on the timer so
+    /// the pipelined replay worker can run it with only the timing halves
+    /// in hand.
+    pub(crate) fn replay_group(
+        &mut self,
+        mem: &mut TimingMem<'_>,
+        home_slice: usize,
+        recs: &[InstrRec],
+        outs: &mut [TagOutStream],
+    ) {
+        let mut group_ready: u64 = self.now;
+        for rec in recs {
+            let mut t = self.now;
+            if self.lq.is_full() {
+                let free_at = self.lq.pop_front();
+                if free_at > t {
+                    self.lq_stalls += free_at - t;
+                    t = free_at;
+                }
+            }
+            let completion = if rec.l1_hit {
+                t + mem.spu_l1_latency
+            } else {
+                let mut ready = t;
+                for r in 0..rec.n_reqs as usize {
+                    let slice = rec.slices[r] as usize;
+                    let lines: &[u64] =
+                        if rec.merged { &rec.lines[..2] } else { &rec.lines[r..r + 1] };
+                    let out = outs[slice].next();
+                    ready = ready.max(mem.load_slice_request(home_slice, slice, lines, t, Some(&out)));
+                }
+                ready
+            };
+            self.lq.push_back(completion);
+            group_ready = group_ready.max(completion);
+            if rec.has_store {
+                let slice = rec.store_slice as usize;
+                let out = outs[slice].next();
+                let st = mem.store_request(home_slice, slice, rec.store_addr, t, Some(&out));
+                group_ready = group_ready.max(st);
+            }
+            self.now = t + 1;
+        }
+        self.done = self.done.max(group_ready);
+    }
+}
+
 /// One stencil processing unit attached to LLC slice `slice`.
 #[derive(Debug, Clone)]
 pub struct Spu {
@@ -133,12 +229,9 @@ pub struct Spu {
     pub slice: usize,
     program: CasperProgram,
     streams: Vec<BoundStream>,
-    /// Completion times of in-flight loads (bounded by the LQ size).
-    lq: LoadQueue,
-    /// Local pipeline time (next issue cycle).
-    pub now: u64,
-    /// Completion time of the latest retired group.
-    pub done: u64,
+    /// The timing half (pipeline/retire clocks, load queue, stalls) —
+    /// detachable for the pipelined engine's replay worker.
+    pub timer: SpuTimer,
     /// Vector accumulator.
     acc: [f64; LANES],
     pub stats: SpuStats,
@@ -159,15 +252,30 @@ impl Spu {
             slice,
             program,
             streams: Vec::with_capacity(n_streams),
-            lq: LoadQueue::new(cfg.spu.load_queue),
-            now: 0,
-            done: 0,
+            timer: SpuTimer::new(cfg.spu.load_queue),
             acc: [0.0; LANES],
             stats: SpuStats::default(),
             remaining: 0,
             simd_lanes: cfg.spu.simd_lanes().min(LANES),
             l1: None,
         }
+    }
+
+    /// Detach the timing half for a pipelined step (the replay worker owns
+    /// it until [`restore_timer`](Self::restore_timer)). The placeholder
+    /// left behind must not be exercised — the functional fan-out never
+    /// touches timer state, which is the point of the split.
+    pub(crate) fn take_timer(&mut self) -> SpuTimer {
+        std::mem::replace(
+            &mut self.timer,
+            SpuTimer { now: 0, done: 0, lq: LoadQueue::placeholder(), lq_stalls: 0 },
+        )
+    }
+
+    /// Re-attach the timing half after a pipelined step.
+    pub(crate) fn restore_timer(&mut self, timer: SpuTimer) {
+        debug_assert!(self.timer.lq.slots.is_empty(), "timer restored twice");
+        self.timer = timer;
     }
 
     /// Attach (or detach) the NearL1 private L1 tag model, preserving any
@@ -250,7 +358,7 @@ impl Spu {
         let lanes = (self.remaining as usize).min(self.simd_lanes);
         let lanes_bytes = (lanes * 8) as u64;
         let n_instrs = self.program.instrs.len();
-        let mut group_ready: u64 = self.now;
+        let mut group_ready: u64 = self.timer.now;
 
         for k in 0..n_instrs {
             let instr = self.program.instrs[k];
@@ -259,20 +367,20 @@ impl Spu {
             // here, not the whole BoundStream record.
             let base = self.streams[sidx].addr.wrapping_add_signed(instr.dx() * 8);
             // Issue: 1 instruction per cycle.
-            let mut t = self.now;
+            let mut t = self.timer.now;
 
             // Load-queue back-pressure: wait for the oldest entry.
-            if self.lq.is_full() {
-                let free_at = self.lq.pop_front();
+            if self.timer.lq.is_full() {
+                let free_at = self.timer.lq.pop_front();
                 if free_at > t {
-                    self.stats.lq_stall_cycles += free_at - t;
+                    self.timer.lq_stalls += free_at - t;
                     t = free_at;
                 }
             }
 
             // Timed load of the 64 B operand (8 B-aligned).
             let completion = self.timed_load(mem, base, t);
-            self.lq.push_back(completion);
+            self.timer.lq.push_back(completion);
             group_ready = group_ready.max(completion);
 
             // Functional MAC across lanes (one contiguous vector load —
@@ -303,14 +411,14 @@ impl Spu {
             if instr.advance_stream {
                 self.streams[sidx].addr += lanes_bytes;
             }
-            self.now = t + 1;
+            self.timer.now = t + 1;
         }
         // Output stream advances implicitly with each group.
         self.streams[CasperProgram::OUT_STREAM as usize].addr += lanes_bytes;
 
         self.remaining -= lanes as u64;
         self.stats.groups += 1;
-        self.done = self.done.max(group_ready);
+        self.timer.done = self.timer.done.max(group_ready);
         true
     }
 
@@ -318,13 +426,14 @@ impl Spu {
     /// from the (step-immutable) input array, the MAC, and a staged output
     /// write — while queueing every LLC tag access as an epoch message in
     /// `trace` and recording the per-instruction request geometry for the
-    /// phase-3 timing replay. Mirrors [`run_group`] exactly minus the
-    /// timing state (`now`/`done`/load queue), which
-    /// [`replay_group_timing`](Self::replay_group_timing) advances later;
-    /// the engine identity tests pin the equivalence.
+    /// phase-3 timing replay. Mirrors [`run_group`](Self::run_group)
+    /// exactly minus the timing state (the [`SpuTimer`]), which
+    /// [`SpuTimer::replay_group`] advances later; the engine identity
+    /// tests pin the equivalence. Takes the shared-read [`FunMem`] view so
+    /// the pipelined engine can fan out while the timing half is away.
     pub(crate) fn run_group_functional(
         &mut self,
-        mem: &ShardedMem,
+        mem: FunMem<'_>,
         round: u32,
         trace: &mut SpuTrace,
     ) -> bool {
@@ -340,7 +449,7 @@ impl Spu {
             let sidx = instr.stream_idx as usize;
             let base = self.streams[sidx].addr.wrapping_add_signed(instr.dx() * 8);
 
-            let req = crate::mem::unaligned::decompose(base, &mem.llc_cfg, &mem.mapper);
+            let req = crate::mem::unaligned::decompose(base, mem.llc_cfg, mem.mapper);
             let mut rec = if self.l1_serves(&req.lines[..req.n_lines]) {
                 self.stats.local_loads += 1;
                 InstrRec::l1_served()
@@ -428,55 +537,23 @@ impl Spu {
         true
     }
 
-    /// Epoch phase 3: replay one group's timing (issue, load queue,
-    /// ports, NoC, DRAM) with the reconciled tag outcomes injected from
-    /// `outs[slice]`. Mirrors the timing half of [`run_group`] exactly.
+    /// Epoch phase 3 with the facade still whole (phased / test paths):
+    /// delegates to [`SpuTimer::replay_group`] through a transient timing
+    /// view.
     pub(crate) fn replay_group_timing(
         &mut self,
         mem: &mut ShardedMem,
         recs: &[InstrRec],
         outs: &mut [TagOutStream],
     ) {
-        let mut group_ready: u64 = self.now;
-        for rec in recs {
-            let mut t = self.now;
-            if self.lq.is_full() {
-                let free_at = self.lq.pop_front();
-                if free_at > t {
-                    self.stats.lq_stall_cycles += free_at - t;
-                    t = free_at;
-                }
-            }
-            let completion = if rec.l1_hit {
-                t + mem.spu_l1_latency
-            } else {
-                let mut ready = t;
-                for r in 0..rec.n_reqs as usize {
-                    let slice = rec.slices[r] as usize;
-                    let lines: &[u64] =
-                        if rec.merged { &rec.lines[..2] } else { &rec.lines[r..r + 1] };
-                    let out = outs[slice].next();
-                    ready = ready.max(mem.load_slice_request(self.slice, slice, lines, t, Some(&out)));
-                }
-                ready
-            };
-            self.lq.push_back(completion);
-            group_ready = group_ready.max(completion);
-            if rec.has_store {
-                let slice = rec.store_slice as usize;
-                let out = outs[slice].next();
-                let st = mem.store_request(self.slice, slice, rec.store_addr, t, Some(&out));
-                group_ready = group_ready.max(st);
-            }
-            self.now = t + 1;
-        }
-        self.done = self.done.max(group_ready);
+        let mut tv = mem.timing_view();
+        self.timer.replay_group(&mut tv, self.slice, recs, outs);
     }
 
     /// Drain: the SPU is finished when its pipeline AND last memory
     /// operation complete.
     pub fn finish_time(&self) -> u64 {
-        self.done.max(self.now)
+        self.timer.finish_time()
     }
 
     /// NearL1 check shared by both execution modes: probe (and fill) the
@@ -695,7 +772,7 @@ mod tests {
             // Phase 1: functional + trace.
             let mut trace = SpuTrace::new(mem_b.llc_cfg.slices);
             let mut round = 0u32;
-            while spu_b.run_group_functional(&mem_b, round, &mut trace) {
+            while spu_b.run_group_functional(mem_b.fun_view(), round, &mut trace) {
                 round += 1;
             }
             for run in trace.outs.drain(..) {
@@ -708,7 +785,7 @@ mod tests {
             let mut streams_out: Vec<TagOutStream> = Vec::new();
             for (s, q) in trace.tagq.iter().enumerate() {
                 let outs = crate::coordinator::epoch::drain_slice_requests(
-                    mem_b.llc.bank_mut(s),
+                    &mut mem_b.llc.bank_mut(s).tags,
                     std::slice::from_ref(q),
                     way_limit,
                 );
@@ -722,6 +799,7 @@ mod tests {
             }
 
             assert_eq!(spu_a.stats, spu_b.stats, "offset {offset}");
+            assert_eq!(spu_a.timer.lq_stalls(), spu_b.timer.lq_stalls(), "offset {offset}");
             assert_eq!(spu_a.finish_time(), spu_b.finish_time(), "offset {offset}");
             assert_eq!(mem_a.llc.stats(), mem_b.llc.stats(), "offset {offset}");
             assert_eq!(mem_a.dram.accesses, mem_b.dram.accesses, "offset {offset}");

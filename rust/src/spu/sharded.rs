@@ -9,12 +9,21 @@
 //! touched by the deterministic serial replay — see
 //! `rust/DESIGN-parallel.md`).
 //!
-//! The timed per-slice request logic (`ShardedMem::load_slice_request`,
-//! `ShardedMem::store_request` — crate-internal) is written ONCE and used by both
-//! execution modes: the serial path resolves tag outcomes inline
-//! (`pre = None`), the epoch-parallel replay injects outcomes that the
-//! per-slice reconciliation computed (`pre = Some(..)`). Keeping a single
-//! copy of this arithmetic is what makes the two modes byte-identical.
+//! The timed per-slice request logic (`TimingMem::load_slice_request`,
+//! `TimingMem::store_request` — crate-internal) is written ONCE and used
+//! by every execution mode: the serial path resolves tag outcomes inline
+//! (`pre = None`), the epoch replay injects outcomes that the per-slice
+//! reconciliation computed (`pre = Some(..)`). Keeping a single copy of
+//! this arithmetic is what makes the modes byte-identical.
+//!
+//! For the pipelined engine, `ShardedMem::split_halves` splits the facade
+//! into two disjoint borrows: a `FunHalf` (backing store + mapper +
+//! geometry — everything phase 1/2 reads) that stays with the functional
+//! side, and a `TimingMem` (LLC ports/counters, NoC, DRAM, tracer) that
+//! moves into the dedicated replay worker. The split is sound because
+//! replay-mode requests (`pre = Some`) never probe tags — the tag banks
+//! themselves are lent to the functional side separately via
+//! [`SlicedLlc::take_tag_banks`](crate::mem::hierarchy::SlicedLlc::take_tag_banks).
 
 use crate::config::{LlcConfig, MappingPolicy, SimConfig};
 use crate::mapping::SliceMapper;
@@ -221,6 +230,17 @@ impl SpuTrace {
             groups: 0,
         }
     }
+
+    /// Clear for reuse on the next epoch, keeping every buffer's capacity
+    /// (the pipelined engine cycles a fixed pool of traces arena-style).
+    pub fn reset(&mut self) {
+        self.instrs.clear();
+        for q in &mut self.tagq {
+            q.clear();
+        }
+        self.outs.clear();
+        self.groups = 0;
+    }
 }
 
 /// Cursor over one slice's reconciled outcomes for one SPU, consumed by
@@ -268,6 +288,55 @@ pub struct ShardedMem {
     pub trace: Option<Box<Tracer>>,
 }
 
+/// The functional half of [`ShardedMem`]: the shared-read state phase 1
+/// (functional fan-out) needs — backing store, slice mapper, geometry, and
+/// the §4.1 ablation knob. `Copy` so worker threads can each take one.
+#[derive(Clone, Copy)]
+pub(crate) struct FunMem<'a> {
+    pub store: &'a SimStore,
+    pub mapper: &'a SliceMapper,
+    pub llc_cfg: &'a LlcConfig,
+    pub unaligned_hw: bool,
+}
+
+/// Owning borrow of the functional half: like [`FunMem`] but with the
+/// backing store mutable, so the epoch loop can apply staged [`OutRun`]s
+/// between fan-outs while the timing half is away in the replay worker.
+pub(crate) struct FunHalf<'a> {
+    pub store: &'a mut SimStore,
+    pub mapper: &'a SliceMapper,
+    pub llc_cfg: &'a LlcConfig,
+    pub unaligned_hw: bool,
+}
+
+impl FunHalf<'_> {
+    /// Reborrow as the shared-read view phase-1 workers take.
+    pub(crate) fn view(&self) -> FunMem<'_> {
+        FunMem {
+            store: &*self.store,
+            mapper: self.mapper,
+            llc_cfg: self.llc_cfg,
+            unaligned_hw: self.unaligned_hw,
+        }
+    }
+}
+
+/// The timing half of [`ShardedMem`]: slice ports + NoC/DRAM counters,
+/// the DRAM and NoC models, and the tracer — everything the (serial)
+/// timing replay mutates. Built either as a transient view over the whole
+/// facade ([`ShardedMem::timing_view`], serial/phased paths) or as one arm
+/// of [`ShardedMem::split_halves`] (pipelined path, moved into the replay
+/// worker). Holds the request arithmetic so it exists exactly once.
+pub(crate) struct TimingMem<'a> {
+    pub llc: &'a mut SlicedLlc,
+    pub noc: &'a mut MeshNoc,
+    pub dram: &'a mut DramModel,
+    pub llc_cfg: &'a LlcConfig,
+    pub spu_local_latency: u64,
+    pub spu_l1_latency: u64,
+    pub trace: &'a mut Option<Box<Tracer>>,
+}
+
 impl ShardedMem {
     pub fn new(cfg: &SimConfig, policy: MappingPolicy) -> ShardedMem {
         ShardedMem {
@@ -284,12 +353,88 @@ impl ShardedMem {
         }
     }
 
+    /// The shared-read functional view (phase-1 fan-out from the phased /
+    /// serial paths, where the facade is still whole).
+    pub(crate) fn fun_view(&self) -> FunMem<'_> {
+        FunMem {
+            store: &self.store,
+            mapper: &self.mapper,
+            llc_cfg: &self.llc_cfg,
+            unaligned_hw: self.unaligned_hw,
+        }
+    }
+
+    /// Transient timing view over the whole facade (serial timed path and
+    /// non-pipelined replay).
+    pub(crate) fn timing_view(&mut self) -> TimingMem<'_> {
+        TimingMem {
+            llc: &mut self.llc,
+            noc: &mut self.noc,
+            dram: &mut self.dram,
+            llc_cfg: &self.llc_cfg,
+            spu_local_latency: self.spu_local_latency,
+            spu_l1_latency: self.spu_l1_latency,
+            trace: &mut self.trace,
+        }
+    }
+
+    /// Split the facade into its two disjoint halves for a pipelined step:
+    /// the [`FunHalf`] stays on the functional side of the pipeline, the
+    /// [`TimingMem`] moves into the replay worker. Field-level borrows, so
+    /// both live until the pipeline scope ends.
+    pub(crate) fn split_halves(&mut self) -> (FunHalf<'_>, TimingMem<'_>) {
+        (
+            FunHalf {
+                store: &mut self.store,
+                mapper: &self.mapper,
+                llc_cfg: &self.llc_cfg,
+                unaligned_hw: self.unaligned_hw,
+            },
+            TimingMem {
+                llc: &mut self.llc,
+                noc: &mut self.noc,
+                dram: &mut self.dram,
+                llc_cfg: &self.llc_cfg,
+                spu_local_latency: self.spu_local_latency,
+                spu_l1_latency: self.spu_l1_latency,
+                trace: &mut self.trace,
+            },
+        )
+    }
+
+    /// Timed load request — see [`TimingMem::load_slice_request`].
+    pub(crate) fn load_slice_request(
+        &mut self,
+        from_slice: usize,
+        slice: usize,
+        lines: &[u64],
+        t: u64,
+        pre: Option<&TagOut>,
+    ) -> u64 {
+        self.timing_view().load_slice_request(from_slice, slice, lines, t, pre)
+    }
+
+    /// Timed store request — see [`TimingMem::store_request`].
+    pub(crate) fn store_request(
+        &mut self,
+        from_slice: usize,
+        slice: usize,
+        addr: u64,
+        t: u64,
+        pre: Option<&TagOut>,
+    ) -> u64 {
+        self.timing_view().store_request(from_slice, slice, addr, t, pre)
+    }
+}
+
+impl TimingMem<'_> {
     /// Timed 64 B load request from the SPU at `from_slice` to `slice`,
     /// issued at `t`; returns the data-ready cycle. `lines` holds one
     /// line-aligned address, or two for a §4.1 merged dual-tag access.
-    /// `pre` injects reconciled tag outcomes (epoch replay); `None`
-    /// resolves them inline against the bank (serial path). Both modes run
-    /// this exact arithmetic — the identity tests pin that.
+    /// `pre` injects reconciled tag outcomes (epoch replay — never touches
+    /// the tag banks, which is what lets the pipelined engine lend them
+    /// out); `None` resolves them inline against the bank (serial path).
+    /// All modes run this exact arithmetic — the identity tests pin that.
     pub(crate) fn load_slice_request(
         &mut self,
         from_slice: usize,
@@ -521,7 +666,7 @@ mod tests {
         c2.llc.set_wavefront_resident(true);
         c2.load_slice_request(0, 3, &lines, 100, None);
         assert_eq!(c2.llc.bank(3).dram_reads, 0, "resident request must not fill");
-        assert_eq!(c2.llc.bank(3).avoided_fills, 2);
+        assert_eq!(c2.llc.bank(3).tags.avoided_fills, 2);
     }
 
     #[test]

@@ -3,30 +3,30 @@
 //! The epoch-parallel engine (see `rust/DESIGN-parallel.md`) relies on the
 //! fact that the contended per-slice resources — the tag/data bank and the
 //! single load/store port — are *independently owned*: during the tag
-//! reconciliation phase each [`SliceState`] is handed to exactly one worker
-//! thread, so slices are simulated concurrently without locks. The serial
-//! path uses the very same states through the
+//! reconciliation phase each slice's [`TagBank`] is handed to exactly one
+//! worker thread, so slices are simulated concurrently without locks. The
+//! pipelined engine goes one step further and moves the tag banks to the
+//! functional side of the pipeline outright (via
+//! [`SlicedLlc::take_tag_banks`](crate::mem::hierarchy::SlicedLlc::take_tag_banks))
+//! while the port/NoC/DRAM counters stay with the timing replay — legal
+//! because replay-mode requests never touch tags (see
+//! `TimingMem` in `crate::spu::sharded`). The serial path uses the
+//! very same state through the
 //! [`SlicedLlc`](crate::mem::hierarchy::SlicedLlc) facade, which keeps the
-//! two execution modes byte-identical.
+//! execution modes byte-identical.
 
 use crate::mem::cache::{AccessOutcome, Cache};
 use crate::mem::ratelimit::RateLimiter;
 
-/// One LLC slice's private state: tag/data bank, the single-ported bank
-/// scheduler, NoC injection-point counters, and this slice's share of the
-/// DRAM queue (the requests it issued on misses/writebacks).
+/// The tag half of one LLC slice: the set-associative tag bank plus the
+/// temporal-blocking residency filter. This is the state phase 2 (tag
+/// reconciliation) owns exclusively; it carries no timing-domain counters,
+/// which is what lets the pipelined engine reconcile epoch *e+1* while
+/// epoch *e* is still replaying.
 #[derive(Debug, Clone)]
-pub struct SliceState {
+pub struct TagBank {
     /// The slice's set-associative tag bank.
     pub cache: Cache,
-    /// The slice's single load/store port (1 access/cycle, 64 B).
-    pub port: RateLimiter,
-    /// NoC port counter: requests that arrived from a remote SPU.
-    pub remote_reqs: u64,
-    /// DRAM-queue share: line fetches this slice issued on misses.
-    pub dram_reads: u64,
-    /// DRAM-queue share: dirty writebacks this slice issued.
-    pub dram_writes: u64,
     /// Temporal blocking (§temporal-block): the wavefront the SPUs are
     /// consuming this step was produced into this slice on the previous
     /// inner step and is guaranteed resident, so tag probes are bypassed
@@ -39,17 +39,20 @@ pub struct SliceState {
     pub avoided_fills: u64,
 }
 
-impl SliceState {
-    pub fn new(slice_bytes: usize, ways: usize, line_bytes: usize) -> SliceState {
-        SliceState {
+impl TagBank {
+    pub fn new(slice_bytes: usize, ways: usize, line_bytes: usize) -> TagBank {
+        TagBank {
             cache: Cache::new(slice_bytes, ways, line_bytes),
-            port: RateLimiter::new(1, 64),
-            remote_reqs: 0,
-            dram_reads: 0,
-            dram_writes: 0,
             wavefront_resident: false,
             avoided_fills: 0,
         }
+    }
+
+    /// Stand-in installed while the real bank is lent out via
+    /// [`SlicedLlc::take_tag_banks`](crate::mem::hierarchy::SlicedLlc::take_tag_banks).
+    /// Must never be accessed — replay-mode requests bypass tags entirely.
+    pub(crate) fn placeholder() -> TagBank {
+        TagBank::new(64, 1, 64)
     }
 
     /// Demand tag access through the residency filter: the single seam
@@ -93,15 +96,62 @@ impl SliceState {
         self.cache.access_second_tag(addr, way_limit)
     }
 
-    /// Reset tags, port clock, and counters (new run).
+    /// Reset tags and the residency filter (new run).
     pub fn reset(&mut self) {
         self.cache.reset();
+        self.wavefront_resident = false;
+        self.avoided_fills = 0;
+    }
+}
+
+/// One LLC slice's private state: the [`TagBank`] (tag half), the
+/// single-ported bank scheduler, NoC injection-point counters, and this
+/// slice's share of the DRAM queue (the requests it issued on
+/// misses/writebacks) — the latter three being the timing half that stays
+/// with the replay stage when the tag banks are lent to the pipeline's
+/// functional side.
+#[derive(Debug, Clone)]
+pub struct SliceState {
+    /// The tag half: set-associative bank + residency filter.
+    pub tags: TagBank,
+    /// The slice's single load/store port (1 access/cycle, 64 B).
+    pub port: RateLimiter,
+    /// NoC port counter: requests that arrived from a remote SPU.
+    pub remote_reqs: u64,
+    /// DRAM-queue share: line fetches this slice issued on misses.
+    pub dram_reads: u64,
+    /// DRAM-queue share: dirty writebacks this slice issued.
+    pub dram_writes: u64,
+}
+
+impl SliceState {
+    pub fn new(slice_bytes: usize, ways: usize, line_bytes: usize) -> SliceState {
+        SliceState {
+            tags: TagBank::new(slice_bytes, ways, line_bytes),
+            port: RateLimiter::new(1, 64),
+            remote_reqs: 0,
+            dram_reads: 0,
+            dram_writes: 0,
+        }
+    }
+
+    /// Demand tag access (delegates to the [`TagBank`] residency seam).
+    pub fn tag_access(&mut self, addr: u64, write: bool, way_limit: usize) -> AccessOutcome {
+        self.tags.tag_access(addr, write, way_limit)
+    }
+
+    /// Second-tag access (merged unaligned pair; see [`TagBank`]).
+    pub fn tag_access_second(&mut self, addr: u64, way_limit: usize) -> AccessOutcome {
+        self.tags.tag_access_second(addr, way_limit)
+    }
+
+    /// Reset tags, port clock, and counters (new run).
+    pub fn reset(&mut self) {
+        self.tags.reset();
         self.port.reset();
         self.remote_reqs = 0;
         self.dram_reads = 0;
         self.dram_writes = 0;
-        self.wavefront_resident = false;
-        self.avoided_fills = 0;
     }
 }
 
@@ -112,28 +162,28 @@ mod tests {
     #[test]
     fn new_state_is_clean() {
         let s = SliceState::new(2 * 1024 * 1024, 16, 64);
-        assert_eq!(s.cache.stats.accesses(), 0);
+        assert_eq!(s.tags.cache.stats.accesses(), 0);
         assert_eq!((s.remote_reqs, s.dram_reads, s.dram_writes), (0, 0, 0));
-        assert!(!s.wavefront_resident);
-        assert_eq!(s.avoided_fills, 0);
+        assert!(!s.tags.wavefront_resident);
+        assert_eq!(s.tags.avoided_fills, 0);
     }
 
     #[test]
     fn reset_clears_counters_and_tags() {
         let mut s = SliceState::new(256, 2, 64);
-        s.cache.access(0x40, true);
+        s.tags.cache.access(0x40, true);
         s.port.claim(0);
         s.remote_reqs = 3;
         s.dram_reads = 2;
         s.dram_writes = 1;
-        s.wavefront_resident = true;
-        s.avoided_fills = 7;
+        s.tags.wavefront_resident = true;
+        s.tags.avoided_fills = 7;
         s.reset();
-        assert!(!s.cache.probe(0x40));
+        assert!(!s.tags.cache.probe(0x40));
         assert_eq!((s.remote_reqs, s.dram_reads, s.dram_writes), (0, 0, 0));
         assert_eq!(s.port.grants, 0);
-        assert!(!s.wavefront_resident);
-        assert_eq!(s.avoided_fills, 0);
+        assert!(!s.tags.wavefront_resident);
+        assert_eq!(s.tags.avoided_fills, 0);
     }
 
     #[test]
@@ -144,17 +194,17 @@ mod tests {
         assert!(!o.hit && !o.avoided);
         // Residency: an address never touched hits, counts an avoided
         // fill, and installs nothing.
-        s.wavefront_resident = true;
+        s.tags.wavefront_resident = true;
         let o = s.tag_access(0x1000, false, 2);
         assert!(o.hit && o.avoided && o.writeback.is_none());
         let o2 = s.tag_access_second(0x2000, 2);
         assert!(o2.hit && o2.avoided);
-        assert_eq!(s.avoided_fills, 2);
-        assert!(!s.cache.probe(0x1000), "resident access must not install tags");
+        assert_eq!(s.tags.avoided_fills, 2);
+        assert!(!s.tags.cache.probe(0x1000), "resident access must not install tags");
         // First access counted a hit in stats; second-tag counted none.
-        assert_eq!(s.cache.stats.read_hits, 1);
+        assert_eq!(s.tags.cache.stats.read_hits, 1);
         // Flag off: the same address misses for real again.
-        s.wavefront_resident = false;
+        s.tags.wavefront_resident = false;
         assert!(!s.tag_access(0x1000, false, 2).hit);
     }
 }

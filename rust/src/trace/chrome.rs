@@ -13,8 +13,12 @@
 //!     peak), LLC hit rate, per-channel DRAM bytes, DRAM queue-wait
 //!     cycles, NoC messages + contention.
 //! - **pid 2 — "casper host (wall clock)"**: real-microsecond spans for
-//!   the epoch engine's three phases (functional / reconcile / replay),
-//!   one triple per epoch. Absent under the serial engine.
+//!   the epoch engine's three stages, one triple per epoch. Absent under
+//!   the serial engine.
+//!   - tid 0: the functional side (functional fan-out + tag reconcile);
+//!   - tid 1: the timing replay. Separate rows, because under the
+//!     pipelined engine epoch *e*'s replay overlaps epoch *e+1*'s
+//!     fan-out — the overlap shows as concurrent spans on the two rows.
 
 use super::{Span, Tracer};
 use std::io::{self, Write};
@@ -127,7 +131,8 @@ impl Tracer {
             meta_thread(&mut ev, 1, 100 + spu as u32, &format!("spu {spu}"))?;
         }
         if !self.epochs().is_empty() {
-            meta_thread(&mut ev, 2, 0, "epoch phases")?;
+            meta_thread(&mut ev, 2, 0, "epoch fan-out + reconcile")?;
+            meta_thread(&mut ev, 2, 1, "epoch replay worker")?;
         }
 
         for &Span { step, pass, start, end } in self.pass_spans() {
@@ -138,8 +143,14 @@ impl Tracer {
             span_event(&mut ev, 1, 100 + spu as u32, "spu", &name, start, end)?;
         }
         for (i, ep) in self.epochs().iter().enumerate() {
-            for (name, ph) in ["functional", "reconcile", "replay"].iter().zip(ep.phases.iter()) {
-                span_event(&mut ev, 2, 0, "epoch", &format!("{name} (epoch {i})"), ph[0], ph[1])?;
+            for (k, (name, ph)) in
+                ["functional", "reconcile", "replay"].iter().zip(ep.phases.iter()).enumerate()
+            {
+                // Replay rides its own row (tid 1): under the pipelined
+                // engine it belongs to the replay worker and overlaps the
+                // next epoch's tid-0 spans in wall-clock time.
+                let tid = if k == 2 { 1 } else { 0 };
+                span_event(&mut ev, 2, tid, "epoch", &format!("{name} (epoch {i})"), ph[0], ph[1])?;
             }
         }
 
@@ -438,6 +449,13 @@ mod tests {
         assert!(json.contains("llc bw (% of peak)"));
         assert!(json.contains("llc avoided fills"));
         assert!(json.contains("functional (epoch 0)"));
+        // The replay span rides the dedicated worker row (pid 2, tid 1),
+        // so pipelined overlap renders as concurrent spans on two rows.
+        assert!(json.contains("epoch replay worker"));
+        assert!(json.contains(
+            "\"ph\":\"X\",\"pid\":2,\"tid\":1,\"ts\":55,\"dur\":145,\
+             \"cat\":\"epoch\",\"name\":\"replay (epoch 0)\""
+        ));
         assert!(json.contains("\"interval_cycles\":64"));
     }
 

@@ -1,0 +1,152 @@
+//! The pipelined-epoch determinism contract, end to end:
+//!
+//! - a property sweep over randomly generated valid [`KernelSpec`]s:
+//!   pipelined execution (replay on the dedicated worker, overlapped with
+//!   the next epoch's fan-out) is byte-identical — full `RunStats`
+//!   equality AND `digest()` — to both the phased epoch engine and the
+//!   serial round-robin engine, across SPU thread counts and temporal
+//!   blocks;
+//! - the same identity on a multi-pass kernel (`star17_3d`), where every
+//!   pass detaches and restores the timing half around its own pipeline
+//!   scope;
+//! - the pipeline channel bounds in-flight epochs to
+//!   [`PIPELINE_DEPTH`] (one queued + one replaying), via the public
+//!   re-exports.
+
+use casper::config::SimConfig;
+use casper::coordinator::{
+    pipeline_channel, run_casper_spec, CasperOptions, PIPELINE_DEPTH,
+};
+use casper::stencil::{extended_presets, KernelOrigin, KernelSpec, StencilPoint};
+use casper::util::SplitMix64;
+
+/// Generate a random spec that satisfies `KernelSpec::validate` by
+/// construction (same scheme as the kernel-registry property tests:
+/// bounded radii keep the row count inside the stream buffer, palette
+/// coefficients keep the constant buffer small).
+fn random_spec(r: &mut SplitMix64, case: usize) -> KernelSpec {
+    const PALETTE: [f64; 8] = [0.5, 0.25, 0.125, -0.125, 0.0625, 1.0, -0.5, 0.75];
+    let dims = 1 + (r.next_u64() % 3) as usize;
+    let rx = 1 + (r.next_u64() % 3) as i64;
+    let ry = if dims >= 2 { 1 + (r.next_u64() % 2) as i64 } else { 0 };
+    let rz = if dims >= 3 { (r.next_u64() % 2) as i64 } else { 0 };
+    let mut points = Vec::new();
+    for dz in -rz..=rz {
+        for dy in -ry..=ry {
+            if r.chance(0.4) && !(dy == 0 && dz == 0) {
+                continue;
+            }
+            let mut any = false;
+            for dx in -rx..=rx {
+                if points.len() >= 56 {
+                    break;
+                }
+                if r.chance(0.5) {
+                    let coef = PALETTE[(r.next_u64() % 8) as usize];
+                    points.push(StencilPoint::new(dx, dy, dz, coef));
+                    any = true;
+                }
+            }
+            if !any && points.len() < 56 {
+                points.push(StencilPoint::new(0, dy, dz, PALETTE[case % 8]));
+            }
+        }
+    }
+    if points.is_empty() {
+        points.push(StencilPoint::new(0, 0, 0, 0.5));
+    }
+    KernelSpec::new(
+        &format!("pipe_{case}"),
+        &format!("Pipeline property kernel {case}"),
+        dims,
+        points,
+        KernelOrigin::File,
+    )
+}
+
+/// Run one spec under the given engine knobs and return its stats.
+fn run(
+    cfg: &SimConfig,
+    spec: &KernelSpec,
+    steps: usize,
+    spu_threads: usize,
+    temporal_block: usize,
+    pipeline: bool,
+) -> casper::coordinator::RunStats {
+    let d = spec.tiny_domain();
+    run_casper_spec(
+        cfg,
+        spec,
+        &d,
+        steps,
+        CasperOptions { spu_threads, temporal_block, pipeline, ..Default::default() },
+    )
+    .unwrap_or_else(|e| panic!("{}: {e:#}", spec.id))
+}
+
+#[test]
+fn property_pipelined_is_byte_identical_across_engines() {
+    // The tentpole acceptance property: for every generated kernel,
+    // every (spu_threads, temporal_block) combination, pipelined and
+    // phased epoch execution produce byte-identical results — and both
+    // match the serial round-robin engine.
+    let cfg = SimConfig::default();
+    let mut rng = SplitMix64::new(0x717E);
+    for case in 0..8 {
+        let spec = random_spec(&mut rng, case);
+        spec.validate().unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        for temporal_block in [1usize, 3] {
+            let serial = run(&cfg, &spec, 3, 1, temporal_block, false);
+            for spu_threads in [1usize, 16] {
+                for pipeline in [false, true] {
+                    let got = run(&cfg, &spec, 3, spu_threads, temporal_block, pipeline);
+                    let tag = format!(
+                        "case {case} ({}) T={temporal_block} threads={spu_threads} \
+                         pipeline={pipeline}",
+                        spec.id
+                    );
+                    assert_eq!(serial, got, "{tag}: full RunStats identity");
+                    assert_eq!(serial.digest(), got.digest(), "{tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multipass_pipelined_is_byte_identical_across_engines() {
+    // star17_3d compiles to a 2-pass plan: each pass runs its own
+    // pipeline scope (detach timers/tags → overlap → restore), and the
+    // identity must hold across the pass boundary.
+    let star = extended_presets()
+        .into_iter()
+        .find(|s| s.id.as_str() == "star17_3d")
+        .expect("star17_3d preset");
+    let cfg = SimConfig::default();
+    let serial = run(&cfg, &star, 2, 1, 1, false);
+    assert_eq!(serial.passes, 2, "star17_3d must plan two passes");
+    for spu_threads in [1usize, 16] {
+        for pipeline in [false, true] {
+            let got = run(&cfg, &star, 2, spu_threads, 1, pipeline);
+            let tag = format!("threads={spu_threads} pipeline={pipeline}");
+            assert_eq!(serial, got, "{tag}: full RunStats identity");
+            assert_eq!(serial.digest(), got.digest(), "{tag}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_channel_bounds_in_flight_epochs() {
+    // The bounded hand-off contract through the public API: with the
+    // replay worker holding one epoch and one queued in the channel, the
+    // functional side must block (here: TrySendError) rather than run
+    // further ahead — at most PIPELINE_DEPTH epochs are ever in flight.
+    assert_eq!(PIPELINE_DEPTH, 2);
+    let (tx, rx) = pipeline_channel::<usize>();
+    tx.try_send(0).expect("first epoch queues");
+    assert!(tx.try_send(1).is_err(), "channel must hold only DEPTH-1 epochs");
+    let worker_holds = rx.recv().unwrap(); // replay worker dequeues epoch 0
+    assert_eq!(worker_holds, 0);
+    tx.try_send(1).expect("slot frees once the worker takes epoch 0");
+    assert!(tx.try_send(2).is_err(), "epoch 2 must wait: 1 queued + 1 replaying");
+}
