@@ -10,8 +10,10 @@
 //!                    [--resume FILE] [--inject-faults SPEC]
 //!                    [--events FILE] [--metrics-out FILE] [--progress]
 //! casper run --kernel jacobi2d --level llc [--steps N] [--config FILE]
-//!            [--temporal-block T] [--epoch-rounds N] [--kernel-file FILE]...
+//!            [--plan greedy|optimized] [--temporal-block T]
+//!            [--epoch-rounds N] [--kernel-file FILE]...
 //!            [--trace FILE] [--trace-interval N]
+//! casper verify [--specs N] [--seed N] [--steps N] [--out FILE]
 //! casper kernels list [--kernel-file FILE]...
 //! casper kernels show ID [--kernel-file FILE]...
 //! casper validate [--artifacts DIR]
@@ -31,6 +33,7 @@ use anyhow::Result;
 
 use crate::config::{SimConfig, SizeClass};
 use crate::harness::{Experiment, FaultPlan};
+use crate::isa::PlanStrategy;
 use crate::stencil::KernelRegistry;
 
 /// Structured CLI parse errors. Each variant has a stable kebab-case
@@ -49,6 +52,7 @@ pub enum CliError {
     BadNumber { flag: &'static str, value: String, must: &'static str },
     BadFaultSpec { why: String },
     ConflictingFlags { a: &'static str, b: &'static str },
+    UnknownPlan { value: String },
 }
 
 impl CliError {
@@ -66,6 +70,7 @@ impl CliError {
             CliError::BadNumber { .. } => "bad-number",
             CliError::BadFaultSpec { .. } => "bad-fault-spec",
             CliError::ConflictingFlags { .. } => "conflicting-flags",
+            CliError::UnknownPlan { .. } => "unknown-plan",
         }
     }
 }
@@ -95,6 +100,9 @@ impl fmt::Display for CliError {
             }
             CliError::BadFaultSpec { why } => write!(f, "bad --inject-faults spec: {why}"),
             CliError::ConflictingFlags { a, b } => write!(f, "--{a} conflicts with --{b}"),
+            CliError::UnknownPlan { value } => {
+                write!(f, "unknown plan strategy '{value}' (greedy | optimized)")
+            }
         }
     }
 }
@@ -168,6 +176,20 @@ pub enum Command {
         /// engine default: `CASPER_EPOCH_ROUNDS`, else 2048). Results
         /// are independent of the value.
         epoch_rounds: Option<usize>,
+        /// Pass-plan strategy (`None` = engine default: `CASPER_PLAN`,
+        /// else optimized).
+        plan: Option<PlanStrategy>,
+    },
+    /// Randomized blackbox planner-equivalence sweep (`casper verify`).
+    Verify {
+        /// Number of random specs to generate and check.
+        specs: usize,
+        /// Master seed of the sweep (deterministic end to end).
+        seed: u64,
+        /// Jacobi steps per engine run.
+        steps: usize,
+        /// Where to write the minimized reproducer TOML on failure.
+        out: PathBuf,
     },
     Kernels {
         action: KernelsAction,
@@ -231,8 +253,8 @@ USAGE:
       machine-readable sweep summary; --progress keeps a live
       done/failed/ETA line on stderr.
   casper run --kernel ID --level {l2|llc|dram} [--steps N]
-             [--spu-threads N] [--temporal-block T] [--epoch-rounds N]
-             [--config FILE]
+             [--spu-threads N] [--plan greedy|optimized]
+             [--temporal-block T] [--epoch-rounds N] [--config FILE]
              [--kernel-file FILE]... [--trace FILE] [--trace-interval N]
       Run one stencil on Casper + all baselines and print the comparison.
       ID may be any registry kernel: preset, extended, or file-defined.
@@ -254,6 +276,20 @@ USAGE:
       LLC bandwidth / hit-rate / DRAM / NoC counter samples every
       --trace-interval cycles (default 1024). The run's counters and
       digest are byte-identical with tracing on or off.
+      --plan selects the multi-pass planner: 'greedy' packs row groups
+      first-fit in program order, 'optimized' (the default, env
+      CASPER_PLAN) additionally balances split points and reorders row
+      groups by constant affinity when that saves whole passes. Grids
+      are bitwise identical whenever the optimized plan preserves
+      program order (see docs/KERNELS.md, \"Pass planning\").
+  casper verify [--specs N] [--seed N] [--steps N] [--out FILE]
+      Randomized blackbox equivalence sweep over the pass planner:
+      generates N envelope-stressing kernel specs (default 64) from
+      --seed, runs both plan strategies through both engines, and
+      compares every grid bit and reduction value against the
+      plan-aware golden oracle. On failure the offending spec is shrunk
+      to a minimal reproducer and written to --out (default
+      verify-failure.toml) as a --kernel-file TOML; exits nonzero.
   casper kernels list [--kernel-file FILE]...
       List every registered kernel (presets + loaded spec files).
   casper kernels show ID [--kernel-file FILE]...
@@ -270,9 +306,9 @@ USAGE:
       This message.
 
 KERNELS: jacobi1d pts7_1d jacobi2d blur2d heat3d pts33_3d (paper);
-         hdiff star25_3d star17_3d (extended); plus any --kernel-file
-         specs. Kernels wider than the 16-stream ISA envelope compile as
-         multi-pass plans (see docs/KERNELS.md).
+         hdiff star25_3d star17_3d jacobi2d_res wide_mix_2d (extended);
+         plus any --kernel-file specs. Kernels wider than the 16-stream
+         ISA envelope compile as multi-pass plans (see docs/KERNELS.md).
 ";
 
 /// A tiny flag parser: `--key value` pairs plus boolean flags.
@@ -432,6 +468,7 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 "kernel-file",
                 "trace",
                 "trace-interval",
+                "plan",
             ])?;
             let kernel = rest
                 .get("kernel")
@@ -452,6 +489,19 @@ pub fn parse(argv: &[String]) -> Result<Command, CliError> {
                 trace_interval: parse_trace_interval(&rest)?,
                 temporal_block: parse_temporal_block(&rest)?,
                 epoch_rounds: parse_epoch_rounds(&rest)?,
+                plan: parse_plan(&rest)?,
+            })
+        }
+        "verify" => {
+            rest.reject_unknown(&["specs", "seed", "steps", "out"])?;
+            Ok(Command::Verify {
+                specs: parse_usize_flag(&rest, "specs", 64)?,
+                seed: parse_u64_flag(&rest, "seed", 0xCA5_9E12)?,
+                steps: parse_usize_flag(&rest, "steps", 2)?,
+                out: rest
+                    .get("out")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|| PathBuf::from("verify-failure.toml")),
             })
         }
         "kernels" => {
@@ -590,6 +640,31 @@ fn parse_trace_interval(args: &Args) -> Result<u64, CliError> {
                 flag: "trace-interval",
                 value: s.to_string(),
                 must: "must be an integer >= 1 (cycles per sample bucket)",
+            }),
+        },
+    }
+}
+
+/// `--plan greedy|optimized` (`None` = engine default, which also reads
+/// `CASPER_PLAN`).
+fn parse_plan(args: &Args) -> Result<Option<PlanStrategy>, CliError> {
+    match args.get("plan") {
+        None => Ok(None),
+        Some(s) => PlanStrategy::parse(s)
+            .map(Some)
+            .ok_or_else(|| CliError::UnknownPlan { value: s.to_string() }),
+    }
+}
+
+fn parse_usize_flag(args: &Args, flag: &'static str, default: usize) -> Result<usize, CliError> {
+    match args.get(flag) {
+        None => Ok(default),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(CliError::BadNumber {
+                flag,
+                value: s.to_string(),
+                must: "must be an integer >= 1",
             }),
         },
     }
@@ -793,8 +868,51 @@ mod tests {
                 trace_interval: 1024,
                 temporal_block: 1,
                 epoch_rounds: None,
+                plan: None,
             }
         );
+    }
+
+    #[test]
+    fn parses_plan_flag() {
+        match parse(&argv("run --kernel jacobi2d --level llc --plan greedy")).unwrap() {
+            Command::Run { plan, .. } => assert_eq!(plan, Some(PlanStrategy::Greedy)),
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("run --kernel jacobi2d --level llc --plan optimized")).unwrap() {
+            Command::Run { plan, .. } => assert_eq!(plan, Some(PlanStrategy::Optimized)),
+            other => panic!("{other:?}"),
+        }
+        // Default: engine decides (env CASPER_PLAN, else optimized).
+        match parse(&argv("run --kernel jacobi2d --level llc")).unwrap() {
+            Command::Run { plan, .. } => assert_eq!(plan, None),
+            other => panic!("{other:?}"),
+        }
+        let err = parse(&argv("run --kernel jacobi2d --level llc --plan frobnicated")).unwrap_err();
+        assert_eq!(err.name(), "unknown-plan");
+        assert!(err.to_string().contains("greedy | optimized"), "{err}");
+        // The flag belongs to `run` only.
+        assert!(parse(&argv("experiments --plan greedy")).is_err());
+    }
+
+    #[test]
+    fn parses_verify() {
+        assert_eq!(
+            parse(&argv("verify")).unwrap(),
+            Command::Verify {
+                specs: 64,
+                seed: 0xCA5_9E12,
+                steps: 2,
+                out: PathBuf::from("verify-failure.toml"),
+            }
+        );
+        assert_eq!(
+            parse(&argv("verify --specs 8 --seed 7 --steps 1 --out min.toml")).unwrap(),
+            Command::Verify { specs: 8, seed: 7, steps: 1, out: PathBuf::from("min.toml") }
+        );
+        assert_eq!(parse(&argv("verify --specs 0")).unwrap_err().name(), "bad-number");
+        assert_eq!(parse(&argv("verify --seed x")).unwrap_err().name(), "bad-number");
+        assert_eq!(parse(&argv("verify --plan greedy")).unwrap_err().name(), "unknown-flag");
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use crate::config::SimConfig;
-use crate::isa::ProgramBuilder;
+use crate::isa::{PlanStrategy, ProgramBuilder};
 use crate::spu::Spu;
 use crate::stencil::{Domain, KernelSpec, StencilDesc, StencilKind};
 use crate::trace::{TraceSink, Tracer};
@@ -46,6 +46,19 @@ pub fn default_epoch_pipeline() -> bool {
     std::env::var("CASPER_EPOCH_PIPELINE").map_or(true, |s| s != "0")
 }
 
+/// Default pass-plan strategy: `CASPER_PLAN` if set to a recognized
+/// strategy name (`greedy` | `optimized` — the CI byte-stability leg runs
+/// both), else [`PlanStrategy::Optimized`]. The optimizing planner is
+/// order-preserving unless reordering strictly cuts the pass count, so
+/// flipping this only changes *results* for kernels where it also changes
+/// the pass count (see `docs/KERNELS.md`, "Pass planning").
+pub fn default_plan_strategy() -> PlanStrategy {
+    std::env::var("CASPER_PLAN")
+        .ok()
+        .and_then(|s| PlanStrategy::parse(&s))
+        .unwrap_or(PlanStrategy::Optimized)
+}
+
 /// Options for ablation runs (Fig 14 and the unaligned-hardware study)
 /// and for the intra-run execution mode.
 #[derive(Debug, Clone, Copy)]
@@ -78,6 +91,11 @@ pub struct CasperOptions {
     /// functional step sequence is unchanged, so the final grid is
     /// bitwise identical for every `T` (pinned by test).
     pub temporal_block: usize,
+    /// Pass-plan strategy (`--plan` / `CASPER_PLAN`): how multi-pass
+    /// kernels are partitioned into programs. The blackbox equivalence
+    /// harness ([`crate::verify`], `casper verify`) checks both
+    /// strategies against the plan-aware golden oracle.
+    pub plan: PlanStrategy,
 }
 
 impl Default for CasperOptions {
@@ -90,6 +108,7 @@ impl Default for CasperOptions {
             epoch_rounds: default_epoch_rounds(),
             pipeline: default_epoch_pipeline(),
             temporal_block: 1,
+            plan: default_plan_strategy(),
         }
     }
 }
@@ -201,10 +220,11 @@ pub fn run_casper_spec_traced(
     tracer: Option<Box<Tracer>>,
 ) -> Result<(RunStats, Option<Box<Tracer>>)> {
     // Multi-pass compilation (docs/KERNELS.md): one program per pass of
-    // the kernel's plan. Envelope-sized kernels get a one-element plan
-    // identical to the historical single `build` — same program, same
-    // execution path, byte-identical results.
-    let passes = ProgramBuilder::build_passes(desc)?;
+    // the kernel's plan, under the selected strategy. Envelope-sized
+    // kernels get a one-element plan identical to the historical single
+    // `build` under either strategy — same program, same execution path,
+    // byte-identical results.
+    let passes = ProgramBuilder::build_passes_with(desc, opts.plan)?;
     // Temporal blocking grows the effective halo to radius·T per axis;
     // reject blocks the domain cannot host before allocating anything.
     let t_block = opts.temporal_block;
@@ -831,6 +851,82 @@ mod tests {
         // reference to rounding (different association order only).
         let approx = golden::run_spec(&star, &d, 2, opts.seed);
         assert!(stats.output.max_abs_diff(&approx) < 1e-12);
+    }
+
+    fn wide_mix() -> KernelSpec {
+        crate::stencil::extended_presets()
+            .into_iter()
+            .find(|s| s.id.as_str() == "wide_mix_2d")
+            .expect("wide_mix_2d preset")
+    }
+
+    #[test]
+    fn plan_strategies_agree_bitwise_when_order_preserving() {
+        // star17_3d already sits at its 2-pass minimum, so the optimizing
+        // planner keeps program order and only moves the split point —
+        // and moving a split point of an order-preserving plan cannot
+        // change the accumulation order (the accumulator reload is the
+        // exact identity `1.0 · out`). Greedy and Optimized must
+        // therefore produce bitwise-identical grids.
+        let cfg = SimConfig::default();
+        let star = star17();
+        let d = star.tiny_domain();
+        let mut outs = Vec::new();
+        for plan in PlanStrategy::ALL {
+            let stats = run_casper_spec(
+                &cfg,
+                &star,
+                &d,
+                2,
+                CasperOptions { plan, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(stats.passes, 2, "{plan}");
+            outs.push(stats.output);
+        }
+        assert_eq!(outs[0], outs[1], "strategies diverged on an order-preserving kernel");
+    }
+
+    #[test]
+    fn optimized_plan_halves_wide_mix_passes_on_both_engines() {
+        // The strict pass-count win, end to end: wide_mix_2d compiles to
+        // 4 greedy passes but 2 optimized passes, and under EITHER
+        // strategy both engines are bitwise the plan-aware golden oracle
+        // executing the same plan.
+        let cfg = SimConfig::default();
+        let mix = wide_mix();
+        let d = mix.tiny_domain();
+        let input = d.alloc_random(CasperOptions::default().seed);
+        for plan in PlanStrategy::ALL {
+            let want_passes = match plan {
+                PlanStrategy::Greedy => 4,
+                PlanStrategy::Optimized => 2,
+            };
+            let oracle_plan = mix.pass_plan_with(plan).unwrap();
+            assert_eq!(oracle_plan.num_passes(), want_passes, "{plan}");
+            let want = golden::run_planned(&mix, &oracle_plan, &input, 2);
+            for threads in [1usize, 16] {
+                let stats = run_casper_spec(
+                    &cfg,
+                    &mix,
+                    &d,
+                    2,
+                    CasperOptions { plan, spu_threads: threads, ..Default::default() },
+                )
+                .unwrap();
+                let tag = format!("{plan} threads={threads}");
+                assert_eq!(stats.passes, want_passes, "{tag}");
+                assert!(
+                    stats
+                        .output
+                        .data
+                        .iter()
+                        .zip(&want.data)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{tag}: engine diverged bitwise from the plan-aware oracle"
+                );
+            }
+        }
     }
 
     #[test]

@@ -19,8 +19,8 @@ pub mod metrics;
 
 pub use api::CasperRuntime;
 pub use engine::{
-    default_epoch_pipeline, default_epoch_rounds, default_spu_threads, run_casper,
-    run_casper_spec, run_casper_spec_traced, run_casper_with, CasperOptions,
+    default_epoch_pipeline, default_epoch_rounds, default_plan_strategy, default_spu_threads,
+    run_casper, run_casper_spec, run_casper_spec_traced, run_casper_with, CasperOptions,
 };
 pub use epoch::{pipeline_channel, PIPELINE_DEPTH};
 pub use layout::SegmentLayout;

@@ -267,12 +267,15 @@ enum CellOut {
 }
 
 /// The context digest a checkpoint journal is bound to: config, steps,
-/// quick flag, temporal block, and kernel set. Deliberately excludes
-/// `jobs` and `spu_threads` — neither changes any result (the
-/// byte-identity tests pin that), so a journal written at `--jobs 16`
-/// resumes at `--jobs 1`. `temporal_block` *is* bound: it changes
-/// traffic counters and cycles, so records at different depths must not
-/// cross-resume.
+/// quick flag, temporal block, plan strategy, and kernel set.
+/// Deliberately excludes `jobs` and `spu_threads` — neither changes any
+/// result (the byte-identity tests pin that), so a journal written at
+/// `--jobs 16` resumes at `--jobs 1`. `temporal_block` *is* bound: it
+/// changes traffic counters and cycles, so records at different depths
+/// must not cross-resume. The pass-plan strategy (env `CASPER_PLAN`,
+/// which every cell's `CasperOptions::default()` reads) is bound for the
+/// same reason: kernels whose optimized plan differs from greedy run
+/// different per-pass stream sets, so their counters differ too.
 pub fn journal_context(cfg: &SimConfig, opts: SweepOptions, kernels: &[Arc<KernelSpec>]) -> u64 {
     let ids: Vec<&str> = kernels.iter().map(|s| s.id.as_str()).collect();
     journal::context_digest(&[
@@ -280,6 +283,7 @@ pub fn journal_context(cfg: &SimConfig, opts: SweepOptions, kernels: &[Arc<Kerne
         &format!("steps={}", opts.steps),
         &format!("quick={}", opts.quick),
         &format!("temporal_block={}", opts.temporal_block),
+        &format!("plan={}", crate::coordinator::default_plan_strategy().name()),
         &ids.join(","),
     ])
 }
@@ -1458,12 +1462,17 @@ mod tests {
             run_experiments_with(&cfg, &[Experiment::Fig10, Experiment::Table5], opts, &kernels)
                 .unwrap();
         let t = report.get("fig10").unwrap();
-        assert_eq!(t.rows.len(), 10, "6 paper + 4 extended kernels at 1 class");
+        assert_eq!(t.rows.len(), 11, "6 paper + 5 extended kernels at 1 class");
         // Paper-reference cells are dashes for the non-paper kernels
         // (including the multi-pass star17_3d and the fused-reduction
         // jacobi2d_res, swept like any other).
-        let extended_names =
-            ["HDiff 2D", "25-point 3D star", "17-row 3D star", "Jacobi 2D residual"];
+        let extended_names = [
+            "HDiff 2D",
+            "25-point 3D star",
+            "17-row 3D star",
+            "Jacobi 2D residual",
+            "Wide dual-family 2D",
+        ];
         for row in &t.rows {
             if extended_names.contains(&row[0].as_str()) {
                 assert_eq!(row[5], "-", "{row:?}");

@@ -14,10 +14,13 @@
 //! the instruction/constant buffers) compile through
 //! [`ProgramBuilder::build_passes`] into an ordered [`PassPlan`] of
 //! envelope-legal programs that accumulate into the output grid — see
-//! [`program`] and `docs/KERNELS.md`.
+//! [`program`] and `docs/KERNELS.md`. Pass planning is strategy-selectable
+//! ([`PlanStrategy`]: greedy first-fit vs. the optimizing planner), with
+//! blackbox equivalence between the strategies checked by
+//! [`verify`](crate::verify).
 
 pub mod instr;
 pub mod program;
 
 pub use instr::{CasperInstr, ReduceOp, ShiftDir};
-pub use program::{CasperProgram, PassPlan, ProgramBuilder, StreamSpec};
+pub use program::{CasperProgram, PassPlan, PlanStrategy, ProgramBuilder, StreamSpec};

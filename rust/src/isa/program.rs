@@ -18,8 +18,14 @@
 //! pass starts from an *accumulator stream* (an input stream bound to the
 //! pass's own output row, [`StreamSpec::from_output`]) so it computes
 //! `out = 1.0·out + Σ taps` — plain ISA instructions, no new hardware.
-
-use std::ops::Range;
+//!
+//! Two planners exist behind the [`PlanStrategy`] knob (CLI `--plan`, env
+//! `CASPER_PLAN`): the original greedy first-fit over program order, and
+//! an optimizing planner that reorders row groups by constant affinity
+//! when (and only when) that strictly cuts the pass count, and otherwise
+//! rebalances the order-preserving split points to minimize peak stream
+//! pressure. Correctness is checked blackbox by the randomized
+//! equivalence harness in `rust/src/verify/` (`casper verify`).
 
 use anyhow::{bail, ensure, Result};
 
@@ -231,100 +237,364 @@ impl CasperProgram {
     }
 }
 
-/// An ordered partition of a kernel's row groups into ISA-envelope-legal
-/// passes (multi-pass compilation; see the module docs and
-/// `docs/KERNELS.md`).
+/// How the compiler partitions a kernel's row groups into passes.
 ///
-/// Each pass covers a contiguous index range of
-/// [`KernelSpec::row_groups`](crate::stencil::KernelSpec::row_groups) —
-/// *contiguity in program order is what keeps the multi-pass accumulation
-/// order identical to the single-program accumulation order*, which the
-/// golden pass-split oracle pins bitwise. A one-element plan means the
-/// kernel fits a single program.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct PassPlan {
-    passes: Vec<Range<usize>>,
+/// - [`PlanStrategy::Greedy`] is the original planner: first-fit over
+///   program order (rows sorted by `(dz, dy)`), splitting whenever the
+///   next row group would overflow the envelope. Simple, and pass-count
+///   minimal *among order-preserving plans* — but it can leave pass count
+///   on the table when rows interleave distinct coefficient families, and
+///   it front-loads passes (pass 0 packed to the brim, the last pass
+///   nearly empty).
+/// - [`PlanStrategy::Optimized`] first tries a constant-affinity
+///   reordering of the row groups (rows sharing coefficients packed into
+///   the same pass), adopted only when it *strictly* reduces the pass
+///   count. Otherwise it keeps program order — so the compiled result is
+///   bitwise-identical to Greedy — and rebalances the split points among
+///   all minimum-pass contiguous plans to minimize peak per-pass stream
+///   pressure.
+///
+/// `passes(Optimized) <= passes(Greedy)` holds for every spec by
+/// construction; the randomized blackbox harness (`rust/src/verify/`,
+/// `casper verify`) re-checks it anyway, along with functional
+/// equivalence of both strategies on both engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanStrategy {
+    /// First-fit over program order (the historical behaviour).
+    Greedy,
+    /// Minimize pass count first (constant-affinity reordering), then
+    /// peak per-pass stream pressure (balanced split points). The engine
+    /// default (override with `--plan greedy` / `CASPER_PLAN=greedy`).
+    #[default]
+    Optimized,
 }
 
-impl PassPlan {
-    /// Greedily partition `groups` (in order) into the fewest front-loaded
-    /// passes that each satisfy the envelope: per pass, the streams
-    /// (output + accumulator for passes after the first + one per group)
-    /// stay within [`MAX_STREAMS`], the instructions (accumulator + one
-    /// per tap) within [`MAX_INSTRUCTIONS`], and the distinct
-    /// coefficients (plus the accumulator's 1.0) within [`MAX_CONSTANTS`].
-    ///
-    /// Errors when a tap offset exceeds the 3-bit shift field (no pass
-    /// split can fix that), when a single row group alone overflows the
-    /// envelope, or when the plan would exceed [`MAX_PASSES`].
-    ///
-    /// The budget arithmetic here must stay in lockstep with what
-    /// `emit_pass` actually emits (accumulator = 1 stream + 1 instruction
-    /// + the constant 1.0; constants deduped by bit pattern) — that
-    /// agreement is what lets `KernelSpec::validate` promise that every
-    /// accepted spec compiles. The property test in
-    /// `rust/tests/kernel_registry.rs` pins it over random wide specs.
-    pub fn for_groups(groups: &[RowGroup]) -> Result<PassPlan> {
-        ensure!(!groups.is_empty(), "at least one row group required");
-        for g in groups {
-            for &(dx, _) in &g.taps {
-                ensure!(
-                    dx.unsigned_abs() <= MAX_SHIFT as u64,
-                    "tap dx {dx} exceeds the 3-bit shift field (|dx| <= {MAX_SHIFT}); \
-                     multi-pass splitting cannot widen the shift encoding"
-                );
+impl PlanStrategy {
+    /// Both strategies, in comparison order (`kernels show` prints both).
+    pub const ALL: [PlanStrategy; 2] = [PlanStrategy::Greedy, PlanStrategy::Optimized];
+
+    /// Stable lowercase name (the CLI `--plan` / env `CASPER_PLAN` value).
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanStrategy::Greedy => "greedy",
+            PlanStrategy::Optimized => "optimized",
+        }
+    }
+
+    /// Parse a `--plan` / `CASPER_PLAN` value. Case-insensitive; `None`
+    /// for anything other than `greedy` / `optimized`.
+    pub fn parse(s: &str) -> Option<PlanStrategy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "greedy" => Some(PlanStrategy::Greedy),
+            "optimized" => Some(PlanStrategy::Optimized),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PlanStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Incremental envelope accounting for one pass, kept in lockstep with
+/// what `emit_pass` actually emits (accumulator = 1 stream +
+/// 1 instruction + the constant 1.0; constants deduped by bit pattern).
+/// That agreement is what lets `KernelSpec::validate` promise that every
+/// accepted spec compiles; the property tests in
+/// `rust/tests/kernel_registry.rs` and `rust/tests/plan_equivalence.rs`
+/// pin it over random wide specs.
+#[derive(Debug, Clone)]
+struct PassBudget {
+    instrs: usize,
+    streams: usize,
+    coefs: Vec<u64>,
+}
+
+impl PassBudget {
+    /// Fresh budget; `accumulate` charges the accumulator stream,
+    /// instruction, and constant that passes after the first carry.
+    fn new(accumulate: bool) -> PassBudget {
+        PassBudget {
+            instrs: accumulate as usize,
+            streams: 1 + accumulate as usize,
+            coefs: if accumulate { vec![1.0f64.to_bits()] } else { Vec::new() },
+        }
+    }
+
+    /// Distinct constants `g` would add on top of the pass so far.
+    fn new_constants(&self, g: &RowGroup) -> usize {
+        let mut fresh: Vec<u64> = Vec::new();
+        for &(_, c) in &g.taps {
+            let bits = c.to_bits();
+            if !self.coefs.contains(&bits) && !fresh.contains(&bits) {
+                fresh.push(bits);
             }
         }
-        let mut passes: Vec<Range<usize>> = Vec::new();
-        let mut start = 0usize;
-        while start < groups.len() {
-            // Later passes spend one stream, one instruction, and the
-            // constant 1.0 on the accumulator.
-            let accumulate = !passes.is_empty();
-            let mut instrs = accumulate as usize;
-            let mut streams = 1 + accumulate as usize;
-            let mut coefs: Vec<u64> = if accumulate { vec![1.0f64.to_bits()] } else { Vec::new() };
-            let mut end = start;
-            while end < groups.len() {
-                let g = &groups[end];
-                let mut grown = coefs.clone();
-                for &(_, c) in &g.taps {
-                    let bits = c.to_bits();
-                    if !grown.contains(&bits) {
-                        grown.push(bits);
-                    }
-                }
-                if streams + 1 > MAX_STREAMS
-                    || instrs + g.taps.len() > MAX_INSTRUCTIONS
-                    || grown.len() > MAX_CONSTANTS
-                {
-                    break;
-                }
-                streams += 1;
-                instrs += g.taps.len();
-                coefs = grown;
-                end += 1;
+        fresh.len()
+    }
+
+    /// Would admitting `g` keep the pass inside the envelope?
+    fn fits(&self, g: &RowGroup) -> bool {
+        self.streams + 1 <= MAX_STREAMS
+            && self.instrs + g.taps.len() <= MAX_INSTRUCTIONS
+            && self.coefs.len() + self.new_constants(g) <= MAX_CONSTANTS
+    }
+
+    /// Admit `g` into the pass (caller has checked [`Self::fits`]).
+    fn admit(&mut self, g: &RowGroup) {
+        self.streams += 1;
+        self.instrs += g.taps.len();
+        for &(_, c) in &g.taps {
+            let bits = c.to_bits();
+            if !self.coefs.contains(&bits) {
+                self.coefs.push(bits);
             }
+        }
+    }
+}
+
+/// The 3-bit shift field is a per-tap hard limit: no pass split or
+/// reordering widens an encoding, so both planners reject it up front.
+fn check_shifts(groups: &[RowGroup]) -> Result<()> {
+    for g in groups {
+        for &(dx, _) in &g.taps {
             ensure!(
-                end > start,
-                "row group {start} alone exceeds the ISA envelope \
-                 ({} taps vs {MAX_INSTRUCTIONS}-entry instruction / {MAX_CONSTANTS}-entry constant buffers)",
-                groups[start].taps.len()
+                dx.unsigned_abs() <= MAX_SHIFT as u64,
+                "tap dx {dx} exceeds the 3-bit shift field (|dx| <= {MAX_SHIFT}); \
+                 multi-pass splitting cannot widen the shift encoding"
             );
-            passes.push(start..end);
-            start = end;
         }
+    }
+    Ok(())
+}
+
+/// Greedy first-fit over program order: fill each pass until the next row
+/// group would overflow the envelope, then cut. Pass-count minimal among
+/// order-preserving partitions (pass feasibility is prefix-closed, so
+/// taking every group that fits never hurts a later cut).
+fn greedy_passes(groups: &[RowGroup]) -> Result<Vec<Vec<usize>>> {
+    let mut passes: Vec<Vec<usize>> = Vec::new();
+    let mut start = 0usize;
+    while start < groups.len() {
+        // Later passes spend one stream, one instruction, and the
+        // constant 1.0 on the accumulator.
+        let mut budget = PassBudget::new(!passes.is_empty());
+        let mut end = start;
+        while end < groups.len() && budget.fits(&groups[end]) {
+            budget.admit(&groups[end]);
+            end += 1;
+        }
+        ensure!(
+            end > start,
+            "row group {start} alone exceeds the ISA envelope \
+             ({} taps vs {MAX_INSTRUCTIONS}-entry instruction / {MAX_CONSTANTS}-entry constant buffers)",
+            groups[start].taps.len()
+        );
+        passes.push((start..end).collect());
+        start = end;
+    }
+    ensure!(
+        passes.len() <= MAX_PASSES,
+        "{} passes exceed the {MAX_PASSES}-pass sanity bound",
+        passes.len()
+    );
+    Ok(passes)
+}
+
+/// Constant-affinity bin packing: build each pass by repeatedly admitting
+/// the remaining row group that introduces the fewest new constants (ties
+/// broken toward the lowest program-order index, so plans are
+/// deterministic), then sort each pass's groups back into program order.
+/// Rows drawing on the same coefficient family cluster into the same pass
+/// instead of dragging every family into every pass.
+fn affinity_passes(groups: &[RowGroup]) -> Result<Vec<Vec<usize>>> {
+    let mut remaining: Vec<usize> = (0..groups.len()).collect();
+    let mut passes: Vec<Vec<usize>> = Vec::new();
+    while !remaining.is_empty() {
+        let mut budget = PassBudget::new(!passes.is_empty());
+        let mut pass: Vec<usize> = Vec::new();
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (new constants, slot)
+            for (slot, &gi) in remaining.iter().enumerate() {
+                if !budget.fits(&groups[gi]) {
+                    continue;
+                }
+                let fresh = budget.new_constants(&groups[gi]);
+                if best.is_none_or(|(b, _)| fresh < b) {
+                    best = Some((fresh, slot));
+                }
+            }
+            match best {
+                Some((_, slot)) => {
+                    let gi = remaining.remove(slot);
+                    budget.admit(&groups[gi]);
+                    pass.push(gi);
+                }
+                None => break,
+            }
+        }
+        // A group that fits no fresh accumulating pass (e.g. one with
+        // MAX_INSTRUCTIONS taps, placeable only in pass 0) strands the
+        // packing; the caller falls back to the order-preserving plan.
+        ensure!(!pass.is_empty(), "row group {} alone exceeds the ISA envelope", remaining[0]);
+        pass.sort_unstable();
+        passes.push(pass);
         ensure!(
             passes.len() <= MAX_PASSES,
             "{} passes exceed the {MAX_PASSES}-pass sanity bound",
             passes.len()
         );
-        Ok(PassPlan { passes })
+    }
+    Ok(passes)
+}
+
+/// Among all order-preserving partitions of `groups` into exactly
+/// `target` envelope-legal passes, pick one minimizing the maximum
+/// per-pass stream count (deterministic: earliest split achieving the
+/// optimum). `None` when no such partition exists or the group count is
+/// past the DP size guard — callers fall back to the greedy shape.
+fn balanced_passes(groups: &[RowGroup], target: usize) -> Option<Vec<Vec<usize>>> {
+    let n = groups.len();
+    if target == 0 || n == 0 || n > 512 {
+        return None;
+    }
+    // Furthest j such that groups[i..j) fits one pass; feasibility is
+    // prefix-closed, so the feasible ends form the range (i, reach].
+    let reach = |i: usize, accumulate: bool| -> usize {
+        let mut budget = PassBudget::new(accumulate);
+        let mut j = i;
+        while j < n && budget.fits(&groups[j]) {
+            budget.admit(&groups[j]);
+            j += 1;
+        }
+        j
+    };
+    // best[k][i]: minimal achievable peak stream count covering
+    // groups[i..n) with exactly k accumulating passes (usize::MAX = Ø).
+    let mut best = vec![vec![usize::MAX; n + 1]; target];
+    best[0][n] = 0;
+    for k in 1..target {
+        for i in (0..n).rev() {
+            let r = reach(i, true);
+            for j in (i + 1)..=r {
+                if best[k - 1][j] == usize::MAX {
+                    continue;
+                }
+                // A later pass over j - i groups holds output +
+                // accumulator + one stream per group.
+                let peak = (2 + (j - i)).max(best[k - 1][j]);
+                if peak < best[k][i] {
+                    best[k][i] = peak;
+                }
+            }
+        }
+    }
+    // Pass 0 (no accumulator): pick the earliest cut minimizing the peak.
+    let mut choice: Option<(usize, usize)> = None; // (peak, first cut)
+    for j in 1..=reach(0, false) {
+        let tail = best[target - 1][j];
+        if tail == usize::MAX {
+            continue;
+        }
+        let peak = (1 + j).max(tail);
+        if choice.is_none_or(|(p, _)| peak < p) {
+            choice = Some((peak, j));
+        }
+    }
+    let (_, first) = choice?;
+    let mut cuts = vec![0usize, first];
+    let mut i = first;
+    let mut k = target - 1;
+    while k > 0 {
+        let r = reach(i, true);
+        let mut next: Option<usize> = None;
+        for j in (i + 1)..=r {
+            if best[k - 1][j] == usize::MAX {
+                continue;
+            }
+            if (2 + (j - i)).max(best[k - 1][j]) == best[k][i] {
+                next = Some(j);
+                break;
+            }
+        }
+        i = next?;
+        cuts.push(i);
+        k -= 1;
+    }
+    if *cuts.last().unwrap() != n {
+        return None;
+    }
+    Some(cuts.windows(2).map(|w| (w[0]..w[1]).collect()).collect())
+}
+
+/// An ordered partition of a kernel's row groups into ISA-envelope-legal
+/// passes (multi-pass compilation; see the module docs and
+/// `docs/KERNELS.md`).
+///
+/// Each pass lists the indices (into
+/// [`KernelSpec::row_groups`](crate::stencil::KernelSpec::row_groups)) of
+/// the row groups it covers, in emission order. When the concatenated
+/// lists read `0, 1, 2, …` the plan is *order-preserving*
+/// ([`Self::order_preserving`]): the multi-pass accumulation performs the
+/// same left-to-right float additions as the single-program order, which
+/// the golden pass-split oracle pins **bitwise**. A reordered plan (the
+/// optimized planner's constant-affinity tier) is mathematically the same
+/// sum in a different association — bitwise-pinned against the
+/// plan-aware oracle ([`golden::step_planned`](crate::stencil::golden)),
+/// tolerance-checked against the naive order. A one-element plan means
+/// the kernel fits a single program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassPlan {
+    passes: Vec<Vec<usize>>,
+    strategy: PlanStrategy,
+    order_preserving: bool,
+}
+
+impl PassPlan {
+    /// Partition `groups` with the **greedy** strategy (first-fit over
+    /// program order — the historical planner; see [`PlanStrategy`]).
+    ///
+    /// Errors when a tap offset exceeds the 3-bit shift field (no pass
+    /// split can fix that), when a single row group alone overflows the
+    /// envelope, or when the plan would exceed [`MAX_PASSES`].
+    pub fn for_groups(groups: &[RowGroup]) -> Result<PassPlan> {
+        Self::for_groups_with(groups, PlanStrategy::Greedy)
     }
 
-    /// Per-pass row-group index ranges into the kernel's `row_groups()`,
+    /// Partition `groups` under `strategy`. Per pass, the streams (output
+    /// + accumulator for passes after the first + one per group) stay
+    /// within [`MAX_STREAMS`], the instructions (accumulator + one per
+    /// tap) within [`MAX_INSTRUCTIONS`], and the distinct coefficients
+    /// (plus the accumulator's 1.0) within [`MAX_CONSTANTS`].
+    ///
+    /// The optimized strategy never plans more passes than the greedy one
+    /// (it adopts its reordering only on a strict win and otherwise
+    /// repartitions the greedy pass count), and it fails only when greedy
+    /// fails — so `KernelSpec::validate`'s "every accepted spec compiles"
+    /// guarantee is strategy-independent.
+    pub fn for_groups_with(groups: &[RowGroup], strategy: PlanStrategy) -> Result<PassPlan> {
+        ensure!(!groups.is_empty(), "at least one row group required");
+        check_shifts(groups)?;
+        let greedy = greedy_passes(groups)?;
+        let passes = match strategy {
+            PlanStrategy::Greedy => greedy,
+            PlanStrategy::Optimized => match affinity_passes(groups) {
+                Ok(aff) if aff.len() < greedy.len() => aff,
+                _ => {
+                    let target = greedy.len();
+                    balanced_passes(groups, target).unwrap_or(greedy)
+                }
+            },
+        };
+        let order_preserving = passes.iter().flatten().copied().eq(0..groups.len());
+        Ok(PassPlan { passes, strategy, order_preserving })
+    }
+
+    /// Per-pass row-group index lists into the kernel's `row_groups()`,
     /// in execution order.
-    pub fn passes(&self) -> &[Range<usize>] {
+    pub fn passes(&self) -> &[Vec<usize>] {
         &self.passes
     }
 
@@ -336,6 +606,30 @@ impl PassPlan {
     /// True when the kernel needs more than one pass per time step.
     pub fn is_multi_pass(&self) -> bool {
         self.passes.len() > 1
+    }
+
+    /// The strategy that produced this plan.
+    pub fn strategy(&self) -> PlanStrategy {
+        self.strategy
+    }
+
+    /// True when the concatenated passes visit the row groups in program
+    /// order — the condition under which multi-pass execution is
+    /// bitwise-identical to the single-program accumulation order (and
+    /// hence to the greedy plan's result).
+    pub fn order_preserving(&self) -> bool {
+        self.order_preserving
+    }
+
+    /// The maximum per-pass stream count this plan reaches (the
+    /// optimized planner's secondary minimization objective).
+    pub fn peak_streams(&self) -> usize {
+        self.passes
+            .iter()
+            .enumerate()
+            .map(|(pi, pass)| 1 + usize::from(pi > 0) + pass.len())
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -388,23 +682,49 @@ impl ProgramBuilder {
         }
     }
 
-    /// Compile a stencil of any width into its ordered multi-pass plan:
-    /// one envelope-legal [`CasperProgram`] per [`PassPlan`] entry. Pass 0
-    /// overwrites the output array with partial sums; every later pass
-    /// leads with an accumulator instruction (`acc = 1.0 · out[i]`) over a
+    /// Compile a stencil of any width into its ordered multi-pass plan
+    /// under the **greedy** strategy: one envelope-legal [`CasperProgram`]
+    /// per [`PassPlan`] entry. Pass 0 overwrites the output array with
+    /// partial sums; every later pass leads with an accumulator
+    /// instruction (`acc = 1.0 · out[i]`) over a
     /// [`StreamSpec::from_output`] stream, then adds its own taps — so
     /// running the passes back-to-back computes the full stencil in the
     /// same tap order as the single-pass program would have. Kernels that
     /// fit the envelope return a one-element plan identical to
-    /// [`Self::build`].
+    /// [`Self::build`]. See [`Self::build_passes_with`] for the
+    /// strategy-selectable variant the engine uses.
     pub fn build_passes(desc: &StencilDesc) -> Result<Vec<CasperProgram>> {
+        Self::build_passes_with(desc, PlanStrategy::Greedy)
+    }
+
+    /// [`Self::build_passes`] with an explicit [`PlanStrategy`].
+    pub fn build_passes_with(
+        desc: &StencilDesc,
+        strategy: PlanStrategy,
+    ) -> Result<Vec<CasperProgram>> {
         let groups = desc.row_groups();
-        let plan = PassPlan::for_groups(&groups)?;
+        let plan = PassPlan::for_groups_with(&groups, strategy)?;
+        Self::build_plan(desc, &groups, &plan)
+    }
+
+    /// Compile one program per pass of an already-computed `plan` over
+    /// `groups` (as returned by `desc.row_groups()`), attaching the
+    /// kernel's fused reduction to the final pass. Shared by both
+    /// strategies so greedy and optimized plans compile identically
+    /// pass-for-pass.
+    pub fn build_plan(
+        desc: &StencilDesc,
+        groups: &[RowGroup],
+        plan: &PassPlan,
+    ) -> Result<Vec<CasperProgram>> {
         let mut progs: Vec<CasperProgram> = plan
             .passes()
             .iter()
             .enumerate()
-            .map(|(pi, r)| ProgramBuilder::new().emit_pass(&groups[r.clone()], pi > 0))
+            .map(|(pi, pass)| {
+                let sel: Vec<RowGroup> = pass.iter().map(|&gi| groups[gi].clone()).collect();
+                ProgramBuilder::new().emit_pass(&sel, pi > 0)
+            })
             .collect::<Result<_>>()?;
         if let Some(r) = desc.reduction {
             // Only the final pass sees the completed sums, so the fused
@@ -619,19 +939,25 @@ mod tests {
             .collect()
     }
 
+    fn contig(r: std::ops::Range<usize>) -> Vec<usize> {
+        r.collect()
+    }
+
     #[test]
     fn plan_splits_on_the_stream_budget() {
         // 20 single-tap rows: pass 0 holds 15 (output + 15 = 16 streams),
         // pass 1 holds the rest (output + accumulator + 5).
         let plan = PassPlan::for_groups(&single_tap_rows(20)).unwrap();
-        assert_eq!(plan.passes(), &[0..15, 15..20]);
+        assert_eq!(plan.passes().to_vec(), vec![contig(0..15), contig(15..20)]);
         assert!(plan.is_multi_pass());
+        assert!(plan.order_preserving());
+        assert_eq!(plan.strategy(), PlanStrategy::Greedy);
         // 35 rows: 15 + 14 (accumulator costs a stream) + 6.
         let plan = PassPlan::for_groups(&single_tap_rows(35)).unwrap();
-        assert_eq!(plan.passes(), &[0..15, 15..29, 29..35]);
+        assert_eq!(plan.passes().to_vec(), vec![contig(0..15), contig(15..29), contig(29..35)]);
         // 15 rows fit a single pass.
         let plan = PassPlan::for_groups(&single_tap_rows(15)).unwrap();
-        assert_eq!(plan.passes(), &[0..15]);
+        assert_eq!(plan.passes().to_vec(), vec![contig(0..15)]);
         assert!(!plan.is_multi_pass());
     }
 
@@ -647,7 +973,7 @@ mod tests {
             })
             .collect();
         let plan = PassPlan::for_groups(&rows).unwrap();
-        assert_eq!(plan.passes(), &[0..9, 9..10]);
+        assert_eq!(plan.passes().to_vec(), vec![contig(0..9), contig(9..10)]);
         // 9 rows × 2 taps with 18 distinct coefficients: the constant
         // buffer (16) splits first — after 8 rows (16 constants, 9
         // streams, 16 instructions) only the constants are exhausted.
@@ -659,7 +985,135 @@ mod tests {
             })
             .collect();
         let plan = PassPlan::for_groups(&rows).unwrap();
-        assert_eq!(plan.passes(), &[0..8, 8..9]);
+        assert_eq!(plan.passes().to_vec(), vec![contig(0..8), contig(8..9)]);
+    }
+
+    #[test]
+    fn plan_strategy_parses_stable_names() {
+        assert_eq!(PlanStrategy::parse("greedy"), Some(PlanStrategy::Greedy));
+        assert_eq!(PlanStrategy::parse(" Optimized "), Some(PlanStrategy::Optimized));
+        assert_eq!(PlanStrategy::parse("fastest"), None);
+        assert_eq!(PlanStrategy::default(), PlanStrategy::Optimized);
+        for s in PlanStrategy::ALL {
+            assert_eq!(PlanStrategy::parse(s.name()), Some(s));
+            assert_eq!(format!("{s}"), s.name());
+        }
+    }
+
+    #[test]
+    fn optimized_rebalances_split_points_without_reordering() {
+        // 20 single-tap rows share one coefficient: no reordering can beat
+        // the 2-pass greedy plan, so the optimized planner must keep
+        // program order (bitwise-identical execution) and only move the
+        // cut — 15+5 (peak 16 streams) becomes 10+10 (peak 12).
+        let rows = single_tap_rows(20);
+        let greedy = PassPlan::for_groups_with(&rows, PlanStrategy::Greedy).unwrap();
+        let opt = PassPlan::for_groups_with(&rows, PlanStrategy::Optimized).unwrap();
+        assert_eq!(opt.num_passes(), greedy.num_passes());
+        assert!(opt.order_preserving());
+        assert_eq!(opt.passes().to_vec(), vec![contig(0..10), contig(10..20)]);
+        assert_eq!(greedy.peak_streams(), 16);
+        assert_eq!(opt.peak_streams(), 12);
+        // The compiled programs still validate pass-for-pass.
+        let spec = crate::stencil::KernelSpec::new(
+            "balance20",
+            "balance 20-row",
+            2,
+            (-10i64..10).map(|dy| StencilPoint::new(0, dy, 0, 0.05)).collect(),
+            crate::stencil::KernelOrigin::File,
+        );
+        let progs = ProgramBuilder::build_passes_with(&spec, PlanStrategy::Optimized).unwrap();
+        assert_eq!(progs.len(), 2);
+        for p in &progs {
+            p.validate().unwrap();
+        }
+        assert_eq!(progs[0].streams.len(), 11); // output + 10 rows
+        assert_eq!(progs[1].streams.len(), 12); // output + accum + 10 rows
+    }
+
+    /// Rows alternating between two 15-constant coefficient families: the
+    /// shape where greedy first-fit pays for the interleaving (every pass
+    /// accrues both families' constants) while a family-clustered order
+    /// packs each family into one pass.
+    fn dual_family_rows() -> Vec<RowGroup> {
+        (0..20)
+            .map(|ri| {
+                let k = ri / 2;
+                let fam_a = ri % 2 == 0;
+                let taps: Vec<(i64, f64)> = (0..3)
+                    .map(|t| {
+                        let i = (3 * k + t) % 15;
+                        let num = if fam_a { 32 + 2 * i } else { 2 * i + 1 };
+                        (t as i64 - 1, num as f64 / 2048.0)
+                    })
+                    .collect();
+                RowGroup { dy: ri as i64 - 10, dz: 0, taps }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn optimized_reorders_for_a_strict_pass_count_win() {
+        let rows = dual_family_rows();
+        let greedy = PassPlan::for_groups_with(&rows, PlanStrategy::Greedy).unwrap();
+        assert_eq!(greedy.num_passes(), 4, "{:?}", greedy.passes());
+        let opt = PassPlan::for_groups_with(&rows, PlanStrategy::Optimized).unwrap();
+        assert_eq!(opt.num_passes(), 2, "{:?}", opt.passes());
+        assert!(!opt.order_preserving());
+        // The reordering is a permutation: every group exactly once.
+        let mut seen: Vec<usize> = opt.passes().iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, contig(0..20));
+        // Affinity packing pairs each row with its constant-sharing twin
+        // (row k and row k+10 reuse the same 3 family coefficients), so
+        // pass 0 absorbs five such pairs (15 constants) and the
+        // accumulating pass 1 takes the remaining five pairs (15 + 1.0).
+        assert_eq!(opt.passes()[0], vec![0, 1, 2, 3, 4, 10, 11, 12, 13, 14]);
+        assert_eq!(opt.passes()[1], vec![5, 6, 7, 8, 9, 15, 16, 17, 18, 19]);
+        // Plans are deterministic across runs.
+        assert_eq!(opt, PassPlan::for_groups_with(&rows, PlanStrategy::Optimized).unwrap());
+    }
+
+    #[test]
+    fn optimized_never_plans_more_passes_than_greedy() {
+        // Random row-group soups: the construction guarantee the harness
+        // re-checks blackbox. Coefficients from a small palette so the
+        // constant budget is exercised alongside streams/instructions.
+        const PALETTE: [f64; 20] = [
+            0.5, 0.25, 0.125, -0.125, 0.0625, 1.0, -0.5, 0.75, 0.3, 0.7, 0.9, -0.0625, 0.11, 0.13,
+            0.17, 0.19, 0.23, 0.29, 0.31, 0.37,
+        ];
+        let mut rng = crate::util::SplitMix64::new(0x9_1A57_CA5E);
+        for case in 0..200 {
+            let n = 1 + (rng.next_u64() % 30) as usize;
+            let rows: Vec<RowGroup> = (0..n)
+                .map(|i| {
+                    let taps = (0..1 + (rng.next_u64() % 4) as usize)
+                        .map(|t| {
+                            (t as i64, PALETTE[(rng.next_u64() % PALETTE.len() as u64) as usize])
+                        })
+                        .collect();
+                    RowGroup { dy: i as i64, dz: 0, taps }
+                })
+                .collect();
+            let greedy = PassPlan::for_groups_with(&rows, PlanStrategy::Greedy).unwrap();
+            let opt = PassPlan::for_groups_with(&rows, PlanStrategy::Optimized).unwrap();
+            assert!(
+                opt.num_passes() <= greedy.num_passes(),
+                "case {case}: optimized {} > greedy {} passes",
+                opt.num_passes(),
+                greedy.num_passes()
+            );
+            assert!(opt.peak_streams() <= MAX_STREAMS, "case {case}");
+            // Union of packed groups is exactly the input set.
+            let mut seen: Vec<usize> = opt.passes().iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>(), "case {case}");
+            if opt.num_passes() == greedy.num_passes() {
+                assert!(opt.order_preserving(), "case {case}: no win yet reordered");
+                assert!(opt.peak_streams() <= greedy.peak_streams(), "case {case}");
+            }
+        }
     }
 
     #[test]

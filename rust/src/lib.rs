@@ -63,6 +63,7 @@ pub mod stencil;
 pub mod testutil;
 pub mod trace;
 pub mod util;
+pub mod verify;
 
 /// Most-used types, re-exported for examples and downstream users.
 pub mod prelude {

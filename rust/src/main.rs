@@ -16,7 +16,8 @@ use casper::gpu::GpuModel;
 use casper::harness::{
     run_experiments_telemetry, FaultPlan, SupervisorConfig, SupervisorPolicy, SweepOptions,
 };
-use casper::isa::ProgramBuilder;
+use casper::coordinator::default_plan_strategy;
+use casper::isa::{PlanStrategy, ProgramBuilder};
 use casper::pims::PimsModel;
 use casper::roofline;
 use casper::runtime::{default_artifacts_dir, StencilRuntime};
@@ -92,7 +93,12 @@ fn dispatch(cmd: Command) -> Result<()> {
                     for s in reg.specs() {
                         let r = s.radius();
                         // Registered specs always plan (validate checked).
-                        let passes = s.pass_plan().map(|p| p.num_passes()).unwrap_or(0);
+                        // The passes column reflects the engine default
+                        // strategy (CASPER_PLAN, else optimized).
+                        let passes = s
+                            .pass_plan_with(default_plan_strategy())
+                            .map(|p| p.num_passes())
+                            .unwrap_or(0);
                         println!(
                             "{:<12} {:<22} {:>4} {:>5} {:>8} {:>8} {:>6}  {}",
                             s.id,
@@ -126,6 +132,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             trace_interval,
             temporal_block,
             epoch_rounds,
+            plan,
         } => {
             let cfg = cli::load_config(config.as_ref())?;
             let reg = cli::build_registry(&kernel_files)?;
@@ -136,6 +143,7 @@ fn dispatch(cmd: Command) -> Result<()> {
             let spu_threads = spu_threads.unwrap_or(cfg.spu.count);
             let epoch_rounds =
                 epoch_rounds.unwrap_or_else(casper::coordinator::default_epoch_rounds);
+            let plan = plan.unwrap_or_else(default_plan_strategy);
             run_one(
                 &cfg,
                 &spec,
@@ -144,9 +152,46 @@ fn dispatch(cmd: Command) -> Result<()> {
                 spu_threads,
                 temporal_block,
                 epoch_rounds,
+                plan,
                 trace.as_deref(),
                 trace_interval,
             )
+        }
+        Command::Verify { specs, seed, steps, out } => {
+            let cfg = SimConfig::default();
+            let opts = casper::verify::VerifyOptions { specs, seed, steps };
+            eprintln!(
+                "verifying pass-planner equivalence: {specs} random spec(s), seed {seed:#x}, \
+                 {steps} step(s) per run ..."
+            );
+            let report = casper::verify::run_verify(&cfg, &opts);
+            match report.failure {
+                None => {
+                    println!(
+                        "verify: {} spec(s) checked — both plan strategies, both engines, \
+                         bitwise against the plan-aware golden oracle: all equivalent",
+                        report.checked
+                    );
+                    Ok(())
+                }
+                Some(f) => {
+                    std::fs::write(&out, &f.minimized_toml)
+                        .with_context(|| format!("writing reproducer to {}", out.display()))?;
+                    eprintln!("verify: case {} ({}) FAILED: {}", f.case, f.spec_id, f.error);
+                    eprintln!(
+                        "verify: minimized reproducer written to {} — replay it with \
+                         `casper kernels show` / `casper run --kernel-file`, or commit it \
+                         under rust/tests/corpus/ as a regression",
+                        out.display()
+                    );
+                    anyhow::bail!(
+                        "planner equivalence failure on case {} (seed {:#x}, {} spec(s) passed)",
+                        f.case,
+                        seed,
+                        report.checked
+                    );
+                }
+            }
         }
         Command::Experiments {
             only,
@@ -314,34 +359,38 @@ fn show_kernel(s: &KernelSpec) -> Result<()> {
     }
     let groups = s.row_groups();
     println!("  streams: {} ({} input rows + 1 output)", groups.len() + 1, groups.len());
-    // Multi-pass plan + per-pass envelope headroom (docs/KERNELS.md):
+    // Multi-pass plans + per-pass envelope headroom (docs/KERNELS.md):
     // wide kernels split into accumulating passes instead of failing.
-    // The compiled programs are the single source here — each pass's row
-    // range falls out of its stream table (input rows are contiguous in
-    // program order across passes).
-    let programs = ProgramBuilder::build_passes(s)?;
-    let multi = programs.len() > 1;
-    println!(
-        "  pass plan: {} pass{} per step{}",
-        programs.len(),
-        if multi { "es" } else { "" },
-        if multi { " (wider than the 16-stream envelope)" } else { "" }
-    );
-    let mut row0 = 0usize;
-    for (pi, prog) in programs.iter().enumerate() {
-        let rows = prog.streams.iter().filter(|st| !st.is_output && !st.from_output).count();
+    // Both strategies print side by side — the row-group lists show
+    // exactly what the optimizing planner moved (rebalanced split points
+    // keep `rows a..b` contiguous; affinity reordering does not).
+    for strategy in PlanStrategy::ALL {
+        let plan = s.pass_plan_with(strategy)?;
+        let programs = ProgramBuilder::build_plan(s, &groups, &plan)?;
+        let multi = plan.is_multi_pass();
         println!(
-            "    pass {pi}: {} | rows {}..{}{}",
-            prog.utilization(),
-            row0,
-            row0 + rows,
-            if prog.accumulates() { " | accumulates (out += Σ taps)" } else { "" }
+            "  {strategy} plan: {} pass{} per step{}{}",
+            plan.num_passes(),
+            if multi { "es" } else { "" },
+            if multi { " (wider than the 16-stream envelope)" } else { "" },
+            if plan.order_preserving() { "" } else { " | reorders row groups" }
         );
-        row0 += rows;
+        for (pi, (pass, prog)) in plan.passes().iter().zip(&programs).enumerate() {
+            println!(
+                "    pass {pi}: {} | rows {}{}",
+                prog.utilization(),
+                fmt_row_groups(pass),
+                if prog.accumulates() { " | accumulates (out += Σ taps)" } else { "" }
+            );
+        }
     }
+    // The disassembly shows what the engine will actually run: the
+    // default strategy (CASPER_PLAN, else optimized).
+    let default = default_plan_strategy();
+    let programs = ProgramBuilder::build_passes_with(s, default)?;
     for (pi, prog) in programs.iter().enumerate() {
         println!(
-            "  pass {pi} program: {} instrs, {} constants — disassembly (c, s, dir, amt, clr, out, adv):",
+            "  pass {pi} program ({default} plan): {} instrs, {} constants — disassembly (c, s, dir, amt, clr, out, adv):",
             prog.instrs.len(),
             prog.constants.len()
         );
@@ -350,6 +399,28 @@ fn show_kernel(s: &KernelSpec) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Render a pass's row-group indices compactly: contiguous runs as
+/// `a..b`, loose indices as-is (`0..5` vs `0..5, 10..15`).
+fn fmt_row_groups(pass: &[usize]) -> String {
+    let mut parts = Vec::new();
+    let mut i = 0;
+    while i < pass.len() {
+        let start = pass[i];
+        let mut end = start + 1;
+        while i + 1 < pass.len() && pass[i + 1] == end {
+            i += 1;
+            end += 1;
+        }
+        if end - start > 1 {
+            parts.push(format!("{start}..{end}"));
+        } else {
+            parts.push(format!("{start}"));
+        }
+        i += 1;
+    }
+    parts.join(", ")
 }
 
 /// `casper run`: one kernel on every engine, with the comparison table.
@@ -364,6 +435,7 @@ fn run_one(
     spu_threads: usize,
     temporal_block: usize,
     epoch_rounds: usize,
+    plan: PlanStrategy,
     trace: Option<&Path>,
     trace_interval: u64,
 ) -> Result<()> {
@@ -372,13 +444,14 @@ fn run_one(
         spu_threads,
         temporal_block,
         epoch_rounds,
+        plan,
         ..Default::default()
     };
     // The pipeline only engages on the epoch engine (workers > 1).
     let pipelined = casper_opts.pipeline && spu_threads > 1;
     println!(
         "{} @ {} ({} points, {} steps, {} SPU worker thread(s), temporal block {}, \
-         epoch rounds {}{})\n",
+         epoch rounds {}, {} plan{})\n",
         spec.name,
         domain,
         domain.points(),
@@ -386,6 +459,7 @@ fn run_one(
         spu_threads,
         temporal_block,
         epoch_rounds,
+        plan,
         if pipelined { ", pipelined" } else { "" },
     );
 

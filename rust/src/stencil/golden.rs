@@ -24,7 +24,7 @@
 //! SPU model's `acc += c * v`.)
 
 use super::{Domain, Grid, KernelSpec, StencilDesc, StencilKind};
-use crate::isa::ReduceOp;
+use crate::isa::{PassPlan, ReduceOp};
 use crate::util::auto_threads;
 
 /// Apply one stencil step: read `src`, write `dst` (disjoint arrays,
@@ -172,7 +172,22 @@ pub fn step_serial(desc: &StencilDesc, src: &Grid, dst: &mut Grid) {
 /// — pinned by test here and property-tested over random wide specs in
 /// `rust/tests/kernel_registry.rs`. For single-pass kernels it degrades
 /// to exactly one plain partial-sum pass.
+///
+/// This is the greedy-plan wrapper around [`step_planned`]; the
+/// equivalence harness ([`crate::verify`]) calls `step_planned` directly
+/// to oracle arbitrary (possibly reordered) plans.
 pub fn step_multipass(desc: &StencilDesc, src: &Grid, dst: &mut Grid) {
+    let plan = desc.pass_plan().expect("validated spec must plan");
+    step_planned(desc, &plan, src, dst);
+}
+
+/// The pass-split oracle under an explicit [`PassPlan`]: apply one step
+/// pass by pass, each pass accumulating exactly the row groups the plan
+/// assigns it (in the plan's order — for an order-preserving plan this is
+/// program order and the result is bitwise [`step_multipass`]; a
+/// reordered plan accumulates in *its* order, which is what the engine
+/// executing the same plan does too).
+pub fn step_planned(desc: &StencilDesc, plan: &PassPlan, src: &Grid, dst: &mut Grid) {
     assert_eq!((src.nx, src.ny, src.nz), (dst.nx, dst.ny, dst.nz), "shape mismatch");
     let [rx, ry, rz] = desc.radius();
     let (nx, ny, nz) = (src.nx, src.ny, src.nz);
@@ -182,11 +197,11 @@ pub fn step_multipass(desc: &StencilDesc, src: &Grid, dst: &mut Grid) {
     dst.data.copy_from_slice(&src.data);
 
     let groups = desc.row_groups();
-    let plan = desc.pass_plan().expect("validated spec must plan");
     for (pi, pass) in plan.passes().iter().enumerate() {
-        // This pass's taps, flattened in program order.
+        // This pass's taps, flattened in the plan's group order.
         let mut offs: Vec<(isize, f64)> = Vec::new();
-        for g in &groups[pass.clone()] {
+        for &gi in pass {
+            let g = &groups[gi];
             for &(dx, c) in &g.taps {
                 offs.push((src.tap_offset(dx, g.dy, g.dz) as isize, c));
             }
@@ -214,10 +229,18 @@ pub fn step_multipass(desc: &StencilDesc, src: &Grid, dst: &mut Grid) {
 /// [`run`] through the pass-split oracle [`step_multipass`]: `steps`
 /// Jacobi iterations with array swapping.
 pub fn run_multipass(desc: &StencilDesc, initial: &Grid, steps: usize) -> Grid {
+    let plan = desc.pass_plan().expect("validated spec must plan");
+    run_planned(desc, &plan, initial, steps)
+}
+
+/// [`run`] through [`step_planned`] under an explicit plan: `steps`
+/// Jacobi iterations with array swapping — the blackbox oracle the
+/// equivalence harness compares both plan strategies against.
+pub fn run_planned(desc: &StencilDesc, plan: &PassPlan, initial: &Grid, steps: usize) -> Grid {
     let mut a = initial.clone();
     let mut b = initial.clone();
     for _ in 0..steps {
-        step_multipass(desc, &a, &mut b);
+        step_planned(desc, plan, &a, &mut b);
         std::mem::swap(&mut a, &mut b);
     }
     a
@@ -455,6 +478,33 @@ mod tests {
                 spec.id
             );
         }
+    }
+
+    #[test]
+    fn planned_step_oracles_reordered_plans() {
+        use crate::isa::PlanStrategy;
+        let mix = crate::stencil::extended_presets()
+            .into_iter()
+            .find(|s| s.id.as_str() == "wide_mix_2d")
+            .unwrap();
+        let d = mix.tiny_domain();
+        let src = d.alloc_random(0x9A55_ED);
+        // step_planned under the greedy plan IS step_multipass, bitwise.
+        let mut a = d.alloc();
+        step_multipass(&mix, &src, &mut a);
+        let greedy = mix.pass_plan().unwrap();
+        let mut b = d.alloc();
+        step_planned(&mix, &greedy, &src, &mut b);
+        assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // The optimized plan reorders this kernel's rows (4 passes → 2):
+        // the accumulation order changes, so equality with the greedy
+        // oracle is mathematical (reassociation-tolerance), not bitwise.
+        let opt = mix.pass_plan_with(PlanStrategy::Optimized).unwrap();
+        assert_eq!(opt.num_passes(), 2);
+        assert!(!opt.order_preserving());
+        let mut c = d.alloc();
+        step_planned(&mix, &opt, &src, &mut c);
+        assert_allclose(&c.data, &a.data, 1e-12, 1e-12);
     }
 
     #[test]

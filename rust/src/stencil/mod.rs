@@ -25,9 +25,11 @@
 //! horizontal diffusion), `star25_3d` (25-point high-order anisotropic 3D
 //! star), `star17_3d` (the isotropic radius-4 star whose 17 rows
 //! exceed the stream buffer — it compiles as a 2-pass plan, see
-//! `docs/KERNELS.md`), and `jacobi2d_res` (Jacobi 2D with a fused
-//! `abs_diff` residual reduction), and user kernels load from TOML
-//! files — see DESIGN.md, "Kernel registry".
+//! `docs/KERNELS.md`), `jacobi2d_res` (Jacobi 2D with a fused
+//! `abs_diff` residual reduction), and `wide_mix_2d` (a 20-row
+//! dual-coefficient-family column stencil where the optimizing pass
+//! planner halves the greedy pass count), and user kernels load from
+//! TOML files — see DESIGN.md, "Kernel registry".
 
 pub mod domain;
 pub mod golden;

@@ -31,7 +31,7 @@ use anyhow::{ensure, Context, Result};
 use crate::config::toml_mini::TomlDoc;
 use crate::config::SizeClass;
 use crate::isa::instr::ReduceOp;
-use crate::isa::program::{PassPlan, MAX_SHIFT};
+use crate::isa::program::{PassPlan, PlanStrategy, MAX_SHIFT};
 
 use super::domain::table3;
 use super::{Domain, StencilKind};
@@ -209,6 +209,14 @@ impl KernelSpec {
     /// Errors only for kernels [`validate`](Self::validate) would reject.
     pub fn pass_plan(&self) -> Result<PassPlan> {
         PassPlan::for_groups(&self.row_groups())
+    }
+
+    /// [`pass_plan`](Self::pass_plan) under an explicit
+    /// [`PlanStrategy`] — [`PlanStrategy::Greedy`] reproduces
+    /// `pass_plan()` exactly; [`PlanStrategy::Optimized`] may reorder or
+    /// rebalance (see `docs/KERNELS.md`, "Pass planning").
+    pub fn pass_plan_with(&self, strategy: PlanStrategy) -> Result<PassPlan> {
+        PassPlan::for_groups_with(&self.row_groups(), strategy)
     }
 
     /// This kernel with its taps re-sorted into *program order* — the
@@ -642,8 +650,20 @@ pub(super) fn paper_preset(kind: StencilKind) -> KernelSpec {
 ///   reduction — the L1 residual a convergence loop tests — computed in
 ///   the same single pass (the kernel class fused stencil–reduction
 ///   pipelines exist for).
+/// - `wide_mix_2d`: a 20-row 2D column stencil whose rows alternate
+///   between two disjoint 15-constant coefficient families. Greedy
+///   program-order planning pays both families' constants in every pass
+///   (4 passes); the optimizing planner's constant-affinity reordering
+///   packs each family's rows together and reaches the 2-pass minimum —
+///   the kernel class the [`PlanStrategy::Optimized`] planner exists for.
 pub fn extended_presets() -> Vec<KernelSpec> {
-    vec![hdiff_preset(), star25_preset(), star17_preset(), jacobi2d_res_preset()]
+    vec![
+        hdiff_preset(),
+        star25_preset(),
+        star17_preset(),
+        jacobi2d_res_preset(),
+        wide_mix_preset(),
+    ]
 }
 
 fn hdiff_preset() -> KernelSpec {
@@ -720,6 +740,36 @@ fn jacobi2d_res_preset() -> KernelSpec {
     spec.origin = KernelOrigin::Extended;
     spec.reduction = Some(ReductionSpec { op: ReduceOp::AbsDiff });
     spec
+}
+
+fn wide_mix_preset() -> KernelSpec {
+    // Two interleaved 15-constant coefficient families over a 20-row
+    // column: rows at dy = -10..=9, three taps per row (dx in {-1,0,1}).
+    // Even row-group indices draw from family A (numerators 32+2i over
+    // 2048), odd from family B (numerators 1,3,..,27 and 138 over 2048);
+    // family row k uses coefficient indices (3k+t) mod 15, so rows k and
+    // k+10 of a family reuse exactly the same three constants while
+    // adjacent rows share none. Greedy program-order splitting refills
+    // the 16-entry constant buffer every ~5 rows (4 passes); affinity
+    // reordering co-locates each family's rows (2 passes, the minimum —
+    // 20 rows can never fit one program's 16 streams).
+    //
+    // Every coefficient is dyadic (n/2048, exact in f64), each constant
+    // is used exactly twice, and the numerators sum to 2·1024 = 2048, so
+    // the tap sum is exactly 1.0 in every accumulation order.
+    let num_a = |i: usize| (32 + 2 * i) as f64;
+    let num_b = |i: usize| if i == 14 { 138.0 } else { (2 * i + 1) as f64 };
+    let mut pts = Vec::with_capacity(60);
+    for gi in 0..20i64 {
+        let k = (gi / 2) as usize;
+        let fam_a = gi % 2 == 0;
+        for t in 0..3usize {
+            let i = (3 * k + t) % 15;
+            let n = if fam_a { num_a(i) } else { num_b(i) };
+            pts.push(StencilPoint::new(t as i64 - 1, gi - 10, 0, n / 2048.0));
+        }
+    }
+    KernelSpec::new("wide_mix_2d", "Wide dual-family 2D", 2, pts, KernelOrigin::Extended)
 }
 
 /// The open kernel registry: presets plus user-loaded TOML specs, looked
@@ -843,6 +893,18 @@ mod tests {
         assert_eq!(res.points, StencilKind::Jacobi2D.descriptor().points);
         assert_eq!(res.reduction, Some(ReductionSpec { op: ReduceOp::AbsDiff }));
         assert_eq!(res.pass_plan().unwrap().num_passes(), 1);
+        // The dual-family preset: greedy pays the constant interleaving
+        // (4 passes), the optimizing planner reaches the 2-pass minimum.
+        let mix = &ext[4];
+        assert_eq!(mix.id.as_str(), "wide_mix_2d");
+        assert_eq!(mix.num_points(), 60);
+        assert_eq!(mix.radius(), [1, 10, 0]);
+        assert_eq!(mix.row_groups().len(), 20);
+        assert_eq!(mix.coef_sum(), 1.0); // dyadic numerators, exact sum
+        assert_eq!(mix.pass_plan().unwrap().num_passes(), 4);
+        let opt = mix.pass_plan_with(PlanStrategy::Optimized).unwrap();
+        assert_eq!(opt.num_passes(), 2);
+        assert!(!opt.order_preserving());
     }
 
     #[test]
@@ -1028,7 +1090,7 @@ mod tests {
     #[test]
     fn registry_lookup_and_duplicates() {
         let mut reg = KernelRegistry::builtin();
-        assert_eq!(reg.specs().len(), 10);
+        assert_eq!(reg.specs().len(), 11);
         assert_eq!(reg.get("jacobi2d").unwrap().name, "Jacobi 2D");
         assert_eq!(reg.resolve("Jacobi 2D").unwrap().id.as_str(), "jacobi2d");
         assert_eq!(reg.resolve("jacobi-2d").unwrap().id.as_str(), "jacobi2d");

@@ -1,0 +1,542 @@
+//! Randomized blackbox equivalence harness for the pass planner.
+//!
+//! The optimizing planner ([`PlanStrategy::Optimized`]) is *not* trusted
+//! by construction: this module generates seeded random
+//! envelope-stressing kernel specs, runs **both** plan strategies through
+//! **both** engines (serial and epoch-parallel), and compares every grid
+//! bit and reduction value against the plan-aware golden oracle
+//! ([`golden::step_planned`]), plus the planner invariants that hold for
+//! any legal plan:
+//!
+//! - every pass is ISA-envelope-legal (its compiled program validates);
+//! - the passes partition the row groups exactly — no duplicate, no drop
+//!   ([`check_partition`]);
+//! - plans are deterministic for a given spec;
+//! - `passes(Optimized) <= passes(Greedy)` on every spec;
+//! - an order-preserving Optimized plan is **bitwise** the Greedy result;
+//!   a reordering plan agrees to reassociation tolerance.
+//!
+//! On failure the offending spec is shrunk ([`shrink_spec`], built on
+//! [`testutil::shrink_vec`](crate::testutil::shrink_vec)) to a minimal
+//! reproducer and serialized as ready-to-commit kernel TOML — committed
+//! reproducers live under `rust/tests/corpus/` and are replayed first by
+//! `tests/plan_equivalence.rs`. The `casper verify` subcommand drives
+//! [`run_verify`] from the CLI and CI (see `DESIGN.md`, "Blackbox plan
+//! equivalence").
+
+use crate::config::{SimConfig, SizeClass};
+use crate::coordinator::{run_casper_spec, CasperOptions};
+use crate::isa::{PassPlan, PlanStrategy, ProgramBuilder, ReduceOp};
+use crate::stencil::{golden, Domain, Grid, KernelOrigin, KernelSpec, ReductionSpec, StencilPoint};
+use crate::util::SplitMix64;
+
+/// Knobs of one verification sweep (`casper verify`).
+#[derive(Debug, Clone, Copy)]
+pub struct VerifyOptions {
+    /// Number of random specs to generate and check.
+    pub specs: usize,
+    /// Master seed: the whole sweep is a deterministic function of it.
+    pub seed: u64,
+    /// Jacobi steps per engine run (2 exercises the ping-pong swap).
+    pub steps: usize,
+}
+
+impl Default for VerifyOptions {
+    fn default() -> Self {
+        VerifyOptions { specs: 64, seed: 0xCA5_9E12, steps: 2 }
+    }
+}
+
+/// A failing case, minimized: everything needed to reproduce and commit.
+#[derive(Debug, Clone)]
+pub struct VerifyFailure {
+    /// Index of the failing case within the sweep.
+    pub case: usize,
+    /// Id of the generated (pre-shrink) spec.
+    pub spec_id: String,
+    /// What the equivalence check reported.
+    pub error: String,
+    /// The shrunk reproducer, serialized in `--kernel-file` TOML format.
+    pub minimized_toml: String,
+}
+
+/// Outcome of [`run_verify`]: how many specs passed, and the first
+/// (minimized) failure if any.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    /// Specs that passed before the sweep stopped.
+    pub checked: usize,
+    /// First failure, already shrunk; `None` means the sweep is clean.
+    pub failure: Option<VerifyFailure>,
+}
+
+/// Check that `passes` is an exact partition of `0..n_groups`: every
+/// group exactly once, no empty pass, no out-of-range index. This is the
+/// invariant separating "a different plan" from "a wrong plan", and it is
+/// exposed on raw index lists (not [`PassPlan`]) so tests can plant a
+/// deliberately corrupted partition and watch the harness catch it.
+pub fn check_partition(n_groups: usize, passes: &[Vec<usize>]) -> Result<(), String> {
+    if passes.is_empty() {
+        return Err("plan has no passes".to_string());
+    }
+    let mut seen = vec![false; n_groups];
+    for (pi, pass) in passes.iter().enumerate() {
+        if pass.is_empty() {
+            return Err(format!("pass {pi} is empty"));
+        }
+        for &gi in pass {
+            if gi >= n_groups {
+                return Err(format!(
+                    "pass {pi} names row group {gi}, but the spec has only {n_groups}"
+                ));
+            }
+            if seen[gi] {
+                return Err(format!("row group {gi} is packed into two passes"));
+            }
+            seen[gi] = true;
+        }
+    }
+    if let Some(gi) = seen.iter().position(|&s| !s) {
+        return Err(format!("row group {gi} was dropped from the plan"));
+    }
+    Ok(())
+}
+
+/// The pure-planner invariants (no simulation): both strategies produce
+/// exact-partition, envelope-legal, deterministic plans, and the
+/// optimizing planner never plans more passes than greedy.
+pub fn check_plans(spec: &KernelSpec) -> Result<(), String> {
+    let groups = spec.row_groups();
+    let mut counts = [0usize; 2];
+    for (si, strategy) in PlanStrategy::ALL.into_iter().enumerate() {
+        let plan = PassPlan::for_groups_with(&groups, strategy)
+            .map_err(|e| format!("{strategy}: planning failed: {e:#}"))?;
+        check_partition(groups.len(), plan.passes()).map_err(|e| format!("{strategy}: {e}"))?;
+        let again = PassPlan::for_groups_with(&groups, strategy)
+            .map_err(|e| format!("{strategy}: replanning failed: {e:#}"))?;
+        if again != plan {
+            return Err(format!("{strategy}: plan is not deterministic"));
+        }
+        let progs = ProgramBuilder::build_plan(spec, &groups, &plan)
+            .map_err(|e| format!("{strategy}: pass compilation failed: {e:#}"))?;
+        if progs.len() != plan.num_passes() {
+            return Err(format!(
+                "{strategy}: {} programs for a {}-pass plan",
+                progs.len(),
+                plan.num_passes()
+            ));
+        }
+        for (pi, p) in progs.iter().enumerate() {
+            p.validate()
+                .map_err(|e| format!("{strategy}: pass {pi} violates the ISA envelope: {e:#}"))?;
+        }
+        counts[si] = plan.num_passes();
+    }
+    if counts[1] > counts[0] {
+        return Err(format!(
+            "optimized plans {} passes where greedy needs only {}",
+            counts[1], counts[0]
+        ));
+    }
+    Ok(())
+}
+
+/// Run the plan-aware oracle for `steps` with the engine's per-step fused
+/// reduction semantics (a [`golden::reduce_arrays`] fold over each step's
+/// input/output pair — bitwise what the leader computes).
+fn oracle_run(desc: &KernelSpec, plan: &PassPlan, initial: &Grid, steps: usize) -> (Grid, Vec<f64>) {
+    let mut a = initial.clone();
+    let mut b = initial.clone();
+    let mut values = Vec::new();
+    for _ in 0..steps {
+        golden::step_planned(desc, plan, &a, &mut b);
+        if let Some(r) = desc.reduction {
+            values.push(golden::reduce_arrays(r.op, &a.data, &b.data));
+        }
+        std::mem::swap(&mut a, &mut b);
+    }
+    (a, values)
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let err = (x - y).abs();
+        if err > atol + rtol * y.abs() {
+            return Err(format!("idx {i}: {x} vs {y} (|err| = {err:e})"));
+        }
+    }
+    Ok(())
+}
+
+/// The full blackbox equivalence check for one spec at one domain: both
+/// strategies × both engines, each pinned **bitwise** (grids and
+/// reduction values) against the plan-aware golden oracle executing the
+/// same plan, plus the cross-strategy contract — bitwise identity when
+/// the optimized plan preserves program order, reassociation-tolerance
+/// agreement when it reorders.
+pub fn check_spec(
+    cfg: &SimConfig,
+    spec: &KernelSpec,
+    domain: &Domain,
+    steps: usize,
+) -> Result<(), String> {
+    check_plans(spec)?;
+    let greedy = spec.pass_plan_with(PlanStrategy::Greedy).map_err(|e| format!("{e:#}"))?;
+    let opt = spec.pass_plan_with(PlanStrategy::Optimized).map_err(|e| format!("{e:#}"))?;
+    let input = domain.alloc_random(CasperOptions::default().seed);
+    let mut oracle_grids: Vec<Grid> = Vec::new();
+    for (strategy, plan) in [(PlanStrategy::Greedy, &greedy), (PlanStrategy::Optimized, &opt)] {
+        let (want_grid, want_vals) = oracle_run(spec, plan, &input, steps);
+        for threads in [1usize, 16] {
+            let tag = format!("{strategy} threads={threads}");
+            let opts = CasperOptions { plan: strategy, spu_threads: threads, ..Default::default() };
+            let stats = run_casper_spec(cfg, spec, domain, steps, opts)
+                .map_err(|e| format!("{tag}: engine error: {e:#}"))?;
+            if stats.passes != plan.num_passes() {
+                return Err(format!(
+                    "{tag}: engine ran {} passes, plan has {}",
+                    stats.passes,
+                    plan.num_passes()
+                ));
+            }
+            if !bits_eq(&stats.output.data, &want_grid.data) {
+                return Err(format!("{tag}: grid diverged bitwise from the plan-aware oracle"));
+            }
+            match (&stats.reduction, spec.reduction) {
+                (Some(r), Some(_)) => {
+                    if !bits_eq(&r.values, &want_vals) {
+                        return Err(format!(
+                            "{tag}: reduction values diverged bitwise from the oracle"
+                        ));
+                    }
+                }
+                (None, Some(_)) => return Err(format!("{tag}: reduction result missing")),
+                (Some(_), None) => return Err(format!("{tag}: unexpected reduction result")),
+                (None, None) => {}
+            }
+        }
+        oracle_grids.push(want_grid);
+    }
+    if opt.order_preserving() {
+        if !bits_eq(&oracle_grids[0].data, &oracle_grids[1].data) {
+            return Err(
+                "order-preserving optimized plan diverged bitwise from greedy".to_string()
+            );
+        }
+    } else {
+        allclose(&oracle_grids[1].data, &oracle_grids[0].data, 1e-9, 1e-9)
+            .map_err(|e| format!("reordered optimized plan left tolerance vs greedy: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Shrink a failing spec to a minimal reproducer: greedily drop tap
+/// chunks ([`testutil::shrink_vec`](crate::testutil::shrink_vec)) while
+/// the candidate still validates and `fails` still holds. The result
+/// keeps the original id/domains and serializes straight to committable
+/// TOML via [`KernelSpec::to_toml_string`].
+pub fn shrink_spec<F>(spec: &KernelSpec, mut fails: F) -> KernelSpec
+where
+    F: FnMut(&KernelSpec) -> bool,
+{
+    let min_points = crate::testutil::shrink_vec(spec.points.clone(), |pts| {
+        let cand = KernelSpec { points: pts.to_vec(), ..spec.clone() };
+        cand.validate().is_ok() && fails(&cand)
+    });
+    KernelSpec { points: min_points, ..spec.clone() }
+}
+
+/// Deterministic envelope-stressing spec generator. `case` selects the
+/// stress mode (round-robin), `rng` everything else:
+///
+/// - `narrow`: fits a single program — the planner must degrade to the
+///   trivial one-pass plan under both strategies.
+/// - `wide`: 17–34 distinct rows — stream-buffer splits, multi-pass.
+/// - `mix`: rows alternating two disjoint coefficient families — the
+///   shape where affinity reordering wins passes.
+/// - `shift`: few rows, many taps at `|dx|` up to the 3-bit shift limit,
+///   every coefficient fresh — constant/instruction-budget splits and
+///   maximal unaligned-load shifts.
+pub fn random_spec(rng: &mut SplitMix64, case: usize) -> KernelSpec {
+    let mut spec = match case % 4 {
+        0 => narrow_spec(rng, case),
+        1 => wide_spec(rng, case),
+        2 => mix_spec(rng, case),
+        _ => shift_spec(rng, case),
+    };
+    if rng.chance(0.3) {
+        let op = [ReduceOp::Sum, ReduceOp::AbsDiff, ReduceOp::Max][rng.range(0, 3)];
+        spec.reduction = Some(ReductionSpec { op });
+    }
+    let [rx, ry, rz] = spec.radius();
+    let d = Domain::new(
+        2 * rx + 4 + rng.range(0, 13),
+        if spec.dims >= 2 { 2 * ry + 3 + rng.range(1, 9) } else { 1 },
+        if spec.dims >= 3 { 2 * rz + 3 + rng.range(1, 5) } else { 1 },
+    );
+    spec.domains = [d; 3];
+    spec
+}
+
+/// All (dy, dz) row offsets within the box, shuffled, first `n` taken.
+fn pick_rows(rng: &mut SplitMix64, dims: usize, n: usize, ry: i64, rz: i64) -> Vec<(i64, i64)> {
+    let mut combos: Vec<(i64, i64)> = Vec::new();
+    for dz in -rz..=rz {
+        for dy in -ry..=ry {
+            if (dims < 3 && dz != 0) || (dims < 2 && dy != 0) {
+                continue;
+            }
+            combos.push((dy, dz));
+        }
+    }
+    for i in (1..combos.len()).rev() {
+        let j = rng.range(0, i + 1);
+        combos.swap(i, j);
+    }
+    combos.truncate(n);
+    combos
+}
+
+/// Distinct in-row tap offsets: `k` values from `-rx..=rx`, shuffled.
+fn pick_taps(rng: &mut SplitMix64, k: usize, rx: i64) -> Vec<i64> {
+    let mut dxs: Vec<i64> = (-rx..=rx).collect();
+    for i in (1..dxs.len()).rev() {
+        let j = rng.range(0, i + 1);
+        dxs.swap(i, j);
+    }
+    dxs.truncate(k);
+    dxs
+}
+
+/// Mostly-shared coefficients (a small palette) keep constant pressure
+/// realistic without forcing a split per row.
+const PALETTE: [f64; 8] = [0.5, 0.25, 0.125, 0.0625, 0.03125, 0.2, 0.1, 0.05];
+
+fn narrow_spec(rng: &mut SplitMix64, case: usize) -> KernelSpec {
+    let dims = rng.range(1, 4);
+    let rows = if dims == 1 { 1 } else { rng.range(1, 6) };
+    let mut pts = Vec::new();
+    for (dy, dz) in pick_rows(rng, dims, rows, 2, 1) {
+        let k = rng.range(1, 4);
+        for dx in pick_taps(rng, k, 2) {
+            pts.push(StencilPoint::new(dx, dy, dz, PALETTE[rng.range(0, PALETTE.len())]));
+        }
+    }
+    KernelSpec::new(
+        &format!("verify_narrow_{case}"),
+        &format!("verify narrow {case}"),
+        dims,
+        pts,
+        KernelOrigin::File,
+    )
+}
+
+fn wide_spec(rng: &mut SplitMix64, case: usize) -> KernelSpec {
+    let dims = rng.range(2, 4);
+    let (rows, ry, rz) = if dims == 2 {
+        (rng.range(17, 22), 10, 0)
+    } else {
+        (rng.range(17, 35), 4, 4)
+    };
+    let mut pts = Vec::new();
+    for (dy, dz) in pick_rows(rng, dims, rows, ry, rz) {
+        let k = rng.range(1, 4);
+        for dx in pick_taps(rng, k, 2) {
+            // Fresh coefficients on a minority of taps stress the
+            // constant buffer alongside the stream buffer.
+            let coef = if rng.chance(0.25) {
+                rng.next_f64() * 0.2 + 0.001
+            } else {
+                PALETTE[rng.range(0, PALETTE.len())]
+            };
+            pts.push(StencilPoint::new(dx, dy, dz, coef));
+        }
+    }
+    KernelSpec::new(
+        &format!("verify_wide_{case}"),
+        &format!("verify wide {case}"),
+        dims,
+        pts,
+        KernelOrigin::File,
+    )
+}
+
+fn mix_spec(rng: &mut SplitMix64, case: usize) -> KernelSpec {
+    // Interleaved disjoint coefficient families (positive vs negative
+    // values, so they can never collide bitwise) — the wide_mix_2d shape,
+    // randomized.
+    let pairs = rng.range(5, 11) as i64;
+    let fam_a: Vec<f64> = (0..15).map(|i| (i as f64 + 1.0 + rng.next_f64()) / 64.0).collect();
+    let fam_b: Vec<f64> = (0..15).map(|i| -(i as f64 + 1.0 + rng.next_f64()) / 64.0).collect();
+    let mut pts = Vec::new();
+    for gi in 0..2 * pairs {
+        let k = (gi / 2) as usize;
+        let fam = if gi % 2 == 0 { &fam_a } else { &fam_b };
+        for t in 0..3usize {
+            pts.push(StencilPoint::new(t as i64 - 1, gi - pairs, 0, fam[(3 * k + t) % 15]));
+        }
+    }
+    KernelSpec::new(
+        &format!("verify_mix_{case}"),
+        &format!("verify mix {case}"),
+        2,
+        pts,
+        KernelOrigin::File,
+    )
+}
+
+fn shift_spec(rng: &mut SplitMix64, case: usize) -> KernelSpec {
+    let dims = rng.range(1, 4);
+    let rows = if dims == 1 { 1 } else { rng.range(2, 5) };
+    let mut pts = Vec::new();
+    for (dy, dz) in pick_rows(rng, dims, rows, 1, 1) {
+        let k = rng.range(4, 9);
+        for dx in pick_taps(rng, k, 7) {
+            // Every coefficient fresh: the constant buffer fills long
+            // before the stream buffer does.
+            pts.push(StencilPoint::new(dx, dy, dz, rng.next_f64() * 0.1 + 0.001));
+        }
+    }
+    KernelSpec::new(
+        &format!("verify_shift_{case}"),
+        &format!("verify shift {case}"),
+        dims,
+        pts,
+        KernelOrigin::File,
+    )
+}
+
+/// Run a whole verification sweep: generate `opts.specs` random specs
+/// from `opts.seed`, check each with [`check_spec`], and on the first
+/// failure shrink it to a minimal reproducer. Deterministic end to end.
+pub fn run_verify(cfg: &SimConfig, opts: &VerifyOptions) -> VerifyReport {
+    let mut master = SplitMix64::new(opts.seed);
+    for case in 0..opts.specs {
+        let sub = master.next_u64();
+        let spec = random_spec(&mut SplitMix64::new(sub), case);
+        if let Err(e) = spec.validate() {
+            // A generator bug is a harness failure too: report the raw
+            // spec rather than silently skipping the case.
+            return VerifyReport {
+                checked: case,
+                failure: Some(VerifyFailure {
+                    case,
+                    spec_id: spec.id.to_string(),
+                    error: format!("generated spec does not validate: {e:#}"),
+                    minimized_toml: spec.to_toml_string(),
+                }),
+            };
+        }
+        let domain = spec.domain(SizeClass::L2);
+        if let Err(error) = check_spec(cfg, &spec, &domain, opts.steps) {
+            let min = shrink_spec(&spec, |s| {
+                check_spec(cfg, s, &s.domain(SizeClass::L2), opts.steps).is_err()
+            });
+            return VerifyReport {
+                checked: case,
+                failure: Some(VerifyFailure {
+                    case,
+                    spec_id: spec.id.to_string(),
+                    error,
+                    minimized_toml: min.to_toml_string(),
+                }),
+            };
+        }
+    }
+    VerifyReport { checked: opts.specs, failure: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::StencilKind;
+
+    #[test]
+    fn partition_checker_catches_malformed_plans() {
+        assert!(check_partition(3, &[vec![0, 1, 2]]).is_ok());
+        assert!(check_partition(3, &[vec![2], vec![0, 1]]).is_ok());
+        assert!(check_partition(3, &[]).unwrap_err().contains("no passes"));
+        assert!(check_partition(3, &[vec![0, 1, 2], vec![]])
+            .unwrap_err()
+            .contains("empty"));
+        assert!(check_partition(3, &[vec![0, 1], vec![1, 2]])
+            .unwrap_err()
+            .contains("two passes"));
+        assert!(check_partition(3, &[vec![0, 2]]).unwrap_err().contains("dropped"));
+        assert!(check_partition(3, &[vec![0, 1, 3]])
+            .unwrap_err()
+            .contains("only 3"));
+    }
+
+    #[test]
+    fn generated_specs_validate_and_are_deterministic() {
+        for case in 0..24 {
+            let spec = random_spec(&mut SplitMix64::new(1000 + case as u64), case);
+            spec.validate().unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+            check_plans(&spec).unwrap_or_else(|e| panic!("case {case}: {e}"));
+            let again = random_spec(&mut SplitMix64::new(1000 + case as u64), case);
+            assert_eq!(spec, again, "case {case}: generator must be deterministic");
+            // Wide cases really exceed one program's envelope.
+            if case % 4 == 1 {
+                assert!(
+                    spec.pass_plan().unwrap().is_multi_pass(),
+                    "case {case}: wide spec fit a single pass"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn presets_pass_the_blackbox_check() {
+        // The shipped kernels cover all three plan shapes: single-pass
+        // (jacobi2d), order-preserving multi-pass (star17_3d), reordered
+        // multi-pass (wide_mix_2d) — plus a fused reduction
+        // (jacobi2d_res).
+        let cfg = SimConfig::default();
+        let mut specs = vec![StencilKind::Jacobi2D.descriptor()];
+        specs.extend(
+            crate::stencil::extended_presets()
+                .into_iter()
+                .filter(|s| matches!(s.id.as_str(), "star17_3d" | "wide_mix_2d" | "jacobi2d_res")),
+        );
+        assert_eq!(specs.len(), 4);
+        for spec in &specs {
+            check_spec(&cfg, spec, &spec.tiny_domain(), 2)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.id));
+        }
+    }
+
+    #[test]
+    fn verify_sweep_smoke() {
+        let cfg = SimConfig::default();
+        let opts = VerifyOptions { specs: 4, seed: 0xCA5_9E12, steps: 1 };
+        let report = run_verify(&cfg, &opts);
+        assert!(report.failure.is_none(), "{:?}", report.failure);
+        assert_eq!(report.checked, 4);
+    }
+
+    #[test]
+    fn shrinker_minimizes_to_the_offending_tap() {
+        // Plant a failure predicate ("the spec still contains the dx = 2
+        // tap") on a fat spec: the shrinker must strip everything else.
+        let mut pts: Vec<StencilPoint> =
+            (-2..=2).map(|d| StencilPoint::new(d, 0, 0, 0.2)).collect();
+        pts.extend((1..=2).flat_map(|d| {
+            [StencilPoint::new(0, d, 0, 0.1), StencilPoint::new(0, -d, 0, 0.1)]
+        }));
+        let spec = KernelSpec::new("shrinkme", "shrink me", 2, pts, KernelOrigin::File);
+        spec.validate().unwrap();
+        let min = shrink_spec(&spec, |s| s.points.iter().any(|p| p.dx == 2));
+        assert_eq!(min.points, vec![StencilPoint::new(2, 0, 0, 0.2)]);
+        // The reproducer round-trips through the committable TOML format.
+        let parsed = KernelSpec::from_toml_str(&min.to_toml_string()).unwrap();
+        assert_eq!(parsed.points, min.points);
+    }
+}
